@@ -1,0 +1,30 @@
+//! Bench: regenerate Fig. 10 — normalized data-movement breakdown of
+//! ARENA vs the compute-centric model on a 4-node cluster.
+//!
+//!     cargo bench --bench fig10_data_movement [-- --paper]
+
+use arena::apps::Scale;
+use arena::benchkit::Bench;
+use arena::cluster::Model;
+use arena::eval;
+
+fn main() {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let scale = if paper { Scale::Paper } else { Scale::Small };
+    let seed = 0xA2EA;
+
+    let t = eval::fig10(scale, seed);
+    t.print();
+    let total = t.mean_row()[2];
+    println!(
+        "movement vs compute-centric: {:.1}% (paper: -53.9%)\n",
+        (total - 1.0) * 100.0
+    );
+
+    // movement accounting cost on the hot path (ring model)
+    let b = Bench::quick();
+    b.run("sim/nbody/arena-sw/4n (movement accounting)", || {
+        let r = eval::run_arena("nbody", scale, seed, 4, Model::SoftwareCpu, None);
+        (r.task_movement_bytes(), r.data_movement_bytes())
+    });
+}

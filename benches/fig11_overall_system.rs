@@ -1,0 +1,33 @@
+//! Bench: regenerate Fig. 11 — the full systems (compute-centric + CGRA
+//! offload vs ARENA with runtime reconfiguration), speedup vs serial
+//! for 1..16 nodes, plus the §5.2 headline ratios.
+//!
+//!     cargo bench --bench fig11_overall_system [-- --paper]
+
+use arena::apps::Scale;
+use arena::benchkit::Bench;
+use arena::cluster::Model;
+use arena::eval;
+
+fn main() {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let scale = if paper { Scale::Paper } else { Scale::Small };
+    let seed = 0xA2EA;
+
+    let (cc, ar) = eval::fig11(scale, seed);
+    cc.print();
+    println!();
+    ar.print();
+    let last = eval::NODE_SWEEP.len() - 1;
+    println!(
+        "paper: 10.06x vs 21.29x @16 (ratio 2.17x); here ratio {:.2}x\n",
+        ar.mean_row()[last] / cc.mean_row()[last]
+    );
+
+    let b = Bench::quick();
+    for app in ["gemm", "gcn"] {
+        b.run(&format!("sim/{app}/arena-cgra/16n"), || {
+            eval::run_arena(app, scale, seed, 16, Model::Cgra, None).makespan_ps
+        });
+    }
+}

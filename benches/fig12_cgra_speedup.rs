@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig. 12 — single-node CGRA kernel speedup by tile
+//! group configuration (2×8 / 4×8 / 8×8) vs the CPU baseline, and time
+//! the modulo-scheduling mapper that produces it.
+//!
+//!     cargo bench --bench fig12_cgra_speedup
+
+use arena::benchkit::Bench;
+use arena::config::ArenaConfig;
+use arena::eval;
+use arena::mapper::kernels::{kernel_for, APP_NAMES};
+
+fn main() {
+    eval::fig12().print();
+    println!("paper: avg 1.3x / 2.4x / 3.5x; DNA capped at ~1.7x\n");
+
+    // mapper cost: schedule every kernel on every group config
+    let cfg = ArenaConfig::default();
+    let b = Bench::quick();
+    b.run("mapper/schedule all kernels x {1,2,4} groups", || {
+        let mut acc = 0u64;
+        for app in APP_NAMES {
+            let spec = kernel_for(app);
+            for groups in [1usize, 2, 4] {
+                acc += spec.map(&cfg, groups).ii;
+            }
+        }
+        acc
+    });
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate Fig. 9 — software execution models (compute-centric
+//! BSP vs ARENA data-centric, both on CPU nodes), speedup vs serial for
+//! 1..16 nodes — and time the underlying simulations.
+//!
+//!     cargo bench --bench fig9_programming_model [-- --paper]
+
+use arena::apps::Scale;
+use arena::benchkit::Bench;
+use arena::cluster::Model;
+use arena::eval;
+
+fn main() {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let scale = if paper { Scale::Paper } else { Scale::Small };
+    let seed = 0xA2EA;
+
+    let (cc, ar) = eval::fig9(scale, seed);
+    cc.print();
+    println!();
+    ar.print();
+    println!("paper: avg 4.87x (compute-centric) vs 7.82x (ARENA) @16 nodes");
+    let last = eval::NODE_SWEEP.len() - 1;
+    println!(
+        "ratio @16 here: {:.2}x (paper 1.61x)\n",
+        ar.mean_row()[last] / cc.mean_row()[last]
+    );
+
+    // how fast the simulator itself regenerates the figure's cells
+    let b = Bench::quick();
+    for app in ["sssp", "gemm"] {
+        b.run(&format!("sim/{app}/arena-sw/4n"), || {
+            eval::run_arena(app, scale, seed, 4, Model::SoftwareCpu, None)
+                .makespan_ps
+        });
+    }
+}

@@ -1,0 +1,112 @@
+//! Micro-benchmarks of the L3 hot paths: the per-token dispatcher
+//! filter, the ring/network model, the discrete-event engine, the
+//! coalescing unit, the CGRA launch path, and the PJRT execute path.
+//! These are the knobs the §Perf pass optimizes — see EXPERIMENTS.md.
+//!
+//!     cargo bench --bench micro_hotpath
+
+use arena::benchkit::{black_box, throughput, Bench};
+use arena::cgra::{CgraNode, CoalesceUnit, GroupMappings};
+use arena::config::ArenaConfig;
+use arena::dispatcher::filter;
+use arena::mapper::kernels::gemm_kernel;
+use arena::ring::RingNet;
+use arena::runtime::{Engine, Tensor};
+use arena::sim::Engine as Des;
+use arena::token::{Range, TaskToken};
+
+fn main() {
+    let b = Bench::new();
+    let cfg = ArenaConfig::default();
+
+    // --- dispatcher filter: the per-token decision -------------------
+    let local = Range::new(1000, 2000);
+    let tokens: Vec<TaskToken> = (0..1024)
+        .map(|i| {
+            TaskToken::new(1, Range::new(i * 7 % 3000, i * 7 % 3000 + 50), 0.0)
+        })
+        .collect();
+    let r = b.run("filter/1024 mixed tokens", || {
+        let mut w = 0usize;
+        for t in &tokens {
+            w += filter(black_box(t), local).wait.len();
+        }
+        w
+    });
+    println!(
+        "  -> {:.1} M tokens/s",
+        throughput(&r, 1024) / 1e6
+    );
+
+    // --- ring model ---------------------------------------------------
+    let r = b.run("ring/send_token x 10k (16 nodes)", || {
+        let mut ring = RingNet::new(16);
+        let mut t = 0;
+        for i in 0..10_000u64 {
+            t = ring.send_token(&cfg, t, (i % 16) as usize);
+        }
+        t
+    });
+    println!("  -> {:.1} M hops/s", throughput(&r, 10_000) / 1e6);
+
+    // --- discrete-event engine ----------------------------------------
+    let r = b.run("des/100k schedule+pop", || {
+        let mut des: Des<u64> = Des::new();
+        for i in 0..100_000u64 {
+            des.schedule_at(i * 37 % 1_000_000, i);
+        }
+        let mut acc = 0;
+        while let Some((_, v)) = des.next() {
+            acc += v;
+        }
+        acc
+    });
+    println!("  -> {:.1} M events/s", throughput(&r, 200_000) / 1e6);
+
+    // --- coalescing unit -----------------------------------------------
+    let r = b.run("coalesce/8k adjacent spawns", || {
+        let mut c = CoalesceUnit::new(4, 4);
+        for i in 0..8192u32 {
+            c.push(TaskToken::new(1, Range::new(i, i + 1), 2.0));
+        }
+        c.drain().len()
+    });
+    println!("  -> {:.1} M spawns/s", throughput(&r, 8192) / 1e6);
+
+    // --- CGRA launch path -----------------------------------------------
+    let maps = GroupMappings::build(&gemm_kernel(), &cfg);
+    b.run("cgra/launch+complete x 4k", || {
+        let mut node = CgraNode::new(&cfg);
+        let mut now = 0;
+        for i in 0..4096u32 {
+            let tok = TaskToken::new(1, Range::new(i, i + 10), 0.0);
+            let l = node.launch(now, &tok, 1000, 64, &maps).unwrap();
+            now = l.done;
+        }
+        now
+    });
+
+    // --- PJRT execute (the AOT kernel hot path) -------------------------
+    match Engine::new() {
+        Ok(mut eng) => {
+            let a = Tensor::f32(vec![0.5; 64 * 64], &[64, 64]);
+            let bb = Tensor::f32(vec![0.5; 64 * 64], &[64, 64]);
+            eng.execute("gemm64", &[a.clone(), bb.clone()]).unwrap();
+            let r = b.run("pjrt/gemm64 warm execute", || {
+                eng.execute("gemm64", &[a.clone(), bb.clone()]).unwrap()
+            });
+            let flops = 2.0 * 64.0 * 64.0 * 64.0;
+            println!(
+                "  -> {:.2} GFLOP/s through PJRT",
+                flops / r.mean.as_secs_f64() / 1e9
+            );
+            let x = Tensor::f32(vec![1.0; 1024], &[1024]);
+            let y = Tensor::f32(vec![1.0; 1024], &[1024]);
+            let s = Tensor::f32(vec![2.0], &[1]);
+            b.run("pjrt/axpy warm execute (dispatch floor)", || {
+                eng.execute("axpy", &[s.clone(), x.clone(), y.clone()]).unwrap()
+            });
+        }
+        Err(e) => println!("pjrt benches skipped: {e}"),
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate §5.3 / Fig. 13 — per-node area breakdown and
+//! per-application activity-scaled power, plus ablations over the
+//! configuration (array size, scratchpad, frequency).
+//!
+//!     cargo bench --bench tab3_area_power [-- --paper]
+
+use arena::apps::Scale;
+use arena::config::ArenaConfig;
+use arena::eval;
+use arena::power::{area, power, Activity};
+
+fn main() {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let scale = if paper { Scale::Paper } else { Scale::Small };
+    let (at, pt) = eval::fig13(scale, 0xA2EA);
+    at.print();
+    let (w, h) = area(&ArenaConfig::default()).die_mm();
+    println!("die {w:.2} mm x {h:.2} mm (paper: 2.19 x 1.24)\n");
+    pt.print();
+    println!("paper: 759.8 mW average @45 nm, 800 MHz\n");
+
+    // ablations: how the model scales with the configuration
+    println!("## ablations (area mm² / nominal power mW)");
+    let nominal = Activity::nominal();
+    let mut rows: Vec<(String, ArenaConfig)> =
+        vec![("8x8 @800MHz (default)".into(), ArenaConfig::default())];
+    let mut half = ArenaConfig::default();
+    half.cgra_rows = 4;
+    rows.push(("4x8 @800MHz".into(), half));
+    let mut slow = ArenaConfig::default();
+    slow.cgra_mhz = 400.0;
+    rows.push(("8x8 @400MHz".into(), slow));
+    let mut bigmem = ArenaConfig::default();
+    bigmem.spm_bytes = 64 * 1024;
+    rows.push(("8x8 + 64KB SPM".into(), bigmem));
+    for (name, cfg) in rows {
+        let a = area(&cfg).total();
+        let p = power(&cfg, &nominal).total();
+        println!("{name:<24} {a:>6.2} mm²  {p:>7.1} mW");
+    }
+}

@@ -1,0 +1,90 @@
+//! End-to-end evaluation driver: regenerates every table and figure of
+//! the paper's §5 from one binary and prints the §5.2 headline
+//! comparison. This is the run recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example paper_eval            # paper scale
+//!     cargo run --release --example paper_eval -- --small # quick pass
+//!     cargo run --release --example paper_eval -- --fig 10
+
+use arena::apps::Scale;
+use arena::eval;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let scale = if args.iter().any(|a| a == "--small") {
+        Scale::Small
+    } else {
+        Scale::Paper
+    };
+    let seed = 0xA2EA;
+    let only = args
+        .iter()
+        .position(|a| a == "--fig")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let want = |f: &str| only.as_deref().map(|o| o == f).unwrap_or(true);
+
+    println!(
+        "== ARENA paper evaluation ({} scale, seed {seed:#x}) ==\n",
+        if scale == Scale::Paper { "paper" } else { "small" }
+    );
+
+    if want("9") {
+        let (cc, ar) = eval::fig9(scale, seed);
+        cc.print();
+        println!();
+        ar.print();
+        println!(
+            "paper: avg 4.87x (compute-centric) vs 7.82x (ARENA) @16 nodes\n"
+        );
+    }
+    if want("10") {
+        let t = eval::fig10(scale, seed);
+        t.print();
+        println!("paper: 53.9% average movement reduction @4 nodes\n");
+    }
+    if want("11") {
+        let (cc, ar) = eval::fig11(scale, seed);
+        cc.print();
+        println!();
+        ar.print();
+        println!(
+            "paper: avg 10.06x (compute-centric+CGRA) vs 21.29x (ARENA) @16\n"
+        );
+    }
+    if want("12") {
+        eval::fig12().print();
+        println!("paper: avg 1.3x / 2.4x / 3.5x; DNA capped at ~1.7x\n");
+    }
+    if want("13") {
+        let (at, pt) = eval::fig13(scale, seed);
+        at.print();
+        println!();
+        pt.print();
+        println!("paper: 2.93 mm² @45 nm, 800 MHz, 759.8 mW average\n");
+    }
+    if only.is_none() {
+        let h = eval::headline(scale, seed);
+        println!("== §5.2 headline ==");
+        println!(
+            "{:<34} {:>8} {:>8}",
+            "metric", "paper", "here"
+        );
+        println!(
+            "{:<34} {:>8} {:>7.2}x",
+            "ARENA/CC software ratio @16", "1.61x", h.sw_ratio_16
+        );
+        println!(
+            "{:<34} {:>8} {:>7.2}x",
+            "ARENA/CC CGRA ratio @16", "2.17x", h.cgra_ratio_16
+        );
+        println!(
+            "{:<34} {:>8} {:>7.2}x",
+            "ARENA+CGRA vs CC software @16", "4.37x", h.overall_ratio_16
+        );
+        println!(
+            "{:<34} {:>8} {:>6.1}%",
+            "movement reduction @4", "53.9%", 100.0 * h.movement_reduction
+        );
+    }
+}

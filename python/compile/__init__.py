@@ -1,0 +1,6 @@
+"""ARENA build-time compile path: L1 Pallas kernels + L2 JAX graphs + AOT.
+
+`python -m compile.aot` is the only entry point the build system calls;
+it writes `artifacts/*.hlo.txt` (+ manifest.json) which the Rust runtime
+loads via the PJRT C API. Python never runs on the request path.
+"""

@@ -1,0 +1,93 @@
+"""AOT export: lower every L2 task graph to HLO *text* artifacts.
+
+Interchange is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla_extension 0.5.1
+the Rust `xla` crate links rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Every graph is lowered with `return_tuple=True`; the Rust side unwraps
+with `to_tuple()`. A manifest.json records per-artifact I/O shapes and
+the baked constants so rust/src/runtime/artifacts.rs can sanity-check.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only NAME]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS, MANIFEST_CONSTANTS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name):
+    fn, arg_builder = ARTIFACTS[name]
+    args = arg_builder()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    out_avals = [
+        {"shape": list(a.shape), "dtype": str(a.dtype)}
+        for a in jax.tree_util.tree_leaves(lowered.out_info)
+    ]
+    in_avals = [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args]
+    return text, in_avals, out_avals
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="export a single artifact")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:  # legacy single-file invocation from old Makefile
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = [args.only] if args.only else list(ARTIFACTS)
+    manifest = {"constants": MANIFEST_CONSTANTS, "artifacts": {}}
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            try:
+                manifest = json.load(f)
+            except json.JSONDecodeError:
+                pass
+        manifest.setdefault("artifacts", {})
+        manifest["constants"] = MANIFEST_CONSTANTS
+
+    for name in names:
+        text, in_avals, out_avals = lower_one(name)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": in_avals,
+            "outputs": out_avals,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(in_avals)} in / "
+              f"{len(out_avals)} out)")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""L1 Pallas kernels for the ARENA reproduction (build-time only).
+
+Each module hosts one kernel family; `ref.py` is the pure-jnp oracle every
+kernel is pytest-checked against. Nothing in this package is imported at
+Rust runtime — `aot.py` lowers the L2 graphs (which call these kernels)
+to HLO text once, and the Rust coordinator executes the artifacts.
+"""
+
+from .axpy import axpy
+from .bfs import bfs_reach
+from .gemm import gemm, gemm_for_groups, GROUP_BLOCKS
+from .nbody import nbody_acc
+from .nw import nw_block
+from .spmv import spmv_ell
+
+__all__ = [
+    "axpy",
+    "bfs_reach",
+    "gemm",
+    "gemm_for_groups",
+    "GROUP_BLOCKS",
+    "nbody_acc",
+    "nw_block",
+    "spmv_ell",
+]

@@ -1,0 +1,33 @@
+"""Smoke kernel: alpha * x + y.
+
+Exercises the full three-layer path (pallas -> jax -> HLO text -> rust
+PJRT) with the simplest possible dataflow; used by the quickstart and by
+the Rust runtime's loader self-test.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, grid_1d
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def axpy(alpha, x, y, *, block=256):
+    """alpha: (1,) f32, x/y: (n,) f32 -> (n,) f32."""
+    n = x.shape[0]
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(grid_1d(n, block),),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=INTERPRET,
+    )(alpha, x, y)

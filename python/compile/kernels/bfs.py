@@ -1,0 +1,39 @@
+"""BFS/SSSP frontier relaxation over an adjacency row-block (paper Fig. 3).
+
+The paper's SSSP task scans its resident adjacency rows against the
+incoming frontier and spawns tokens for improved vertices. The kernel
+computes the data-parallel part — reachability of the block's vertices
+from the frontier — as a masked matvec; the spawn decision (compare with
+the running level) happens in the surrounding L2 function / Rust app,
+exactly as the CGRA's spawn FU sits outside the MAC datapath.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, full_spec
+
+
+def _bfs_kernel(adj_ref, frontier_ref, o_ref):
+    adj = adj_ref[...]  # (bm, n)
+    frontier = frontier_ref[...]  # (n,)
+    reach = (adj > 0).astype(adj.dtype) @ frontier
+    o_ref[...] = reach
+
+
+def bfs_reach(adj_blk, frontier, *, block_rows=16):
+    """adj_blk: (r, n) f32, frontier: (n,) f32 -> (r,) reach counts."""
+    r, n = adj_blk.shape
+    assert r % block_rows == 0
+    return pl.pallas_call(
+        _bfs_kernel,
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            full_spec((n,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), adj_blk.dtype),
+        interpret=INTERPRET,
+    )(adj_blk, frontier)

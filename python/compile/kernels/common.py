@@ -1,0 +1,24 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin (and the
+xla_extension 0.5.1 the Rust side links) cannot execute Mosaic TPU
+custom-calls, so interpret mode is the only lowering that round-trips
+through the AOT HLO-text path. On a real TPU the same kernels lower to
+Mosaic; the BlockSpec tilings below are chosen to map onto MXU/VMEM (see
+DESIGN.md §Perf).
+"""
+
+import jax
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def grid_1d(total, block):
+    assert total % block == 0, f"{total} % {block} != 0"
+    return total // block
+
+
+def full_spec(shape):
+    """BlockSpec that hands the whole operand to every grid step."""
+    return pl.BlockSpec(shape, lambda *_: (0,) * len(shape))

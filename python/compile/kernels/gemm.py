@@ -1,0 +1,57 @@
+"""Tiled dense GEMM — the CGRA tile-group workhorse (paper §5.1 GEMM/GCN).
+
+Hardware adaptation (DESIGN.md §2): the paper allocates 2x8 / 4x8 / 8x8
+CGRA tile groups to a task; here a group maps to the output-block shape of
+the Pallas grid. `GROUP_BLOCKS` gives the (bm, bn) tiling a g-group
+allocation uses for a 64-wide task tile, so the same artifact family
+mirrors the controller's 1/2/4-group decisions. The k-loop is the
+innermost grid axis and accumulates into the output block, the standard
+scratchpad-resident (VMEM on TPU) accumulation schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+# tile-groups -> (bm, bn) output block of a 64x64 task tile
+GROUP_BLOCKS = {1: (16, 64), 2: (32, 64), 4: (64, 64)}
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def gemm(a, b, *, bm=32, bn=32, bk=32):
+    """a: (m, k) f32, b: (k, n) f32 -> (m, n) f32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def gemm_for_groups(a, b, groups):
+    """GEMM tiled as a `groups`-group CGRA allocation would be."""
+    bm, bn = GROUP_BLOCKS[groups]
+    m, k = a.shape
+    bm, bn = min(bm, m), min(bn, b.shape[1])
+    bk = min(32, k)
+    return gemm(a, b, bm=bm, bn=bn, bk=bk)

@@ -1,0 +1,49 @@
+"""All-pairs N-body acceleration tile (paper §5.1 NBody).
+
+One grid step computes the accelerations of a `tile`-particle block
+against the full particle set — the paper's coarse-grained NBody task,
+whose ARENA task-flow streams the particle array around the ring while
+each node updates its resident block. pos layout is (n, 4) = [x, y, z, m]
+so every op stays 2D/vectorized (CGRA rows / TPU lanes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, full_spec
+
+
+def _nbody_kernel(pos_i_ref, pos_all_ref, o_ref, *, eps):
+    pi = pos_i_ref[...]  # (t, 4)
+    pa = pos_all_ref[...]  # (n, 4)
+    d = pa[None, :, :3] - pi[:, None, :3]  # (t, n, 3)
+    r2 = jnp.sum(d * d, axis=-1) + eps * eps
+    inv_r3 = r2 ** (-1.5)
+    m = pa[:, 3][None, :]
+    acc = jnp.sum(d * (m * inv_r3)[..., None], axis=1)  # (t, 3)
+    o_ref[...] = jnp.concatenate(
+        [acc, jnp.zeros((pi.shape[0], 1), dtype=pi.dtype)], axis=-1
+    )
+
+
+def nbody_acc(pos_i, pos_all, *, eps=1e-2, tile=None):
+    """pos_i: (t_total, 4), pos_all: (n, 4) -> (t_total, 4) accelerations."""
+    t_total = pos_i.shape[0]
+    n = pos_all.shape[0]
+    tile = tile or min(64, t_total)
+    assert t_total % tile == 0
+    kern = functools.partial(_nbody_kernel, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=(t_total // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, 4), lambda i: (i, 0)),
+            full_spec((n, 4)),
+        ],
+        out_specs=pl.BlockSpec((tile, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_total, 4), pos_i.dtype),
+        interpret=INTERPRET,
+    )(pos_i, pos_all)

@@ -1,0 +1,69 @@
+"""Needleman–Wunsch DP sub-block, anti-diagonal wavefront (paper §5.1 DNA).
+
+Hardware adaptation: the paper's CGRA executes the NW inner loop with a
+loop-carried dependency, so a tile group advances one anti-diagonal per
+initiation interval. The kernel mirrors that schedule — it iterates over
+the 2m-1 anti-diagonals of the sub-block and updates a whole diagonal as
+one vector op (the paper's 2x8 row of FUs), instead of the scalar i/j
+nest of the reference oracle. Halo rows (`top`, `left`) carry the
+cross-task dependency the DNA app exchanges over the ring.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+
+def _nw_kernel(a_ref, b_ref, top_ref, left_ref, o_ref, *, match, mismatch, gap):
+    a = a_ref[...]  # (m,) int32
+    b = b_ref[...]  # (n,) int32
+    top = top_ref[...]  # (n+1,)
+    left = left_ref[...]  # (m+1,)
+    m = a.shape[0]
+    n = b.shape[0]
+
+    H = jnp.zeros((m + 1, n + 1), dtype=top.dtype)
+    H = H.at[0, :].set(top)
+    H = H.at[:, 0].set(left)
+
+    ii = jnp.arange(m + 1)  # candidate row index for each diagonal lane
+    ncols = n + 1
+
+    def diag_body(d, H):
+        # Lane i updates H[i, d - i] for 1 <= i <= m, 1 <= d - i <= n.
+        jj = d - ii
+        valid = (ii >= 1) & (ii <= m) & (jj >= 1) & (jj <= n)
+        ai = jnp.take(a, jnp.clip(ii - 1, 0, m - 1))
+        bj = jnp.take(b, jnp.clip(jj - 1, 0, n - 1))
+        s = jnp.where(ai == bj, match, mismatch)
+
+        flat = H.ravel()
+        jc = jnp.clip(jj, 1, n)
+        base = ii * ncols + jc
+        diag = jnp.take(flat, base - ncols - 1)  # H[i-1, j-1]
+        up = jnp.take(flat, base - ncols)  # H[i-1, j]
+        lf = jnp.take(flat, base - 1)  # H[i,   j-1]
+        best = jnp.maximum(diag + s, jnp.maximum(up + gap, lf + gap))
+
+        flat = flat.at[jnp.where(valid, base, 0)].set(
+            jnp.where(valid, best, flat[0])
+        )
+        return flat.reshape(m + 1, n + 1)
+
+    H = jax.lax.fori_loop(2, m + n + 1, diag_body, H)
+    o_ref[...] = H
+
+
+def nw_block(a_idx, b_idx, top, left, *, match=1.0, mismatch=-1.0, gap=-1.0):
+    """DP over one (m x n) sub-block; returns the (m+1, n+1) H matrix."""
+    m, n = a_idx.shape[0], b_idx.shape[0]
+    kern = functools.partial(_nw_kernel, match=match, mismatch=mismatch, gap=gap)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((m + 1, n + 1), top.dtype),
+        interpret=INTERPRET,
+    )(a_idx, b_idx, top, left)

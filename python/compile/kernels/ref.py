@@ -1,0 +1,106 @@
+"""Pure-jnp reference oracle for every L1 kernel.
+
+These are the *correctness contracts*: each Pallas kernel in this package
+must match its `ref_*` counterpart to float32 tolerance under pytest
+(python/tests/). The Rust native compute backend is additionally checked
+against the AOT-compiled HLO of these functions via the PJRT round-trip.
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def ref_axpy(alpha, x, y):
+    """alpha * x + y (smoke kernel)."""
+    return alpha * x + y
+
+
+def ref_gemm(a, b):
+    """Dense f32 GEMM, the CGRA tile-group workhorse."""
+    return jnp.matmul(a, b)
+
+
+def ref_spmv_ell(values, cols, x):
+    """SPMV over ELL-packed rows.
+
+    values: (rows, k) f32, cols: (rows, k) int32 (padded entries have
+    value 0.0 and col 0), x: (n,) f32 -> (rows,) f32.
+    """
+    gathered = x[cols]  # (rows, k)
+    return jnp.sum(values * gathered, axis=-1)
+
+
+def ref_nw(a_idx, b_idx, top, left, match, mismatch, gap):
+    """Needleman-Wunsch DP sub-block with halo rows (DNA app).
+
+    a_idx: (m,) int32 residues down the block, b_idx: (n,) int32 across,
+    top: (n+1,) f32 incoming DP row (H[0, :]), left: (m+1,) f32 incoming
+    DP column (H[:, 0]); top[0] == left[0] is the corner. Returns the
+    full (m+1, n+1) DP matrix H.
+    """
+    m, n = a_idx.shape[0], b_idx.shape[0]
+    H = jnp.zeros((m + 1, n + 1), dtype=jnp.float32)
+    H = H.at[0, :].set(top)
+    H = H.at[:, 0].set(left)
+
+    def row_body(i, H):
+        def col_body(j, H):
+            s = jnp.where(a_idx[i - 1] == b_idx[j - 1], match, mismatch)
+            best = jnp.maximum(
+                H[i - 1, j - 1] + s,
+                jnp.maximum(H[i - 1, j] + gap, H[i, j - 1] + gap),
+            )
+            return H.at[i, j].set(best)
+
+        return jax.lax.fori_loop(1, n + 1, col_body, H)
+
+    return jax.lax.fori_loop(1, m + 1, row_body, H)
+
+
+def ref_gcn_layer(a_blk, h, w, relu=True):
+    """One GCN layer on a row-block of the normalized adjacency.
+
+    a_blk: (r, n) f32 row-slice of A_hat, h: (n, f) node features,
+    w: (f, f_out) weights -> (r, f_out).
+    """
+    out = a_blk @ (h @ w)
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def ref_nbody_acc(pos_i, pos_all, eps):
+    """Softened all-pairs gravitational acceleration.
+
+    pos_i: (t, 4) f32 [x, y, z, mass] of the tile's particles,
+    pos_all: (n, 4) f32 of every particle -> (t, 4) acc ([:, 3] == 0).
+    """
+    d = pos_all[None, :, :3] - pos_i[:, None, :3]  # (t, n, 3)
+    r2 = jnp.sum(d * d, axis=-1) + eps * eps  # (t, n)
+    inv_r3 = r2 ** (-1.5)
+    m = pos_all[:, 3][None, :]  # (1, n)
+    acc = jnp.sum(d * (m * inv_r3)[..., None], axis=1)  # (t, 3)
+    return jnp.concatenate(
+        [acc, jnp.zeros((pos_i.shape[0], 1), dtype=pos_i.dtype)], axis=-1
+    )
+
+
+def ref_nbody_step(pos, vel, dt, eps):
+    """Leapfrog step over the full particle set (L2 contract)."""
+    acc = ref_nbody_acc(pos, pos, eps)
+    vel2 = vel + dt * acc
+    pos2 = pos + dt * jnp.concatenate(
+        [vel2[:, :3], jnp.zeros((pos.shape[0], 1), dtype=pos.dtype)], axis=-1
+    )
+    return pos2, vel2
+
+
+def ref_bfs_level(adj_row_blk, dist_blk, frontier, level):
+    """One SSSP/BFS relaxation over a row-block of the adjacency.
+
+    adj_row_blk: (r, n) f32 (>0 edge), dist_blk: (r,) f32 current levels
+    for the block's vertices, frontier: (n,) f32 1.0 where vertex is in
+    the current frontier. Returns (new_dist_blk, new_frontier_blk).
+    """
+    reach = (adj_row_blk > 0).astype(jnp.float32) @ frontier  # (r,)
+    improved = (reach > 0) & (dist_blk > level + 1)
+    new_dist = jnp.where(improved, level + 1.0, dist_blk)
+    return new_dist, improved.astype(jnp.float32)

@@ -1,0 +1,41 @@
+"""SPMV over ELL-packed CSR rows (paper §5.1 SPMV).
+
+The distributed matrix is CSR in the Rust app; each task's row block is
+repacked to ELL (fixed nnz/row with zero padding) before hitting the
+kernel, because the CGRA — like the MXU — wants a regular access pattern.
+The row-block is the grid axis; the dense vector x stays resident (the
+paper's scratchpad data memory holds the task's working set).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, full_spec
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, o_ref):
+    x = x_ref[...]
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    gathered = jnp.take(x, cols, axis=0)  # (bm, k)
+    o_ref[...] = jnp.sum(vals * gathered, axis=-1)
+
+
+def spmv_ell(values, cols, x, *, block_rows=16):
+    """values/cols: (rows, k), x: (n,) -> (rows,) f32."""
+    rows, k = values.shape
+    n = x.shape[0]
+    assert rows % block_rows == 0
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            full_spec((n,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), values.dtype),
+        interpret=INTERPRET,
+    )(values, cols, x)

@@ -1,0 +1,133 @@
+"""L2: the JAX compute graphs the Rust coordinator executes per task.
+
+Every function here is a *task kernel body* in the paper's sense: the
+unit of work a CGRA tile group is configured for when a task token is
+detached from the ring. Each composes the L1 Pallas kernels (so the
+Pallas ops lower into the same HLO module) and is AOT-exported by
+`aot.py` at the fixed shapes listed in `ARTIFACTS`.
+
+Constants (NW scoring, N-body softening/dt) are baked at lowering time
+and recorded in the artifact manifest so the Rust side stays in sync.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    axpy,
+    bfs_reach,
+    gemm,
+    gemm_for_groups,
+    nbody_acc,
+    nw_block,
+    spmv_ell,
+)
+
+# Scoring / physics constants shared with rust/src/apps (manifest-checked).
+NW_MATCH = 1.0
+NW_MISMATCH = -1.0
+NW_GAP = -1.0
+NBODY_EPS = 1e-2
+NBODY_DT = 1e-2
+
+
+def axpy_task(alpha, x, y):
+    """Smoke task: alpha*x + y through the Pallas path."""
+    return (axpy(alpha, x, y),)
+
+
+def gemm_task(a, b, *, groups=4):
+    """Dense GEMM tile on a `groups`-group CGRA allocation."""
+    return (gemm_for_groups(a, b, groups),)
+
+
+def spmv_task(values, cols, x):
+    """ELL SPMV row-block times the resident dense vector."""
+    return (spmv_ell(values, cols, x),)
+
+
+def nw_task(a_idx, b_idx, top, left):
+    """One DNA sub-block: full DP matrix (halo rows extracted by rust)."""
+    return (
+        nw_block(
+            a_idx, b_idx, top, left,
+            match=NW_MATCH, mismatch=NW_MISMATCH, gap=NW_GAP,
+        ),
+    )
+
+
+def gcn_layer_task(a_blk, h, w, *, relu=True):
+    """One GCN layer on a row-block of A_hat: act(A_blk @ (H @ W)).
+
+    Both matmuls go through the Pallas GEMM so the whole layer is one
+    artifact; `relu` distinguishes layer-1 from the logit layer.
+    """
+    hw = gemm(h, w, bm=min(32, h.shape[0]), bn=min(32, w.shape[1]),
+              bk=min(32, h.shape[1]))
+    out = gemm(a_blk, hw, bm=min(32, a_blk.shape[0]),
+               bn=min(32, hw.shape[1]), bk=min(64, hw.shape[0]))
+    return (jnp.maximum(out, 0.0) if relu else out,)
+
+
+def gcn_model_task(a, x, w1, w2):
+    """Full 2-layer GCN inference (single-node reference artifact)."""
+    (h1,) = gcn_layer_task(a, x, w1, relu=True)
+    (logits,) = gcn_layer_task(a, h1, w2, relu=False)
+    return (logits,)
+
+
+def nbody_acc_task(pos_i, pos_all):
+    """Accelerations of a particle block against the full set."""
+    return (nbody_acc(pos_i, pos_all, eps=NBODY_EPS),)
+
+
+def nbody_step_task(pos, vel):
+    """Leapfrog step of the resident block (pos == its own universe)."""
+    acc = nbody_acc(pos, pos, eps=NBODY_EPS)
+    vel2 = vel + NBODY_DT * acc
+    zeros = jnp.zeros((pos.shape[0], 1), dtype=pos.dtype)
+    pos2 = pos + NBODY_DT * jnp.concatenate([vel2[:, :3], zeros], axis=-1)
+    return (pos2, vel2)
+
+
+def bfs_task(adj_blk, frontier):
+    """Reach counts of a row-block's vertices from the frontier."""
+    return (bfs_reach(adj_blk, frontier),)
+
+
+# name -> (fn, example-arg builder). Shapes are the task-tile contracts
+# the Rust apps assume; see rust/src/runtime/artifacts.rs.
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+ARTIFACTS = {
+    "axpy": (axpy_task, lambda: (_f32(1), _f32(1024), _f32(1024))),
+    "gemm64": (gemm_task, lambda: (_f32(64, 64), _f32(64, 64))),
+    "gemm128": (gemm_task, lambda: (_f32(128, 128), _f32(128, 128))),
+    "spmv": (spmv_task, lambda: (_f32(64, 16), _i32(64, 16), _f32(256))),
+    "nw64": (nw_task, lambda: (_i32(64), _i32(64), _f32(65), _f32(65))),
+    "gcn_l1": (
+        lambda a, h, w: gcn_layer_task(a, h, w, relu=True),
+        lambda: (_f32(64, 512), _f32(512, 128), _f32(128, 32)),
+    ),
+    "gcn_l2": (
+        lambda a, h, w: gcn_layer_task(a, h, w, relu=False),
+        lambda: (_f32(64, 512), _f32(512, 32), _f32(32, 8)),
+    ),
+    "nbody": (nbody_acc_task, lambda: (_f32(64, 4), _f32(256, 4))),
+    "nbody_step": (nbody_step_task, lambda: (_f32(64, 4), _f32(64, 4))),
+    "bfs": (bfs_task, lambda: (_f32(64, 256), _f32(256))),
+}
+
+MANIFEST_CONSTANTS = {
+    "nw_match": NW_MATCH,
+    "nw_mismatch": NW_MISMATCH,
+    "nw_gap": NW_GAP,
+    "nbody_eps": NBODY_EPS,
+    "nbody_dt": NBODY_DT,
+}

@@ -1,0 +1,15 @@
+"""Shared pytest fixtures/strategies for the kernel suite."""
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# Pallas interpret mode re-traces per shape; keep example counts modest
+# but sweep real shape/seed space (registered as the default profile).
+settings.register_profile("arena", max_examples=12, deadline=None)
+settings.load_profile("arena")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)

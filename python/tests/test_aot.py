@@ -1,0 +1,54 @@
+"""AOT export path: every artifact lowers, manifest is consistent."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import lower_one
+from compile.model import ARTIFACTS, MANIFEST_CONSTANTS
+
+
+@pytest.mark.parametrize("name", sorted(ARTIFACTS))
+def test_every_artifact_lowers_to_hlo_text(name):
+    text, in_avals, out_avals = lower_one(name)
+    # HLO text module header + entry computation present
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    assert len(in_avals) >= 1 and len(out_avals) >= 1
+    # f32/s32 only — the rust runtime supports exactly these dtypes
+    for a in in_avals + out_avals:
+        assert a["dtype"] in ("float32", "int32")
+
+
+def test_cli_export_roundtrip(tmp_path):
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--only", "axpy"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, env=env,
+    )
+    assert out.returncode == 0, out.stderr
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["constants"] == MANIFEST_CONSTANTS
+    entry = manifest["artifacts"]["axpy"]
+    hlo = (tmp_path / entry["file"]).read_text()
+    assert hlo.startswith("HloModule")
+    assert [tuple(i["shape"]) for i in entry["inputs"]] == [
+        (1,), (1024,), (1024,)
+    ]
+
+
+def test_repo_manifest_in_sync():
+    """artifacts/manifest.json (if built) matches the current ARTIFACTS."""
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    path = os.path.join(root, "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    manifest = json.load(open(path))
+    assert set(manifest["artifacts"]) >= set(ARTIFACTS)
+    assert manifest["constants"] == MANIFEST_CONSTANTS

@@ -1,0 +1,38 @@
+"""axpy kernel vs oracle: shape/alpha/block sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import axpy
+from compile.kernels.ref import ref_axpy
+
+
+@given(
+    nblocks=st.integers(1, 8),
+    block=st.sampled_from([32, 64, 128]),
+    alpha=st.floats(-10.0, 10.0, allow_nan=False, width=32),
+    seed=st.integers(0, 2**16),
+)
+def test_axpy_matches_ref(nblocks, block, alpha, seed):
+    rng = np.random.default_rng(seed)
+    n = nblocks * block
+    x = jnp.asarray(rng.normal(size=n), jnp.float32)
+    y = jnp.asarray(rng.normal(size=n), jnp.float32)
+    got = axpy(jnp.asarray([alpha], jnp.float32), x, y, block=block)
+    want = ref_axpy(jnp.float32(alpha), x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_axpy_zero_alpha():
+    x = jnp.ones(64, jnp.float32)
+    y = jnp.full(64, 3.0, jnp.float32)
+    got = axpy(jnp.zeros(1, jnp.float32), x, y, block=64)
+    np.testing.assert_array_equal(np.asarray(got), np.full(64, 3.0, np.float32))
+
+
+def test_axpy_identity():
+    x = jnp.arange(128, dtype=jnp.float32)
+    y = jnp.zeros(128, jnp.float32)
+    got = axpy(jnp.ones(1, jnp.float32), x, y, block=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x))

@@ -1,0 +1,70 @@
+"""BFS reach kernel + GCN layer/model graphs vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import bfs_reach
+from compile.kernels.ref import ref_bfs_level, ref_gcn_layer
+from compile.model import bfs_task, gcn_layer_task, gcn_model_task
+
+
+@given(
+    r=st.sampled_from([16, 32, 64]),
+    n=st.sampled_from([64, 128, 256]),
+    p_edge=st.floats(0.0, 0.3),
+    p_front=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**16),
+)
+def test_bfs_reach_matches_ref(r, n, p_edge, p_front, seed):
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((r, n)) < p_edge).astype(np.float32)
+    fr = (rng.random(n) < p_front).astype(np.float32)
+    got = bfs_reach(jnp.asarray(adj), jnp.asarray(fr), block_rows=16)
+    want = (adj > 0).astype(np.float32) @ fr
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_bfs_level_update_semantics(rng):
+    """Full relaxation step (kernel + L2 threshold logic) == oracle."""
+    r, n, level = 32, 128, 2.0
+    adj = (rng.random((r, n)) < 0.1).astype(np.float32)
+    dist = np.full(r, np.inf, np.float32)
+    dist[:4] = 1.0
+    fr = (rng.random(n) < 0.2).astype(np.float32)
+    (reach,) = bfs_task(jnp.asarray(adj), jnp.asarray(fr))
+    improved = (np.asarray(reach) > 0) & (dist > level + 1)
+    new_dist = np.where(improved, level + 1.0, dist)
+    ref_dist, ref_front = ref_bfs_level(
+        jnp.asarray(adj), jnp.asarray(dist), jnp.asarray(fr), level
+    )
+    np.testing.assert_allclose(new_dist, ref_dist)
+    np.testing.assert_array_equal(
+        improved.astype(np.float32), np.asarray(ref_front)
+    )
+
+
+@given(seed=st.integers(0, 2**16), relu=st.booleans())
+def test_gcn_layer_matches_ref(seed, relu):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(32, 64)).astype(np.float32)
+    h = rng.normal(size=(64, 32)).astype(np.float32)
+    w = rng.normal(size=(32, 16)).astype(np.float32)
+    (got,) = gcn_layer_task(jnp.asarray(a), jnp.asarray(h), jnp.asarray(w),
+                            relu=relu)
+    want = ref_gcn_layer(jnp.asarray(a), jnp.asarray(h), jnp.asarray(w),
+                         relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_gcn_model_two_layers(rng):
+    """2-layer model == composing the layer oracle twice."""
+    n, f, h, c = 64, 32, 16, 8
+    a = rng.normal(size=(n, n)).astype(np.float32)
+    x = rng.normal(size=(n, f)).astype(np.float32)
+    w1 = rng.normal(size=(f, h)).astype(np.float32)
+    w2 = rng.normal(size=(h, c)).astype(np.float32)
+    (got,) = gcn_model_task(*map(jnp.asarray, (a, x, w1, w2)))
+    h1 = ref_gcn_layer(jnp.asarray(a), jnp.asarray(x), jnp.asarray(w1))
+    want = ref_gcn_layer(jnp.asarray(a), h1, jnp.asarray(w2), relu=False)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

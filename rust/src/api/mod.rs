@@ -1,0 +1,322 @@
+//! ARENA programming model (paper Table 1).
+//!
+//! The paper's user-facing API is a C library over an abstract machine
+//! model; here it is a Rust trait + registry with the same verbs:
+//!
+//! | Paper                    | Here                                   |
+//! |--------------------------|----------------------------------------|
+//! | `my_task(start,end,p)`   | [`App::execute`] on a [`TaskToken`]    |
+//! | `ARENA_task_register`    | [`TaskRegistry::register`]             |
+//! | `ARENA_task_spawn`       | [`ExecCtx::spawn`]                     |
+//! | `ARENA_init`             | [`App::init`] (local data partition)   |
+//! | `ARENA_arrive/filter/…`  | hardware abstract functions, realized  |
+//! |                          | by `node::Node` + `dispatcher::filter` |
+//!
+//! Apps are *functional* as well as timed: `execute` both mutates the
+//! app's distributed state (so results can be checked against a serial
+//! oracle) and reports the kernel work units consumed (so the timing
+//! model can cost it on a CPU or a CGRA group allocation).
+
+use std::collections::BTreeMap;
+
+use crate::config::ArenaConfig;
+use crate::runtime::Engine;
+use crate::token::{NodeId, Range, TaskId, TaskToken};
+
+/// Bytes per data word in the global address space (f32 everywhere).
+pub const WORD_BYTES: u64 = 4;
+
+/// One registered kernel: which mapper CDFG times it and whether the
+/// leader injects it at start-up (paper: `isRoot`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskEntry {
+    pub id: TaskId,
+    /// Name understood by `mapper::kernels::kernel_for`.
+    pub kernel: &'static str,
+    pub is_root: bool,
+    /// `ARENA_data_acquire` source policy: when true, the NIC pulls the
+    /// REMOTE range from the token's `FROMnode` (whose scratchpad holds
+    /// a live copy — it just produced or used the data) instead of the
+    /// range's home node. This is how systolic task-flows (N-body ring
+    /// streaming) get single-hop transfers; the default is home-node
+    /// resolution.
+    pub fetch_from_parent: bool,
+}
+
+/// `ARENA_task_register` target: the table every node pre-loads into its
+/// control memory before the runtime starts (paper §4.3).
+#[derive(Clone, Debug, Default)]
+pub struct TaskRegistry {
+    entries: BTreeMap<TaskId, TaskEntry>,
+}
+
+impl TaskRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `kernel` under `id`. Ids are 4-bit on the wire and id 0
+    /// is reserved for TERMINATE; duplicate registration panics (the
+    /// paper's runtime asserts the same).
+    pub fn register(&mut self, id: TaskId, kernel: &'static str, is_root: bool) {
+        self.register_entry(TaskEntry {
+            id,
+            kernel,
+            is_root,
+            fetch_from_parent: false,
+        });
+    }
+
+    /// Register a kernel whose REMOTE data is pulled from the spawning
+    /// node (systolic streaming; see [`TaskEntry::fetch_from_parent`]).
+    pub fn register_streaming(&mut self, id: TaskId, kernel: &'static str) {
+        self.register_entry(TaskEntry {
+            id,
+            kernel,
+            is_root: false,
+            fetch_from_parent: true,
+        });
+    }
+
+    /// Insert a fully specified entry (used by the cluster to merge
+    /// per-app registries).
+    pub fn register_entry(&mut self, e: TaskEntry) {
+        assert!(e.id != crate::token::TERMINATE, "task id 0 is TERMINATE");
+        assert!(e.id < 16, "task ids are 4-bit on the wire");
+        let id = e.id;
+        let prev = self.entries.insert(id, e);
+        assert!(prev.is_none(), "task id {id} registered twice");
+    }
+
+    pub fn get(&self, id: TaskId) -> Option<&TaskEntry> {
+        self.entries.get(&id)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TaskEntry> {
+        self.entries.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// What one task execution cost (feeds the timing model).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Exec {
+    /// Kernel work units consumed (app-specific: MACs, nonzeros,
+    /// DP cells, pair interactions, scanned adjacency words).
+    pub units: u64,
+    /// Bytes the task read from / wrote to the local scratchpad (data
+    /// movement accounting counts only *inter-node* traffic, but local
+    /// byte counts feed the power model's activity factors).
+    pub local_bytes: u64,
+}
+
+/// Execution context handed to [`App::execute`] — the task's window onto
+/// the ARENA machine: spawning (`ARENA_task_spawn`) and, when an engine
+/// is attached, the AOT-compiled PJRT kernels.
+pub struct ExecCtx<'a> {
+    /// Node the task runs on (`FROMnode` for spawned tokens).
+    pub node: NodeId,
+    /// PJRT engine, when the cluster runs with numerics enabled.
+    pub engine: Option<&'a mut Engine>,
+    spawns: Vec<TaskToken>,
+    forwards: Vec<TaskToken>,
+}
+
+impl<'a> ExecCtx<'a> {
+    pub fn new(node: NodeId, engine: Option<&'a mut Engine>) -> Self {
+        ExecCtx { node, engine, spawns: Vec::new(), forwards: Vec::new() }
+    }
+
+    /// `ARENA_task_spawn`: emit a new token; `FROMnode` is stamped
+    /// automatically, exactly like the CGRA controller does.
+    pub fn spawn(&mut self, id: TaskId, task: Range, param: f32) {
+        self.spawns
+            .push(TaskToken::new(id, task, param).from_node(self.node));
+    }
+
+    /// Spawn with an explicit unavoidable-remote-data range
+    /// (`REMOTEstart`/`REMOTEend` in the paper's API).
+    pub fn spawn_with_remote(
+        &mut self,
+        id: TaskId,
+        task: Range,
+        param: f32,
+        remote: Range,
+    ) {
+        self.spawns.push(
+            TaskToken::new(id, task, param)
+                .with_remote(remote)
+                .from_node(self.node),
+        );
+    }
+
+    /// Spawn a *forwarding* token: one whose REMOTE payload does not
+    /// depend on this task's output (panel/chunk pass-along in systolic
+    /// flows). The CGRA's spawn FU issues tokens mid-execution
+    /// (paper §4.3: "the functional unit also supports the spawn
+    /// operation"), so forwarding tokens are released at task *launch*
+    /// — the downstream fetch overlaps this task's compute.
+    pub fn spawn_forward(
+        &mut self,
+        id: TaskId,
+        task: Range,
+        param: f32,
+        remote: Range,
+    ) {
+        self.forwards.push(
+            TaskToken::new(id, task, param)
+                .with_remote(remote)
+                .from_node(self.node),
+        );
+    }
+
+    /// Tokens spawned so far, released at task completion (drained by
+    /// the node runtime into the coalescing unit).
+    pub fn take_spawns(&mut self) -> Vec<TaskToken> {
+        std::mem::take(&mut self.spawns)
+    }
+
+    /// Forwarding tokens, released at task launch.
+    pub fn take_forwards(&mut self) -> Vec<TaskToken> {
+        std::mem::take(&mut self.forwards)
+    }
+
+    pub fn n_spawned(&self) -> usize {
+        self.spawns.len() + self.forwards.len()
+    }
+}
+
+/// A complete ARENA application: registration, data distribution, root
+/// tasks, per-token execution, and a serial-oracle check.
+pub trait App {
+    fn name(&self) -> &'static str;
+
+    /// Size of the app's private global address space, in data words.
+    /// The cluster stripes `[0, words)` over the nodes.
+    fn words(&self) -> u32;
+
+    /// `ARENA_task_register` calls (one or more kernels).
+    fn register(&self, reg: &mut TaskRegistry);
+
+    /// Distribute the working set over `parts` (the per-node local
+    /// address ranges, computed by the cluster) and build initial state.
+    fn init(&mut self, cfg: &ArenaConfig, parts: &[Range]);
+
+    /// Tokens the leader injects once the system starts (root tasks).
+    fn root_tokens(&self) -> Vec<TaskToken>;
+
+    /// Run `token` on `node` (all of `token.task` is local by
+    /// construction — the filter guarantees it). Mutates app state,
+    /// spawns follow-up work through `ctx`, returns the cost.
+    fn execute(&mut self, node: usize, token: &TaskToken, ctx: &mut ExecCtx)
+        -> Exec;
+
+    /// Total serial work units (single-node baseline denominator).
+    fn total_units(&self) -> u64;
+
+    /// Verify the distributed result against a serially computed oracle.
+    /// Called after the cluster quiesces.
+    fn check(&self) -> Result<(), String>;
+}
+
+/// Equal striping of `[0, words)` over `n` nodes — the paper asserts no
+/// prior knowledge of data distribution, so the default is the naive
+/// contiguous split (skew experiments override per-part lengths).
+pub fn stripe(words: u32, n: usize) -> Vec<Range> {
+    let n32 = n as u32;
+    let base = words / n32;
+    let rem = words % n32;
+    let mut parts = Vec::with_capacity(n);
+    let mut at = 0;
+    for i in 0..n32 {
+        let len = base + u32::from(i < rem);
+        parts.push(Range::new(at, at + len));
+        at += len;
+    }
+    parts
+}
+
+/// Which node owns global word address `a` under partition `parts`.
+pub fn owner_of(parts: &[Range], a: u32) -> usize {
+    parts
+        .iter()
+        .position(|r| r.start <= a && a < r.end)
+        .unwrap_or_else(|| panic!("address {a} outside the global space"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_rules() {
+        let mut r = TaskRegistry::new();
+        r.register(1, "gemm", true);
+        r.register(2, "spmv", false);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get(1).unwrap().kernel, "gemm");
+        assert!(r.get(1).unwrap().is_root);
+        assert!(!r.get(2).unwrap().is_root);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered twice")]
+    fn duplicate_id_panics() {
+        let mut r = TaskRegistry::new();
+        r.register(1, "gemm", true);
+        r.register(1, "spmv", false);
+    }
+
+    #[test]
+    #[should_panic(expected = "TERMINATE")]
+    fn id_zero_reserved() {
+        TaskRegistry::new().register(0, "gemm", true);
+    }
+
+    #[test]
+    fn spawn_stamps_from_node() {
+        let mut ctx = ExecCtx::new(3, None);
+        ctx.spawn(1, Range::new(0, 4), 2.5);
+        ctx.spawn_with_remote(1, Range::new(4, 8), 0.0, Range::new(100, 104));
+        let s = ctx.take_spawns();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].from_node, 3);
+        assert_eq!(s[0].param, 2.5);
+        assert_eq!(s[1].remote, Range::new(100, 104));
+        assert!(ctx.take_spawns().is_empty(), "drained");
+    }
+
+    #[test]
+    fn stripe_covers_exactly() {
+        for (words, n) in [(100u32, 4usize), (7, 3), (16, 16), (5, 8)] {
+            let parts = stripe(words, n);
+            assert_eq!(parts.len(), n);
+            assert_eq!(parts[0].start, 0);
+            assert_eq!(parts.last().unwrap().end, words);
+            for w in parts.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            // balanced within 1
+            let lens: Vec<u32> = parts.iter().map(Range::len).collect();
+            let (mn, mx) =
+                (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn owner_lookup() {
+        let parts = stripe(100, 4);
+        assert_eq!(owner_of(&parts, 0), 0);
+        assert_eq!(owner_of(&parts, 24), 0);
+        assert_eq!(owner_of(&parts, 25), 1);
+        assert_eq!(owner_of(&parts, 99), 3);
+    }
+}

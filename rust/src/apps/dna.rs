@@ -1,0 +1,318 @@
+//! DNA sequence alignment (Needleman–Wunsch DP), data-centric
+//! (paper §5.1).
+//!
+//! The (L+1)×(L+1) score matrix is computed in B×B sub-blocks. The
+//! address space is block-row-major: block `(bi, bj)` owns the B² words
+//! at `(bi*NB + bj) * B²`, and block-rows are striped over the nodes.
+//! A block task depends on its left neighbour (same block-row — always
+//! local) and its top neighbour (previous block-row — usually the
+//! previous node). The parent explicitly labels the halo with
+//! `REMOTE = ` the top block's last row (B contiguous words), which is
+//! the paper's point about DNA: only the sub-block *edges* move,
+//! instead of the zig-zag shared-memory traffic of the OpenMP baseline
+//! (Fig. 10). The wavefront itself is the spawn pattern: a block spawns
+//! its right/down neighbours once both of their dependencies resolved.
+//!
+//! With a PJRT engine attached and B = 64, blocks run on the
+//! AOT-compiled `nw64` Pallas kernel (anti-diagonal wavefront, the CGRA
+//! schedule); otherwise a host DP loop computes them.
+
+use crate::api::{App, Exec, ExecCtx, TaskRegistry};
+use crate::config::ArenaConfig;
+use crate::runtime::Tensor;
+use crate::token::{Range, TaskId, TaskToken};
+
+use super::workloads::{gen_sequence, nw_ref, NW_GAP, NW_MATCH, NW_MISMATCH};
+
+pub struct DnaApp {
+    l: usize,
+    b: usize,
+    seed: u64,
+    base_id: TaskId,
+    seq_a: Vec<u8>,
+    seq_b: Vec<u8>,
+    /// (L+1)×(L+1) DP matrix, row-major.
+    h: Vec<f32>,
+    done: Vec<bool>,
+    spawned: Vec<bool>,
+    parts: Vec<Range>,
+    pub pjrt_blocks: u64,
+}
+
+impl DnaApp {
+    pub fn new(l: usize, b: usize, seed: u64) -> Self {
+        assert_eq!(l % b, 0, "block size must divide sequence length");
+        DnaApp {
+            l,
+            b,
+            seed,
+            base_id: 4,
+            seq_a: Vec::new(),
+            seq_b: Vec::new(),
+            h: Vec::new(),
+            done: Vec::new(),
+            spawned: Vec::new(),
+            parts: Vec::new(),
+            pjrt_blocks: 0,
+        }
+    }
+
+    pub fn paper(seed: u64) -> Self {
+        // 1024-char sequences in 64×64 blocks -> 16 block-rows, enough
+        // for the 16-node sweep.
+        DnaApp::new(1024, 64, seed)
+    }
+
+    pub fn with_base_id(mut self, id: TaskId) -> Self {
+        self.base_id = id;
+        self
+    }
+
+    fn nb(&self) -> usize {
+        self.l / self.b
+    }
+
+    fn block_addr(&self, bi: usize, bj: usize) -> u32 {
+        ((bi * self.nb() + bj) * self.b * self.b) as u32
+    }
+
+    fn block_of(&self, addr: u32) -> (usize, usize) {
+        let blk = addr as usize / (self.b * self.b);
+        (blk / self.nb(), blk % self.nb())
+    }
+
+    fn block_token(&self, bi: usize, bj: usize) -> TaskToken {
+        let a = self.block_addr(bi, bj);
+        TaskToken::new(self.base_id, Range::new(a, a + (self.b * self.b) as u32), 0.0)
+    }
+
+    /// Compute block (bi, bj) of the DP matrix in place.
+    fn compute_block(&mut self, bi: usize, bj: usize, ctx: &mut ExecCtx) {
+        let (b, w) = (self.b, self.l + 1);
+        let (r0, c0) = (bi * b, bj * b); // H-coords of the block's corner
+        let use_pjrt = ctx.engine.is_some() && b == 64;
+        if use_pjrt {
+            let eng = ctx.engine.as_deref_mut().unwrap();
+            let a: Vec<i32> =
+                self.seq_a[r0..r0 + b].iter().map(|&x| x as i32).collect();
+            let bb: Vec<i32> =
+                self.seq_b[c0..c0 + b].iter().map(|&x| x as i32).collect();
+            let top: Vec<f32> =
+                (0..=b).map(|j| self.h[r0 * w + c0 + j]).collect();
+            let left: Vec<f32> =
+                (0..=b).map(|i| self.h[(r0 + i) * w + c0]).collect();
+            let out = eng
+                .execute_f32(
+                    "nw64",
+                    &[
+                        Tensor::i32(a, &[b]),
+                        Tensor::i32(bb, &[b]),
+                        Tensor::f32(top, &[b + 1]),
+                        Tensor::f32(left, &[b + 1]),
+                    ],
+                )
+                .expect("nw64 artifact");
+            // out is the (b+1)×(b+1) block including its boundaries
+            for i in 1..=b {
+                for j in 1..=b {
+                    self.h[(r0 + i) * w + c0 + j] = out[i * (b + 1) + j];
+                }
+            }
+            self.pjrt_blocks += 1;
+        } else {
+            for i in r0 + 1..=r0 + b {
+                for j in c0 + 1..=c0 + b {
+                    let s = if self.seq_a[i - 1] == self.seq_b[j - 1] {
+                        NW_MATCH
+                    } else {
+                        NW_MISMATCH
+                    };
+                    let diag = self.h[(i - 1) * w + j - 1] + s;
+                    let up = self.h[(i - 1) * w + j] + NW_GAP;
+                    let left = self.h[i * w + j - 1] + NW_GAP;
+                    self.h[i * w + j] = diag.max(up).max(left);
+                }
+            }
+        }
+    }
+
+    /// Spawn `(bi, bj)` if both wavefront dependencies are satisfied
+    /// and it has not been spawned yet.
+    fn maybe_spawn(&mut self, bi: usize, bj: usize, ctx: &mut ExecCtx, node: usize) {
+        let nb = self.nb();
+        if bi >= nb || bj >= nb {
+            return;
+        }
+        let idx = bi * nb + bj;
+        if self.spawned[idx] {
+            return;
+        }
+        let top_ok = bi == 0 || self.done[(bi - 1) * nb + bj];
+        let left_ok = bj == 0 || self.done[bi * nb + bj - 1];
+        if !(top_ok && left_ok) {
+            return;
+        }
+        self.spawned[idx] = true;
+        let _ = node;
+        let tok = self.block_token(bi, bj);
+        if bi > 0 {
+            // halo: the top block's last row, contiguous in the
+            // block-row-major layout. Attach REMOTE whenever the top
+            // block lives on a different node than the spawned block —
+            // the executing node must fetch it no matter which parent
+            // fired the spawn.
+            let ta = self.block_addr(bi - 1, bj);
+            let bsz = (self.b * self.b) as u32;
+            let halo = Range::new(ta + bsz - self.b as u32, ta + bsz);
+            let target = crate::api::owner_of(&self.parts, tok.task.start);
+            let halo_owner = crate::api::owner_of(&self.parts, halo.start);
+            if target != halo_owner {
+                ctx.spawn_with_remote(tok.task_id, tok.task, 0.0, halo);
+                return;
+            }
+        }
+        ctx.spawn(tok.task_id, tok.task, 0.0);
+    }
+
+    pub fn score(&self) -> f32 {
+        self.h[(self.l + 1) * (self.l + 1) - 1]
+    }
+}
+
+impl App for DnaApp {
+    fn name(&self) -> &'static str {
+        "dna"
+    }
+
+    fn words(&self) -> u32 {
+        (self.l * self.l) as u32
+    }
+
+    fn register(&self, reg: &mut TaskRegistry) {
+        reg.register(self.base_id, "dna", true);
+    }
+
+    fn init(&mut self, cfg: &ArenaConfig, parts: &[Range]) {
+        let bsz = (self.b * self.b) as u32;
+        for p in parts {
+            assert!(
+                p.start % bsz == 0 && p.end % bsz == 0,
+                "DNA: {} nodes do not block-align {} blocks of {} words",
+                cfg.nodes,
+                self.nb() * self.nb(),
+                bsz
+            );
+        }
+        self.seq_a = gen_sequence(self.l, self.seed);
+        self.seq_b = gen_sequence(self.l, self.seed ^ 0xD);
+        let w = self.l + 1;
+        self.h = vec![0.0; w * w];
+        for j in 0..w {
+            self.h[j] = j as f32 * NW_GAP;
+        }
+        for i in 0..w {
+            self.h[i * w] = i as f32 * NW_GAP;
+        }
+        let nb2 = self.nb() * self.nb();
+        self.done = vec![false; nb2];
+        self.spawned = vec![false; nb2];
+        self.parts = parts.to_vec();
+    }
+
+    fn root_tokens(&self) -> Vec<TaskToken> {
+        vec![self.block_token(0, 0)]
+    }
+
+    fn execute(&mut self, node: usize, tok: &TaskToken, ctx: &mut ExecCtx) -> Exec {
+        let (bi, bj) = self.block_of(tok.task.start);
+        self.compute_block(bi, bj, ctx);
+        let nb = self.nb();
+        self.done[bi * nb + bj] = true;
+        // wavefront: unblock right and down neighbours
+        self.maybe_spawn(bi, bj + 1, ctx, node);
+        self.maybe_spawn(bi + 1, bj, ctx, node);
+        let units = (self.b * self.b) as u64;
+        Exec { units, local_bytes: units * 4 }
+    }
+
+    fn total_units(&self) -> u64 {
+        (self.l * self.l) as u64
+    }
+
+    fn check(&self) -> Result<(), String> {
+        let want = nw_ref(&self.seq_a, &self.seq_b);
+        let w = self.l + 1;
+        for i in 0..w {
+            for j in 0..w {
+                let (got, wv) = (self.h[i * w + j], want[i * w + j]);
+                if (got - wv).abs() > 1e-3 {
+                    return Err(format!("H[{i},{j}]: {got} != {wv}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, Model};
+
+    fn run(l: usize, b: usize, nodes: usize, model: Model) -> crate::cluster::RunReport {
+        let cfg = ArenaConfig::default().with_nodes(nodes);
+        let mut cl =
+            Cluster::new(cfg, model, vec![Box::new(DnaApp::new(l, b, 21))]);
+        let r = cl.run(None);
+        cl.check().expect("NW DP matches the serial oracle");
+        r
+    }
+
+    #[test]
+    fn single_block_single_node() {
+        let r = run(32, 32, 1, Model::SoftwareCpu);
+        assert_eq!(r.tasks_executed, 1);
+    }
+
+    #[test]
+    fn wavefront_on_one_node() {
+        let r = run(128, 32, 1, Model::SoftwareCpu);
+        assert_eq!(r.tasks_executed, 16, "4x4 blocks");
+    }
+
+    #[test]
+    fn wavefront_across_nodes() {
+        let r = run(128, 32, 4, Model::SoftwareCpu);
+        assert_eq!(r.tasks_executed, 16);
+        // halos crossed node boundaries: 3 boundaries x 4 blocks, 32
+        // words each
+        assert_eq!(r.remote_bytes, 3 * 4 * 32 * 4);
+    }
+
+    #[test]
+    fn cgra_model_wavefront() {
+        run(128, 32, 4, Model::Cgra);
+    }
+
+    #[test]
+    fn only_edges_move() {
+        let r = run(128, 32, 4, Model::SoftwareCpu);
+        // total DP state is L^2 words; only block edges moved
+        let total_state_bytes = 128u64 * 128 * 4;
+        assert!(r.remote_bytes * 20 < total_state_bytes);
+    }
+
+    #[test]
+    fn pjrt_block_kernel_matches() {
+        let cfg = ArenaConfig::default().with_nodes(2);
+        let mut cl = Cluster::new(
+            cfg,
+            Model::Cgra,
+            vec![Box::new(DnaApp::new(128, 64, 21))],
+        );
+        let mut eng = crate::runtime::Engine::new().expect("engine");
+        cl.run(Some(&mut eng));
+        cl.check().expect("nw64 kernel path matches the oracle");
+        assert!(eng.stats().executions >= 4, "blocks ran on PJRT");
+    }
+}

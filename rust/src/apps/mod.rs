@@ -1,0 +1,61 @@
+//! The six evaluated applications (paper §5.1), each implemented twice:
+//! data-centric ARENA task graphs here (the [`crate::api::App`] trait),
+//! and compute-centric BSP formulations in [`crate::baseline`].
+//!
+//! | App   | Kernel units          | ARENA task structure                |
+//! |-------|-----------------------|-------------------------------------|
+//! | sssp  | scanned adj. words    | per-vertex relax tokens, coalesced  |
+//! | gemm  | MACs                  | B panels streamed to C's owners     |
+//! | spmv  | stored nonzeros       | banded x-segments fetched on demand |
+//! | dna   | DP cells              | block wavefront, halo via REMOTE    |
+//! | gcn   | MACs                  | push-based 2-layer aggregate/combine|
+//! | nbody | pair interactions     | systolic position-ring streaming    |
+
+pub mod dna;
+pub mod gcn;
+pub mod gemm;
+pub mod nbody;
+pub mod spmv;
+pub mod sssp;
+pub mod workloads;
+
+pub use dna::DnaApp;
+pub use gcn::GcnApp;
+pub use gemm::GemmApp;
+pub use nbody::NbodyApp;
+pub use spmv::SpmvApp;
+pub use sssp::SsspApp;
+
+use crate::api::App;
+
+/// Problem-size presets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Small instances for fast tests / smoke runs.
+    Small,
+    /// Evaluation-scale instances (minutes-of-simulated-time class).
+    Paper,
+}
+
+/// Factory used by the launcher, benches and examples. `seed` feeds the
+/// workload generators; task ids are the defaults (single-app runs).
+pub fn make_app(name: &str, scale: Scale, seed: u64) -> Box<dyn App> {
+    match (name, scale) {
+        ("sssp", Scale::Small) => Box::new(SsspApp::new(256, 4, seed)),
+        ("sssp", Scale::Paper) => Box::new(SsspApp::paper(seed)),
+        ("gemm", Scale::Small) => Box::new(GemmApp::new(64, seed)),
+        ("gemm", Scale::Paper) => Box::new(GemmApp::paper(seed)),
+        ("spmv", Scale::Small) => Box::new(SpmvApp::new(512, 16, 2, seed)),
+        ("spmv", Scale::Paper) => Box::new(SpmvApp::paper(seed)),
+        ("dna", Scale::Small) => Box::new(DnaApp::new(128, 32, seed)),
+        ("dna", Scale::Paper) => Box::new(DnaApp::paper(seed)),
+        ("gcn", Scale::Small) => Box::new(GcnApp::new(256, 32, 16, 8, seed)),
+        ("gcn", Scale::Paper) => Box::new(GcnApp::paper(seed)),
+        ("nbody", Scale::Small) => Box::new(NbodyApp::new(256, 2, seed)),
+        ("nbody", Scale::Paper) => Box::new(NbodyApp::paper(seed)),
+        (other, _) => panic!("unknown app '{other}'"),
+    }
+}
+
+/// All evaluated app names, in the paper's figure order.
+pub const ALL: [&str; 6] = ["sssp", "gemm", "spmv", "dna", "gcn", "nbody"];

@@ -1,0 +1,285 @@
+//! N-body simulation with systolic position streaming (paper §5.1:
+//! "traditional scientific simulation workload").
+//!
+//! Particles are striped; one particle = 4 words ([x, y, z, m] quad) so
+//! REMOTE ranges are byte-accurate. Each iteration runs the classic
+//! systolic ring algorithm data-centrically: at step `s`, node `p`
+//! accumulates interactions between its local bodies and the guest
+//! chunk originally owned by node `(p+s) % n`. The chunk *flows*: when
+//! node `q` finishes step `s`, it spawns node `q-1`'s step-`s+1` task
+//! carrying `REMOTE =` that same chunk — and because the FORCE kernel
+//! is registered with `fetch_from_parent` (systolic streaming), the
+//! transfer is a single counter-clockwise hop from `q`'s scratchpad,
+//! not a fetch from the chunk's home. Each node sees every remote
+//! chunk exactly once per iteration at one hop each — the ring
+//! allgather's movement lower bound, with no barrier between steps.
+//! Positions are double-buffered across iterations.
+
+use crate::api::{App, Exec, ExecCtx, TaskRegistry};
+use crate::config::ArenaConfig;
+use crate::token::{Range, TaskId, TaskToken};
+
+use super::workloads::{gen_particles, nbody_step_ref, NBODY_DT, NBODY_EPS};
+
+pub struct NbodyApp {
+    n_particles: usize,
+    iters: u32,
+    seed: u64,
+    base_id: TaskId,
+    /// Position snapshot read by the current iteration's force tasks.
+    pos: Vec<f32>,
+    /// Positions written by UPDATE (flipped at the iteration barrier).
+    pos_next: Vec<f32>,
+    vel: Vec<f32>,
+    acc: Vec<f32>,
+    parts: Vec<Range>,
+    updates_done: usize,
+    iter: u32,
+}
+
+impl NbodyApp {
+    pub fn new(n_particles: usize, iters: u32, seed: u64) -> Self {
+        NbodyApp {
+            n_particles,
+            iters,
+            seed,
+            base_id: 10,
+            pos: vec![],
+            pos_next: vec![],
+            vel: vec![],
+            acc: vec![],
+            parts: vec![],
+            updates_done: 0,
+            iter: 0,
+        }
+    }
+
+    pub fn paper(seed: u64) -> Self {
+        NbodyApp::new(2048, 2, seed)
+    }
+
+    pub fn with_base_id(mut self, id: TaskId) -> Self {
+        self.base_id = id;
+        self
+    }
+
+    fn force_id(&self) -> TaskId {
+        self.base_id
+    }
+
+    /// Steps ≥ 1: guest chunk streamed from the clockwise neighbour.
+    fn stream_id(&self) -> TaskId {
+        self.base_id + 1
+    }
+
+    fn update_id(&self) -> TaskId {
+        self.base_id + 2
+    }
+
+    /// Word range -> particle index range (4 words per particle).
+    fn bodies(r: Range) -> std::ops::Range<usize> {
+        debug_assert_eq!(r.start % 4, 0);
+        debug_assert_eq!(r.end % 4, 0);
+        (r.start / 4) as usize..(r.end / 4) as usize
+    }
+
+    /// acc[i] += softened gravity from `chunk` bodies, for local `i`.
+    fn interact(&mut self, locals: std::ops::Range<usize>, chunk: std::ops::Range<usize>) -> u64 {
+        let eps2 = NBODY_EPS * NBODY_EPS;
+        for i in locals.clone() {
+            let (xi, yi, zi) =
+                (self.pos[i * 4], self.pos[i * 4 + 1], self.pos[i * 4 + 2]);
+            let mut ax = 0.0f32;
+            let mut ay = 0.0f32;
+            let mut az = 0.0f32;
+            for j in chunk.clone() {
+                let dx = self.pos[j * 4] - xi;
+                let dy = self.pos[j * 4 + 1] - yi;
+                let dz = self.pos[j * 4 + 2] - zi;
+                let m = self.pos[j * 4 + 3];
+                let r2 = dx * dx + dy * dy + dz * dz + eps2;
+                let inv_r3 = m / (r2 * r2.sqrt());
+                ax += dx * inv_r3;
+                ay += dy * inv_r3;
+                az += dz * inv_r3;
+            }
+            self.acc[i * 3] += ax;
+            self.acc[i * 3 + 1] += ay;
+            self.acc[i * 3 + 2] += az;
+        }
+        (locals.len() * chunk.len()) as u64
+    }
+
+    pub fn positions(&self) -> &[f32] {
+        &self.pos
+    }
+}
+
+impl App for NbodyApp {
+    fn name(&self) -> &'static str {
+        "nbody"
+    }
+
+    fn words(&self) -> u32 {
+        (self.n_particles * 4) as u32
+    }
+
+    fn register(&self, reg: &mut TaskRegistry) {
+        reg.register(self.force_id(), "nbody", true);
+        reg.register_streaming(self.stream_id(), "nbody");
+        reg.register(self.update_id(), "nbody", false);
+    }
+
+    fn init(&mut self, cfg: &ArenaConfig, parts: &[Range]) {
+        assert_eq!(
+            self.n_particles % cfg.nodes,
+            0,
+            "nbody: {} particles must divide over {} nodes",
+            self.n_particles,
+            cfg.nodes
+        );
+        let (pos, vel) = gen_particles(self.n_particles, self.seed);
+        self.pos_next = pos.clone();
+        self.pos = pos;
+        self.vel = vel;
+        self.acc = vec![0.0; self.n_particles * 3];
+        self.parts = parts.to_vec();
+    }
+
+    fn root_tokens(&self) -> Vec<TaskToken> {
+        // step-0 forces for iteration 0; the filter splits per node.
+        vec![TaskToken::new(self.force_id(), Range::new(0, self.words()), 0.0)]
+    }
+
+    fn execute(&mut self, node: usize, tok: &TaskToken, ctx: &mut ExecCtx) -> Exec {
+        let n = self.parts.len();
+        let locals = Self::bodies(tok.task);
+        let units = if tok.task_id == self.force_id()
+            || tok.task_id == self.stream_id()
+        {
+            // param encodes the systolic step within the iteration;
+            // at step s this node works on the chunk of node (self-s),
+            // so chunks flow clockwise — the same direction as the
+            // token ring, keeping both the spawn and the transfer at
+            // one hop.
+            let s = tok.param as usize;
+            let guest = (node + n - s) % n;
+            let u = self.interact(locals, Self::bodies(self.parts[guest]));
+            if s + 1 < n {
+                // the guest chunk is read-only to this task: forward it
+                // at launch so the neighbour's fetch overlaps compute
+                let next = (node + 1) % n;
+                ctx.spawn_forward(
+                    self.stream_id(),
+                    self.parts[next],
+                    (s + 1) as f32,
+                    self.parts[guest],
+                );
+            }
+            if s + 1 >= n {
+                // this node has now seen every chunk
+                ctx.spawn(self.update_id(), tok.task, 0.0);
+            }
+            u
+        } else {
+            // leapfrog into the back buffer
+            for i in locals.clone() {
+                for k in 0..3 {
+                    self.vel[i * 4 + k] += self.acc[i * 3 + k] * NBODY_DT;
+                    self.pos_next[i * 4 + k] =
+                        self.pos[i * 4 + k] + self.vel[i * 4 + k] * NBODY_DT;
+                }
+            }
+            self.updates_done += 1;
+            if self.updates_done == n {
+                // iteration barrier: flip buffers, start the next round
+                self.updates_done = 0;
+                self.iter += 1;
+                self.pos.copy_from_slice(&self.pos_next);
+                self.acc.fill(0.0);
+                if self.iter < self.iters {
+                    for q in 0..n {
+                        ctx.spawn(self.force_id(), self.parts[q], 0.0);
+                    }
+                }
+            }
+            locals.len() as u64
+        };
+        Exec { units, local_bytes: units * 16 }
+    }
+
+    fn total_units(&self) -> u64 {
+        self.iters as u64
+            * (self.n_particles as u64 * self.n_particles as u64
+                + self.n_particles as u64)
+    }
+
+    fn check(&self) -> Result<(), String> {
+        let (mut pos, mut vel) = gen_particles(self.n_particles, self.seed);
+        for _ in 0..self.iters {
+            nbody_step_ref(&mut pos, &mut vel);
+        }
+        for (i, (&got, &w)) in self.pos.iter().zip(&pos).enumerate() {
+            if (got - w).abs() > 1e-3 {
+                return Err(format!(
+                    "particle {} coord {}: {got} != {w}",
+                    i / 4,
+                    i % 4
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, Model};
+
+    fn run(n: usize, iters: u32, nodes: usize, model: Model) -> crate::cluster::RunReport {
+        let cfg = ArenaConfig::default().with_nodes(nodes);
+        let mut cl =
+            Cluster::new(cfg, model, vec![Box::new(NbodyApp::new(n, iters, 31))]);
+        let r = cl.run(None);
+        cl.check().expect("trajectories match the serial oracle");
+        r
+    }
+
+    #[test]
+    fn one_node_two_iterations() {
+        let r = run(64, 2, 1, Model::SoftwareCpu);
+        // per iteration: 1 force + 1 update
+        assert_eq!(r.tasks_executed, 4);
+        assert_eq!(r.remote_bytes, 0);
+    }
+
+    #[test]
+    fn ring_streaming_on_four_nodes() {
+        let r = run(64, 1, 4, Model::SoftwareCpu);
+        // 4 force steps per node + 1 update per node
+        assert_eq!(r.tasks_executed, 4 * 4 + 4);
+        // each node fetched 3 remote chunks of 16 quads
+        assert_eq!(r.remote_bytes, 4 * 3 * 16 * 16);
+    }
+
+    #[test]
+    fn multi_iteration_multi_node() {
+        run(64, 3, 4, Model::SoftwareCpu);
+    }
+
+    #[test]
+    fn cgra_model() {
+        run(64, 2, 8, Model::Cgra);
+    }
+
+    #[test]
+    fn movement_matches_ring_lower_bound() {
+        let nodes = 4u64;
+        let r = run(64, 2, nodes as usize, Model::SoftwareCpu);
+        // lower bound per iteration: every node receives all remote
+        // positions once = (n-1) chunks of (N/n)*16 bytes
+        let per_iter = nodes * (nodes - 1) * (64 / nodes) * 16;
+        assert_eq!(r.remote_bytes, 2 * per_iter);
+    }
+}

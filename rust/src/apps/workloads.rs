@@ -1,0 +1,431 @@
+//! Seeded, deterministic workload generators for the six evaluated
+//! applications (paper §5.1). Every generator is a pure function of its
+//! parameters + seed so runs are bit-reproducible.
+
+use crate::util::Rng;
+
+/// Random directed graph as an adjacency list, `n` vertices with
+/// average out-degree `deg`. A random spanning arborescence rooted at 0
+/// keeps every vertex reachable (the SSSP evaluation traverses the
+/// whole graph). Like real graphs under a natural or partitioner-
+/// assigned vertex order, edges exhibit *id locality*: most extra
+/// edges land within a ±n/16 window of the source (community
+/// structure), the rest are uniform long links.
+pub fn gen_graph(n: usize, deg: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed ^ 0x5353_5350); // "SSSP"
+    let mut adj: Vec<Vec<u32>> = vec![Vec::with_capacity(deg); n];
+    // reachability backbone: parent(v) -> v for v = 1..n, local-biased
+    let window = (n / 16).max(4) as i64;
+    for v in 1..n {
+        let p = if rng.bool_with(0.75) {
+            (v as i64 - 1 - rng.usize_below(window.min(v as i64) as usize) as i64)
+                .max(0) as usize
+        } else {
+            rng.usize_below(v)
+        };
+        adj[p].push(v as u32);
+    }
+    // remaining edges: 3/4 community-local, 1/4 uniform
+    let extra = n * deg.saturating_sub(1);
+    for _ in 0..extra {
+        let u = rng.usize_below(n);
+        let v = if rng.bool_with(0.75) {
+            let off = rng.usize_below(2 * window as usize + 1) as i64 - window;
+            (u as i64 + off).clamp(0, n as i64 - 1) as usize
+        } else {
+            rng.usize_below(n)
+        };
+        if u != v {
+            adj[u].push(v as u32);
+        }
+    }
+    for l in &mut adj {
+        l.sort_unstable();
+        l.dedup();
+    }
+    adj
+}
+
+/// Serial BFS levels from vertex 0 (SSSP oracle; unit weights).
+pub fn bfs_levels(adj: &[Vec<u32>], src: usize) -> Vec<u32> {
+    let mut level = vec![u32::MAX; adj.len()];
+    level[src] = 0;
+    let mut frontier = vec![src as u32];
+    let mut next = Vec::new();
+    let mut l = 0;
+    while !frontier.is_empty() {
+        l += 1;
+        for &u in &frontier {
+            for &v in &adj[u as usize] {
+                if level[v as usize] == u32::MAX {
+                    level[v as usize] = l;
+                    next.push(v);
+                }
+            }
+        }
+        std::mem::swap(&mut frontier, &mut next);
+        next.clear();
+    }
+    level
+}
+
+/// Dense f32 matrix, row-major, values in [-0.5, 0.5).
+pub fn gen_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x4745_4D4D); // "GEMM"
+    (0..rows * cols).map(|_| rng.f32_range(-0.5, 0.5)).collect()
+}
+
+/// Serial row-major GEMM oracle: C = A(m×k) · B(k×n).
+pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c[i * n + j] += av * b[l * n + j];
+            }
+        }
+    }
+    c
+}
+
+/// Sparse matrix in CSR, banded + clustered fill — the structured-
+/// sparse shape of scientific kernels (stencils, FEM): a dense-ish
+/// band of half-width `band` around the diagonal plus `extra_per_row`
+/// nonzeros scattered within ±4·band of it (long-range couplings stay
+/// *near* the diagonal, as in reordered scientific matrices).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n: usize,
+    pub row_ptr: Vec<u32>,
+    pub col: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Nonzeros of row `i`.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (s, e) =
+            (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+        (&self.col[s..e], &self.val[s..e])
+    }
+
+    /// Serial SPMV oracle.
+    pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
+        (0..self.n)
+            .map(|i| {
+                let (cols, vals) = self.row(i);
+                cols.iter()
+                    .zip(vals)
+                    .map(|(&c, &v)| v * x[c as usize])
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+pub fn gen_csr(n: usize, band: usize, extra_per_row: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed ^ 0x5350_4D56); // "SPMV"
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut col = Vec::new();
+    let mut val = Vec::new();
+    row_ptr.push(0);
+    for i in 0..n {
+        let lo = i.saturating_sub(band);
+        let hi = (i + band + 1).min(n);
+        let mut cols: Vec<u32> = (lo..hi)
+            .filter(|_| rng.bool_with(0.6))
+            .map(|c| c as u32)
+            .collect();
+        let spread = 4 * band.max(1);
+        for _ in 0..extra_per_row {
+            let off = rng.usize_below(2 * spread + 1) as i64 - spread as i64;
+            let c = (i as i64 + off).clamp(0, n as i64 - 1) as u32;
+            cols.push(c);
+        }
+        cols.push(i as u32); // keep the diagonal
+        cols.sort_unstable();
+        cols.dedup();
+        for c in cols {
+            col.push(c);
+            val.push(rng.f32_range(-1.0, 1.0));
+        }
+        row_ptr.push(col.len() as u32);
+    }
+    Csr { n, row_ptr, col, val }
+}
+
+/// Random DNA-ish sequence over a 4-letter alphabet, as small ints.
+pub fn gen_sequence(len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed ^ 0x444E_4100); // "DNA"
+    (0..len).map(|_| rng.below(4) as u8).collect()
+}
+
+/// Needleman–Wunsch scoring parameters (match the AOT-baked constants).
+pub const NW_MATCH: f32 = 1.0;
+pub const NW_MISMATCH: f32 = -1.0;
+pub const NW_GAP: f32 = -1.0;
+
+/// Serial NW DP oracle: full (la+1)×(lb+1) score matrix.
+pub fn nw_ref(a: &[u8], b: &[u8]) -> Vec<f32> {
+    let (la, lb) = (a.len(), b.len());
+    let w = lb + 1;
+    let mut h = vec![0.0f32; (la + 1) * w];
+    for j in 0..=lb {
+        h[j] = j as f32 * NW_GAP;
+    }
+    for i in 1..=la {
+        h[i * w] = i as f32 * NW_GAP;
+        for j in 1..=lb {
+            let s = if a[i - 1] == b[j - 1] { NW_MATCH } else { NW_MISMATCH };
+            let diag = h[(i - 1) * w + j - 1] + s;
+            let up = h[(i - 1) * w + j] + NW_GAP;
+            let left = h[i * w + j - 1] + NW_GAP;
+            h[i * w + j] = diag.max(up).max(left);
+        }
+    }
+    h
+}
+
+/// Synthetic "Cora-shaped" graph for GCN: `v` vertices, power-law-ish
+/// degree, plus features and two layer weights. Returns (adj, feats,
+/// w1, w2) with feats `v×f`, w1 `f×h`, w2 `h×c`.
+pub struct GcnData {
+    pub adj: Vec<Vec<u32>>,
+    pub feats: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub v: usize,
+    pub f: usize,
+    pub h: usize,
+    pub c: usize,
+}
+
+pub fn gen_gcn(v: usize, f: usize, h: usize, c: usize, seed: u64) -> GcnData {
+    let mut rng = Rng::new(seed ^ 0x4743_4E00); // "GCN"
+    // citation-graph flavour: preferential attachment with community
+    // locality (citations cluster by topic; a natural vertex order
+    // keeps communities contiguous), avg degree ~4
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); v];
+    let mut targets: Vec<u32> = vec![0];
+    let window = (v / 16).max(4);
+    for u in 1..v {
+        let links = 1 + rng.usize_below(3);
+        for _ in 0..links {
+            let t = if rng.bool_with(0.75) {
+                // local: a recent vertex within the community window
+                (u - 1 - rng.usize_below(window.min(u))) as u32
+            } else {
+                targets[rng.usize_below(targets.len())]
+            };
+            if t as usize != u && !adj[u].contains(&t) {
+                adj[u].push(t);
+                adj[t as usize].push(u as u32);
+                targets.push(t);
+            }
+        }
+        targets.push(u as u32);
+    }
+    for l in &mut adj {
+        l.sort_unstable();
+    }
+    GcnData {
+        adj,
+        feats: gen_matrix(v, f, seed ^ 1),
+        w1: gen_matrix(f, h, seed ^ 2),
+        w2: gen_matrix(h, c, seed ^ 3),
+        v,
+        f,
+        h,
+        c,
+    }
+}
+
+/// Serial 2-layer GCN oracle with mean aggregation (self-loop included)
+/// and ReLU between layers: Y = Â·relu(Â·X·W1)·W2.
+pub fn gcn_ref(d: &GcnData) -> Vec<f32> {
+    let agg = |x: &[f32], cols: usize| -> Vec<f32> {
+        let mut out = vec![0.0f32; d.v * cols];
+        for i in 0..d.v {
+            let mut cnt = 1.0f32;
+            for j in 0..cols {
+                out[i * cols + j] = x[i * cols + j];
+            }
+            for &nb in &d.adj[i] {
+                cnt += 1.0;
+                for j in 0..cols {
+                    out[i * cols + j] += x[nb as usize * cols + j];
+                }
+            }
+            for j in 0..cols {
+                out[i * cols + j] /= cnt;
+            }
+        }
+        out
+    };
+    let xw1 = matmul_ref(&d.feats, &d.w1, d.v, d.f, d.h);
+    let mut h1 = agg(&xw1, d.h);
+    for x in &mut h1 {
+        *x = x.max(0.0);
+    }
+    let h1w2 = matmul_ref(&h1, &d.w2, d.v, d.h, d.c);
+    agg(&h1w2, d.c)
+}
+
+/// N-body initial conditions: positions in the unit cube, small random
+/// velocities, unit masses (packed as [x, y, z, m] quads to match the
+/// AOT kernel layout).
+pub fn gen_particles(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed ^ 0x4E42_4F44); // "NBOD"
+    let mut pos = Vec::with_capacity(n * 4);
+    let mut vel = Vec::with_capacity(n * 4);
+    for _ in 0..n {
+        pos.extend_from_slice(&[
+            rng.f32_range(0.0, 1.0),
+            rng.f32_range(0.0, 1.0),
+            rng.f32_range(0.0, 1.0),
+            1.0,
+        ]);
+        vel.extend_from_slice(&[
+            rng.f32_range(-0.01, 0.01),
+            rng.f32_range(-0.01, 0.01),
+            rng.f32_range(-0.01, 0.01),
+            0.0,
+        ]);
+    }
+    (pos, vel)
+}
+
+pub const NBODY_DT: f32 = 0.01;
+pub const NBODY_EPS: f32 = 0.01;
+
+/// Softened all-pairs gravity acceleration on particle `i` (f64
+/// accumulation so the oracle is order-insensitive to ~1e-6).
+pub fn nbody_accel(pos: &[f32], i: usize) -> [f32; 3] {
+    let n = pos.len() / 4;
+    let (xi, yi, zi) = (pos[i * 4], pos[i * 4 + 1], pos[i * 4 + 2]);
+    let mut acc = [0.0f64; 3];
+    for j in 0..n {
+        let dx = (pos[j * 4] - xi) as f64;
+        let dy = (pos[j * 4 + 1] - yi) as f64;
+        let dz = (pos[j * 4 + 2] - zi) as f64;
+        let m = pos[j * 4 + 3] as f64;
+        let r2 = dx * dx + dy * dy + dz * dz + (NBODY_EPS as f64).powi(2);
+        let inv_r3 = m / (r2 * r2.sqrt());
+        acc[0] += dx * inv_r3;
+        acc[1] += dy * inv_r3;
+        acc[2] += dz * inv_r3;
+    }
+    [acc[0] as f32, acc[1] as f32, acc[2] as f32]
+}
+
+/// One serial leapfrog step over all particles (oracle).
+pub fn nbody_step_ref(pos: &mut [f32], vel: &mut [f32]) {
+    let n = pos.len() / 4;
+    let accs: Vec<[f32; 3]> = (0..n).map(|i| nbody_accel(pos, i)).collect();
+    for i in 0..n {
+        for k in 0..3 {
+            vel[i * 4 + k] += accs[i][k] * NBODY_DT;
+            pos[i * 4 + k] += vel[i * 4 + k] * NBODY_DT;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_is_fully_reachable() {
+        let adj = gen_graph(500, 4, 1);
+        let lv = bfs_levels(&adj, 0);
+        assert!(lv.iter().all(|&l| l != u32::MAX), "unreachable vertices");
+        assert_eq!(lv[0], 0);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(gen_graph(100, 4, 7), gen_graph(100, 4, 7));
+        assert_eq!(gen_matrix(8, 8, 7), gen_matrix(8, 8, 7));
+        assert_ne!(gen_matrix(8, 8, 7), gen_matrix(8, 8, 8));
+        let a = gen_csr(64, 4, 2, 3);
+        let b = gen_csr(64, 4, 2, 3);
+        assert_eq!(a.col, b.col);
+        assert_eq!(a.val, b.val);
+    }
+
+    #[test]
+    fn matmul_ref_identity() {
+        let n = 8;
+        let mut eye = vec![0.0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let a = gen_matrix(n, n, 5);
+        assert_eq!(matmul_ref(&a, &eye, n, n, n), a);
+    }
+
+    #[test]
+    fn csr_rows_sorted_with_diagonal() {
+        let m = gen_csr(128, 8, 3, 9);
+        assert_eq!(m.row_ptr.len(), 129);
+        for i in 0..128 {
+            let (cols, _) = m.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} unsorted");
+            assert!(cols.contains(&(i as u32)), "row {i} missing diagonal");
+        }
+    }
+
+    #[test]
+    fn nw_known_case() {
+        // identical sequences score len * MATCH on the diagonal
+        let a = vec![0u8, 1, 2, 3];
+        let h = nw_ref(&a, &a);
+        assert_eq!(h[4 * 5 + 4], 4.0 * NW_MATCH);
+        // empty prefix row/col are gap-scaled
+        assert_eq!(h[3], 3.0 * NW_GAP);
+        assert_eq!(h[2 * 5], 2.0 * NW_GAP);
+    }
+
+    #[test]
+    fn gcn_graph_is_symmetric() {
+        let d = gen_gcn(200, 16, 8, 4, 2);
+        for (u, l) in d.adj.iter().enumerate() {
+            for &v in l {
+                assert!(
+                    d.adj[v as usize].contains(&(u as u32)),
+                    "edge {u}->{v} not symmetric"
+                );
+            }
+        }
+        let y = gcn_ref(&d);
+        assert_eq!(y.len(), 200 * 4);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn nbody_energy_sane() {
+        let (mut pos, mut vel) = gen_particles(64, 3);
+        let p0 = pos.clone();
+        nbody_step_ref(&mut pos, &mut vel);
+        // particles moved, but not explosively
+        let drift: f32 = pos
+            .iter()
+            .zip(&p0)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(drift > 0.0);
+        assert!(drift < 0.1, "dt too large: {drift}");
+        // masses untouched
+        for i in 0..64 {
+            assert_eq!(pos[i * 4 + 3], 1.0);
+        }
+    }
+}

@@ -1,0 +1,433 @@
+//! Compute-centric BSP baselines (paper §2.1, Baseline-1 and -2).
+//!
+//! The conventional execution model the paper compares against: data is
+//! partitioned once, every application runs as a sequence of global
+//! supersteps — parallel local compute, a communication phase with a
+//! fixed pattern, and a barrier. The same workload generators feed both
+//! sides, so ARENA-vs-BSP comparisons are apples-to-apples; only the
+//! execution model differs.
+//!
+//! Two substrates (the two baseline rows of Figs. 9/11):
+//! * CPU — Table-2 out-of-order core per node;
+//! * CGRA — the whole 8×8 array statically configured for the app's one
+//!   kernel (the offload model: no runtime reconfiguration, no sharing).
+//!
+//! [`plan`] builds the per-app superstep schedule; [`run_bsp`] prices it
+//! under the Table-2 network model; [`serial_ps`] is the 1-node CPU
+//! denominator every figure normalizes by.
+
+use crate::api::{owner_of, stripe, WORD_BYTES};
+use crate::apps::{workloads, Scale};
+use crate::config::{ArenaConfig, Ps};
+use crate::mapper::kernels::kernel_for;
+use crate::token::Range;
+
+/// Communication phase of one superstep.
+#[derive(Clone, Debug)]
+pub enum Comm {
+    /// Nothing to exchange.
+    None,
+    /// Ring allgather: node `p` contributes `words[p]`; everyone ends
+    /// up with everything ((n-1) neighbor-shift rounds).
+    AllGather { words: Vec<u64> },
+    /// Every node shifts `words` to its ring neighbour (Cannon-style
+    /// panel rotation).
+    Shift { words: u64 },
+}
+
+/// One BSP superstep: per-node kernel work + a communication phase +
+/// the implicit barrier.
+#[derive(Clone, Debug)]
+pub struct Superstep {
+    pub units: Vec<u64>,
+    pub comm: Comm,
+}
+
+/// Priced outcome of a BSP run.
+#[derive(Clone, Debug)]
+pub struct BspReport {
+    pub app: String,
+    pub nodes: usize,
+    pub supersteps: usize,
+    pub makespan_ps: Ps,
+    pub compute_ps: Ps,
+    pub comm_ps: Ps,
+    pub barrier_ps: Ps,
+    /// Bulk bytes × hops moved on the interconnect (Fig. 10 basis).
+    pub data_movement_bytes: u64,
+    pub total_units: u64,
+}
+
+impl BspReport {
+    pub fn makespan_ms(&self) -> f64 {
+        self.makespan_ps as f64 / 1e9
+    }
+}
+
+/// Serial single-CPU-node execution time of `app` (the figures'
+/// common baseline denominator).
+pub fn serial_ps(app: &str, scale: Scale, seed: u64, cfg: &ArenaConfig) -> Ps {
+    let steps = plan(app, scale, seed, 1);
+    let total: u64 = steps.iter().flat_map(|s| s.units.iter()).sum();
+    let spec = kernel_for(app);
+    spec.cpu_cycles(total) * cfg.cpu_cycle_ps()
+}
+
+/// Price the superstep schedule for `app` on `cfg.nodes` nodes.
+/// `cgra = false` -> Baseline-1 (CPU BSP); `true` -> Baseline-2 (CGRA
+/// offload, whole array statically configured for the kernel).
+pub fn run_bsp(
+    app: &str,
+    scale: Scale,
+    seed: u64,
+    cfg: &ArenaConfig,
+    cgra: bool,
+) -> BspReport {
+    let n = cfg.nodes;
+    let steps = plan(app, scale, seed, n);
+    let spec = kernel_for(app);
+    // offload model: the kernel owns all 4 groups for the whole run;
+    // the one-time configuration load is amortized to zero.
+    let mapping = cgra.then(|| spec.map(cfg, cfg.cgra_groups));
+
+    let mut compute = 0u64;
+    let mut comm = 0u64;
+    let mut barrier = 0u64;
+    let mut moved = 0u64;
+    let mut total_units = 0u64;
+    let hop = cfg.hop_latency_ps;
+
+    for s in &steps {
+        debug_assert_eq!(s.units.len(), n);
+        total_units += s.units.iter().sum::<u64>();
+        // compute phase: the barrier waits for the slowest node
+        let worst = *s.units.iter().max().unwrap_or(&0);
+        compute += match &mapping {
+            Some(m) => m.cycles_for(worst) * cfg.cgra_cycle_ps(),
+            None => spec.cpu_cycles(worst) * cfg.cpu_cycle_ps(),
+        };
+        // communication phase
+        match &s.comm {
+            Comm::None => {}
+            Comm::AllGather { words } => {
+                if n > 1 {
+                    let bytes: Vec<u64> =
+                        words.iter().map(|w| w * WORD_BYTES).collect();
+                    // (n-1) neighbor rounds; each round is bound by the
+                    // largest block in flight.
+                    let worst_bytes = *bytes.iter().max().unwrap_or(&0);
+                    comm += (n as u64 - 1)
+                        * (cfg.wire_ps(worst_bytes) + hop);
+                    // every byte travels the whole ring
+                    moved += bytes.iter().sum::<u64>() * (n as u64 - 1);
+                }
+            }
+            Comm::Shift { words } => {
+                if n > 1 {
+                    let bytes = words * WORD_BYTES;
+                    comm += cfg.wire_ps(bytes) + hop;
+                    moved += bytes * n as u64; // every node shifts once
+                }
+            }
+        }
+        // barrier: small all-reduce around the ring, both directions
+        if n > 1 {
+            barrier += 2 * (n as u64 - 1) * (cfg.wire_ps(8) + hop);
+        }
+    }
+
+    BspReport {
+        app: app.into(),
+        nodes: n,
+        supersteps: steps.len(),
+        makespan_ps: compute + comm + barrier,
+        compute_ps: compute,
+        comm_ps: comm,
+        barrier_ps: barrier,
+        data_movement_bytes: moved,
+        total_units,
+    }
+}
+
+/// Problem dimensions shared with `apps::make_app` (same seeds, same
+/// generators — the two models price the identical workload).
+fn dims(app: &str, scale: Scale) -> Vec<usize> {
+    match (app, scale) {
+        ("sssp", Scale::Small) => vec![256, 4],
+        ("sssp", Scale::Paper) => vec![2048, 8],
+        ("gemm", Scale::Small) => vec![64],
+        ("gemm", Scale::Paper) => vec![512],
+        ("spmv", Scale::Small) => vec![512, 16, 2],
+        ("spmv", Scale::Paper) => vec![4096, 64, 2],
+        ("dna", Scale::Small) => vec![128, 32],
+        ("dna", Scale::Paper) => vec![1024, 64],
+        ("gcn", Scale::Small) => vec![256, 32, 16, 8],
+        ("gcn", Scale::Paper) => vec![2048, 256, 32, 8],
+        ("nbody", Scale::Small) => vec![256, 2],
+        ("nbody", Scale::Paper) => vec![2048, 2],
+        (other, _) => panic!("unknown app '{other}'"),
+    }
+}
+
+/// Build the compute-centric superstep schedule for `app` on `n` nodes.
+pub fn plan(app: &str, scale: Scale, seed: u64, n: usize) -> Vec<Superstep> {
+    let d = dims(app, scale);
+    match app {
+        "sssp" => plan_sssp(d[0], d[1], seed, n),
+        "gemm" => plan_gemm(d[0], n),
+        "spmv" => plan_spmv(d[0], d[1], d[2], seed, n),
+        "dna" => plan_dna(d[0], d[1], n),
+        "gcn" => plan_gcn(d[0], d[1], d[2], d[3], seed, n),
+        "nbody" => plan_nbody(d[0], d[1] as u32, n),
+        other => panic!("unknown app '{other}'"),
+    }
+}
+
+/// Level-synchronized parallel BFS ([19]): one superstep per BFS level;
+/// each node scans the dense rows of its frontier vertices and then
+/// broadcasts one (vertex, level) update per *traversed edge* — with no
+/// prior knowledge of the vertex distribution, updates go to everyone
+/// ("repeated all-to-all communications are essentially desired for
+/// broadcasting vertex updating information", paper §3.1).
+fn plan_sssp(size: usize, deg: usize, seed: u64, n: usize) -> Vec<Superstep> {
+    let adj = workloads::gen_graph(size, deg, seed);
+    let levels = workloads::bfs_levels(&adj, 0);
+    let parts = stripe(size as u32, n);
+    let max_level = levels.iter().copied().filter(|&l| l != u32::MAX).max().unwrap_or(0);
+    let mut steps = Vec::new();
+    for l in 0..=max_level {
+        let mut units = vec![0u64; n];
+        let mut update_words = vec![0u64; n];
+        for (v, &lv) in levels.iter().enumerate() {
+            let p = owner_of(&parts, v as u32);
+            if lv == l {
+                units[p] += size as u64; // dense row scan
+                // (id, level) per out-edge, 2 words each
+                update_words[p] += 2 * adj[v].len() as u64;
+            }
+        }
+        steps.push(Superstep {
+            units,
+            comm: Comm::AllGather { words: update_words },
+        });
+    }
+    steps
+}
+
+/// Blocked GEMM with an allgather of B: with the data distribution
+/// opaque to the programmer (the paper's premise), every node gathers
+/// the full B before computing its C rows — "synchronization over a
+/// larger amount of data", the bottleneck the paper calls out for
+/// compute-centric GEMM. (A locality-tuned Cannon rotation would do
+/// better, but requires exactly the prior knowledge BSP codes here
+/// don't have.)
+fn plan_gemm(size: usize, n: usize) -> Vec<Superstep> {
+    let panel_words: Vec<u64> = vec![(size * size / n) as u64; n];
+    vec![Superstep {
+        units: vec![(size * size * size / n) as u64; n],
+        comm: Comm::AllGather { words: panel_words },
+    }]
+}
+
+/// SPMV: allgather the dense vector x (nothing is known about which
+/// segments each node needs), then one compute phase over the local
+/// CSR rows — whose nonzero counts are *not* balanced.
+fn plan_spmv(size: usize, band: usize, extra: usize, seed: u64, n: usize) -> Vec<Superstep> {
+    let mat = workloads::gen_csr(size, band, extra, seed);
+    let parts = stripe(size as u32, n);
+    let mut units = vec![0u64; n];
+    for i in 0..size {
+        let p = owner_of(&parts, i as u32);
+        let (cols, _) = mat.row(i);
+        units[p] += cols.len() as u64;
+    }
+    let x_words: Vec<u64> =
+        parts.iter().map(|r| r.len() as u64).collect();
+    vec![Superstep { units, comm: Comm::AllGather { words: x_words } }]
+}
+
+/// NW wavefront, OpenMP-flavoured (Rodinia): one superstep per block
+/// anti-diagonal; the produced block boundaries are shared through
+/// global memory, modeled as an allgather of each wave's boundary rows
+/// (the zig-zag distribution gives every thread remote sub-blocks).
+fn plan_dna(l: usize, b: usize, n: usize) -> Vec<Superstep> {
+    let nb = l / b;
+    let parts = stripe((l * l) as u32, n);
+    let block_words = (b * b) as u32;
+    let mut steps = Vec::new();
+    for d in 0..(2 * nb - 1) {
+        let mut units = vec![0u64; n];
+        let mut boundary = vec![0u64; n];
+        for bi in 0..nb {
+            if d < bi {
+                continue;
+            }
+            let bj = d - bi;
+            if bj >= nb {
+                continue;
+            }
+            let addr = ((bi * nb + bj) as u32) * block_words;
+            let p = owner_of(&parts, addr);
+            units[p] += (b * b) as u64;
+            boundary[p] += 2 * b as u64; // bottom row + right column
+        }
+        steps.push(Superstep {
+            units,
+            comm: Comm::AllGather { words: boundary },
+        });
+    }
+    steps
+}
+
+/// GCN, compute-centric: per layer, combine locally then allgather the
+/// *entire* activation matrix (no locality knowledge -> every node gets
+/// every row), then aggregate locally.
+fn plan_gcn(v: usize, f: usize, h: usize, c: usize, seed: u64, n: usize) -> Vec<Superstep> {
+    let d = workloads::gen_gcn(v, f, h, c, seed);
+    let parts = stripe(v as u32, n);
+    let mut edges = vec![0u64; n];
+    for (u, l) in d.adj.iter().enumerate() {
+        edges[owner_of(&parts, u as u32)] += l.len() as u64 + 1; // + self
+    }
+    let rows: Vec<u64> = parts.iter().map(|r| r.len() as u64).collect();
+    let mut steps = Vec::new();
+    for (din, dout) in [(f, h), (h, c)] {
+        // combine: rows_p * din * dout MACs, then allgather z rows
+        steps.push(Superstep {
+            units: rows.iter().map(|r| r * (din * dout) as u64).collect(),
+            comm: Comm::AllGather {
+                words: rows.iter().map(|r| r * dout as u64).collect(),
+            },
+        });
+        // aggregate: edge adds at dout width, no exchange needed after
+        steps.push(Superstep {
+            units: edges.iter().map(|e| e * dout as u64).collect(),
+            comm: Comm::None,
+        });
+    }
+    steps
+}
+
+/// N-body: per iteration, allgather all positions, then each node
+/// computes its rows against everything.
+fn plan_nbody(n_particles: usize, iters: u32, n: usize) -> Vec<Superstep> {
+    let per_node = (n_particles / n) as u64;
+    let units = vec![per_node * n_particles as u64 + per_node; n];
+    let pos_words = vec![per_node * 4; n];
+    (0..iters)
+        .map(|_| Superstep {
+            units: units.clone(),
+            comm: Comm::AllGather { words: pos_words.clone() },
+        })
+        .collect()
+}
+
+/// Per-app data partition used by the planner (shared with the apps).
+pub fn partition(app: &str, scale: Scale, n: usize) -> Vec<Range> {
+    let d = dims(app, scale);
+    let words = match app {
+        "sssp" => d[0],
+        "gemm" => d[0] * d[0],
+        "spmv" => d[0],
+        "dna" => d[0] * d[0],
+        "gcn" => d[0] * d[2],
+        "nbody" => d[0] * 4,
+        other => panic!("unknown app '{other}'"),
+    };
+    stripe(words as u32, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::ALL;
+
+    fn cfg(n: usize) -> ArenaConfig {
+        ArenaConfig::default().with_nodes(n)
+    }
+
+    #[test]
+    fn single_node_bsp_equals_serial() {
+        for app in ALL {
+            let c = cfg(1);
+            let bsp = run_bsp(app, Scale::Small, 7, &c, false);
+            let ser = serial_ps(app, Scale::Small, 7, &c);
+            assert_eq!(bsp.makespan_ps, ser, "{app}");
+            assert_eq!(bsp.data_movement_bytes, 0, "{app}");
+        }
+    }
+
+    #[test]
+    fn work_conserved_across_node_counts() {
+        for app in ALL {
+            let u1: u64 = plan(app, Scale::Small, 7, 1)
+                .iter()
+                .flat_map(|s| s.units.iter())
+                .sum();
+            for n in [2, 4, 8] {
+                let un: u64 = plan(app, Scale::Small, 7, n)
+                    .iter()
+                    .flat_map(|s| s.units.iter())
+                    .sum();
+                assert_eq!(u1, un, "{app} units changed with n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_bsp_is_faster_but_sublinear() {
+        // paper-scale inputs: Small instances are genuinely
+        // network-bound at 1 µs/hop and may not beat serial.
+        for app in ALL {
+            let s = serial_ps(app, Scale::Paper, 7, &cfg(1));
+            let b4 = run_bsp(app, Scale::Paper, 7, &cfg(4), false);
+            let speedup = s as f64 / b4.makespan_ps as f64;
+            assert!(
+                speedup > 1.0,
+                "{app}: 4-node BSP slower than serial ({speedup:.2})"
+            );
+            assert!(speedup < 4.5, "{app}: superlinear? {speedup}");
+        }
+    }
+
+    #[test]
+    fn cgra_offload_beats_cpu_bsp() {
+        for app in ALL {
+            let c = cfg(4);
+            let cpu = run_bsp(app, Scale::Small, 7, &c, false);
+            let hw = run_bsp(app, Scale::Small, 7, &c, true);
+            assert!(
+                hw.compute_ps < cpu.compute_ps,
+                "{app}: CGRA compute {} !< CPU {}",
+                hw.compute_ps,
+                cpu.compute_ps
+            );
+            // comm is identical: same model, same pattern
+            assert_eq!(hw.comm_ps, cpu.comm_ps, "{app}");
+            assert_eq!(hw.data_movement_bytes, cpu.data_movement_bytes);
+        }
+    }
+
+    #[test]
+    fn dna_scales_worst_gemm_class_scales_well() {
+        // Fig. 9 trend: dependency-bound DNA vs data-parallel kernels
+        let speedup = |app: &str, n: usize| {
+            let s = serial_ps(app, Scale::Small, 7, &cfg(1)) as f64;
+            s / run_bsp(app, Scale::Small, 7, &cfg(n), false).makespan_ps as f64
+        };
+        let dna = speedup("dna", 8);
+        let gemm = speedup("gemm", 8);
+        let nbody = speedup("nbody", 8);
+        assert!(dna < gemm, "dna {dna:.2} !< gemm {gemm:.2}");
+        assert!(dna < nbody, "dna {dna:.2} !< nbody {nbody:.2}");
+    }
+
+    #[test]
+    fn allgather_movement_grows_with_nodes() {
+        let m4 = run_bsp("nbody", Scale::Small, 7, &cfg(4), false)
+            .data_movement_bytes;
+        let m8 = run_bsp("nbody", Scale::Small, 7, &cfg(8), false)
+            .data_movement_bytes;
+        assert!(m8 > m4, "ring allgather cost must grow: {m4} vs {m8}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Minimal criterion-style bench harness.
+//!
+//! The offline registry has no criterion, so `benches/*.rs` (built with
+//! `harness = false`) use this: warm-up, timed iterations, mean /
+//! median / stddev, criterion-flavoured output. Wall-clock timing via
+//! `std::time::Instant` only.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} time: [{} ± {}]  ({} iters, median {})",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            self.iters,
+            fmt_dur(self.median),
+        );
+    }
+}
+
+/// Benchmark runner with a time budget per benchmark.
+pub struct Bench {
+    warmup: u32,
+    min_iters: u32,
+    max_iters: u32,
+    budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 30,
+            budget: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Bench {
+            warmup: 1,
+            min_iters: 2,
+            max_iters: 10,
+            budget: Duration::from_secs(2),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f` until the budget or `max_iters` is reached; prints and
+    /// returns the result. `f` should return something observable to
+    /// keep the optimizer honest (the value is black-boxed).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (samples.len() as u32) < self.min_iters
+            || (start.elapsed() < self.budget
+                && (samples.len() as u32) < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len() as u32;
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n;
+        let median = samples[samples.len() / 2];
+        let mean_ns = mean.as_nanos() as f64;
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_nanos() as f64 - mean_ns;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        let r = BenchResult {
+            name: name.into(),
+            iters: n,
+            mean,
+            median,
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+        };
+        r.report();
+        r
+    }
+}
+
+/// Optimization barrier (stable-Rust black box).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Throughput helper: items/sec from a result.
+pub fn throughput(r: &BenchResult, items: u64) -> f64 {
+    items as f64 / r.mean.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 5,
+            budget: Duration::from_millis(200),
+        };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(throughput(&r, 10_000) > 0.0);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let b = Bench {
+            warmup: 0,
+            min_iters: 2,
+            max_iters: 4,
+            budget: Duration::from_secs(60),
+        };
+        let r = b.run("fast", || 1 + 1);
+        assert!(r.iters <= 4);
+    }
+}

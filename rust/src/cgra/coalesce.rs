@@ -1,0 +1,220 @@
+//! Coalescing Unit (paper §3.2 step 6, §4.3).
+//!
+//! Newly spawned task tokens are buffered in the controller's 4 × 4-entry
+//! queues and merged when two tokens carry the same `TASKid`/`PARAM`/
+//! `REMOTE` and contiguous data ranges — without this, fine-grained apps
+//! like SSSP flood the token ring. Over-spawned tokens that do not fit
+//! the queues spill to a memory attached to the controller (the paper's
+//! deadlock-avoidance store) instead of back-pressuring the fabric.
+
+use std::collections::VecDeque;
+
+use crate::token::{TaskId, TaskToken};
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CoalesceStats {
+    /// Tokens pushed by executing tasks.
+    pub spawned: u64,
+    /// Pushes absorbed by merging into a queued token.
+    pub coalesced: u64,
+    /// Pushes that overflowed to the spill memory.
+    pub spilled: u64,
+    /// Tokens handed onward to the dispatcher.
+    pub emitted: u64,
+    /// High-water mark of the spill memory.
+    pub spill_peak: usize,
+}
+
+/// The controller-side spawn buffer: `n` small queues + spill memory.
+#[derive(Clone, Debug)]
+pub struct CoalesceUnit {
+    queues: Vec<VecDeque<TaskToken>>,
+    depth: usize,
+    spill: VecDeque<TaskToken>,
+    /// Merging enabled (ablation knob — buffering still happens).
+    merging: bool,
+    pub stats: CoalesceStats,
+}
+
+impl CoalesceUnit {
+    pub fn new(queues: usize, depth: usize) -> Self {
+        assert!(queues >= 1 && depth >= 1);
+        CoalesceUnit {
+            queues: (0..queues).map(|_| VecDeque::with_capacity(depth)).collect(),
+            depth,
+            spill: VecDeque::new(),
+            merging: true,
+            stats: CoalesceStats::default(),
+        }
+    }
+
+    /// Ablation: keep the queues but never merge tokens.
+    pub fn without_merging(mut self) -> Self {
+        self.merging = false;
+        self
+    }
+
+    fn queue_of(&self, id: TaskId) -> usize {
+        id as usize % self.queues.len()
+    }
+
+    /// Buffer a token spawned by a running task, merging if possible.
+    pub fn push(&mut self, token: TaskToken) {
+        self.stats.spawned += 1;
+        let qi = self.queue_of(token.task_id);
+        // Try to merge with any token already buffered in this queue.
+        if self.merging {
+            if let Some(slot) = self.queues[qi]
+                .iter_mut()
+                .find(|t| t.can_coalesce(&token))
+            {
+                *slot = slot.coalesce(&token);
+                self.stats.coalesced += 1;
+                return;
+            }
+        }
+        if self.queues[qi].len() < self.depth {
+            self.queues[qi].push_back(token);
+        } else {
+            self.spill.push_back(token);
+            self.stats.spilled += 1;
+            self.stats.spill_peak = self.stats.spill_peak.max(self.spill.len());
+        }
+    }
+
+    /// Take one token for injection into the ring (round-robins the
+    /// queues, refilling from spill so nothing is stranded).
+    pub fn pop(&mut self) -> Option<TaskToken> {
+        let qi = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| !q.is_empty())
+            .max_by_key(|(_, q)| q.len())
+            .map(|(i, _)| i);
+        let t = match qi {
+            Some(i) => self.queues[i].pop_front(),
+            None => self.spill.pop_front(),
+        };
+        if let Some(tok) = t {
+            // backfill the drained queue from spill
+            if let Some(s) = self.spill.pop_front() {
+                let si = self.queue_of(s.task_id);
+                if self.queues[si].len() < self.depth {
+                    self.queues[si].push_back(s);
+                } else {
+                    self.spill.push_front(s);
+                }
+            }
+            self.stats.emitted += 1;
+            Some(tok)
+        } else {
+            None
+        }
+    }
+
+    /// Drain everything (end-of-task flush).
+    pub fn drain(&mut self) -> Vec<TaskToken> {
+        let mut out = Vec::new();
+        while let Some(t) = self.pop() {
+            out.push(t);
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum::<usize>() + self.spill.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total data units currently represented (conservation checks).
+    pub fn pending_units(&self) -> u64 {
+        self.queues
+            .iter()
+            .flatten()
+            .chain(self.spill.iter())
+            .map(|t| t.task.len() as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::token::Range;
+
+    fn tok(id: TaskId, s: u32, e: u32, p: f32) -> TaskToken {
+        TaskToken::new(id, Range::new(s, e), p)
+    }
+
+    #[test]
+    fn adjacent_spawns_merge() {
+        let mut c = CoalesceUnit::new(4, 4);
+        // SSSP-style: unit-range spawns with the same level PARAM
+        for i in 0..16 {
+            c.push(tok(1, i, i + 1, 2.0));
+        }
+        assert_eq!(c.stats.spawned, 16);
+        assert_eq!(c.stats.coalesced, 15, "all merged into one");
+        assert_eq!(c.len(), 1);
+        let t = c.pop().unwrap();
+        assert_eq!(t.task, Range::new(0, 16));
+    }
+
+    #[test]
+    fn different_param_does_not_merge() {
+        let mut c = CoalesceUnit::new(4, 4);
+        c.push(tok(1, 0, 1, 1.0));
+        c.push(tok(1, 1, 2, 2.0)); // adjacent but different PARAM
+        assert_eq!(c.stats.coalesced, 0);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn overflow_spills_not_drops() {
+        let mut c = CoalesceUnit::new(1, 2);
+        // non-mergeable tokens (gaps between ranges)
+        for i in 0..6 {
+            c.push(tok(1, 4 * i, 4 * i + 1, 0.0));
+        }
+        assert_eq!(c.stats.spilled, 4);
+        assert_eq!(c.len(), 6, "nothing dropped");
+        let drained = c.drain();
+        assert_eq!(drained.len(), 6);
+        let total: u32 = drained.iter().map(|t| t.task.len()).sum();
+        assert_eq!(total, 6, "work conserved through spill");
+    }
+
+    #[test]
+    fn conservation_under_merging() {
+        let mut c = CoalesceUnit::new(4, 4);
+        let mut pushed = 0u64;
+        let mut rng = crate::util::Rng::new(42);
+        for _ in 0..200 {
+            let id = (1 + rng.below(3)) as TaskId;
+            let s = rng.below(64) as u32;
+            let len = 1 + rng.below(4) as u32;
+            c.push(tok(id, s, s + len, 0.0));
+            pushed += len as u64;
+        }
+        let mut popped = 0u64;
+        for t in c.drain() {
+            popped += t.task.len() as u64;
+        }
+        // merging only ever unions *adjacent* ranges, so totals match
+        assert_eq!(popped, pushed);
+    }
+
+    #[test]
+    fn pop_prefers_fullest_queue() {
+        let mut c = CoalesceUnit::new(2, 4);
+        c.push(tok(2, 0, 1, 0.0)); // queue 0
+        c.push(tok(1, 10, 11, 0.0)); // queue 1
+        c.push(tok(3, 20, 21, 0.0)); // queue 1
+        let first = c.pop().unwrap();
+        assert_eq!(first.task_id, 1, "fullest queue drains first");
+    }
+}

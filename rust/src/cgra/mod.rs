@@ -1,0 +1,387 @@
+//! Reconfigurable CGRA node model (paper §4.3).
+//!
+//! The 8×8 tile array is partitioned into 4 groups of 2×8; the CGRA
+//! controller allocates 1, 2 or 4 groups to a task according to its data
+//! range (the ¼ / ½ policy), pays the 8-cycle systolic reconfiguration
+//! when a group's loaded `TASKid` changes, and buffers spawned tokens in
+//! the [`coalesce::CoalesceUnit`]. Timing comes from the mapper's
+//! [`Mapping`] (II + makespan); numerics, when requested, from the PJRT
+//! runtime — the same split the paper makes between PyMTL timing and
+//! functional kernels.
+
+pub mod coalesce;
+
+use std::collections::HashMap;
+
+use crate::config::{ArenaConfig, GroupAlloc, Ps};
+use crate::mapper::kernels::KernelSpec;
+use crate::mapper::Mapping;
+use crate::token::{TaskId, TaskToken};
+
+pub use coalesce::{CoalesceStats, CoalesceUnit};
+
+/// One 2×8 tile group: when it frees up and what config it holds.
+#[derive(Clone, Copy, Debug, Default)]
+struct Group {
+    busy_until: Ps,
+    loaded: Option<TaskId>,
+}
+
+/// Outcome of launching one task on the array.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Launch {
+    /// Groups allocated (1, 2 or 4).
+    pub groups: usize,
+    /// When execution begins (after reconfiguration).
+    pub start: Ps,
+    /// When the task completes and the groups free up.
+    pub done: Ps,
+    /// Reconfiguration cycles paid (0 if the config was resident).
+    pub reconfig_cycles: u64,
+    /// Compute cycles (II-pipelined body over the task's units).
+    pub compute_cycles: u64,
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CgraStats {
+    pub launches: u64,
+    pub reconfigs: u64,
+    pub reconfig_cycles: u64,
+    pub compute_cycles: u64,
+    /// groups × cycles actually occupied (utilization numerator).
+    pub group_busy_cycles: u64,
+    /// Launches by allocation size, indexed by log2(groups): [1, 2, 4].
+    pub alloc_histogram: [u64; 3],
+}
+
+/// Group-allocation policy (paper §4.3):
+/// * range < ¼ of local  -> 1 group,
+/// * range > ½ of local  -> 4 groups if all free, else 2,
+/// * otherwise           -> 2 groups;
+/// always clamped to what is actually free.
+pub fn alloc_policy(task_len: u64, local_len: u64, free: usize) -> usize {
+    debug_assert!(free >= 1);
+    let desired = if local_len == 0 || task_len * 4 < local_len {
+        1
+    } else if task_len * 2 > local_len {
+        if free >= 4 {
+            4
+        } else {
+            2
+        }
+    } else {
+        2
+    };
+    desired.min(free).max(1)
+}
+
+/// The per-node CGRA fabric + controller state.
+#[derive(Clone, Debug)]
+pub struct CgraNode {
+    groups: Vec<Group>,
+    cycle_ps: Ps,
+    reconfig_cycles: u64,
+    mode: GroupAlloc,
+    pub stats: CgraStats,
+}
+
+impl CgraNode {
+    pub fn new(cfg: &ArenaConfig) -> Self {
+        CgraNode {
+            groups: vec![Group::default(); cfg.cgra_groups],
+            cycle_ps: cfg.cgra_cycle_ps(),
+            reconfig_cycles: cfg.reconfig_cycles,
+            mode: cfg.group_alloc,
+            stats: CgraStats::default(),
+        }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Groups idle at `now`.
+    pub fn free_groups(&self, now: Ps) -> usize {
+        self.groups.iter().filter(|g| g.busy_until <= now).count()
+    }
+
+    /// Earliest instant any group frees up (for retry scheduling).
+    pub fn next_free_at(&self) -> Ps {
+        self.groups.iter().map(|g| g.busy_until).min().unwrap_or(0)
+    }
+
+    /// Is the fabric fully idle (termination check)?
+    pub fn idle(&self, now: Ps) -> bool {
+        self.free_groups(now) == self.groups.len()
+    }
+
+    /// `ARENA_ready`: can `token` start right now?
+    pub fn ready(&self, now: Ps) -> bool {
+        self.free_groups(now) >= 1
+    }
+
+    /// Launch `token` covering `units` of kernel work on groups chosen
+    /// by the ¼/½ policy. `local_len` is the node's data-range length;
+    /// `mappings[g-1]` must hold the kernel's mapping for g groups.
+    /// Returns None when no group is free (caller retries at
+    /// [`Self::next_free_at`]).
+    pub fn launch(
+        &mut self,
+        now: Ps,
+        token: &TaskToken,
+        local_len: u64,
+        units: u64,
+        mappings: &GroupMappings,
+    ) -> Option<Launch> {
+        let free = self.free_groups(now);
+        if free == 0 {
+            return None;
+        }
+        let n = match self.mode {
+            GroupAlloc::Dynamic => {
+                alloc_policy(token.task.len() as u64, local_len, free)
+            }
+            // offload ablation: a task waits for the whole array
+            GroupAlloc::AlwaysFull => {
+                if free < self.groups.len() {
+                    return None;
+                }
+                self.groups.len()
+            }
+            GroupAlloc::AlwaysOne => 1,
+        };
+        let mapping = mappings.get(n);
+
+        // pick the n idle groups that most recently held this TASKid
+        // (config residency) to minimize reconfiguration.
+        let mut idle: Vec<usize> = (0..self.groups.len())
+            .filter(|&i| self.groups[i].busy_until <= now)
+            .collect();
+        idle.sort_by_key(|&i| self.groups[i].loaded != Some(token.task_id));
+        let chosen = &idle[..n];
+
+        // 8-cycle systolic reconfig if any chosen group holds a
+        // different config (TASKid forwarded through the array once).
+        let needs_reconfig = chosen
+            .iter()
+            .any(|&i| self.groups[i].loaded != Some(token.task_id));
+        let reconfig = if needs_reconfig { self.reconfig_cycles } else { 0 };
+
+        let compute = mapping.cycles_for(units);
+        let start = now + reconfig * self.cycle_ps;
+        let done = start + compute * self.cycle_ps;
+        for &i in chosen {
+            self.groups[i].busy_until = done;
+            self.groups[i].loaded = Some(token.task_id);
+        }
+
+        self.stats.launches += 1;
+        if needs_reconfig {
+            self.stats.reconfigs += 1;
+            self.stats.reconfig_cycles += reconfig;
+        }
+        self.stats.compute_cycles += compute;
+        self.stats.group_busy_cycles += (reconfig + compute) * n as u64;
+        self.stats.alloc_histogram
+            [(n.trailing_zeros() as usize).min(2)] += 1;
+
+        Some(Launch {
+            groups: n,
+            start,
+            done,
+            reconfig_cycles: reconfig,
+            compute_cycles: compute,
+        })
+    }
+
+    /// Fabric utilization over `elapsed` ps (groups × time basis).
+    pub fn utilization(&self, elapsed: Ps) -> f64 {
+        if elapsed == 0 {
+            return 0.0;
+        }
+        let busy_ps = self.stats.group_busy_cycles as f64 * self.cycle_ps as f64;
+        (busy_ps / (elapsed as f64 * self.groups.len() as f64)).min(1.0)
+    }
+}
+
+/// Memoized kernel mappings for the three group configurations
+/// (2×8, 4×8, 8×8) — built once per (node, kernel), then O(1) on the
+/// launch path.
+#[derive(Clone, Debug)]
+pub struct GroupMappings {
+    by_groups: [Mapping; 3],
+}
+
+impl GroupMappings {
+    pub fn build(spec: &KernelSpec, cfg: &ArenaConfig) -> Self {
+        GroupMappings {
+            by_groups: [spec.map(cfg, 1), spec.map(cfg, 2), spec.map(cfg, 4)],
+        }
+    }
+
+    /// Mapping for a 1-, 2- or 4-group allocation.
+    pub fn get(&self, groups: usize) -> &Mapping {
+        match groups {
+            1 => &self.by_groups[0],
+            2 => &self.by_groups[1],
+            4 => &self.by_groups[2],
+            g => panic!("invalid group allocation {g}"),
+        }
+    }
+}
+
+/// Per-node table: TASKid -> mappings (the control-memory contents; all
+/// tasks are pre-loaded before the runtime starts, paper §4.3).
+#[derive(Clone, Debug, Default)]
+pub struct KernelTable {
+    map: HashMap<TaskId, GroupMappings>,
+}
+
+impl KernelTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, id: TaskId, spec: &KernelSpec, cfg: &ArenaConfig) {
+        self.map.insert(id, GroupMappings::build(spec, cfg));
+    }
+
+    pub fn get(&self, id: TaskId) -> Option<&GroupMappings> {
+        self.map.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapper::kernels::gemm_kernel;
+    use crate::token::Range;
+
+    fn setup() -> (ArenaConfig, CgraNode, GroupMappings) {
+        let cfg = ArenaConfig::default();
+        let node = CgraNode::new(&cfg);
+        let maps = GroupMappings::build(&gemm_kernel(), &cfg);
+        (cfg, node, maps)
+    }
+
+    fn tok(s: u32, e: u32) -> TaskToken {
+        TaskToken::new(1, Range::new(s, e), 0.0)
+    }
+
+    #[test]
+    fn policy_quarter_half_rules() {
+        // < 1/4 of local -> 1 group
+        assert_eq!(alloc_policy(10, 100, 4), 1);
+        assert_eq!(alloc_policy(24, 100, 4), 1);
+        // > 1/2 -> 4 when all free
+        assert_eq!(alloc_policy(60, 100, 4), 4);
+        // > 1/2 but not all free -> 2
+        assert_eq!(alloc_policy(60, 100, 3), 2);
+        assert_eq!(alloc_policy(60, 100, 2), 2);
+        assert_eq!(alloc_policy(60, 100, 1), 1);
+        // middle band -> 2
+        assert_eq!(alloc_policy(30, 100, 4), 2);
+        assert_eq!(alloc_policy(50, 100, 4), 2);
+        // never more than free, never zero
+        assert_eq!(alloc_policy(100, 100, 1), 1);
+        assert_eq!(alloc_policy(0, 0, 4), 1);
+    }
+
+    #[test]
+    fn launch_pays_reconfig_once_then_resident() {
+        let (cfg, mut node, maps) = setup();
+        let t = tok(0, 10); // small -> 1 group
+        let l1 = node.launch(0, &t, 1000, 100, &maps).unwrap();
+        assert_eq!(l1.groups, 1);
+        assert_eq!(l1.reconfig_cycles, cfg.reconfig_cycles);
+        assert_eq!(l1.start, 8 * cfg.cgra_cycle_ps());
+        // same kernel after completion: config resident, no reconfig
+        let l2 = node.launch(l1.done, &t, 1000, 100, &maps).unwrap();
+        assert_eq!(l2.reconfig_cycles, 0);
+        assert_eq!(node.stats.reconfigs, 1);
+    }
+
+    #[test]
+    fn switching_kernels_reconfigures() {
+        let (_, mut node, maps) = setup();
+        let a = TaskToken::new(1, Range::new(0, 10), 0.0);
+        let b = TaskToken::new(2, Range::new(0, 10), 0.0);
+        let l1 = node.launch(0, &a, 1000, 10, &maps).unwrap();
+        let l2 = node.launch(l1.done, &b, 1000, 10, &maps).unwrap();
+        assert!(l2.reconfig_cycles > 0);
+    }
+
+    #[test]
+    fn big_task_takes_whole_array() {
+        let (_, mut node, maps) = setup();
+        let t = tok(0, 600); // > 1/2 of local=1000
+        let l = node.launch(0, &t, 600, 600, &maps).unwrap();
+        assert_eq!(l.groups, 4);
+        assert_eq!(node.free_groups(0), 0);
+        assert!(node.launch(0, &tok(0, 1), 1000, 1, &maps).is_none());
+        assert!(node.ready(l.done));
+    }
+
+    #[test]
+    fn concurrent_small_tasks_share_fabric() {
+        let (_, mut node, maps) = setup();
+        // four small tasks run concurrently on the four groups
+        let mut dones = Vec::new();
+        for i in 0..4 {
+            let t = tok(i * 10, i * 10 + 10);
+            let l = node.launch(0, &t, 1000, 50, &maps).unwrap();
+            assert_eq!(l.groups, 1);
+            dones.push(l.done);
+        }
+        assert_eq!(node.free_groups(0), 0);
+        // a fifth bounces until one frees
+        assert!(node.launch(0, &tok(50, 55), 1000, 1, &maps).is_none());
+        let first_free = node.next_free_at();
+        assert_eq!(first_free, *dones.iter().min().unwrap());
+        assert!(node.launch(first_free, &tok(50, 55), 1000, 1, &maps).is_some());
+    }
+
+    #[test]
+    fn more_groups_finish_faster() {
+        let (_, mut n1, maps) = setup();
+        let (_, mut n4, _) = setup();
+        let small = n1.launch(0, &tok(0, 10), 1000, 10_000, &maps).unwrap();
+        let big = n4.launch(0, &tok(0, 600), 1000, 10_000, &maps).unwrap();
+        assert!(big.done < small.done, "4 groups beat 1 on same work");
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let (cfg, mut node, maps) = setup();
+        let l = node.launch(0, &tok(0, 600), 600, 1000, &maps).unwrap();
+        let total = l.reconfig_cycles + l.compute_cycles;
+        assert_eq!(node.stats.group_busy_cycles, total * 4);
+        let u = node.utilization(l.done);
+        assert!(u > 0.99, "fully busy until done: {u}");
+        let _ = cfg;
+    }
+
+    #[test]
+    fn kernel_table_registers_all() {
+        let cfg = ArenaConfig::default();
+        let mut kt = KernelTable::new();
+        for (i, app) in crate::mapper::kernels::APP_NAMES.iter().enumerate() {
+            kt.register(
+                (i + 1) as TaskId,
+                &crate::mapper::kernels::kernel_for(app),
+                &cfg,
+            );
+        }
+        assert_eq!(kt.len(), 6);
+        assert!(kt.get(1).is_some());
+        assert!(kt.get(9).is_none());
+    }
+}

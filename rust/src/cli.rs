@@ -1,0 +1,131 @@
+//! Tiny argument parser (no clap in the offline registry).
+//!
+//! Grammar: `arena <command> [positional...] [--flag] [--opt value]
+//! [--set key=value ...]`. Unknown options are errors; `--help` is the
+//! caller's job (the launcher prints its own usage).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    /// Repeated `--set k=v` config overrides, in order.
+    pub sets: Vec<(String, String)>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Options that take a value; everything else starting with `--` is a
+/// boolean flag.
+pub fn parse(
+    argv: &[String],
+    valued: &[&str],
+) -> Result<Args, ParseError> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            if name == "set" {
+                let v = it.next().ok_or_else(|| {
+                    ParseError("--set needs key=value".into())
+                })?;
+                let (k, val) = v.split_once('=').ok_or_else(|| {
+                    ParseError(format!("--set '{v}': expected key=value"))
+                })?;
+                args.sets.push((k.trim().into(), val.trim().into()));
+            } else if valued.contains(&name) {
+                let v = it.next().ok_or_else(|| {
+                    ParseError(format!("--{name} needs a value"))
+                })?;
+                args.options.insert(name.into(), v.clone());
+            } else {
+                args.flags.push(name.into());
+            }
+        } else if args.command.is_none() {
+            args.command = Some(a.clone());
+        } else {
+            args.positional.push(a.clone());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn parse_opt<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<T>, ParseError> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                ParseError(format!("--{name}: cannot parse '{v}'"))
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn full_grammar() {
+        let a = parse(
+            &sv(&[
+                "run", "extra", "--app", "sssp", "--engine", "--nodes", "8",
+                "--set", "cgra_mhz=400", "--set", "seed=0x2",
+            ]),
+            &["app", "nodes"],
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["extra"]);
+        assert_eq!(a.opt("app"), Some("sssp"));
+        assert!(a.flag("engine"));
+        assert!(!a.flag("nope"));
+        assert_eq!(a.parse_opt::<usize>("nodes").unwrap(), Some(8));
+        assert_eq!(
+            a.sets,
+            vec![
+                ("cgra_mhz".into(), "400".into()),
+                ("seed".into(), "0x2".into())
+            ]
+        );
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&sv(&["--app"]), &["app"]).is_err());
+        assert!(parse(&sv(&["--set", "novalue"]), &[]).is_err());
+        let a = parse(&sv(&["run", "--nodes", "x"]), &["nodes"]).unwrap();
+        assert!(a.parse_opt::<usize>("nodes").is_err());
+    }
+}

@@ -1,0 +1,928 @@
+//! The ARENA cluster: nodes + ring + runtime loop, driven by the DES.
+//!
+//! This is the paper's Fig. 4/5 workflow end-to-end: root tokens are
+//! injected at node 0, circulate on the token ring, get filtered /
+//! split / executed where their data lives, spawn follow-up tokens
+//! through the coalescing unit, fetch unavoidable remote data over the
+//! data-transfer network, and quiesce via the two-pass TERMINATE
+//! protocol. The same machinery runs both evaluation variants:
+//!
+//! * [`Model::SoftwareCpu`] — ARENA's data-centric runtime on plain CPU
+//!   nodes (the MPI realization of the HAF APIs; Fig. 9), and
+//! * [`Model::Cgra`] — the full system with runtime-reconfigured CGRA
+//!   groups (Fig. 11).
+//!
+//! Multiple [`App`]s can run concurrently (the paper's multi-user
+//! claim): each app owns a private address space; the filter resolves a
+//! token against the local range of *its* app's partition.
+
+use crate::api::{owner_of, stripe, App, ExecCtx, TaskRegistry, WORD_BYTES};
+use crate::cgra::{CgraStats, CoalesceStats, GroupMappings};
+use crate::config::{ArenaConfig, Ps};
+use crate::dispatcher::DispatcherStats;
+use crate::mapper::kernels::{kernel_for, KernelSpec};
+use crate::node::{Compute, Node, SW_TOKEN_OVERHEAD_CYCLES};
+use crate::ring::{RingNet, RingStats};
+use crate::runtime::Engine;
+use crate::sim::Engine as Des;
+use crate::token::{Range, TaskId, TaskToken, WIRE_BYTES};
+
+/// Which substrate executes tasks (the two ARENA rows of Figs. 9/11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Model {
+    /// ARENA runtime realized in software on CPU nodes.
+    SoftwareCpu,
+    /// ARENA on the reconfigurable CGRA cluster.
+    Cgra,
+}
+
+impl Model {
+    pub fn label(self) -> &'static str {
+        match self {
+            Model::SoftwareCpu => "arena-sw",
+            Model::Cgra => "arena-cgra",
+        }
+    }
+}
+
+/// Discrete events the cluster schedules.
+enum Ev {
+    /// Token delivered to `node` (off the ring or re-injected locally).
+    Arrive(usize, TaskToken),
+    /// Run one dispatcher step on `node`.
+    Pump(usize),
+    /// Task finished on `node`; release its spawned tokens.
+    Complete(usize, Vec<TaskToken>),
+    /// Remote data for a parked token landed at `node`.
+    DataReady(usize, TaskToken),
+}
+
+/// Aggregated outcome of one cluster run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub app: String,
+    pub model: &'static str,
+    pub nodes: usize,
+    /// Wall-clock of the simulated run (first injection -> quiescence).
+    pub makespan_ps: Ps,
+    pub ring: RingStats,
+    pub dispatcher: DispatcherStats,
+    pub cgra: CgraStats,
+    pub coalesce: CoalesceStats,
+    /// Work units executed per node (load balance).
+    pub node_units: Vec<u64>,
+    /// Per-application (name, tasks, units) — multi-user fairness.
+    pub per_app: Vec<(String, u64, u64)>,
+    pub tasks_executed: u64,
+    pub remote_fetches: u64,
+    pub remote_bytes: u64,
+    /// Scratchpad traffic across all nodes (power activity factor).
+    pub local_bytes: u64,
+    pub events: u64,
+    pub terminate_laps: u64,
+}
+
+impl RunReport {
+    pub fn makespan_ms(&self) -> f64 {
+        self.makespan_ps as f64 / 1e9
+    }
+
+    /// Task movement on the wire, in byte-hops (Fig. 10 "task" bars).
+    pub fn task_movement_bytes(&self) -> u64 {
+        self.ring.token_hops * WIRE_BYTES
+    }
+
+    /// Bulk data movement in byte-hops (Fig. 10 "data" bars).
+    pub fn data_movement_bytes(&self) -> u64 {
+        self.ring.data_byte_hops
+    }
+
+    pub fn total_movement_bytes(&self) -> u64 {
+        self.task_movement_bytes() + self.data_movement_bytes()
+    }
+
+    /// Coefficient of variation of per-node work (0 = perfect balance).
+    pub fn imbalance(&self) -> f64 {
+        let n = self.node_units.len() as f64;
+        let mean = self.node_units.iter().sum::<u64>() as f64 / n;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = self
+            .node_units
+            .iter()
+            .map(|&u| (u as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        var.sqrt() / mean
+    }
+}
+
+struct KernelInfo {
+    app_idx: usize,
+    /// REMOTE ranges resolve to the token's FROMnode (systolic).
+    fetch_from_parent: bool,
+    spec: KernelSpec,
+    mappings: GroupMappings,
+}
+
+/// The cluster simulator. Owns the apps, nodes and ring; borrow a PJRT
+/// [`Engine`] at `run` time to execute the AOT kernels for real numbers
+/// (timing is identical either way — the cycle model is authoritative,
+/// as in the paper's PyMTL/functional split).
+pub struct Cluster {
+    cfg: ArenaConfig,
+    model: Model,
+    apps: Vec<Box<dyn App>>,
+    /// Per-app partition of its private address space.
+    parts: Vec<Vec<Range>>,
+    registry: TaskRegistry,
+    /// Direct-indexed by the 4-bit TaskId (hot path: one
+    /// lookup per filtered token).
+    kernels: Vec<Option<KernelInfo>>,
+    nodes: Vec<Node>,
+    ring: RingNet,
+    /// Events the DES will process at most (runaway guard).
+    pub max_events: u64,
+    terminate_laps: u64,
+    /// (tasks, units) per app index (multi-user fairness accounting).
+    app_stats: Vec<(u64, u64)>,
+}
+
+impl Cluster {
+    pub fn new(cfg: ArenaConfig, model: Model, apps: Vec<Box<dyn App>>) -> Self {
+        assert!(!apps.is_empty(), "need at least one app");
+        let n = cfg.nodes;
+        let mut registry = TaskRegistry::new();
+        let mut kernels: Vec<Option<KernelInfo>> =
+            (0..16).map(|_| None).collect();
+        let mut parts = Vec::with_capacity(apps.len());
+        let mut apps = apps;
+        for (ai, app) in apps.iter_mut().enumerate() {
+            let mut local = TaskRegistry::new();
+            app.register(&mut local);
+            for e in local.iter() {
+                registry.register_entry(e.clone());
+                let spec = kernel_for(e.kernel);
+                kernels[e.id as usize] = Some(KernelInfo {
+                    app_idx: ai,
+                    fetch_from_parent: e.fetch_from_parent,
+                    mappings: GroupMappings::build(&spec, &cfg),
+                    spec,
+                });
+            }
+            let p = stripe(app.words(), n);
+            app.init(&cfg, &p);
+            parts.push(p);
+        }
+        let n_apps = apps.len();
+        let nodes = (0..n)
+            .map(|i| Node::new(i, &cfg, model == Model::Cgra))
+            .collect();
+        Cluster {
+            ring: RingNet::new(n),
+            nodes,
+            cfg,
+            model,
+            apps,
+            parts,
+            registry,
+            kernels,
+            max_events: 2_000_000_000,
+            terminate_laps: 0,
+            app_stats: vec![(0, 0); n_apps],
+        }
+    }
+
+    pub fn config(&self) -> &ArenaConfig {
+        &self.cfg
+    }
+
+    pub fn registry(&self) -> &TaskRegistry {
+        &self.registry
+    }
+
+    /// Kernel info for a registered task id (hot-path lookup).
+    #[inline]
+    fn kernel(&self, id: TaskId) -> &KernelInfo {
+        self.kernels[id as usize].as_ref().expect("unregistered task id")
+    }
+
+    /// Local data range of `node` for the app owning `task_id`.
+    fn local_range(&self, node: usize, task_id: TaskId) -> Range {
+        let ai = self.kernel(task_id).app_idx;
+        self.parts[ai][node]
+    }
+
+    /// Dispatcher clock period: fabric cycles for the hardware
+    /// dispatcher, CPU cycles for the software runtime.
+    fn disp_cycle_ps(&self) -> Ps {
+        match self.model {
+            Model::SoftwareCpu => self.cfg.cpu_cycle_ps(),
+            Model::Cgra => self.cfg.cgra_cycle_ps(),
+        }
+    }
+
+    /// Run every app to quiescence. Returns one report per app plus the
+    /// shared infrastructure counters (ring, queues) in each.
+    pub fn run(&mut self, mut engine: Option<&mut Engine>) -> RunReport {
+        let mut des: Des<Ev> = Des::new();
+        let mut pump_pending = vec![false; self.nodes.len()];
+
+        // Leader start-up: inject every root token at node 0, then the
+        // TERMINATE probe behind them (FIFO ties keep the order).
+        for ai in 0..self.apps.len() {
+            for t in self.apps[ai].root_tokens() {
+                des.schedule_at(0, Ev::Arrive(0, t));
+            }
+        }
+        des.schedule_at(0, Ev::Arrive(0, TaskToken::terminate()));
+
+        let max_events = self.max_events;
+        let mut makespan: Ps = 0;
+        let mut guard = 0u64;
+        while let Some((now, ev)) = des.next() {
+            guard += 1;
+            if guard > max_events {
+                panic!(
+                    "cluster exceeded {max_events} events at t={now}ps — \
+                     livelock? pending={}",
+                    des.pending()
+                );
+            }
+            makespan = makespan.max(now);
+            match ev {
+                Ev::Arrive(n, tok) => {
+                    self.on_arrive(&mut des, now, n, tok, &mut pump_pending)
+                }
+                Ev::Pump(n) => {
+                    pump_pending[n] = false;
+                    self.on_pump(&mut des, now, n, &mut engine, &mut pump_pending);
+                }
+                Ev::Complete(n, spawns) => {
+                    self.nodes[n].running -= 1;
+                    for s in spawns {
+                        self.nodes[n].coalescer.push(s);
+                    }
+                    self.schedule_pump(&mut des, now, n, &mut pump_pending);
+                }
+                Ev::DataReady(n, tok) => {
+                    let node = &mut self.nodes[n];
+                    let idx = node
+                        .fetching
+                        .iter()
+                        .position(|t| t == &tok)
+                        .expect("DataReady for unknown fetch");
+                    // data now local: execute directly (the REMOTE
+                    // fields stay on the token — apps use them to
+                    // identify the fetched panel).
+                    let t = node.fetching.swap_remove(idx);
+                    self.exec_or_requeue(&mut des, now, n, t, &mut engine);
+                    self.schedule_pump(&mut des, now, n, &mut pump_pending);
+                }
+            }
+        }
+
+        // Quiescence sanity: every node exited via the protocol.
+        debug_assert!(
+            self.nodes.iter().all(|nd| nd.done),
+            "DES drained but nodes not terminated"
+        );
+
+        self.report(makespan, des.processed())
+    }
+
+    fn schedule_pump(
+        &mut self,
+        des: &mut Des<Ev>,
+        _now: Ps,
+        n: usize,
+        pending: &mut [bool],
+    ) {
+        if !pending[n] && !self.nodes[n].done {
+            pending[n] = true;
+            des.schedule_in(self.disp_cycle_ps(), Ev::Pump(n));
+        }
+    }
+
+    fn on_arrive(
+        &mut self,
+        des: &mut Des<Ev>,
+        _now: Ps,
+        n: usize,
+        tok: TaskToken,
+        pending: &mut [bool],
+    ) {
+        if self.nodes[n].done {
+            // protocol guarantees only TERMINATE can still arrive here;
+            // it is swallowed and the ring drains.
+            debug_assert!(tok.is_terminate(), "live token at a dead node");
+            return;
+        }
+        if let Err(t) = self.nodes[n].disp.recv.push(tok) {
+            // Recv queue full: the token parks in upstream link buffers
+            // (credit backpressure) and drains as recv frees — no retry
+            // storm, just occupancy.
+            self.nodes[n].stats.recv_stalls += 1;
+            self.nodes[n].inbound.push_back(t);
+        }
+        self.schedule_pump(des, _now, n, pending);
+    }
+
+    /// One dispatcher step (Fig. 5 loop body).
+    fn on_pump(
+        &mut self,
+        des: &mut Des<Ev>,
+        now: Ps,
+        n: usize,
+        engine: &mut Option<&mut Engine>,
+        pending: &mut [bool],
+    ) {
+        if self.nodes[n].done {
+            return;
+        }
+        let mut progress = false;
+
+        // drain upstream link buffers into recv as space frees
+        // (ring traffic has priority over locally spawned tokens).
+        while !self.nodes[n].disp.recv.is_full() {
+            match self.nodes[n].inbound.pop_front() {
+                Some(t) => {
+                    self.nodes[n].disp.recv.push(t).expect("checked space");
+                    progress = true;
+                }
+                None => break,
+            }
+        }
+        // (6) re-inject coalesced spawns into the local recv queue
+        // (Fig. 5 line 36) while there is space.
+        while !self.nodes[n].disp.recv.is_full() {
+            match self.nodes[n].coalescer.pop() {
+                Some(t) => {
+                    self.nodes[n].disp.recv.push(t).expect("checked space");
+                    progress = true;
+                }
+                None => break,
+            }
+        }
+
+        // (2) filter one token from the recv queue.
+        if let Some(&tok) = self.nodes[n].disp.recv.peek() {
+            if tok.is_terminate() {
+                self.nodes[n].disp.recv.pop();
+                progress = true;
+                if self.nodes[n].quiescent(now) {
+                    self.finish_terminate(des, now, n);
+                } else {
+                    // busy: park the probe until local quiescence and
+                    // restart its clean-pass count.
+                    self.nodes[n].parked_terminate = true;
+                    self.nodes[n].touch();
+                }
+            } else {
+                let local = self.local_range(n, tok.task_id);
+                if self.nodes[n].disp.process(tok, local).is_ok() {
+                    self.nodes[n].disp.recv.pop();
+                    self.nodes[n].touch();
+                    progress = true;
+                }
+                // on Err the wait/send queues are full — the token
+                // stays in recv until a launch/forward frees space.
+            }
+        }
+
+        // (3)-(5) execution path: consider the head of the wait queue.
+        progress |= self.try_launch(des, now, n, engine);
+
+        // forward everything queued for the next hop; the link model
+        // serializes back-to-back sends.
+        while let Some(t) = self.nodes[n].disp.send.pop() {
+            let at = self.ring.send_token(&self.cfg, now, n);
+            let next = self.ring.next_hop(n);
+            if t.is_terminate() && next == 0 {
+                self.terminate_laps += 1;
+            }
+            des.schedule_at(at, Ev::Arrive(next, t));
+            progress = true;
+        }
+
+        // release a parked TERMINATE the moment the node drains.
+        if self.nodes[n].parked_terminate && self.nodes[n].quiescent(now) {
+            self.finish_terminate(des, now, n);
+            progress = true;
+        }
+
+        // Re-arm policy: pump again next cycle only while actually
+        // making progress. A blocked node is always woken by the event
+        // that unblocks it — Complete (compute slot frees), DataReady
+        // (fetch lands) and Arrive (new token) all schedule a pump —
+        // so no polling timers are needed.
+        let work_queued = !self.nodes[n].disp.recv.is_empty()
+            || !self.nodes[n].inbound.is_empty()
+            || !self.nodes[n].coalescer.is_empty()
+            || !self.nodes[n].disp.send.is_empty();
+        if progress && work_queued {
+            self.schedule_pump(des, now, n, pending);
+        }
+    }
+
+    /// TERMINATE handled at a quiescent node: count the pass, forward
+    /// the probe, exit on the second consecutive clean pass.
+    fn finish_terminate(&mut self, des: &mut Des<Ev>, now: Ps, n: usize) {
+        let exits = self.nodes[n].terminate_step();
+        let at = self.ring.send_token(&self.cfg, now, n);
+        let next = self.ring.next_hop(n);
+        if next == 0 {
+            self.terminate_laps += 1;
+        }
+        if !(exits && self.nodes.iter().all(|nd| nd.done)) {
+            // forward unless the whole ring has exited (the last node
+            // swallows the probe so the DES can drain).
+            des.schedule_at(at, Ev::Arrive(next, TaskToken::terminate()));
+        }
+        let _ = exits;
+    }
+
+    /// Steps (3)-(5): resource check, remote acquire, launch.
+    /// Returns true if any token left the wait queue.
+    fn try_launch(
+        &mut self,
+        des: &mut Des<Ev>,
+        now: Ps,
+        n: usize,
+        engine: &mut Option<&mut Engine>,
+    ) -> bool {
+        let mut progress = false;
+        loop {
+            let Some(&tok) = self.nodes[n].disp.wait.peek() else {
+                return progress;
+            };
+            // (4) unavoidable remote data: acquire through the DTN and
+            // park the token until DataReady.
+            if tok.needs_remote_data() {
+                self.nodes[n].disp.wait.pop();
+                let ready_at = self.fetch_remote(now, n, &tok);
+                self.nodes[n].fetching.push(tok);
+                self.nodes[n].stats.fetches += 1;
+                self.nodes[n].stats.fetched_bytes +=
+                    tok.remote.len() as u64 * WORD_BYTES;
+                des.schedule_at(ready_at, Ev::DataReady(n, tok));
+                progress = true;
+                continue; // head-of-line cleared; consider the next
+            }
+            // (3) resource availability.
+            if !self.nodes[n].compute.ready(now) {
+                return progress;
+            }
+            self.nodes[n].disp.wait.pop();
+            self.exec_or_requeue(des, now, n, tok, engine);
+            progress = true;
+        }
+    }
+
+    /// Execute `tok` on node `n` right now (data is local).
+    fn exec_or_requeue(
+        &mut self,
+        des: &mut Des<Ev>,
+        now: Ps,
+        n: usize,
+        tok: TaskToken,
+        engine: &mut Option<&mut Engine>,
+    ) {
+        let app_idx = self.kernel(tok.task_id).app_idx;
+
+        // functional execution: mutate app state, collect spawns.
+        let mut ctx = ExecCtx::new(n as u8, engine.as_deref_mut());
+        let exec = self.apps[app_idx].execute(n, &tok, &mut ctx);
+        let spawns = ctx.take_spawns();
+        // forwarding tokens (spawn FU mid-execution) leave immediately
+        for f in ctx.take_forwards() {
+            self.nodes[n].coalescer.push(f);
+        }
+
+        // timed execution on the substrate (split borrows: kernels and
+        // parts are read-only while the node's compute state mutates).
+        let Cluster { kernels, nodes, parts, cfg, .. } = self;
+        let info = kernels[tok.task_id as usize]
+            .as_ref()
+            .expect("unregistered task id");
+        let done = match &mut nodes[n].compute {
+            Compute::Cpu { busy_until } => {
+                let cycles =
+                    info.spec.cpu_cycles(exec.units) + SW_TOKEN_OVERHEAD_CYCLES;
+                let start = now.max(*busy_until);
+                let done = start + cycles * cfg.cpu_cycle_ps();
+                *busy_until = done;
+                done
+            }
+            Compute::Cgra(cgra) => {
+                let local_len = parts[app_idx][n].len() as u64;
+                match cgra.launch(now, &tok, local_len, exec.units, &info.mappings)
+                {
+                    Some(l) => l.done,
+                    None => {
+                        // raced with another launch: retry at the next
+                        // instant a group frees (launch backpressure).
+                        let at = cgra.next_free_at();
+                        let l = cgra
+                            .launch(at, &tok, local_len, exec.units, &info.mappings)
+                            .expect("a group is free at next_free_at");
+                        l.done
+                    }
+                }
+            }
+        };
+        self.nodes[n].running += 1;
+        self.nodes[n].stats.tasks += 1;
+        self.nodes[n].stats.units += exec.units;
+        self.nodes[n].stats.local_bytes += exec.local_bytes;
+        self.app_stats[app_idx].0 += 1;
+        self.app_stats[app_idx].1 += exec.units;
+        self.nodes[n].touch();
+        des.schedule_at(done, Ev::Complete(n, spawns));
+    }
+
+    /// `ARENA_data_acquire`: pull `tok.remote` over the data-transfer
+    /// network — from the range's home node(s), or from the token's
+    /// parent for streaming kernels. Returns the completion time.
+    fn fetch_remote(&mut self, now: Ps, n: usize, tok: &TaskToken) -> Ps {
+        let info = self.kernel(tok.task_id);
+        if info.fetch_from_parent {
+            // the spawning node's scratchpad holds a live copy
+            let src = tok.from_node as usize;
+            if src == n {
+                return now;
+            }
+            let words = tok.remote.len() as u64;
+            let req_at = self.ring.send_data(&self.cfg, now, n, src, WIRE_BYTES);
+            return self.ring.send_data(&self.cfg, req_at, src, n, words * WORD_BYTES);
+        }
+        let parts = &self.parts[info.app_idx];
+        let mut t_done = now;
+        let mut at = tok.remote.start;
+        while at < tok.remote.end {
+            let owner = owner_of(parts, at);
+            let end = tok.remote.end.min(parts[owner].end);
+            let words = (end - at) as u64;
+            if owner != n {
+                // request message out, payload back.
+                let req_at = self.ring.send_data(&self.cfg, now, n, owner, WIRE_BYTES);
+                let got = self.ring.send_data(
+                    &self.cfg,
+                    req_at,
+                    owner,
+                    n,
+                    words * WORD_BYTES,
+                );
+                t_done = t_done.max(got);
+            }
+            at = end;
+        }
+        t_done
+    }
+
+    fn report(&mut self, makespan: Ps, events: u64) -> RunReport {
+        let mut dispatcher = DispatcherStats::default();
+        let mut cgra = CgraStats::default();
+        let mut coalesce = CoalesceStats::default();
+        let mut node_units = Vec::with_capacity(self.nodes.len());
+        let mut tasks = 0;
+        let mut fetches = 0;
+        let mut fetched = 0;
+        let mut local_bytes = 0;
+        for nd in &self.nodes {
+            let d = &nd.disp.stats;
+            dispatcher.filtered += d.filtered;
+            dispatcher.conveyed += d.conveyed;
+            dispatcher.offloaded += d.offloaded;
+            dispatcher.split_superset += d.split_superset;
+            dispatcher.split_partial += d.split_partial;
+            dispatcher.filter_cycles += d.filter_cycles;
+            dispatcher.stalls += d.stalls;
+            if let Some(c) = nd.cgra() {
+                let s = &c.stats;
+                cgra.launches += s.launches;
+                cgra.reconfigs += s.reconfigs;
+                cgra.reconfig_cycles += s.reconfig_cycles;
+                cgra.compute_cycles += s.compute_cycles;
+                cgra.group_busy_cycles += s.group_busy_cycles;
+                for i in 0..3 {
+                    cgra.alloc_histogram[i] += s.alloc_histogram[i];
+                }
+            }
+            let cs = &nd.coalescer.stats;
+            coalesce.spawned += cs.spawned;
+            coalesce.coalesced += cs.coalesced;
+            coalesce.spilled += cs.spilled;
+            coalesce.emitted += cs.emitted;
+            coalesce.spill_peak = coalesce.spill_peak.max(cs.spill_peak);
+            node_units.push(nd.stats.units);
+            tasks += nd.stats.tasks;
+            fetches += nd.stats.fetches;
+            fetched += nd.stats.fetched_bytes;
+            local_bytes += nd.stats.local_bytes;
+        }
+        RunReport {
+            app: self
+                .apps
+                .iter()
+                .map(|a| a.name())
+                .collect::<Vec<_>>()
+                .join("+"),
+            model: self.model.label(),
+            nodes: self.nodes.len(),
+            makespan_ps: makespan,
+            ring: self.ring.stats.clone(),
+            dispatcher,
+            cgra,
+            coalesce,
+            node_units,
+            per_app: self
+                .apps
+                .iter()
+                .zip(&self.app_stats)
+                .map(|(a, &(t, u))| (a.name().to_string(), t, u))
+                .collect(),
+            tasks_executed: tasks,
+            remote_fetches: fetches,
+            remote_bytes: fetched,
+            local_bytes,
+            events,
+            terminate_laps: self.terminate_laps,
+        }
+    }
+
+    /// Post-run correctness: every app checks against its serial oracle.
+    pub fn check(&self) -> Result<(), String> {
+        for a in &self.apps {
+            a.check().map_err(|e| format!("{}: {e}", a.name()))?;
+        }
+        Ok(())
+    }
+
+    pub fn apps(&self) -> &[Box<dyn App>] {
+        &self.apps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Exec;
+
+    /// Toy app: word `i` of an N-word vector must be incremented once.
+    /// The root task covers the whole space; the filter splits it per
+    /// node; each local execution also spawns one "echo" token per
+    /// chunk back to a pseudo-random node range, exercising splits,
+    /// coalescing and termination.
+    struct TouchAll {
+        words: u32,
+        state: Vec<u32>,
+        echoes: bool,
+    }
+
+    impl TouchAll {
+        fn new(words: u32, echoes: bool) -> Self {
+            TouchAll { words, state: vec![0; words as usize], echoes }
+        }
+    }
+
+    impl App for TouchAll {
+        fn name(&self) -> &'static str {
+            "touch"
+        }
+        fn words(&self) -> u32 {
+            self.words
+        }
+        fn register(&self, reg: &mut TaskRegistry) {
+            reg.register(1, "spmv", true);
+            if self.echoes {
+                reg.register(2, "spmv", false);
+            }
+        }
+        fn init(&mut self, _cfg: &ArenaConfig, _parts: &[Range]) {}
+        fn root_tokens(&self) -> Vec<TaskToken> {
+            vec![TaskToken::new(1, Range::new(0, self.words), 0.0)]
+        }
+        fn execute(
+            &mut self,
+            _node: usize,
+            tok: &TaskToken,
+            ctx: &mut ExecCtx,
+        ) -> Exec {
+            if tok.task_id == 1 {
+                for a in tok.task.start..tok.task.end {
+                    self.state[a as usize] += 1;
+                }
+                if self.echoes {
+                    // echo a second pass over the mirrored range
+                    let m = Range::new(
+                        self.words - tok.task.end,
+                        self.words - tok.task.start,
+                    );
+                    ctx.spawn(2, m, 1.0);
+                }
+            } else {
+                for a in tok.task.start..tok.task.end {
+                    self.state[a as usize] += 10;
+                }
+            }
+            Exec { units: tok.task.len() as u64, local_bytes: 0 }
+        }
+        fn total_units(&self) -> u64 {
+            self.words as u64
+        }
+        fn check(&self) -> Result<(), String> {
+            let want = if self.echoes { 11 } else { 1 };
+            for (i, &v) in self.state.iter().enumerate() {
+                if v != want {
+                    return Err(format!("word {i}: {v} != {want}"));
+                }
+            }
+            Ok(())
+        }
+    }
+
+    fn run(nodes: usize, model: Model, echoes: bool) -> RunReport {
+        let cfg = ArenaConfig::default().with_nodes(nodes);
+        let mut cl =
+            Cluster::new(cfg, model, vec![Box::new(TouchAll::new(4096, echoes))]);
+        let r = cl.run(None);
+        cl.check().expect("functional check");
+        r
+    }
+
+    #[test]
+    fn single_node_terminates_and_touches_all() {
+        let r = run(1, Model::SoftwareCpu, false);
+        assert_eq!(r.tasks_executed, 1);
+        assert!(r.makespan_ps > 0);
+    }
+
+    #[test]
+    fn multi_node_splits_work_evenly() {
+        let r = run(4, Model::SoftwareCpu, false);
+        assert_eq!(r.tasks_executed, 4, "root split across 4 nodes");
+        assert_eq!(r.node_units.iter().sum::<u64>(), 4096);
+        assert!(r.imbalance() < 0.01, "stripe is balanced");
+        assert!(r.dispatcher.split_superset >= 1);
+    }
+
+    #[test]
+    fn spawned_tokens_reach_remote_owners() {
+        let r = run(4, Model::SoftwareCpu, true);
+        // echoes double the executed units
+        assert_eq!(r.node_units.iter().sum::<u64>(), 2 * 4096);
+        assert!(r.ring.token_msgs > 0, "echo tokens traveled the ring");
+    }
+
+    #[test]
+    fn cgra_model_runs_and_is_faster() {
+        let sw = run(4, Model::SoftwareCpu, true);
+        let hw = run(4, Model::Cgra, true);
+        assert_eq!(
+            sw.node_units.iter().sum::<u64>(),
+            hw.node_units.iter().sum::<u64>()
+        );
+        assert!(
+            hw.makespan_ps < sw.makespan_ps,
+            "CGRA {} !< CPU {}",
+            hw.makespan_ps,
+            sw.makespan_ps
+        );
+        assert!(hw.cgra.launches >= 4);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run(8, Model::Cgra, true);
+        let b = run(8, Model::Cgra, true);
+        assert_eq!(a.makespan_ps, b.makespan_ps);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.node_units, b.node_units);
+        assert_eq!(a.ring, b.ring);
+    }
+
+    #[test]
+    fn terminate_takes_at_least_two_laps() {
+        let r = run(4, Model::SoftwareCpu, false);
+        assert!(r.terminate_laps >= 2, "laps={}", r.terminate_laps);
+    }
+
+    /// App whose tasks need remote data (REMOTE range on spawns).
+    struct RemoteReader {
+        words: u32,
+        state: Vec<u32>,
+    }
+
+    impl App for RemoteReader {
+        fn name(&self) -> &'static str {
+            "remote-reader"
+        }
+        fn words(&self) -> u32 {
+            self.words
+        }
+        fn register(&self, reg: &mut TaskRegistry) {
+            reg.register(3, "spmv", true);
+            reg.register(4, "spmv", false);
+        }
+        fn init(&mut self, _cfg: &ArenaConfig, _parts: &[Range]) {}
+        fn root_tokens(&self) -> Vec<TaskToken> {
+            vec![TaskToken::new(3, Range::new(0, self.words), 0.0)]
+        }
+        fn execute(
+            &mut self,
+            _node: usize,
+            tok: &TaskToken,
+            ctx: &mut ExecCtx,
+        ) -> Exec {
+            if tok.task_id == 3 {
+                // phase 2 over the same range but requiring the
+                // mirrored remote words.
+                let m = Range::new(
+                    self.words - tok.task.end,
+                    self.words - tok.task.start,
+                );
+                ctx.spawn_with_remote(4, tok.task, 0.0, m);
+            } else {
+                for a in tok.task.start..tok.task.end {
+                    self.state[a as usize] += 1;
+                }
+            }
+            Exec { units: tok.task.len() as u64, local_bytes: 0 }
+        }
+        fn total_units(&self) -> u64 {
+            2 * self.words as u64
+        }
+        fn check(&self) -> Result<(), String> {
+            (self.state.iter().all(|&v| v == 1))
+                .then_some(())
+                .ok_or_else(|| "missed words".into())
+        }
+    }
+
+    #[test]
+    fn remote_fetches_travel_the_dtn() {
+        let cfg = ArenaConfig::default().with_nodes(4);
+        let mut cl = Cluster::new(
+            cfg,
+            Model::SoftwareCpu,
+            vec![Box::new(RemoteReader { words: 1024, state: vec![0; 1024] })],
+        );
+        let r = cl.run(None);
+        cl.check().unwrap();
+        assert!(r.remote_fetches > 0);
+        assert!(r.remote_bytes > 0);
+        assert!(r.ring.data_byte_hops > 0, "payloads moved on the DTN");
+    }
+
+    #[test]
+    fn multi_app_concurrent_execution() {
+        let cfg = ArenaConfig::default().with_nodes(4);
+        struct Second(TouchAll);
+        impl App for Second {
+            fn name(&self) -> &'static str {
+                "touch2"
+            }
+            fn words(&self) -> u32 {
+                self.0.words
+            }
+            fn register(&self, reg: &mut TaskRegistry) {
+                reg.register(7, "gemm", true);
+            }
+            fn init(&mut self, c: &ArenaConfig, p: &[Range]) {
+                self.0.init(c, p)
+            }
+            fn root_tokens(&self) -> Vec<TaskToken> {
+                vec![TaskToken::new(7, Range::new(0, self.0.words), 0.0)]
+            }
+            fn execute(
+                &mut self,
+                n: usize,
+                tok: &TaskToken,
+                ctx: &mut ExecCtx,
+            ) -> Exec {
+                let t = TaskToken::new(1, tok.task, tok.param);
+                self.0.execute(n, &t, ctx)
+            }
+            fn total_units(&self) -> u64 {
+                self.0.total_units()
+            }
+            fn check(&self) -> Result<(), String> {
+                self.0.check()
+            }
+        }
+        let mut cl = Cluster::new(
+            cfg,
+            Model::Cgra,
+            vec![
+                Box::new(TouchAll::new(2048, false)),
+                Box::new(Second(TouchAll::new(1024, false))),
+            ],
+        );
+        let r = cl.run(None);
+        cl.check().unwrap();
+        assert_eq!(r.node_units.iter().sum::<u64>(), 2048 + 1024);
+        assert!(r.app.contains('+'));
+    }
+}

@@ -1,0 +1,353 @@
+//! Cluster/node configuration — defaults are exactly Table 2 of the paper.
+//!
+//! `ArenaConfig::default()` is the unit-tested source of truth for every
+//! simulation parameter; a simple `key = value` config file plus CLI
+//! overrides layer on top (no TOML crate offline, so the file format is
+//! the flat subset we need).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Simulation time is integer picoseconds (lcm-friendly for the 800 MHz
+/// CGRA clock, the 2.6 GHz CPU clock and the 1 µs network hop).
+pub type Ps = u64;
+
+pub const PS_PER_US: Ps = 1_000_000;
+pub const PS_PER_NS: Ps = 1_000;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArenaConfig {
+    /// Number of ring nodes (paper evaluates 1..16).
+    pub nodes: usize,
+    /// Network interface bandwidth, bits per second (Table 2: 80 Gb/s).
+    pub nic_gbps: f64,
+    /// Ring hop latency (Table 2: 1 µs per switch hop).
+    pub hop_latency_ps: Ps,
+    /// Dispatcher queue depth (Table 2: 8-entry recv/wait/send).
+    pub dispatcher_queue_depth: usize,
+    /// CPU clock for the baseline / micro-controller (Table 2: 2.6 GHz).
+    pub cpu_ghz: f64,
+    /// CGRA fabric clock (paper §5.3: 800 MHz @ 45 nm).
+    pub cgra_mhz: f64,
+    /// CGRA array shape (Table 2: 8 × 8 tiles in 4 groups of 2×8).
+    pub cgra_rows: usize,
+    pub cgra_cols: usize,
+    pub cgra_groups: usize,
+    /// Control memory per tile, bytes (Table 2: 480 B).
+    pub ctrl_mem_bytes: usize,
+    /// Scratchpad data memory (Table 2: 2-bank, 4-port, 32 KB).
+    pub spm_bytes: usize,
+    pub spm_banks: usize,
+    pub spm_ports: usize,
+    /// CGRA controller spawn-queue shape (Table 2: 4 × 4-entry).
+    pub spawn_queues: usize,
+    pub spawn_queue_depth: usize,
+    /// Cycles to reconfigure a tile group (paper §4.3: 8 cycles).
+    pub reconfig_cycles: u64,
+    /// Group-allocation policy (ablation knob; paper uses Dynamic).
+    pub group_alloc: GroupAlloc,
+    /// Coalescing unit enabled (ablation knob; paper has it on).
+    pub coalescing: bool,
+    /// Workload RNG seed.
+    pub seed: u64,
+}
+
+/// §4.3 group-allocation policy variants (ablations of the design
+/// choice; the paper's system is `Dynamic`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupAlloc {
+    /// The paper's ¼ / ½ data-range rule (1, 2 or 4 groups).
+    Dynamic,
+    /// Offload style: every task takes the whole array.
+    AlwaysFull,
+    /// Maximal sharing: every task gets exactly one group.
+    AlwaysOne,
+}
+
+impl GroupAlloc {
+    fn parse(s: &str) -> Option<GroupAlloc> {
+        match s {
+            "dynamic" => Some(GroupAlloc::Dynamic),
+            "full" => Some(GroupAlloc::AlwaysFull),
+            "one" => Some(GroupAlloc::AlwaysOne),
+            _ => None,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            GroupAlloc::Dynamic => "dynamic",
+            GroupAlloc::AlwaysFull => "full",
+            GroupAlloc::AlwaysOne => "one",
+        }
+    }
+}
+
+impl Default for ArenaConfig {
+    fn default() -> Self {
+        ArenaConfig {
+            nodes: 4,
+            nic_gbps: 80.0,
+            hop_latency_ps: PS_PER_US,
+            dispatcher_queue_depth: 8,
+            cpu_ghz: 2.6,
+            cgra_mhz: 800.0,
+            cgra_rows: 8,
+            cgra_cols: 8,
+            cgra_groups: 4,
+            ctrl_mem_bytes: 480,
+            spm_bytes: 32 * 1024,
+            spm_banks: 2,
+            spm_ports: 4,
+            spawn_queues: 4,
+            spawn_queue_depth: 4,
+            reconfig_cycles: 8,
+            group_alloc: GroupAlloc::Dynamic,
+            coalescing: true,
+            seed: 0xA2EA,
+        }
+    }
+}
+
+impl ArenaConfig {
+    /// Picoseconds per CGRA cycle (800 MHz -> 1250 ps).
+    pub fn cgra_cycle_ps(&self) -> Ps {
+        (1e6 / self.cgra_mhz).round() as Ps
+    }
+
+    /// Picoseconds per baseline-CPU cycle (2.6 GHz -> ~385 ps).
+    pub fn cpu_cycle_ps(&self) -> Ps {
+        (1e3 / self.cpu_ghz).round() as Ps
+    }
+
+    /// Serialization delay of `bytes` over the NIC, in ps.
+    pub fn wire_ps(&self, bytes: u64) -> Ps {
+        let bytes_per_ps = self.nic_gbps / 8.0 * 1e9 / 1e12; // bytes per ps
+        ((bytes as f64) / bytes_per_ps).ceil() as Ps
+    }
+
+    /// Tiles per group (8×8 in 4 groups -> 16 = a 2×8 slice).
+    pub fn tiles_per_group(&self) -> usize {
+        self.cgra_rows * self.cgra_cols / self.cgra_groups
+    }
+
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Apply `key = value` overrides (config file lines or `--set k=v`).
+    pub fn set(&mut self, key: &str, val: &str) -> Result<(), ConfigError> {
+        macro_rules! bad {
+            () => {
+                |_| ConfigError::BadValue(key.into(), val.into())
+            };
+        }
+        macro_rules! parse {
+            ($v:expr) => {
+                $v.parse().map_err(bad!())?
+            };
+        }
+        let mut next = self.clone();
+        match key {
+            "nodes" => next.nodes = parse!(val),
+            "nic_gbps" => next.nic_gbps = parse!(val),
+            "hop_latency_us" => {
+                let us: f64 = parse!(val);
+                next.hop_latency_ps = (us * PS_PER_US as f64) as Ps;
+            }
+            "dispatcher_queue_depth" => {
+                next.dispatcher_queue_depth = parse!(val)
+            }
+            "cpu_ghz" => next.cpu_ghz = parse!(val),
+            "cgra_mhz" => next.cgra_mhz = parse!(val),
+            "cgra_rows" => next.cgra_rows = parse!(val),
+            "cgra_cols" => next.cgra_cols = parse!(val),
+            "cgra_groups" => next.cgra_groups = parse!(val),
+            "ctrl_mem_bytes" => next.ctrl_mem_bytes = parse!(val),
+            "spm_bytes" => next.spm_bytes = parse!(val),
+            "spawn_queues" => next.spawn_queues = parse!(val),
+            "spawn_queue_depth" => {
+                next.spawn_queue_depth = parse!(val)
+            }
+            "reconfig_cycles" => next.reconfig_cycles = parse!(val),
+            "group_alloc" => {
+                next.group_alloc = GroupAlloc::parse(val).ok_or_else(|| {
+                    ConfigError::BadValue(key.into(), val.into())
+                })?
+            }
+            "coalescing" => next.coalescing = parse!(val),
+            "seed" => next.seed = parse_seed(val).map_err(bad!())?,
+            _ => return Err(ConfigError::UnknownKey(key.into())),
+        }
+        next.validate()?;
+        *self = next;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.nodes == 0 {
+            return Err(ConfigError::Invalid("nodes must be >= 1".into()));
+        }
+        if self.cgra_groups == 0
+            || (self.cgra_rows * self.cgra_cols) % self.cgra_groups != 0
+        {
+            return Err(ConfigError::Invalid(
+                "cgra_groups must divide rows*cols".into(),
+            ));
+        }
+        if self.dispatcher_queue_depth == 0 {
+            return Err(ConfigError::Invalid("queue depth must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines ('#' comments, blank lines allowed).
+    pub fn load(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Io(path.display().to_string(), e))?;
+        let mut cfg = ArenaConfig::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                ConfigError::Invalid(format!("line {}: missing '='", lineno + 1))
+            })?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        Ok(cfg)
+    }
+
+    /// Flat `key = value` dump (round-trips through `load`).
+    pub fn dump(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("nodes", self.nodes.to_string());
+        m.insert("nic_gbps", self.nic_gbps.to_string());
+        m.insert(
+            "hop_latency_us",
+            (self.hop_latency_ps as f64 / PS_PER_US as f64).to_string(),
+        );
+        m.insert(
+            "dispatcher_queue_depth",
+            self.dispatcher_queue_depth.to_string(),
+        );
+        m.insert("cpu_ghz", self.cpu_ghz.to_string());
+        m.insert("cgra_mhz", self.cgra_mhz.to_string());
+        m.insert("cgra_rows", self.cgra_rows.to_string());
+        m.insert("cgra_cols", self.cgra_cols.to_string());
+        m.insert("cgra_groups", self.cgra_groups.to_string());
+        m.insert("ctrl_mem_bytes", self.ctrl_mem_bytes.to_string());
+        m.insert("spm_bytes", self.spm_bytes.to_string());
+        m.insert("spawn_queues", self.spawn_queues.to_string());
+        m.insert("spawn_queue_depth", self.spawn_queue_depth.to_string());
+        m.insert("reconfig_cycles", self.reconfig_cycles.to_string());
+        m.insert("group_alloc", self.group_alloc.name().to_string());
+        m.insert("coalescing", self.coalescing.to_string());
+        m.insert("seed", self.seed.to_string());
+        m.iter()
+            .map(|(k, v)| format!("{k} = {v}\n"))
+            .collect()
+    }
+}
+
+fn parse_seed(val: &str) -> Result<u64, std::num::ParseIntError> {
+    if let Some(hex) = val.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16)
+    } else {
+        val.parse()
+    }
+}
+
+#[derive(Debug)]
+pub enum ConfigError {
+    UnknownKey(String),
+    BadValue(String, String),
+    Invalid(String),
+    Io(String, std::io::Error),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::UnknownKey(k) => write!(f, "unknown config key '{k}'"),
+            ConfigError::BadValue(k, v) => {
+                write!(f, "bad value '{v}' for config key '{k}'")
+            }
+            ConfigError::Invalid(m) => write!(f, "invalid config: {m}"),
+            ConfigError::Io(p, e) => write!(f, "cannot read {p}: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table2() {
+        let c = ArenaConfig::default();
+        assert_eq!(c.nic_gbps, 80.0);
+        assert_eq!(c.hop_latency_ps, 1_000_000); // 1 us
+        assert_eq!(c.dispatcher_queue_depth, 8);
+        assert_eq!(c.cpu_ghz, 2.6);
+        assert_eq!(c.cgra_mhz, 800.0);
+        assert_eq!((c.cgra_rows, c.cgra_cols, c.cgra_groups), (8, 8, 4));
+        assert_eq!(c.ctrl_mem_bytes, 480);
+        assert_eq!(c.spm_bytes, 32 * 1024);
+        assert_eq!((c.spm_banks, c.spm_ports), (2, 4));
+        assert_eq!((c.spawn_queues, c.spawn_queue_depth), (4, 4));
+        assert_eq!(c.reconfig_cycles, 8);
+    }
+
+    #[test]
+    fn clock_conversions() {
+        let c = ArenaConfig::default();
+        assert_eq!(c.cgra_cycle_ps(), 1250); // 800 MHz
+        assert_eq!(c.cpu_cycle_ps(), 385); // 2.6 GHz rounded
+        assert_eq!(c.tiles_per_group(), 16); // 2x8
+    }
+
+    #[test]
+    fn wire_time_80gbps() {
+        let c = ArenaConfig::default();
+        // 80 Gb/s = 10 B/ns -> 21-byte token ~ 2.1 ns = 2100 ps
+        assert_eq!(c.wire_ps(21), 2100);
+        assert_eq!(c.wire_ps(0), 0);
+    }
+
+    #[test]
+    fn set_and_validate() {
+        let mut c = ArenaConfig::default();
+        c.set("nodes", "16").unwrap();
+        assert_eq!(c.nodes, 16);
+        c.set("hop_latency_us", "0.5").unwrap();
+        assert_eq!(c.hop_latency_ps, 500_000);
+        assert!(c.set("nodes", "0").is_err());
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("seed", "0xDEAD").is_ok());
+        assert_eq!(c.seed, 0xDEAD);
+    }
+
+    #[test]
+    fn dump_load_roundtrip() {
+        let mut c = ArenaConfig::default();
+        c.set("nodes", "8").unwrap();
+        c.set("cgra_mhz", "500").unwrap();
+        let dir = std::env::temp_dir().join("arena_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.txt");
+        std::fs::write(&path, c.dump()).unwrap();
+        let loaded = ArenaConfig::load(&path).unwrap();
+        assert_eq!(loaded, c);
+    }
+}

@@ -1,0 +1,362 @@
+//! Task dispatcher: Filter Logic + Recv/Wait/Send queues (paper §4.2).
+//!
+//! The filter implements the four §3.2 cases against the node's local
+//! data range: (I) irrelevant -> convey, (II) subset -> offload locally,
+//! (III) superset -> split in three, (IV) partial overlap -> split in
+//! two. Splitting preserves TASKid / PARAM / REMOTE / FROMnode — only
+//! the data range is cut, exactly what the RTL filter does.
+
+use crate::token::{Range, TaskToken, TokenQueue};
+
+/// Cycles the filter pipeline spends per incoming token (decision).
+pub const FILTER_CYCLES: u64 = 1;
+/// Extra cycles per additional token a split produces.
+pub const SPLIT_CYCLES: u64 = 1;
+
+/// Which of the paper's four cases a token hit (stats / tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FilterCase {
+    /// (I) range disjoint from local -> forward unchanged.
+    Convey,
+    /// (II) range within local -> execute here.
+    Local,
+    /// (III) range strictly covers local -> 3-way split.
+    SplitSuperset,
+    /// (IV) partial overlap -> 2-way split.
+    SplitPartial,
+}
+
+/// Fixed-capacity token list — the filter emits at most 1 local piece
+/// and at most 2 forwarded pieces, so the whole outcome lives on the
+/// stack (this is the per-token hot path; see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug)]
+pub struct Pieces<const N: usize> {
+    buf: [Option<TaskToken>; N],
+    len: usize,
+}
+
+impl<const N: usize> Default for Pieces<N> {
+    fn default() -> Self {
+        Pieces { buf: [None; N], len: 0 }
+    }
+}
+
+impl<const N: usize> IntoIterator for Pieces<N> {
+    type Item = TaskToken;
+    type IntoIter = std::iter::Flatten<std::array::IntoIter<Option<TaskToken>, N>>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.buf.into_iter().flatten()
+    }
+}
+
+impl<const N: usize> Pieces<N> {
+    #[inline]
+    fn push(&mut self, t: TaskToken) {
+        self.buf[self.len] = Some(t);
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TaskToken> {
+        self.buf[..self.len].iter().map(|t| t.as_ref().unwrap())
+    }
+
+    pub fn as_vec(&self) -> Vec<TaskToken> {
+        self.iter().copied().collect()
+    }
+}
+
+impl<const N: usize> std::ops::Index<usize> for Pieces<N> {
+    type Output = TaskToken;
+
+    fn index(&self, i: usize) -> &TaskToken {
+        assert!(i < self.len, "index {i} out of {}", self.len);
+        self.buf[i].as_ref().unwrap()
+    }
+}
+
+impl<const N: usize> PartialEq<Vec<TaskToken>> for Pieces<N> {
+    fn eq(&self, other: &Vec<TaskToken>) -> bool {
+        self.len == other.len()
+            && self.iter().zip(other).all(|(a, b)| a == b)
+    }
+}
+
+/// Outcome of filtering one token (allocation-free).
+#[derive(Clone, Copy, Debug)]
+pub struct FilterOutcome {
+    pub case: FilterCase,
+    /// Portions buffered for local execution (0 or 1).
+    pub wait: Pieces<1>,
+    /// Portions forwarded to the next node (0..2).
+    pub send: Pieces<2>,
+    /// Dispatcher cycles consumed.
+    pub cycles: u64,
+}
+
+/// Classify + split `token` against the node's `[local.start, local.end)`.
+#[inline]
+pub fn filter(token: &TaskToken, local: Range) -> FilterOutcome {
+    debug_assert!(!token.is_terminate(), "TERMINATE handled by the runtime");
+    let t = token.task;
+    let sub = |r: Range| {
+        let mut c = *token;
+        c.task = r;
+        c
+    };
+    let mut wait: Pieces<1> = Pieces::default();
+    let mut send: Pieces<2> = Pieces::default();
+
+    if !t.overlaps(&local) {
+        // Case I: irrelevant to this node.
+        send.push(*token);
+        return FilterOutcome {
+            case: FilterCase::Convey,
+            wait,
+            send,
+            cycles: FILTER_CYCLES,
+        };
+    }
+    if local.contains(&t) {
+        // Case II: all data local.
+        wait.push(*token);
+        return FilterOutcome {
+            case: FilterCase::Local,
+            wait,
+            send,
+            cycles: FILTER_CYCLES,
+        };
+    }
+    if t.contains(&local) {
+        // Case III: task too coarse — keep the local slice, forward the
+        // head and tail remainders.
+        if t.start < local.start {
+            send.push(sub(Range::new(t.start, local.start)));
+        }
+        if local.end < t.end {
+            send.push(sub(Range::new(local.end, t.end)));
+        }
+        wait.push(sub(local));
+        return FilterOutcome {
+            case: FilterCase::SplitSuperset,
+            wait,
+            send,
+            cycles: FILTER_CYCLES + SPLIT_CYCLES * send.len() as u64,
+        };
+    }
+    // Case IV: partial overlap — keep the aligned part, forward the rest.
+    let keep = t.intersect(&local);
+    let rest = if t.start < local.start {
+        Range::new(t.start, local.start)
+    } else {
+        Range::new(local.end, t.end)
+    };
+    wait.push(sub(keep));
+    send.push(sub(rest));
+    FilterOutcome {
+        case: FilterCase::SplitPartial,
+        wait,
+        send,
+        cycles: FILTER_CYCLES + SPLIT_CYCLES,
+    }
+}
+
+/// Per-node dispatcher state: the three Table-2 queues + counters.
+#[derive(Debug)]
+pub struct Dispatcher {
+    pub recv: TokenQueue,
+    pub wait: TokenQueue,
+    pub send: TokenQueue,
+    pub stats: DispatcherStats,
+}
+
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DispatcherStats {
+    pub filtered: u64,
+    pub conveyed: u64,
+    pub offloaded: u64,
+    pub split_superset: u64,
+    pub split_partial: u64,
+    pub filter_cycles: u64,
+    /// Tokens that bounced off a full queue (backpressure events).
+    pub stalls: u64,
+}
+
+impl Dispatcher {
+    pub fn new(depth: usize) -> Self {
+        Dispatcher {
+            recv: TokenQueue::new(depth),
+            wait: TokenQueue::new(depth),
+            send: TokenQueue::new(depth),
+            stats: DispatcherStats::default(),
+        }
+    }
+
+    /// Space left before the wait/send queues would reject a 3-way split.
+    pub fn can_accept_split(&self) -> bool {
+        !self.wait.is_full() && self.send.capacity() - self.send.len() >= 2
+    }
+
+    /// Run the filter on one token and distribute the pieces.
+    /// Returns the outcome, or the token itself if a queue is full
+    /// (the caller retries later — hardware backpressure).
+    pub fn process(
+        &mut self,
+        token: TaskToken,
+        local: Range,
+    ) -> Result<FilterCase, TaskToken> {
+        let out = filter(&token, local);
+        // all-or-nothing: check capacity before mutating
+        let wait_free = self.wait.capacity() - self.wait.len();
+        let send_free = self.send.capacity() - self.send.len();
+        if out.wait.len() > wait_free || out.send.len() > send_free {
+            self.stats.stalls += 1;
+            return Err(token);
+        }
+        for t in out.wait {
+            self.wait.push(t).expect("checked capacity");
+        }
+        for t in out.send {
+            self.send.push(t).expect("checked capacity");
+        }
+        self.stats.filtered += 1;
+        self.stats.filter_cycles += out.cycles;
+        match out.case {
+            FilterCase::Convey => self.stats.conveyed += 1,
+            FilterCase::Local => self.stats.offloaded += 1,
+            FilterCase::SplitSuperset => self.stats.split_superset += 1,
+            FilterCase::SplitPartial => self.stats.split_partial += 1,
+        }
+        Ok(out.case)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(s: u32, e: u32) -> TaskToken {
+        TaskToken::new(3, Range::new(s, e), 7.5).from_node(2)
+    }
+
+    const LOCAL: Range = Range { start: 100, end: 200 };
+
+    #[test]
+    fn case_i_convey_untouched() {
+        for t in [tok(0, 50), tok(200, 300), tok(0, 100)] {
+            let out = filter(&t, LOCAL);
+            assert_eq!(out.case, FilterCase::Convey);
+            assert!(out.wait.is_empty());
+            assert_eq!(out.send, vec![t]);
+            assert_eq!(out.cycles, FILTER_CYCLES);
+        }
+    }
+
+    #[test]
+    fn case_ii_local() {
+        for t in [tok(100, 200), tok(120, 180), tok(100, 150), tok(150, 200)] {
+            let out = filter(&t, LOCAL);
+            assert_eq!(out.case, FilterCase::Local);
+            assert_eq!(out.wait, vec![t]);
+            assert!(out.send.is_empty());
+        }
+    }
+
+    #[test]
+    fn case_iii_three_way_split() {
+        let out = filter(&tok(50, 300), LOCAL);
+        assert_eq!(out.case, FilterCase::SplitSuperset);
+        assert_eq!(out.wait[0].task, Range::new(100, 200));
+        assert_eq!(out.send.len(), 2);
+        assert_eq!(out.send[0].task, Range::new(50, 100));
+        assert_eq!(out.send[1].task, Range::new(200, 300));
+        assert_eq!(out.cycles, FILTER_CYCLES + 2 * SPLIT_CYCLES);
+        // fields preserved on every piece
+        for p in out.wait.iter().chain(out.send.iter()) {
+            assert_eq!(p.task_id, 3);
+            assert_eq!(p.param, 7.5);
+            assert_eq!(p.from_node, 2);
+        }
+    }
+
+    #[test]
+    fn case_iii_boundary_aligned_one_remainder() {
+        let out = filter(&tok(100, 300), LOCAL);
+        assert_eq!(out.case, FilterCase::SplitSuperset);
+        assert_eq!(out.wait[0].task, LOCAL);
+        assert_eq!(out.send.len(), 1);
+        assert_eq!(out.send[0].task, Range::new(200, 300));
+    }
+
+    #[test]
+    fn case_iv_partial_overlap() {
+        let lo = filter(&tok(50, 150), LOCAL);
+        assert_eq!(lo.case, FilterCase::SplitPartial);
+        assert_eq!(lo.wait[0].task, Range::new(100, 150));
+        assert_eq!(lo.send[0].task, Range::new(50, 100));
+
+        let hi = filter(&tok(150, 250), LOCAL);
+        assert_eq!(hi.case, FilterCase::SplitPartial);
+        assert_eq!(hi.wait[0].task, Range::new(150, 200));
+        assert_eq!(hi.send[0].task, Range::new(200, 250));
+    }
+
+    #[test]
+    fn split_pieces_tile_the_original() {
+        // property: wait + send ranges partition the token's range
+        let cases =
+            [(0u32, 300u32), (50, 150), (150, 250), (100, 200), (0, 100)];
+        for (s, e) in cases {
+            let out = filter(&tok(s, e), LOCAL);
+            let mut pieces: Vec<Range> = out
+                .wait.iter().chain(out.send.iter()).map(|t| t.task).collect();
+            pieces.sort_by_key(|r| r.start);
+            assert_eq!(pieces.first().unwrap().start, s);
+            assert_eq!(pieces.last().unwrap().end, e);
+            for w in pieces.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "gap/overlap in split");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatcher_backpressure_is_all_or_nothing() {
+        let mut d = Dispatcher::new(2);
+        // fill send queue so a case-III split (needs 2 send slots) bounces
+        d.send.push(tok(0, 1)).unwrap();
+        let t = tok(50, 300);
+        let r = d.process(t, LOCAL);
+        assert_eq!(r, Err(t));
+        assert_eq!(d.stats.stalls, 1);
+        assert_eq!(d.wait.len(), 0, "no partial effects on failure");
+        // drain and retry succeeds
+        d.send.pop().unwrap();
+        assert_eq!(d.process(t, LOCAL), Ok(FilterCase::SplitSuperset));
+        assert_eq!(d.wait.len(), 1);
+        assert_eq!(d.send.len(), 2);
+    }
+
+    #[test]
+    fn dispatcher_counts_cases() {
+        let mut d = Dispatcher::new(8);
+        d.process(tok(0, 50), LOCAL).unwrap();
+        d.process(tok(110, 120), LOCAL).unwrap();
+        d.process(tok(50, 150), LOCAL).unwrap();
+        d.process(tok(50, 250), LOCAL).unwrap();
+        assert_eq!(d.stats.conveyed, 1);
+        assert_eq!(d.stats.offloaded, 1);
+        assert_eq!(d.stats.split_partial, 1);
+        assert_eq!(d.stats.split_superset, 1);
+        assert_eq!(d.stats.filtered, 4);
+    }
+}

@@ -1,0 +1,40 @@
+//! # ARENA — Asynchronous Reconfigurable Accelerator Ring
+//!
+//! Reproduction of *ARENA: Asynchronous Reconfigurable Accelerator Ring
+//! to Enable Data-Centric Parallel Computing* (Tan et al., PNNL, 2020)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: task tokens
+//!   circulating on a ring of reconfigurable nodes, per-node dispatcher
+//!   (filter + queues), CGRA controller with runtime group allocation
+//!   and token coalescing, the Fig. 5 runtime loop, plus the simulated
+//!   substrates (ring network, discrete-event engine, BSP baselines,
+//!   area/power model) the paper's evaluation depends on.
+//! * **L2/L1 (build-time python)** — JAX task graphs calling Pallas
+//!   kernels, AOT-lowered to HLO text in `artifacts/`; executed from
+//!   Rust through [`runtime::Engine`] (PJRT). Python never runs on the
+//!   request path.
+//!
+//! Start with [`config::ArenaConfig`] (Table-2 defaults) and the
+//! `examples/` directory; `examples/paper_eval.rs` regenerates every
+//! figure of the paper's evaluation.
+
+pub mod api;
+pub mod apps;
+pub mod baseline;
+pub mod benchkit;
+pub mod cgra;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod eval;
+pub mod dispatcher;
+pub mod mapper;
+pub mod node;
+pub mod power;
+pub mod proptest_lite;
+pub mod ring;
+pub mod runtime;
+pub mod sim;
+pub mod token;
+pub mod util;

@@ -1,0 +1,287 @@
+//! `arena` — the cluster launcher (leader entrypoint).
+//!
+//! Subcommands:
+//!   run    simulate one app under one execution model
+//!   fig    regenerate a paper figure (9, 10, 11, 12, 13)
+//!   apps   list applications and execution models
+//!   config print the effective configuration (Table-2 defaults +
+//!          overrides)
+//!
+//! Examples:
+//!   arena run --app sssp --model arena-cgra --nodes 16 --scale paper
+//!   arena run --app gemm --model bsp-cpu --nodes 4
+//!   arena run --app dna --model arena-cgra --engine   # PJRT numerics
+//!   arena fig 10
+//!   arena config --set cgra_mhz=400 --set nodes=8
+
+use arena::apps::{Scale, ALL};
+use arena::baseline::{run_bsp, serial_ps};
+use arena::cli;
+use arena::cluster::{Model, RunReport};
+use arena::config::ArenaConfig;
+use arena::eval;
+use arena::runtime::Engine;
+
+const USAGE: &str = "\
+usage: arena <command> [options]
+
+commands:
+  run     --app <name> --model <model> [--nodes N] [--scale small|paper]
+          [--seed S] [--engine] [--config FILE] [--set k=v ...]
+  fig     <9|10|11|12|13|all> [--scale small|paper] [--seed S]
+  apps    list applications and models
+  config  [--config FILE] [--set k=v ...]   print effective config
+
+models: arena-cgra | arena-sw | bsp-cpu | bsp-cgra | serial
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse(
+        &argv,
+        &["app", "model", "nodes", "scale", "seed", "config", "fig"],
+    ) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("fig") => cmd_fig(&args),
+        Some("apps") => {
+            println!("applications: {}", ALL.join(" "));
+            println!("models: arena-cgra arena-sw bsp-cpu bsp-cgra serial");
+            0
+        }
+        Some("config") => cmd_config(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn build_config(args: &cli::Args) -> Result<ArenaConfig, String> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => ArenaConfig::load(std::path::Path::new(path))
+            .map_err(|e| e.to_string())?,
+        None => ArenaConfig::default(),
+    };
+    if let Some(n) = args
+        .parse_opt::<usize>("nodes")
+        .map_err(|e| e.to_string())?
+    {
+        cfg.nodes = n;
+    }
+    if let Some(s) = args.opt("seed") {
+        cfg.set("seed", s).map_err(|e| e.to_string())?;
+    }
+    for (k, v) in &args.sets {
+        cfg.set(k, v).map_err(|e| e.to_string())?;
+    }
+    Ok(cfg)
+}
+
+fn scale_of(args: &cli::Args) -> Result<Scale, String> {
+    match args.opt_or("scale", "paper") {
+        "small" => Ok(Scale::Small),
+        "paper" => Ok(Scale::Paper),
+        other => Err(format!("unknown scale '{other}'")),
+    }
+}
+
+fn cmd_config(args: &cli::Args) -> i32 {
+    match build_config(args) {
+        Ok(cfg) => {
+            print!("{}", cfg.dump());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn print_report(r: &RunReport, serial: f64) {
+    println!("app                {}", r.app);
+    println!("model              {}", r.model);
+    println!("nodes              {}", r.nodes);
+    println!("makespan           {:.3} ms", r.makespan_ms());
+    println!("speedup vs serial  {:.2}x", serial / r.makespan_ps as f64);
+    println!("tasks executed     {}", r.tasks_executed);
+    println!(
+        "work units/node    {:?}  (imbalance cv {:.3})",
+        r.node_units,
+        r.imbalance()
+    );
+    println!(
+        "token traffic      {} msgs, {} B on the wire",
+        r.ring.token_msgs,
+        r.task_movement_bytes()
+    );
+    println!(
+        "data traffic       {} fetches, {} B payload, {} B-hops",
+        r.remote_fetches,
+        r.remote_bytes,
+        r.data_movement_bytes()
+    );
+    println!(
+        "dispatcher         {} filtered ({} convey / {} local / {} split)",
+        r.dispatcher.filtered,
+        r.dispatcher.conveyed,
+        r.dispatcher.offloaded,
+        r.dispatcher.split_superset + r.dispatcher.split_partial,
+    );
+    println!(
+        "coalescer          {} spawned, {} merged, {} spilled",
+        r.coalesce.spawned, r.coalesce.coalesced, r.coalesce.spilled
+    );
+    if r.cgra.launches > 0 {
+        println!(
+            "cgra               {} launches {:?} (1/2/4 groups), {} reconfigs",
+            r.cgra.launches, r.cgra.alloc_histogram, r.cgra.reconfigs
+        );
+    }
+    println!("terminate laps     {}", r.terminate_laps);
+    println!("sim events         {}", r.events);
+}
+
+fn cmd_run(args: &cli::Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let cfg = build_config(args)?;
+        let scale = scale_of(args)?;
+        let app = args
+            .opt("app")
+            .ok_or("missing --app (see `arena apps`)")?;
+        if !ALL.contains(&app) {
+            return Err(format!("unknown app '{app}'"));
+        }
+        let model = args.opt_or("model", "arena-cgra");
+        let seed = cfg.seed;
+        let serial = serial_ps(app, scale, seed, &cfg) as f64;
+        match model {
+            "serial" => {
+                println!("app                {app}");
+                println!("model              serial (1 CPU node)");
+                println!("makespan           {:.3} ms", serial / 1e9);
+            }
+            "bsp-cpu" | "bsp-cgra" => {
+                let r = run_bsp(app, scale, seed, &cfg, model == "bsp-cgra");
+                println!("app                {app}");
+                println!("model              {model}");
+                println!("nodes              {}", r.nodes);
+                println!("supersteps         {}", r.supersteps);
+                println!("makespan           {:.3} ms", r.makespan_ms());
+                println!(
+                    "speedup vs serial  {:.2}x",
+                    serial / r.makespan_ps as f64
+                );
+                println!(
+                    "phase split        compute {:.3} ms / comm {:.3} ms / barrier {:.3} ms",
+                    r.compute_ps as f64 / 1e9,
+                    r.comm_ps as f64 / 1e9,
+                    r.barrier_ps as f64 / 1e9
+                );
+                println!("data movement      {} B-hops", r.data_movement_bytes);
+            }
+            "arena-sw" | "arena-cgra" => {
+                let m = if model == "arena-sw" {
+                    Model::SoftwareCpu
+                } else {
+                    Model::Cgra
+                };
+                let mut engine = if args.flag("engine") {
+                    Some(Engine::new().map_err(|e| e.to_string())?)
+                } else {
+                    None
+                };
+                let r = eval::run_arena(
+                    app,
+                    scale,
+                    seed,
+                    cfg.nodes,
+                    m,
+                    engine.as_mut(),
+                );
+                print_report(&r, serial);
+                if let Some(e) = &engine {
+                    let s = e.stats();
+                    println!(
+                        "pjrt               {} compiles, {} executions",
+                        s.compiles, s.executions
+                    );
+                }
+            }
+            other => return Err(format!("unknown model '{other}'")),
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn cmd_fig(args: &cli::Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let scale = scale_of(args)?;
+        let seed = args
+            .parse_opt::<u64>("seed")
+            .map_err(|e| e.to_string())?
+            .unwrap_or(0xA2EA);
+        let which = args
+            .positional
+            .first()
+            .map(String::as_str)
+            .or(args.opt("fig"))
+            .unwrap_or("all");
+        let all = which == "all";
+        if all || which == "9" {
+            let (cc, ar) = eval::fig9(scale, seed);
+            cc.print();
+            ar.print();
+        }
+        if all || which == "10" {
+            eval::fig10(scale, seed).print();
+        }
+        if all || which == "11" {
+            let (cc, ar) = eval::fig11(scale, seed);
+            cc.print();
+            ar.print();
+        }
+        if all || which == "12" {
+            eval::fig12().print();
+        }
+        if all || which == "13" {
+            let (at, pt) = eval::fig13(scale, seed);
+            at.print();
+            pt.print();
+        }
+        if all {
+            let h = eval::headline(scale, seed);
+            println!("## §5.2 headline (paper: 1.61x / 2.17x / 4.37x / 53.9%)");
+            println!("sw ratio @16       {:.2}x", h.sw_ratio_16);
+            println!("cgra ratio @16     {:.2}x", h.cgra_ratio_16);
+            println!("overall @16        {:.2}x", h.overall_ratio_16);
+            println!(
+                "movement reduction {:.1}%",
+                100.0 * h.movement_reduction
+            );
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            2
+        }
+    }
+}

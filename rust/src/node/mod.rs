@@ -1,0 +1,256 @@
+//! Per-node ARENA runtime state (paper Fig. 4/5).
+//!
+//! A [`Node`] carries everything the Fig. 5 loop touches: the dispatcher
+//! (Recv/Wait/Send queues + filter), the compute substrate (an out-of-
+//! order CPU for the software model or a [`CgraNode`] for the full
+//! system), the coalescing unit for spawned tokens, tokens parked on
+//! in-flight remote fetches, and the two-flag TERMINATE protocol state.
+//! The event orchestration lives in [`crate::cluster`]; this module is
+//! the node-local state machine it drives.
+
+use std::collections::VecDeque;
+
+use crate::cgra::{CgraNode, CoalesceUnit};
+use crate::config::{ArenaConfig, Ps};
+use crate::dispatcher::Dispatcher;
+use crate::token::TaskToken;
+
+/// Software-runtime overhead per handled token for the MPI/CPU variant
+/// of ARENA (Fig. 9): active-message dispatch, queue management, user
+/// callback — cycles on the Table-2 2.6 GHz core. The paper motivates
+/// hardware dispatchers precisely because software tasking "incurs
+/// considerable overhead" (§2.3); the CGRA dispatcher does the same
+/// work in 1-2 fabric cycles.
+pub const SW_TOKEN_OVERHEAD_CYCLES: u64 = 200;
+
+/// Compute substrate behind the dispatcher.
+#[derive(Clone, Debug)]
+pub enum Compute {
+    /// One CPU core (software ARENA, Fig. 9): single task at a time.
+    Cpu { busy_until: Ps },
+    /// The reconfigurable fabric (full system, Fig. 11): up to 4
+    /// concurrent tasks on the 4 tile groups.
+    Cgra(CgraNode),
+}
+
+impl Compute {
+    pub fn ready(&self, now: Ps) -> bool {
+        match self {
+            Compute::Cpu { busy_until } => *busy_until <= now,
+            Compute::Cgra(c) => c.ready(now),
+        }
+    }
+
+    pub fn idle(&self, now: Ps) -> bool {
+        match self {
+            Compute::Cpu { busy_until } => *busy_until <= now,
+            Compute::Cgra(c) => c.idle(now),
+        }
+    }
+
+    /// Earliest time any execution slot frees (retry scheduling).
+    pub fn next_free_at(&self) -> Ps {
+        match self {
+            Compute::Cpu { busy_until } => *busy_until,
+            Compute::Cgra(c) => c.next_free_at(),
+        }
+    }
+}
+
+/// Node-level counters (aggregated into the run report).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeStats {
+    /// Tasks executed locally.
+    pub tasks: u64,
+    /// Kernel work units executed locally (load-balance metric).
+    pub units: u64,
+    /// Bytes moved through the local scratchpad (power activity).
+    pub local_bytes: u64,
+    /// Remote-data fetches issued (`ARENA_data_acquire`).
+    pub fetches: u64,
+    /// Bytes fetched from remote nodes.
+    pub fetched_bytes: u64,
+    /// TERMINATE tokens handled.
+    pub terminate_seen: u64,
+    /// Tokens that arrived while the recv queue was full (ring
+    /// backpressure events).
+    pub recv_stalls: u64,
+}
+
+/// Everything one ring node owns.
+#[derive(Debug)]
+pub struct Node {
+    pub id: usize,
+    pub disp: Dispatcher,
+    pub compute: Compute,
+    /// Tokens that arrived while the 8-entry recv queue was full: they
+    /// occupy upstream link buffers (credit backpressure) and drain
+    /// into recv as it frees. Unbounded here; its high-water mark is
+    /// the backpressure metric.
+    pub inbound: VecDeque<TaskToken>,
+    /// Spawn buffer between the executing tasks and the dispatcher.
+    pub coalescer: CoalesceUnit,
+    /// Tokens whose remote data is in flight (acked into execution by
+    /// the DataReady event).
+    pub fetching: Vec<TaskToken>,
+    /// Tasks currently executing (scheduled Complete events).
+    pub running: usize,
+    /// Fig. 5 `terminate` flag: one clean TERMINATE pass seen.
+    pub terminate_flag: bool,
+    /// A TERMINATE token is parked here while the node is busy (the
+    /// pseudocode would re-filter it; parking is the hardware-faithful
+    /// reading — the dispatcher holds it until local quiescence).
+    pub parked_terminate: bool,
+    /// Node has left the runtime loop (second clean TERMINATE).
+    pub done: bool,
+    pub stats: NodeStats,
+}
+
+impl Node {
+    pub fn new(id: usize, cfg: &ArenaConfig, cgra: bool) -> Self {
+        Node {
+            id,
+            disp: Dispatcher::new(cfg.dispatcher_queue_depth),
+            compute: if cgra {
+                Compute::Cgra(CgraNode::new(cfg))
+            } else {
+                Compute::Cpu { busy_until: 0 }
+            },
+            inbound: VecDeque::new(),
+            coalescer: {
+                let c =
+                    CoalesceUnit::new(cfg.spawn_queues, cfg.spawn_queue_depth);
+                if cfg.coalescing { c } else { c.without_merging() }
+            },
+            fetching: Vec::new(),
+            running: 0,
+            terminate_flag: false,
+            parked_terminate: false,
+            done: false,
+            stats: NodeStats::default(),
+        }
+    }
+
+    pub fn cgra(&self) -> Option<&CgraNode> {
+        match &self.compute {
+            Compute::Cgra(c) => Some(c),
+            Compute::Cpu { .. } => None,
+        }
+    }
+
+    pub fn cgra_mut(&mut self) -> Option<&mut CgraNode> {
+        match &mut self.compute {
+            Compute::Cgra(c) => Some(c),
+            Compute::Cpu { .. } => None,
+        }
+    }
+
+    /// Local quiescence for the TERMINATE protocol: nothing queued,
+    /// nothing running, nothing being fetched, nothing waiting to be
+    /// re-injected. (The Send queue may be non-empty — TERMINATE joins
+    /// it FIFO, behind any real tokens, preserving the ring ordering
+    /// the protocol's correctness rests on.)
+    pub fn quiescent(&self, now: Ps) -> bool {
+        self.inbound.is_empty()
+            && self.disp.recv.is_empty()
+            && self.disp.wait.is_empty()
+            && self.coalescer.is_empty()
+            && self.fetching.is_empty()
+            && self.running == 0
+            && self.compute.idle(now)
+    }
+
+    /// Handle a TERMINATE while quiescent. Returns `true` when the node
+    /// leaves the loop (second consecutive clean pass); the caller
+    /// forwards the token either way (Fig. 5 line 16).
+    pub fn terminate_step(&mut self) -> bool {
+        self.stats.terminate_seen += 1;
+        self.parked_terminate = false;
+        if self.terminate_flag {
+            self.done = true;
+        } else {
+            self.terminate_flag = true;
+        }
+        self.done
+    }
+
+    /// Any real work resets the clean-pass flag (Fig. 5 line 20).
+    pub fn touch(&mut self) {
+        self.terminate_flag = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::token::Range;
+
+    fn node(cgra: bool) -> Node {
+        Node::new(0, &ArenaConfig::default(), cgra)
+    }
+
+    #[test]
+    fn fresh_node_is_quiescent() {
+        assert!(node(false).quiescent(0));
+        assert!(node(true).quiescent(0));
+    }
+
+    #[test]
+    fn queued_or_running_work_blocks_quiescence() {
+        let mut n = node(false);
+        n.disp
+            .wait
+            .push(TaskToken::new(1, Range::new(0, 1), 0.0))
+            .unwrap();
+        assert!(!n.quiescent(0));
+        n.disp.wait.pop();
+        n.running = 1;
+        assert!(!n.quiescent(0));
+        n.running = 0;
+        n.fetching.push(TaskToken::new(1, Range::new(0, 1), 0.0));
+        assert!(!n.quiescent(0));
+        n.fetching.clear();
+        n.coalescer.push(TaskToken::new(1, Range::new(0, 1), 0.0));
+        assert!(!n.quiescent(0));
+        n.coalescer.drain();
+        assert!(n.quiescent(0));
+    }
+
+    #[test]
+    fn busy_cpu_blocks_quiescence_until_time_passes() {
+        let mut n = node(false);
+        if let Compute::Cpu { busy_until } = &mut n.compute {
+            *busy_until = 1000;
+        }
+        assert!(!n.quiescent(500));
+        assert!(n.quiescent(1000));
+    }
+
+    #[test]
+    fn terminate_needs_two_clean_passes() {
+        let mut n = node(false);
+        assert!(!n.terminate_step(), "first pass arms the flag");
+        assert!(!n.done);
+        assert!(n.terminate_step(), "second pass exits");
+        assert!(n.done);
+    }
+
+    #[test]
+    fn real_work_resets_the_pass_flag() {
+        let mut n = node(false);
+        n.terminate_step();
+        n.touch(); // a real token was processed between passes
+        assert!(!n.terminate_step(), "pass counter restarted");
+        assert!(n.terminate_step());
+    }
+
+    #[test]
+    fn send_queue_does_not_block_quiescence() {
+        let mut n = node(true);
+        n.disp
+            .send
+            .push(TaskToken::new(1, Range::new(0, 1), 0.0))
+            .unwrap();
+        assert!(n.quiescent(0));
+    }
+}

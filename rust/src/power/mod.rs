@@ -1,0 +1,249 @@
+//! Area / power / timing model of one ARENA node (paper §5.3, Fig. 13).
+//!
+//! The paper synthesizes PyMTL-generated Verilog with Synopsys DC +
+//! Cadence Innovus + PrimeTime PX on FreePDK45/Nangate, reporting a
+//! 2.19 mm × 1.24 mm die (2.93 mm²) at 800 MHz with 759.8 mW average
+//! power; the 32 KB scratchpad is priced with CACTI-6.5. None of that
+//! flow is available here, so this module is a component-level
+//! analytical model *calibrated to the paper's published totals*: the
+//! per-component constants below are chosen so the default Table-2
+//! configuration reproduces the paper's die exactly, and they scale
+//! with the configuration (tiles, memory sizes, queue depths) so
+//! ablations move the numbers the way real synthesis would (linearly
+//! in logic, ~linearly in SRAM bits with a port penalty).
+//!
+//! Power is activity-based: `P = leakage + Σ peak_c · activity_c`,
+//! with activities extracted from a simulation's [`RunReport`].
+
+use crate::cluster::RunReport;
+use crate::config::ArenaConfig;
+
+/// mm² per CGRA tile's logic: FU + crossbar switch + 3 register files
+/// (calibration: 64 tiles -> 1.48 mm², half the die, typical for
+/// word-width CGRAs at 45 nm).
+pub const TILE_LOGIC_MM2: f64 = 0.0232;
+/// mm² per KB of single-port control SRAM (45 nm compiled macro).
+pub const CTRL_SRAM_MM2_PER_KB: f64 = 0.0135;
+/// mm² per KB of scratchpad SRAM, before the port penalty.
+pub const SPM_MM2_PER_KB: f64 = 0.00974;
+/// Area multiplier per SPM port beyond the first (CACTI-style growth).
+pub const SPM_PORT_FACTOR: f64 = 0.30;
+/// CGRA controller: group sequencer + 4×4-entry spawn queues +
+/// coalescing comparators.
+pub const CONTROLLER_MM2: f64 = 0.234;
+/// Task dispatcher: filter logic + 3 × 8-entry × 21 B token queues + NIC
+/// interface glue.
+pub const DISPATCHER_MM2: f64 = 0.214;
+
+/// Leakage of the whole node at 45 nm (mW).
+pub const LEAKAGE_MW: f64 = 118.0;
+/// Peak dynamic power of one tile at 800 MHz, full FU activity (mW).
+pub const TILE_PEAK_MW: f64 = 11.86;
+/// Dynamic energy per scratchpad byte accessed (pJ/B, 45 nm SRAM).
+pub const SPM_PJ_PER_BYTE: f64 = 1.9;
+/// Dispatcher energy per filtered token (pJ) — a few comparators over
+/// 21 B plus a queue write.
+pub const FILTER_PJ_PER_TOKEN: f64 = 26.0;
+/// Controller energy per launch/coalesce operation (pJ).
+pub const CTRL_PJ_PER_OP: f64 = 48.0;
+
+/// Per-component area of one node, mm².
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AreaBreakdown {
+    pub tiles_logic: f64,
+    pub ctrl_mem: f64,
+    pub spm: f64,
+    pub controller: f64,
+    pub dispatcher: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.tiles_logic + self.ctrl_mem + self.spm + self.controller
+            + self.dispatcher
+    }
+
+    /// Die dimensions, scaled from the paper's 2.19 mm × 1.24 mm
+    /// rectangle. (The paper quotes both 2.93 mm² *and* 2.19×1.24 =
+    /// 2.716 mm² — the ~7% gap is placement whitespace; we keep the
+    /// rectangle as the reference footprint at the calibrated total.)
+    pub fn die_mm(&self) -> (f64, f64) {
+        let scale = (self.total() / 2.93).sqrt();
+        (2.19 * scale, 1.24 * scale)
+    }
+}
+
+/// Area of one node under `cfg` (Table-2 defaults -> the paper's die).
+pub fn area(cfg: &ArenaConfig) -> AreaBreakdown {
+    let tiles = (cfg.cgra_rows * cfg.cgra_cols) as f64;
+    let ctrl_kb = tiles * cfg.ctrl_mem_bytes as f64 / 1024.0;
+    let spm_kb = cfg.spm_bytes as f64 / 1024.0;
+    let port_mult =
+        1.0 + SPM_PORT_FACTOR * (cfg.spm_ports.saturating_sub(1)) as f64;
+    // queue depth scales the dispatcher's storage half linearly
+    let disp_scale =
+        0.5 + 0.5 * cfg.dispatcher_queue_depth as f64 / 8.0;
+    let ctrl_scale = 0.5
+        + 0.5 * (cfg.spawn_queues * cfg.spawn_queue_depth) as f64 / 16.0;
+    AreaBreakdown {
+        tiles_logic: tiles * TILE_LOGIC_MM2,
+        ctrl_mem: ctrl_kb * CTRL_SRAM_MM2_PER_KB,
+        spm: spm_kb * SPM_MM2_PER_KB * port_mult,
+        controller: CONTROLLER_MM2 * ctrl_scale,
+        dispatcher: DISPATCHER_MM2 * disp_scale,
+    }
+}
+
+/// Activity factors extracted from a run (per node, per cycle).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Activity {
+    /// Average FU occupancy of the tile array (0..1).
+    pub fu_util: f64,
+    /// Scratchpad bytes accessed per node per CGRA cycle.
+    pub spm_bytes_per_cycle: f64,
+    /// Tokens filtered per node per CGRA cycle.
+    pub tokens_per_cycle: f64,
+    /// Controller ops (launches + spawns + coalesces) per node/cycle.
+    pub ctrl_ops_per_cycle: f64,
+}
+
+impl Activity {
+    /// Extract activities from a CGRA-model run report.
+    pub fn from_report(r: &RunReport, cfg: &ArenaConfig) -> Activity {
+        let cycles = (r.makespan_ps / cfg.cgra_cycle_ps()).max(1) as f64;
+        let n = r.nodes as f64;
+        let groups = cfg.cgra_groups as f64;
+        Activity {
+            fu_util: (r.cgra.group_busy_cycles as f64 / (cycles * n * groups))
+                .min(1.0),
+            spm_bytes_per_cycle: r.local_bytes as f64 / (cycles * n),
+            tokens_per_cycle: r.dispatcher.filtered as f64 / (cycles * n),
+            ctrl_ops_per_cycle: (r.cgra.launches + r.coalesce.spawned) as f64
+                / (cycles * n),
+        }
+    }
+
+    /// The nominal cross-application average activity the paper's
+    /// 759.8 mW figure corresponds to (calibration anchor).
+    pub fn nominal() -> Activity {
+        Activity {
+            fu_util: 0.82,
+            spm_bytes_per_cycle: 10.0,
+            tokens_per_cycle: 0.05,
+            ctrl_ops_per_cycle: 0.08,
+        }
+    }
+}
+
+/// Per-component power of one node, mW.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerBreakdown {
+    pub leakage: f64,
+    pub tiles: f64,
+    pub spm: f64,
+    pub dispatcher: f64,
+    pub controller: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.leakage + self.tiles + self.spm + self.dispatcher
+            + self.controller
+    }
+}
+
+/// Power of one node under `cfg` at the given activity.
+/// pJ/cycle × cycles/s = pW; ×1e-9 -> mW.
+pub fn power(cfg: &ArenaConfig, act: &Activity) -> PowerBreakdown {
+    let tiles = (cfg.cgra_rows * cfg.cgra_cols) as f64;
+    let freq_scale = cfg.cgra_mhz / 800.0;
+    let mhz = cfg.cgra_mhz * 1e6;
+    let to_mw = |pj_per_cycle: f64| pj_per_cycle * mhz * 1e-9;
+    PowerBreakdown {
+        leakage: LEAKAGE_MW * (tiles / 64.0) * 0.8
+            + LEAKAGE_MW * 0.2, // fabric-proportional + fixed share
+        tiles: TILE_PEAK_MW * tiles * act.fu_util * freq_scale,
+        spm: to_mw(SPM_PJ_PER_BYTE * act.spm_bytes_per_cycle),
+        dispatcher: to_mw(FILTER_PJ_PER_TOKEN * act.tokens_per_cycle),
+        controller: to_mw(CTRL_PJ_PER_OP * act.ctrl_ops_per_cycle),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ArenaConfig {
+        ArenaConfig::default()
+    }
+
+    #[test]
+    fn area_matches_paper_die() {
+        let a = area(&cfg());
+        // paper: 2.93 mm² total, 2.19 mm x 1.24 mm @ 45 nm
+        assert!(
+            (a.total() - 2.93).abs() < 0.03,
+            "total {:.3} mm² != 2.93",
+            a.total()
+        );
+        let (w, h) = a.die_mm();
+        assert!((w - 2.19).abs() < 0.03, "die width {w:.3}");
+        assert!((h - 1.24).abs() < 0.03, "die height {h:.3}");
+    }
+
+    #[test]
+    fn power_matches_paper_average_at_nominal_activity() {
+        let p = power(&cfg(), &Activity::nominal());
+        assert!(
+            (p.total() - 759.8).abs() < 8.0,
+            "total {:.1} mW != 759.8",
+            p.total()
+        );
+    }
+
+    #[test]
+    fn area_scales_with_configuration() {
+        let base = area(&cfg()).total();
+        let mut half = cfg();
+        half.cgra_rows = 4; // 4x8 array
+        assert!(area(&half).total() < base * 0.75);
+        let mut big_spm = cfg();
+        big_spm.spm_bytes = 64 * 1024;
+        assert!(area(&big_spm).spm > area(&cfg()).spm * 1.9);
+        let mut more_ports = cfg();
+        more_ports.spm_ports = 8;
+        assert!(area(&more_ports).spm > area(&cfg()).spm);
+    }
+
+    #[test]
+    fn power_scales_with_activity_and_frequency() {
+        let idle = power(&cfg(), &Activity::default());
+        let busy = power(&cfg(), &Activity::nominal());
+        assert!(idle.total() < busy.total());
+        // idle = leakage only
+        assert!((idle.total() - idle.leakage).abs() < 1e-9);
+        let mut slow = cfg();
+        slow.cgra_mhz = 400.0;
+        let half = power(&slow, &Activity::nominal());
+        assert!(half.tiles < busy.tiles * 0.55);
+    }
+
+    #[test]
+    fn activity_from_simulation_report() {
+        use crate::apps::GemmApp;
+        use crate::cluster::{Cluster, Model};
+        let c = cfg().with_nodes(4);
+        let mut cl = Cluster::new(
+            c.clone(),
+            Model::Cgra,
+            vec![Box::new(GemmApp::new(64, 5))],
+        );
+        let r = cl.run(None);
+        let act = Activity::from_report(&r, &c);
+        assert!(act.fu_util > 0.0 && act.fu_util <= 1.0);
+        assert!(act.spm_bytes_per_cycle > 0.0);
+        let p = power(&c, &act);
+        assert!(p.total() > LEAKAGE_MW);
+        assert!(p.total() < 2000.0, "sane bound: {:.1} mW", p.total());
+    }
+}

@@ -1,0 +1,71 @@
+//! Seeded property-testing helper (no proptest in the offline
+//! registry). `forall` runs a property against many derived seeds and
+//! reports the first failing seed so a failure is reproducible with
+//! `case(seed, ...)`.
+
+use crate::util::Rng;
+
+/// Run `prop` for `cases` seeded inputs. On failure, panics with the
+/// case seed — rerun just that seed with [`case`] while debugging.
+pub fn forall<F>(name: &str, cases: u64, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn case<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("case (seed {seed:#x}) failed: {msg}");
+    }
+}
+
+/// `ensure!`-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_and_seeds_vary() {
+        let mut seen = std::collections::HashSet::new();
+        forall("collect", 32, 7, |rng| {
+            seen.insert(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.len(), 32, "each case gets a distinct stream");
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn forall_reports_failures() {
+        forall("fails", 8, 1, |rng| {
+            if rng.below(4) == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

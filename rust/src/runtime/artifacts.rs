@@ -1,0 +1,272 @@
+//! Artifact manifest reader — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! `manifest.json` records, for every AOT-lowered HLO artifact, its file
+//! name, input/output tensor specs and a content hash, plus the numeric
+//! constants baked into the kernels at lowering time (dt, eps, NW gap
+//! scores, …). The runtime validates every `execute` call against these
+//! specs so shape drift between the python and Rust layers is caught at
+//! the boundary, not inside PJRT.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact tensor (all the kernels use f32/i32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Option<DType> {
+        match s {
+            "float32" => Some(DType::F32),
+            "int32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::F32 => write!(f, "float32"),
+            DType::I32 => write!(f, "int32"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+impl fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{:?}", self.dtype, self.shape)
+    }
+}
+
+/// One AOT-compiled computation described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub constants: BTreeMap<String, f64>,
+    /// Directory the manifest (and the .hlo.txt files) live in.
+    pub dir: PathBuf,
+}
+
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(String, std::io::Error),
+    Parse(String),
+    Schema(String),
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Io(p, e) => write!(f, "cannot read {p}: {e}"),
+            ManifestError::Parse(m) => write!(f, "manifest parse error: {m}"),
+            ManifestError::Schema(m) => write!(f, "manifest schema error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn schema(msg: impl Into<String>) -> ManifestError {
+    ManifestError::Schema(msg.into())
+}
+
+fn tensor_spec(j: &Json, ctx: &str) -> Result<TensorSpec, ManifestError> {
+    let dtype_s = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| schema(format!("{ctx}: missing dtype")))?;
+    let dtype = DType::parse(dtype_s)
+        .ok_or_else(|| schema(format!("{ctx}: unsupported dtype {dtype_s}")))?;
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| schema(format!("{ctx}: missing shape")))?
+        .iter()
+        .map(|d| {
+            d.as_f64()
+                .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+                .map(|v| v as usize)
+                .ok_or_else(|| schema(format!("{ctx}: bad shape entry")))
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(TensorSpec { dtype, shape })
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| ManifestError::Io(path.display().to_string(), e))?;
+        let root = Json::parse(&text)
+            .map_err(|e| ManifestError::Parse(e.to_string()))?;
+
+        let mut m = Manifest { dir: dir.to_path_buf(), ..Default::default() };
+
+        if let Some(consts) = root.get("constants").and_then(Json::as_obj) {
+            for (k, v) in consts {
+                let f = v
+                    .as_f64()
+                    .ok_or_else(|| schema(format!("constant {k} not numeric")))?;
+                m.constants.insert(k.clone(), f);
+            }
+        }
+
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| schema("missing 'artifacts' object"))?;
+        for (name, a) in arts {
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| schema(format!("{name}: missing file")))?;
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>, _> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| schema(format!("{name}: missing {key}")))?
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| tensor_spec(t, &format!("{name}.{key}[{i}]")))
+                    .collect()
+            };
+            m.artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    sha256: a
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                },
+            );
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn constant(&self, name: &str) -> Option<f64> {
+        self.constants.get(name).copied()
+    }
+
+    /// Names of all artifacts, sorted.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(String::as_str)
+    }
+}
+
+/// Default artifacts directory: `$ARENA_ARTIFACTS` or `./artifacts`
+/// relative to the workspace root (searched upward from cwd).
+pub fn default_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("ARENA_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_repo_manifest() {
+        let m = Manifest::load(&default_dir()).expect("manifest loads");
+        assert!(m.artifacts.len() >= 8, "expected the full artifact set");
+        for name in ["axpy", "gemm64", "gemm128", "spmv", "bfs", "nw64",
+                     "gcn_l1", "gcn_l2", "nbody", "nbody_step"] {
+            let a = m.get(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(a.file.exists(), "{name}: {} missing", a.file.display());
+            assert!(!a.inputs.is_empty());
+            assert!(!a.outputs.is_empty());
+        }
+    }
+
+    #[test]
+    fn manifest_shapes_match_kernel_contract() {
+        let m = Manifest::load(&default_dir()).unwrap();
+        let gemm = m.get("gemm64").unwrap();
+        assert_eq!(gemm.inputs[0].shape, vec![64, 64]);
+        assert_eq!(gemm.outputs[0].shape, vec![64, 64]);
+        assert_eq!(gemm.inputs[0].dtype, DType::F32);
+        let spmv = m.get("spmv").unwrap();
+        assert_eq!(spmv.inputs[1].dtype, DType::I32, "CSR/ELL col indices");
+        // two-output artifact (position, velocity)
+        let step = m.get("nbody_step").unwrap();
+        assert_eq!(step.outputs.len(), 2);
+    }
+
+    #[test]
+    fn constants_present() {
+        let m = Manifest::load(&default_dir()).unwrap();
+        for k in ["nbody_dt", "nbody_eps", "nw_gap", "nw_match"] {
+            assert!(m.constant(k).is_some(), "missing constant {k}");
+        }
+    }
+
+    #[test]
+    fn schema_errors_are_reported() {
+        let dir = std::env::temp_dir().join("arena_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": {
+            "x": {"file": "x.hlo.txt", "inputs": [{"dtype": "float64",
+            "shape": [2]}], "outputs": []}}}"#)
+            .unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(matches!(err, ManifestError::Schema(_)), "{err}");
+    }
+
+    #[test]
+    fn numel() {
+        let t = TensorSpec { dtype: DType::F32, shape: vec![64, 4] };
+        assert_eq!(t.numel(), 256);
+        let s = TensorSpec { dtype: DType::I32, shape: vec![] };
+        assert_eq!(s.numel(), 1); // scalar
+    }
+}

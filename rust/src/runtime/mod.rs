@@ -1,0 +1,398 @@
+//! PJRT execution engine — the only place Rust touches XLA.
+//!
+//! `Engine` wraps the `xla` crate's CPU PJRT client: it loads the HLO
+//! *text* artifacts `python/compile/aot.py` produced, compiles each one
+//! once (executable cache keyed by artifact name), and executes them
+//! from the L3 hot path with typed host tensors. Python is never on this
+//! path — after `make artifacts` the binary is self-contained.
+//!
+//! Shape/dtype validation happens here against the manifest, so a drift
+//! between the lowered computation and the caller fails with a named
+//! error instead of a PJRT abort.
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+
+pub use artifacts::{default_dir, ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// A host-side tensor crossing the Rust <-> PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32(data, shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(..) => DType::F32,
+            Tensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Borrow as f32 data (panics if i32 — caller checked the manifest).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Tensor::F32(d, _) => d,
+            Tensor::I32(..) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            Tensor::I32(d, _) => d,
+            Tensor::F32(..) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Tensor::F32(d, _) => d,
+            Tensor::I32(..) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    fn to_literal(&self) -> std::result::Result<xla::Literal, xla::Error> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(d, _) => xla::Literal::vec1(d),
+            Tensor::I32(d, _) => xla::Literal::vec1(d),
+        };
+        lit.reshape(&dims)
+    }
+
+    fn from_literal(
+        lit: &xla::Literal,
+        spec: &TensorSpec,
+    ) -> std::result::Result<Tensor, xla::Error> {
+        Ok(match spec.dtype {
+            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
+            DType::I32 => Tensor::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+        })
+    }
+}
+
+/// Engine counters (exported to metrics / perf benches).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// HLO artifacts compiled (cold path).
+    pub compiles: u64,
+    /// Executions dispatched (hot path).
+    pub executions: u64,
+    /// Executions served from the executable cache.
+    pub cache_hits: u64,
+}
+
+#[derive(Debug)]
+pub enum EngineError {
+    UnknownArtifact(String),
+    ArityMismatch { name: String, expected: usize, got: usize },
+    SpecMismatch { name: String, index: usize, expected: String, got: String },
+    Manifest(artifacts::ManifestError),
+    Xla(xla::Error),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::UnknownArtifact(n) => {
+                write!(f, "unknown artifact '{n}' (run `make artifacts`?)")
+            }
+            EngineError::ArityMismatch { name, expected, got } => write!(
+                f,
+                "{name}: expected {expected} inputs, got {got}"
+            ),
+            EngineError::SpecMismatch { name, index, expected, got } => write!(
+                f,
+                "{name}: input {index} expected {expected}, got {got}"
+            ),
+            EngineError::Manifest(e) => write!(f, "{e}"),
+            EngineError::Xla(e) => write!(f, "xla: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e)
+    }
+}
+
+impl From<artifacts::ManifestError> for EngineError {
+    fn from(e: artifacts::ManifestError) -> Self {
+        EngineError::Manifest(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, EngineError>;
+
+/// PJRT client + manifest + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: EngineStats,
+}
+
+impl Engine {
+    /// Open the CPU PJRT client over the default artifacts directory.
+    pub fn new() -> Result<Engine> {
+        Engine::with_dir(&default_dir())
+    }
+
+    pub fn with_dir(dir: &Path) -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            manifest: Manifest::load(dir)?,
+            cache: HashMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| EngineError::UnknownArtifact(name.into()))?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.stats.compiles += 1;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile every artifact in the manifest (leader warm-up).
+    pub fn load_all(&mut self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.names().map(String::from).collect();
+        for n in names {
+            self.load(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with `inputs`, returning the outputs.
+    ///
+    /// Validates arity/shape/dtype against the manifest; the artifact is
+    /// compiled on first use and cached afterwards.
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| EngineError::UnknownArtifact(name.into()))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(EngineError::ArityMismatch {
+                name: name.into(),
+                expected: spec.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if !t.matches(s) {
+                return Err(EngineError::SpecMismatch {
+                    name: name.into(),
+                    index: i,
+                    expected: s.to_string(),
+                    got: format!("{}{:?}", t.dtype(), t.shape()),
+                });
+            }
+        }
+
+        let hit = self.cache.contains_key(name);
+        self.load(name)?;
+        if hit {
+            self.stats.cache_hits += 1;
+        }
+        let exe = self.cache.get(name).expect("just loaded");
+
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<std::result::Result<_, _>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        self.stats.executions += 1;
+
+        // aot.py lowers with return_tuple=True: unwrap the n-tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(EngineError::ArityMismatch {
+                name: name.into(),
+                expected: spec.outputs.len(),
+                got: parts.len(),
+            });
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(l, s)| Tensor::from_literal(l, s).map_err(Into::into))
+            .collect()
+    }
+
+    /// Convenience: single-output artifact -> flat f32 vector.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<f32>> {
+        let mut out = self.execute(name, inputs)?;
+        debug_assert_eq!(out.len(), 1, "{name} has multiple outputs");
+        Ok(out.remove(0).into_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        Engine::new().expect("PJRT CPU client + manifest")
+    }
+
+    #[test]
+    fn axpy_numerics() {
+        let mut e = engine();
+        let n = 1024;
+        let a = Tensor::f32(vec![2.0], &[1]);
+        let x = Tensor::f32((0..n).map(|i| i as f32).collect(), &[n]);
+        let y = Tensor::f32(vec![1.0; n], &[n]);
+        let out = e.execute_f32("axpy", &[a, x, y]).unwrap();
+        assert_eq!(out.len(), n);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 2.0 * i as f32 + 1.0);
+        }
+    }
+
+    #[test]
+    fn gemm_against_host_reference() {
+        let mut e = engine();
+        let n = 64;
+        let mut rng = crate::util::Rng::new(7);
+        let a: Vec<f32> =
+            (0..n * n).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        let b: Vec<f32> =
+            (0..n * n).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        let got = e
+            .execute_f32(
+                "gemm64",
+                &[Tensor::f32(a.clone(), &[n, n]), Tensor::f32(b.clone(), &[n, n])],
+            )
+            .unwrap();
+        // host reference
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for k in 0..n {
+                    acc += a[i * n + k] * b[k * n + j];
+                }
+                let d = (got[i * n + j] - acc).abs();
+                assert!(d < 1e-3, "({i},{j}): {} vs {acc}", got[i * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let mut e = engine();
+        let args = || {
+            vec![
+                Tensor::f32(vec![1.0], &[1]),
+                Tensor::f32(vec![0.0; 1024], &[1024]),
+                Tensor::f32(vec![0.0; 1024], &[1024]),
+            ]
+        };
+        e.execute("axpy", &args()).unwrap();
+        e.execute("axpy", &args()).unwrap();
+        e.execute("axpy", &args()).unwrap();
+        let s = e.stats();
+        assert_eq!(s.compiles, 1, "compiled exactly once");
+        assert_eq!(s.executions, 3);
+        assert_eq!(s.cache_hits, 2);
+    }
+
+    #[test]
+    fn multi_output_tuple() {
+        let mut e = engine();
+        let pos = Tensor::f32(vec![0.5; 64 * 4], &[64, 4]);
+        let vel = Tensor::f32(vec![0.0; 64 * 4], &[64, 4]);
+        let out = e.execute("nbody_step", &[pos, vel]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].shape(), &[64, 4]);
+        assert_eq!(out[1].shape(), &[64, 4]);
+    }
+
+    #[test]
+    fn validation_errors() {
+        let mut e = engine();
+        assert!(matches!(
+            e.execute("nope", &[]),
+            Err(EngineError::UnknownArtifact(_))
+        ));
+        assert!(matches!(
+            e.execute("axpy", &[]),
+            Err(EngineError::ArityMismatch { .. })
+        ));
+        let bad = vec![
+            Tensor::f32(vec![1.0], &[1]),
+            Tensor::f32(vec![0.0; 4], &[4]), // wrong length
+            Tensor::f32(vec![0.0; 1024], &[1024]),
+        ];
+        assert!(matches!(
+            e.execute("axpy", &bad),
+            Err(EngineError::SpecMismatch { index: 1, .. })
+        ));
+        // wrong dtype
+        let bad2 = vec![
+            Tensor::i32(vec![1], &[1]),
+            Tensor::f32(vec![0.0; 1024], &[1024]),
+            Tensor::f32(vec![0.0; 1024], &[1024]),
+        ];
+        assert!(matches!(
+            e.execute("axpy", &bad2),
+            Err(EngineError::SpecMismatch { index: 0, .. })
+        ));
+    }
+}

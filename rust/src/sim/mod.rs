@@ -1,0 +1,173 @@
+//! Deterministic discrete-event engine (the SST stand-in).
+//!
+//! Events are `(time, seq, payload)`; `seq` is a monotonically increasing
+//! tie-breaker so same-timestamp events pop in schedule order and runs
+//! are bit-reproducible. The engine knows nothing about nodes — the
+//! cluster layer schedules closures-as-enums onto it.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::Ps;
+
+/// A scheduled event carrying a caller-defined payload.
+#[derive(Clone, Debug)]
+struct Scheduled<E> {
+    at: Ps,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap via reversed compare; seq breaks ties FIFO
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Event-driven simulator clock + queue.
+pub struct Engine<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: Ps,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Engine { heap: BinaryHeap::new(), now: 0, seq: 0, processed: 0 }
+    }
+
+    pub fn now(&self) -> Ps {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `ev` at absolute time `at` (>= now).
+    pub fn schedule_at(&mut self, at: Ps, ev: E) {
+        debug_assert!(at >= self.now, "scheduling into the past");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq, ev });
+    }
+
+    /// Schedule `ev` `delay` ps from now.
+    pub fn schedule_in(&mut self, delay: Ps, ev: E) {
+        self.schedule_at(self.now.saturating_add(delay), ev);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn next(&mut self) -> Option<(Ps, E)> {
+        let s = self.heap.pop()?;
+        self.now = s.at;
+        self.processed += 1;
+        Some((s.at, s.ev))
+    }
+
+    /// Drain the queue through `handler` until empty or `max_events`.
+    /// Returns the number of events processed.
+    pub fn run<F: FnMut(&mut Self, Ps, E)>(
+        &mut self,
+        max_events: u64,
+        mut handler: F,
+    ) -> u64 {
+        let mut n = 0;
+        while n < max_events {
+            // split-borrow dance: pop first, then hand &mut self to handler
+            let Some(s) = self.heap.pop() else { break };
+            self.now = s.at;
+            self.processed += 1;
+            n += 1;
+            handler(self, s.at, s.ev);
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(30, 3);
+        e.schedule_at(10, 1);
+        e.schedule_at(20, 2);
+        let order: Vec<u32> =
+            std::iter::from_fn(|| e.next().map(|(_, v)| v)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        assert_eq!(e.now(), 30);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut e: Engine<u32> = Engine::new();
+        for v in 0..100 {
+            e.schedule_at(5, v);
+        }
+        let order: Vec<u32> =
+            std::iter::from_fn(|| e.next().map(|(_, v)| v)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut e: Engine<&'static str> = Engine::new();
+        e.schedule_at(100, "a");
+        e.next();
+        e.schedule_in(50, "b");
+        let (t, v) = e.next().unwrap();
+        assert_eq!((t, v), (150, "b"));
+    }
+
+    #[test]
+    fn run_handler_can_reschedule() {
+        let mut e: Engine<u64> = Engine::new();
+        e.schedule_at(0, 0);
+        let mut seen = Vec::new();
+        e.run(u64::MAX, |eng, t, v| {
+            seen.push((t, v));
+            if v < 4 {
+                eng.schedule_in(10, v + 1);
+            }
+        });
+        assert_eq!(seen, vec![(0, 0), (10, 1), (20, 2), (30, 3), (40, 4)]);
+    }
+
+    #[test]
+    fn run_respects_event_cap() {
+        let mut e: Engine<u64> = Engine::new();
+        e.schedule_at(0, 0);
+        let n = e.run(10, |eng, _, v| eng.schedule_in(1, v + 1));
+        assert_eq!(n, 10);
+        assert_eq!(e.pending(), 1);
+    }
+}

@@ -1,0 +1,267 @@
+//! Task tokens (paper Fig. 6b) and the bounded token queues.
+//!
+//! A token is the unit of work circulating on the ring: 7 fields, 21
+//! bytes on the wire (4-bit TASKid + 4-bit FROMnode packed in one byte;
+//! five 4-byte fields). `WIRE_BYTES` is used by the network model for
+//! serialization delay and by the metrics for task-movement accounting.
+
+use std::collections::VecDeque;
+
+/// Registered kernel id (4 bits on the wire; <= 15 user tasks).
+pub type TaskId = u8;
+/// Ring node index (4 bits on the wire; <= 16 nodes, as evaluated).
+pub type NodeId = u8;
+/// Global data address (word-granular 1-D space, paper §3.1).
+pub type Addr = u32;
+
+/// Reserved task id that circulates to detect quiescence (paper Fig. 5).
+pub const TERMINATE: TaskId = 0;
+
+/// Half-open global address range `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Range {
+    pub start: Addr,
+    pub end: Addr,
+}
+
+impl Range {
+    pub fn new(start: Addr, end: Addr) -> Self {
+        debug_assert!(start <= end, "range [{start}, {end}) inverted");
+        Range { start, end }
+    }
+
+    pub fn empty() -> Self {
+        Range { start: 0, end: 0 }
+    }
+
+    pub fn len(&self) -> u32 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+
+    pub fn contains(&self, other: &Range) -> bool {
+        self.start <= other.start && other.end <= self.end
+    }
+
+    pub fn overlaps(&self, other: &Range) -> bool {
+        self.start < other.end && other.start < self.end
+    }
+
+    pub fn intersect(&self, other: &Range) -> Range {
+        let s = self.start.max(other.start);
+        let e = self.end.min(other.end);
+        if s >= e { Range::empty() } else { Range { start: s, end: e } }
+    }
+}
+
+/// The 7-field task token (paper Fig. 6b).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskToken {
+    /// Which registered kernel to run (TERMINATE = quiescence probe).
+    pub task_id: TaskId,
+    /// Data range the task operates on.
+    pub task: Range,
+    /// Token-carried parameter / partial-reduction value (paper: PARAM).
+    pub param: f32,
+    /// Unavoidable remote data to fetch before launch (empty = none).
+    pub remote: Range,
+    /// Node that spawned this token.
+    pub from_node: NodeId,
+}
+
+/// Wire size: TASKid+FROMnode share 1 byte; TASKstart/end, PARAM,
+/// REMOTEstart/end are 4 bytes each -> 21 bytes (paper §4.1).
+pub const WIRE_BYTES: u64 = 21;
+
+impl TaskToken {
+    pub fn new(task_id: TaskId, task: Range, param: f32) -> Self {
+        TaskToken { task_id, task, param, remote: Range::empty(), from_node: 0 }
+    }
+
+    pub fn with_remote(mut self, remote: Range) -> Self {
+        self.remote = remote;
+        self
+    }
+
+    pub fn from_node(mut self, node: NodeId) -> Self {
+        self.from_node = node;
+        self
+    }
+
+    pub fn terminate() -> Self {
+        TaskToken::new(TERMINATE, Range::empty(), 0.0)
+    }
+
+    pub fn is_terminate(&self) -> bool {
+        self.task_id == TERMINATE
+    }
+
+    pub fn needs_remote_data(&self) -> bool {
+        !self.remote.is_empty()
+    }
+
+    /// Same kernel, same PARAM, and data ranges that touch — the
+    /// coalescing-unit merge criterion (paper §3.2 step 6).
+    pub fn can_coalesce(&self, other: &TaskToken) -> bool {
+        self.task_id == other.task_id
+            && self.param == other.param
+            && self.remote == other.remote
+            && (self.task.end == other.task.start
+                || other.task.end == self.task.start)
+    }
+
+    /// Merge two coalescible tokens into one covering both ranges.
+    pub fn coalesce(&self, other: &TaskToken) -> TaskToken {
+        debug_assert!(self.can_coalesce(other));
+        let mut t = *self;
+        t.task = Range::new(
+            self.task.start.min(other.task.start),
+            self.task.end.max(other.task.end),
+        );
+        t
+    }
+}
+
+/// Bounded FIFO for task tokens (dispatcher queues are 8-entry,
+/// controller spawn queues 4-entry — Table 2).
+#[derive(Clone, Debug)]
+pub struct TokenQueue {
+    q: VecDeque<TaskToken>,
+    cap: usize,
+}
+
+impl TokenQueue {
+    pub fn new(cap: usize) -> Self {
+        TokenQueue { q: VecDeque::with_capacity(cap), cap }
+    }
+
+    pub fn unbounded() -> Self {
+        TokenQueue { q: VecDeque::new(), cap: usize::MAX }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.cap
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Enqueue; returns the token back if the queue is full
+    /// (backpressure propagates to the caller).
+    pub fn push(&mut self, t: TaskToken) -> Result<(), TaskToken> {
+        if self.is_full() {
+            Err(t)
+        } else {
+            self.q.push_back(t);
+            Ok(())
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<TaskToken> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&TaskToken> {
+        self.q.front()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TaskToken> {
+        self.q.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_size_matches_paper() {
+        // 4-bit id + 4-bit from-node + 5 * 4-byte fields = 21 bytes
+        assert_eq!(WIRE_BYTES, 1 + 5 * 4);
+    }
+
+    #[test]
+    fn range_algebra() {
+        let a = Range::new(0, 10);
+        let b = Range::new(5, 15);
+        let c = Range::new(10, 20);
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c)); // half-open: touching != overlapping
+        assert_eq!(a.intersect(&b), Range::new(5, 10));
+        assert!(a.intersect(&c).is_empty());
+        assert!(Range::new(0, 20).contains(&b));
+        assert!(!b.contains(&Range::new(0, 20)));
+        assert_eq!(Range::new(3, 3).len(), 0);
+        assert!(Range::new(3, 3).is_empty());
+    }
+
+    #[test]
+    fn coalesce_adjacent_same_kind() {
+        let a = TaskToken::new(2, Range::new(0, 8), 1.0);
+        let b = TaskToken::new(2, Range::new(8, 16), 1.0);
+        assert!(a.can_coalesce(&b));
+        assert!(b.can_coalesce(&a));
+        let m = a.coalesce(&b);
+        assert_eq!(m.task, Range::new(0, 16));
+        assert_eq!(m.task_id, 2);
+    }
+
+    #[test]
+    fn no_coalesce_when_mismatched() {
+        let a = TaskToken::new(2, Range::new(0, 8), 1.0);
+        // different kernel
+        assert!(!a.can_coalesce(&TaskToken::new(3, Range::new(8, 16), 1.0)));
+        // different PARAM (partial reductions must not merge)
+        assert!(!a.can_coalesce(&TaskToken::new(2, Range::new(8, 16), 2.0)));
+        // gap between ranges
+        assert!(!a.can_coalesce(&TaskToken::new(2, Range::new(9, 16), 1.0)));
+        // overlapping, not adjacent
+        assert!(!a.can_coalesce(&TaskToken::new(2, Range::new(4, 16), 1.0)));
+        // differing remote ranges
+        let r = TaskToken::new(2, Range::new(8, 16), 1.0)
+            .with_remote(Range::new(0, 4));
+        assert!(!a.can_coalesce(&r));
+    }
+
+    #[test]
+    fn terminate_token() {
+        let t = TaskToken::terminate();
+        assert!(t.is_terminate());
+        assert!(!t.needs_remote_data());
+    }
+
+    #[test]
+    fn queue_backpressure() {
+        let mut q = TokenQueue::new(2);
+        let t = TaskToken::new(1, Range::new(0, 1), 0.0);
+        assert!(q.push(t).is_ok());
+        assert!(q.push(t).is_ok());
+        assert!(q.is_full());
+        assert_eq!(q.push(t), Err(t));
+        q.pop().unwrap();
+        assert!(q.push(t).is_ok());
+    }
+
+    #[test]
+    fn queue_fifo_order() {
+        let mut q = TokenQueue::new(8);
+        for i in 0..4 {
+            q.push(TaskToken::new(1, Range::new(i, i + 1), 0.0)).unwrap();
+        }
+        let starts: Vec<u32> =
+            std::iter::from_fn(|| q.pop()).map(|t| t.task.start).collect();
+        assert_eq!(starts, vec![0, 1, 2, 3]);
+    }
+}

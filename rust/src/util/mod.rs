@@ -1,0 +1,10 @@
+//! Small self-contained utilities.
+//!
+//! The offline crate registry ships none of the usual helpers (rand,
+//! serde, …), so the repo carries its own seeded PRNG and a minimal JSON
+//! reader for the artifact manifest.
+
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,239 @@
+//! Integration tests: full cluster runs across the app × model × node
+//! matrix, every app verified against its serial oracle; determinism;
+//! termination under stressed configurations; multi-app coexistence;
+//! and the figure pipeline end to end at small scale.
+
+use arena::apps::{make_app, Scale, ALL};
+use arena::apps::{GcnApp, GemmApp, NbodyApp, SpmvApp, SsspApp};
+use arena::baseline::{run_bsp, serial_ps};
+use arena::cluster::{Cluster, Model, RunReport};
+use arena::config::ArenaConfig;
+use arena::eval;
+
+fn run_checked(app: &str, nodes: usize, model: Model) -> RunReport {
+    let cfg = ArenaConfig::default().with_nodes(nodes);
+    let mut cl = Cluster::new(cfg, model, vec![make_app(app, Scale::Small, 77)]);
+    let r = cl.run(None);
+    cl.check()
+        .unwrap_or_else(|e| panic!("{app}@{nodes} ({:?}): {e}", model.label()));
+    r
+}
+
+#[test]
+fn every_app_verifies_on_every_topology() {
+    for app in ALL {
+        for nodes in [1, 2, 4, 8, 16] {
+            for model in [Model::SoftwareCpu, Model::Cgra] {
+                let r = run_checked(app, nodes, model);
+                assert!(r.makespan_ps > 0, "{app}@{nodes}");
+                assert!(r.tasks_executed > 0, "{app}@{nodes}");
+            }
+        }
+    }
+}
+
+#[test]
+fn runs_are_bit_deterministic() {
+    for app in ALL {
+        let a = run_checked(app, 8, Model::Cgra);
+        let b = run_checked(app, 8, Model::Cgra);
+        assert_eq!(a.makespan_ps, b.makespan_ps, "{app} makespan drifted");
+        assert_eq!(a.events, b.events, "{app} event count drifted");
+        assert_eq!(a.node_units, b.node_units, "{app} balance drifted");
+        assert_eq!(a.ring, b.ring, "{app} traffic drifted");
+    }
+}
+
+#[test]
+fn work_is_invariant_across_node_counts() {
+    // SSSP is excluded: asynchronous relaxation legitimately does
+    // redundant work that grows with the in-flight staleness window
+    // (the paper's async-vs-level-sync tradeoff).
+    for app in ["gemm", "spmv", "dna", "gcn", "nbody"] {
+        let base: u64 = run_checked(app, 1, Model::Cgra)
+            .node_units
+            .iter()
+            .sum();
+        for nodes in [2, 4, 8] {
+            let total: u64 = run_checked(app, nodes, Model::Cgra)
+                .node_units
+                .iter()
+                .sum();
+            assert_eq!(base, total, "{app}: units changed at {nodes} nodes");
+        }
+    }
+}
+
+#[test]
+fn sssp_redundant_work_is_bounded() {
+    // async SSSP may relax a vertex more than once, but the blow-up
+    // must stay within a small constant of the serial work.
+    let base: u64 = run_checked("sssp", 1, Model::Cgra).node_units.iter().sum();
+    for nodes in [2, 4, 8, 16] {
+        let total: u64 =
+            run_checked("sssp", nodes, Model::Cgra).node_units.iter().sum();
+        assert!(
+            total < base * 2,
+            "sssp@{nodes}: redundant work {total} > 2x serial {base}"
+        );
+    }
+}
+
+#[test]
+fn cgra_beats_software_on_compute_bound_apps() {
+    for app in ["gemm", "nbody", "gcn"] {
+        let sw = run_checked(app, 4, Model::SoftwareCpu);
+        let hw = run_checked(app, 4, Model::Cgra);
+        assert!(
+            hw.makespan_ps < sw.makespan_ps,
+            "{app}: CGRA {} !< SW {}",
+            hw.makespan_ps,
+            sw.makespan_ps
+        );
+    }
+}
+
+#[test]
+fn terminate_protocol_quiesces_under_tiny_queues() {
+    // stress: 2-entry queues force constant backpressure
+    let mut cfg = ArenaConfig::default().with_nodes(8);
+    cfg.dispatcher_queue_depth = 2;
+    cfg.spawn_queue_depth = 1;
+    let mut cl = Cluster::new(
+        cfg,
+        Model::Cgra,
+        vec![Box::new(SsspApp::new(256, 4, 3))],
+    );
+    let r = cl.run(None);
+    cl.check().expect("SSSP still correct under backpressure");
+    assert!(r.dispatcher.stalls + r.coalesce.spilled > 0, "no stress?");
+}
+
+#[test]
+fn terminate_protocol_quiesces_with_slow_network() {
+    let mut cfg = ArenaConfig::default().with_nodes(4);
+    cfg.set("hop_latency_us", "20").unwrap(); // 20x slower switch
+    cfg.set("nic_gbps", "1").unwrap();
+    let mut cl = Cluster::new(
+        cfg,
+        Model::Cgra,
+        vec![Box::new(NbodyApp::new(64, 2, 3))],
+    );
+    let r = cl.run(None);
+    cl.check().expect("slow network changes time, not results");
+    assert!(r.terminate_laps >= 2);
+}
+
+#[test]
+fn multi_app_runs_match_isolated_results() {
+    let cfg = ArenaConfig::default().with_nodes(4);
+    let mut cl = Cluster::new(
+        cfg,
+        Model::Cgra,
+        vec![
+            Box::new(SsspApp::new(256, 4, 9).with_base_id(1)),
+            Box::new(GemmApp::new(64, 9).with_base_id(2)),
+            Box::new(SpmvApp::new(512, 16, 2, 9).with_base_id(5)),
+            Box::new(GcnApp::new(256, 32, 16, 8, 9).with_base_id(7)),
+        ],
+    );
+    let r = cl.run(None);
+    cl.check().expect("all four concurrent apps verify");
+    assert!(r.app.split('+').count() == 4);
+}
+
+#[test]
+fn node_sweep_speedups_are_sane() {
+    // compute-bound apps at a size where compute dominates the 1 µs
+    // hops (Small instances are latency-bound by design); speedup must
+    // be real but sub-linear.
+    let run = |app: Box<dyn arena::api::App>, nodes: usize| -> f64 {
+        let cfg = ArenaConfig::default().with_nodes(nodes);
+        let mut cl = Cluster::new(cfg, Model::Cgra, vec![app]);
+        let r = cl.run(None);
+        cl.check().unwrap();
+        r.makespan_ps as f64
+    };
+    let s_gemm = run(Box::new(GemmApp::new(256, 7)), 1)
+        / run(Box::new(GemmApp::new(256, 7)), 8);
+    assert!(s_gemm > 1.5, "gemm: no parallel gain ({s_gemm:.2}x)");
+    assert!(s_gemm < 9.0, "gemm: superlinear ({s_gemm:.2}x)");
+    let s_nbody = run(Box::new(NbodyApp::new(512, 1, 7)), 1)
+        / run(Box::new(NbodyApp::new(512, 1, 7)), 8);
+    assert!(s_nbody > 1.5, "nbody: no parallel gain ({s_nbody:.2}x)");
+    assert!(s_nbody < 9.0, "nbody: superlinear ({s_nbody:.2}x)");
+}
+
+#[test]
+fn bsp_baseline_agrees_with_serial_at_one_node() {
+    for app in ALL {
+        let cfg = ArenaConfig::default().with_nodes(1);
+        let b = run_bsp(app, Scale::Small, 77, &cfg, false);
+        let s = serial_ps(app, Scale::Small, 77, &cfg);
+        assert_eq!(b.makespan_ps, s, "{app}");
+    }
+}
+
+#[test]
+fn figure_pipeline_end_to_end_small() {
+    // the full paper-eval pipeline at small scale: every figure builds
+    let (cc9, ar9) = eval::fig9(Scale::Small, 5);
+    assert_eq!(cc9.rows.len(), 6);
+    assert_eq!(ar9.rows.len(), 6);
+    let t10 = eval::fig10(Scale::Small, 5);
+    assert_eq!(t10.rows.len(), 6);
+    let (cc11, ar11) = eval::fig11(Scale::Small, 5);
+    assert_eq!(cc11.rows.len(), 6);
+    // ARENA with CGRA must beat ARENA software for the kernels the
+    // fabric accelerates; DNA is exempt (its recurrence caps the CGRA
+    // below the CPU at small blocks — Fig. 12's 0.62x at 2x8).
+    for app in ALL {
+        if app == "dna" {
+            continue;
+        }
+        for col in 0..eval::NODE_SWEEP.len() {
+            let sw = ar9.get(app, col).unwrap();
+            let hw = ar11.get(app, col).unwrap();
+            assert!(hw > sw * 0.95, "{app} col {col}: CGRA {hw} !> sw {sw}");
+        }
+    }
+    let t12 = eval::fig12();
+    assert_eq!(t12.rows.len(), 6);
+    let (a13, p13) = eval::fig13(Scale::Small, 5);
+    assert!(a13.get("total", 0).unwrap() > 2.5);
+    assert!(p13.get("average", 0).unwrap() > 100.0);
+}
+
+#[test]
+fn headline_ratios_favor_arena() {
+    // Small instances are network-latency-bound, where the analytic BSP
+    // baseline pays no token overheads — so the small-scale gate is
+    // deliberately loose; the paper-scale headline (where ARENA must
+    // win) is regenerated by examples/paper_eval.rs and recorded in
+    // EXPERIMENTS.md.
+    let h = eval::headline(Scale::Small, 5);
+    assert!(
+        h.cgra_ratio_16 > 0.5,
+        "ARENA+CGRA collapsed vs CC+CGRA @16: {:.2}",
+        h.cgra_ratio_16
+    );
+    assert!(
+        h.overall_ratio_16 > h.cgra_ratio_16,
+        "overall ratio must exceed the CGRA-only ratio"
+    );
+    assert!(
+        h.movement_reduction > 0.0,
+        "ARENA must move less data: {:.2}",
+        h.movement_reduction
+    );
+}
+
+#[test]
+fn skewed_partition_still_correct() {
+    // non-power-of-two node counts exercise uneven stripes
+    for app in ["sssp", "spmv"] {
+        for nodes in [3, 5, 7, 11] {
+            run_checked(app, nodes, Model::Cgra);
+        }
+    }
+}

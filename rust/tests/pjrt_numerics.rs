@@ -1,0 +1,290 @@
+//! PJRT numerics: every AOT artifact loaded and executed from Rust,
+//! checked against host-side oracles. This proves the full
+//! python-Pallas → HLO-text → xla-crate → PJRT round trip, the same
+//! contract `python/tests/` proves from the other side.
+
+use arena::apps::workloads::{
+    gen_matrix, gen_sequence, matmul_ref, nbody_accel, nw_ref, NBODY_DT,
+};
+use arena::runtime::{DType, Engine, Tensor};
+use arena::util::Rng;
+
+fn engine() -> Engine {
+    Engine::new().expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_covers_all_kernels() {
+    let e = engine();
+    let names: Vec<&str> = e.manifest().names().collect();
+    for k in ["axpy", "gemm64", "gemm128", "spmv", "bfs", "nw64", "gcn_l1",
+              "gcn_l2", "nbody", "nbody_step"] {
+        assert!(names.contains(&k), "missing artifact {k}");
+    }
+}
+
+#[test]
+fn gemm128_matches_host_oracle() {
+    let mut e = engine();
+    let n = 128;
+    let a = gen_matrix(n, n, 1);
+    let b = gen_matrix(n, n, 2);
+    let got = e
+        .execute_f32(
+            "gemm128",
+            &[Tensor::f32(a.clone(), &[n, n]), Tensor::f32(b.clone(), &[n, n])],
+        )
+        .unwrap();
+    let want = matmul_ref(&a, &b, n, n, n);
+    for i in 0..n * n {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-2 * (1.0 + want[i].abs()),
+            "C[{i}]: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn spmv_ell_matches_host_oracle() {
+    let mut e = engine();
+    let spec = e.manifest().get("spmv").unwrap().clone();
+    let (rows, width) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let cols_n = spec.inputs[2].shape[0];
+    let mut rng = Rng::new(3);
+    let vals: Vec<f32> =
+        (0..rows * width).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let cols: Vec<i32> = (0..rows * width)
+        .map(|_| rng.below(cols_n as u64) as i32)
+        .collect();
+    let x: Vec<f32> = (0..cols_n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let got = e
+        .execute_f32(
+            "spmv",
+            &[
+                Tensor::f32(vals.clone(), &[rows, width]),
+                Tensor::i32(cols.clone(), &[rows, width]),
+                Tensor::f32(x.clone(), &[cols_n]),
+            ],
+        )
+        .unwrap();
+    for r in 0..rows {
+        let want: f32 = (0..width)
+            .map(|k| vals[r * width + k] * x[cols[r * width + k] as usize])
+            .sum();
+        assert!(
+            (got[r] - want).abs() < 1e-3 * (1.0 + want.abs()),
+            "y[{r}]: {} vs {want}",
+            got[r]
+        );
+    }
+}
+
+#[test]
+fn nw64_matches_dp_oracle() {
+    let mut e = engine();
+    let b = 64usize;
+    let sa = gen_sequence(b, 4);
+    let sb = gen_sequence(b, 5);
+    // whole-matrix boundaries (gap penalties) -> kernel computes the
+    // single 64x64 block; compare against the full serial DP.
+    let want = nw_ref(&sa, &sb);
+    let w = b + 1;
+    let top: Vec<f32> = (0..=b).map(|j| want[j]).collect();
+    let left: Vec<f32> = (0..=b).map(|i| want[i * w]).collect();
+    let got = e
+        .execute_f32(
+            "nw64",
+            &[
+                Tensor::i32(sa.iter().map(|&x| x as i32).collect(), &[b]),
+                Tensor::i32(sb.iter().map(|&x| x as i32).collect(), &[b]),
+                Tensor::f32(top, &[b + 1]),
+                Tensor::f32(left, &[b + 1]),
+            ],
+        )
+        .unwrap();
+    for i in 0..=b {
+        for j in 0..=b {
+            let (g, wv) = (got[i * w + j], want[i * w + j]);
+            assert!((g - wv).abs() < 1e-3, "H[{i},{j}]: {g} vs {wv}");
+        }
+    }
+}
+
+#[test]
+fn bfs_kernel_counts_frontier_reach() {
+    // bfs artifact: reach[r] = |{ j in frontier : adj[r][j] > 0 }|
+    let mut e = engine();
+    let spec = e.manifest().get("bfs").unwrap().clone();
+    let (rows, n) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let mut rng = Rng::new(12);
+    let mut adj = vec![0.0f32; rows * n];
+    for v in adj.iter_mut() {
+        if rng.bool_with(0.05) {
+            *v = 1.0;
+        }
+    }
+    let mut frontier = vec![0.0f32; n];
+    for v in frontier.iter_mut() {
+        if rng.bool_with(0.2) {
+            *v = 1.0;
+        }
+    }
+    let out = e
+        .execute_f32(
+            "bfs",
+            &[
+                Tensor::f32(adj.clone(), &[rows, n]),
+                Tensor::f32(frontier.clone(), &[n]),
+            ],
+        )
+        .unwrap();
+    for r in 0..rows {
+        let want: f32 = (0..n)
+            .map(|j| if adj[r * n + j] > 0.0 { frontier[j] } else { 0.0 })
+            .sum();
+        assert!(
+            (out[r] - want).abs() < 1e-3,
+            "reach[{r}]: {} vs {want}",
+            out[r]
+        );
+    }
+}
+
+#[test]
+fn nbody_kernel_matches_accel_oracle() {
+    let mut e = engine();
+    let spec = e.manifest().get("nbody").unwrap().clone();
+    let (mi, all_n) = (spec.inputs[0].shape[0], spec.inputs[1].shape[0]);
+    let mut rng = Rng::new(6);
+    let mut all = Vec::with_capacity(all_n * 4);
+    for _ in 0..all_n {
+        all.extend_from_slice(&[
+            rng.f32_range(0.0, 1.0),
+            rng.f32_range(0.0, 1.0),
+            rng.f32_range(0.0, 1.0),
+            1.0,
+        ]);
+    }
+    let pos_i = all[..mi * 4].to_vec();
+    let got = e
+        .execute("nbody", &[
+            Tensor::f32(pos_i, &[mi, 4]),
+            Tensor::f32(all.clone(), &[all_n, 4]),
+        ])
+        .unwrap();
+    let acc = got[0].as_f32();
+    for i in 0..mi.min(8) {
+        let want = nbody_accel(&all, i);
+        for k in 0..3 {
+            assert!(
+                (acc[i * 4 + k] - want[k]).abs()
+                    < 1e-2 * (1.0 + want[k].abs()),
+                "acc[{i}][{k}]: {} vs {}",
+                acc[i * 4 + k],
+                want[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn nbody_step_integrates_leapfrog() {
+    let mut e = engine();
+    let spec = e.manifest().get("nbody_step").unwrap().clone();
+    let n = spec.inputs[0].shape[0];
+    let mut rng = Rng::new(8);
+    let mut pos = Vec::new();
+    for _ in 0..n {
+        pos.extend_from_slice(&[
+            rng.f32_range(0.0, 1.0),
+            rng.f32_range(0.0, 1.0),
+            rng.f32_range(0.0, 1.0),
+            1.0,
+        ]);
+    }
+    let vel = vec![0.0f32; n * 4];
+    let out = e
+        .execute("nbody_step", &[
+            Tensor::f32(pos.clone(), &[n, 4]),
+            Tensor::f32(vel, &[n, 4]),
+        ])
+        .unwrap();
+    let (npos, nvel) = (out[0].as_f32(), out[1].as_f32());
+    // leapfrog with zero initial velocity: dx = a*dt*dt
+    for i in 0..n.min(8) {
+        let a = nbody_accel(&pos, i);
+        for k in 0..3 {
+            let want_v = a[k] * NBODY_DT;
+            assert!(
+                (nvel[i * 4 + k] - want_v).abs() < 1e-3,
+                "vel[{i}][{k}]"
+            );
+            let want_p = pos[i * 4 + k] + want_v * NBODY_DT;
+            assert!(
+                (npos[i * 4 + k] - want_p).abs() < 1e-3,
+                "pos[{i}][{k}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn gcn_layers_match_host_math() {
+    // gcn_l1 computes relu(A_blk @ (H @ W)); gcn_l2 the same sans relu
+    // (python/compile/model.py `gcn_layer_task`).
+    let mut e = engine();
+    for (name, relu) in [("gcn_l1", true), ("gcn_l2", false)] {
+        let spec = e.manifest().get(name).unwrap().clone();
+        let (rows, vdim) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let (hdim, wout) = (spec.inputs[1].shape[1], spec.inputs[2].shape[1]);
+        let mut rng = Rng::new(9);
+        // ahat: row-normalized random adjacency block (rows x vdim)
+        let mut ahat = vec![0.0f32; rows * vdim];
+        for r in 0..rows {
+            let deg = 1 + rng.below(6) as usize;
+            for _ in 0..deg {
+                ahat[r * vdim + rng.below(vdim as u64) as usize] =
+                    1.0 / deg as f32;
+            }
+        }
+        let h = gen_matrix(vdim, hdim, 10);
+        let w = gen_matrix(hdim, wout, 11);
+        let got = e
+            .execute_f32(name, &[
+                Tensor::f32(ahat.clone(), &[rows, vdim]),
+                Tensor::f32(h.clone(), &[vdim, hdim]),
+                Tensor::f32(w.clone(), &[hdim, wout]),
+            ])
+            .unwrap();
+        let hw = matmul_ref(&h, &w, vdim, hdim, wout);
+        let mut want = matmul_ref(&ahat, &hw, rows, vdim, wout);
+        if relu {
+            for v in &mut want {
+                *v = v.max(0.0);
+            }
+        }
+        for i in 0..rows * wout {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-2 * (1.0 + want[i].abs()),
+                "{name}[{i}]: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn dtype_and_shape_guards_hold() {
+    let mut e = engine();
+    let g = e.manifest().get("gemm64").unwrap().clone();
+    assert_eq!(g.inputs[0].dtype, DType::F32);
+    // executing with swapped dtypes must fail loudly, not corrupt
+    let bad = vec![
+        Tensor::i32(vec![0; 64 * 64], &[64, 64]),
+        Tensor::f32(vec![0.0; 64 * 64], &[64, 64]),
+    ];
+    assert!(e.execute("gemm64", &bad).is_err());
+}

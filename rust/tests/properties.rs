@@ -1,0 +1,249 @@
+//! Property-based tests over the coordinator's core invariants:
+//! the filter's partition property, coalescing-unit conservation,
+//! allocation-policy bounds, striping/ownership, ring timing monotony,
+//! config round-trips, and DES ordering — all under seeded random
+//! inputs via `proptest_lite`.
+
+use arena::cgra::{alloc_policy, CoalesceUnit};
+use arena::config::ArenaConfig;
+use arena::dispatcher::{filter, FilterCase};
+use arena::prop_assert;
+use arena::proptest_lite::forall;
+use arena::ring::RingNet;
+use arena::sim::Engine as Des;
+use arena::token::{Range, TaskToken};
+use arena::{api, util::Rng};
+
+fn random_range(rng: &mut Rng, space: u32) -> Range {
+    let a = rng.below(space as u64) as u32;
+    let b = rng.below(space as u64) as u32;
+    Range::new(a.min(b), a.max(b) + 1)
+}
+
+#[test]
+fn filter_partitions_every_token() {
+    forall("filter-partition", 2000, 0xF117E4, |rng| {
+        let local = random_range(rng, 1000);
+        let t = TaskToken::new(
+            1 + rng.below(14) as u8,
+            random_range(rng, 1200),
+            rng.f32_range(-10.0, 10.0),
+        );
+        let out = filter(&t, local);
+        // pieces tile the original range exactly, with no overlap
+        let mut pieces: Vec<Range> = out
+            .wait
+            .iter()
+            .chain(out.send.iter())
+            .map(|p| p.task)
+            .collect();
+        pieces.sort_by_key(|r| r.start);
+        prop_assert!(!pieces.is_empty(), "token vanished");
+        prop_assert!(
+            pieces.first().unwrap().start == t.task.start
+                && pieces.last().unwrap().end == t.task.end,
+            "range not covered: {pieces:?} vs {:?}",
+            t.task
+        );
+        for w in pieces.windows(2) {
+            prop_assert!(w[0].end == w[1].start, "gap or overlap: {pieces:?}");
+        }
+        // all wait pieces are local; all send pieces are not subsets
+        for p in out.wait.iter() {
+            prop_assert!(local.contains(&p.task), "wait piece not local");
+        }
+        for p in out.send.iter() {
+            prop_assert!(!local.contains(&p.task), "send piece is local");
+        }
+        // every piece preserves identity fields
+        for p in out.wait.iter().chain(out.send.iter()) {
+            prop_assert!(
+                p.task_id == t.task_id
+                    && p.param == t.param
+                    && p.from_node == t.from_node,
+                "fields not preserved"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn filter_case_matches_geometry() {
+    forall("filter-case", 2000, 0xCA5E, |rng| {
+        let local = random_range(rng, 500);
+        let t = TaskToken::new(1, random_range(rng, 600), 0.0);
+        let out = filter(&t, local);
+        let expect = if !t.task.overlaps(&local) {
+            FilterCase::Convey
+        } else if local.contains(&t.task) {
+            FilterCase::Local
+        } else if t.task.contains(&local) {
+            FilterCase::SplitSuperset
+        } else {
+            FilterCase::SplitPartial
+        };
+        prop_assert!(out.case == expect, "{:?} != {expect:?}", out.case);
+        Ok(())
+    });
+}
+
+#[test]
+fn coalescer_conserves_work_and_never_drops() {
+    forall("coalesce-conserve", 500, 0xC0A1, |rng| {
+        let mut c = CoalesceUnit::new(
+            1 + rng.below(4) as usize,
+            1 + rng.below(6) as usize,
+        );
+        let mut pushed_words = 0u64;
+        let mut pushed_tokens = 0u64;
+        let n = 20 + rng.below(300);
+        for _ in 0..n {
+            let id = 1 + rng.below(3) as u8;
+            let start = rng.below(256) as u32;
+            let len = 1 + rng.below(8) as u32;
+            let param = rng.below(3) as f32;
+            c.push(TaskToken::new(id, Range::new(start, start + len), param));
+            pushed_words += len as u64;
+            pushed_tokens += 1;
+        }
+        let drained = c.drain();
+        let words: u64 = drained.iter().map(|t| t.task.len() as u64).sum();
+        prop_assert!(
+            words == pushed_words,
+            "words {words} != pushed {pushed_words}"
+        );
+        let stats = &c.stats;
+        prop_assert!(
+            stats.spawned == pushed_tokens,
+            "spawn count mismatch"
+        );
+        prop_assert!(
+            drained.len() as u64 == pushed_tokens - stats.coalesced,
+            "merge accounting off"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn alloc_policy_bounds_and_monotonicity() {
+    forall("alloc-policy", 2000, 0xA110C, |rng| {
+        let local = 1 + rng.below(100_000);
+        let task = rng.below(local + 1);
+        let free = 1 + rng.below(4) as usize;
+        let g = alloc_policy(task, local, free);
+        prop_assert!(g >= 1 && g <= free, "allocated {g} of {free}");
+        prop_assert!(
+            g == 1 || g == 2 || g == 4,
+            "invalid group count {g}"
+        );
+        // bigger tasks never get fewer groups (same availability)
+        let g_small = alloc_policy(task / 2, local, free);
+        prop_assert!(
+            g_small <= g,
+            "smaller task got more groups: {g_small} > {g}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn stripe_owner_round_trip() {
+    forall("stripe-owner", 1000, 0x57817E, |rng| {
+        let words = 1 + rng.below(10_000) as u32;
+        let n = 1 + rng.below(16) as usize;
+        let parts = api::stripe(words, n);
+        // each address belongs to exactly the part owner_of names
+        for _ in 0..32 {
+            let a = rng.below(words as u64) as u32;
+            let p = api::owner_of(&parts, a);
+            prop_assert!(
+                parts[p].start <= a && a < parts[p].end,
+                "owner mismatch for {a}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ring_data_time_monotone_in_bytes_and_hops() {
+    let cfg = ArenaConfig::default();
+    forall("ring-monotone", 500, 0x816, |rng| {
+        let n = 2 + rng.below(15) as usize;
+        let from = rng.below(n as u64) as usize;
+        let to = rng.below(n as u64) as usize;
+        let bytes = 1 + rng.below(1 << 20);
+        let mut r1 = RingNet::new(n);
+        let t_small = r1.send_data(&cfg, 0, from, to, bytes);
+        let mut r2 = RingNet::new(n);
+        let t_big = r2.send_data(&cfg, 0, from, to, bytes * 2);
+        prop_assert!(t_big >= t_small, "more bytes got faster");
+        // round-trip distance symmetry
+        let d1 = r1.data_distance(from, to);
+        let d2 = r1.data_distance(to, from);
+        prop_assert!(d1 == d2, "short-way distance asymmetric");
+        prop_assert!(d1 <= n / 2, "distance {d1} exceeds half ring");
+        Ok(())
+    });
+}
+
+#[test]
+fn config_round_trips_through_dump_load() {
+    forall("config-roundtrip", 200, 0xC0F16, |rng| {
+        let mut cfg = ArenaConfig::default();
+        cfg.nodes = 1 + rng.below(64) as usize;
+        cfg.nic_gbps = 1.0 + rng.f64() * 200.0;
+        cfg.cgra_mhz = 100.0 + rng.f64() * 1000.0;
+        cfg.dispatcher_queue_depth = 1 + rng.below(32) as usize;
+        cfg.seed = rng.next_u64();
+        let dir = std::env::temp_dir().join("arena_prop_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("c{}.txt", rng.next_u64()));
+        std::fs::write(&path, cfg.dump()).unwrap();
+        let loaded = ArenaConfig::load(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        prop_assert!(loaded == cfg, "{loaded:?} != {cfg:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn des_pops_in_nondecreasing_time_order() {
+    forall("des-order", 200, 0xDE5, |rng| {
+        let mut des: Des<u32> = Des::new();
+        let n = 100 + rng.below(2000);
+        for i in 0..n {
+            des.schedule_at(rng.below(1_000_000), i as u32);
+        }
+        let mut last = 0;
+        let mut count = 0;
+        while let Some((t, _)) = des.next() {
+            prop_assert!(t >= last, "time went backwards");
+            last = t;
+            count += 1;
+        }
+        prop_assert!(count == n, "lost events: {count} != {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn token_coalesce_is_commutative_and_exact() {
+    forall("token-coalesce", 2000, 0x70CE, |rng| {
+        let id = 1 + rng.below(14) as u8;
+        let a0 = rng.below(1000) as u32;
+        let l1 = 1 + rng.below(20) as u32;
+        let l2 = 1 + rng.below(20) as u32;
+        let p = rng.below(4) as f32;
+        let a = TaskToken::new(id, Range::new(a0, a0 + l1), p);
+        let b = TaskToken::new(id, Range::new(a0 + l1, a0 + l1 + l2), p);
+        prop_assert!(a.can_coalesce(&b) && b.can_coalesce(&a), "not symmetric");
+        let m1 = a.coalesce(&b);
+        let m2 = b.coalesce(&a);
+        prop_assert!(m1.task == m2.task, "merge not commutative");
+        prop_assert!(m1.task.len() == l1 + l2, "merge changed total work");
+        Ok(())
+    });
+}
