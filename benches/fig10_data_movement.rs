@@ -1,5 +1,6 @@
 //! Bench: regenerate Fig. 10 — normalized data-movement breakdown of
-//! ARENA vs the compute-centric model on a 4-node cluster.
+//! ARENA vs the compute-centric model on a 4-node cluster — through the
+//! shared sweep path.
 //!
 //!     cargo bench --bench fig10_data_movement [-- --paper]
 
@@ -7,15 +8,18 @@ use arena::apps::Scale;
 use arena::benchkit::Bench;
 use arena::cluster::Model;
 use arena::eval;
+use arena::sweep::{self, Fig};
 
 fn main() {
     let paper = std::env::args().any(|a| a == "--paper");
     let scale = if paper { Scale::Paper } else { Scale::Small };
     let seed = 0xA2EA;
+    let jobs = sweep::default_jobs();
 
-    let t = eval::fig10(scale, seed);
+    let out = sweep::run(&[Fig::F10], scale, seed, jobs);
+    let t = &out.tables[0];
     t.print();
-    let total = t.mean_row()[2];
+    let total = t.mean_row()[3]; // task + data + ctrl
     println!(
         "movement vs compute-centric: {:.1}% (paper: -53.9%)\n",
         (total - 1.0) * 100.0

@@ -1,6 +1,6 @@
 //! Bench: regenerate Fig. 11 — the full systems (compute-centric + CGRA
 //! offload vs ARENA with runtime reconfiguration), speedup vs serial
-//! for 1..16 nodes, plus the §5.2 headline ratios.
+//! for 1..16 nodes — through the shared sweep path.
 //!
 //!     cargo bench --bench fig11_overall_system [-- --paper]
 
@@ -8,13 +8,16 @@ use arena::apps::Scale;
 use arena::benchkit::Bench;
 use arena::cluster::Model;
 use arena::eval;
+use arena::sweep::{self, Fig};
 
 fn main() {
     let paper = std::env::args().any(|a| a == "--paper");
     let scale = if paper { Scale::Paper } else { Scale::Small };
     let seed = 0xA2EA;
+    let jobs = sweep::default_jobs();
 
-    let (cc, ar) = eval::fig11(scale, seed);
+    let out = sweep::run(&[Fig::F11], scale, seed, jobs);
+    let (cc, ar) = (&out.tables[0], &out.tables[1]);
     cc.print();
     println!();
     ar.print();

@@ -1,6 +1,7 @@
 //! Bench: regenerate Fig. 9 — software execution models (compute-centric
 //! BSP vs ARENA data-centric, both on CPU nodes), speedup vs serial for
-//! 1..16 nodes — and time the underlying simulations.
+//! 1..16 nodes — through the shared sweep path, and time the underlying
+//! simulations.
 //!
 //!     cargo bench --bench fig9_programming_model [-- --paper]
 
@@ -8,21 +9,26 @@ use arena::apps::Scale;
 use arena::benchkit::Bench;
 use arena::cluster::Model;
 use arena::eval;
+use arena::sweep::{self, Fig};
 
 fn main() {
     let paper = std::env::args().any(|a| a == "--paper");
     let scale = if paper { Scale::Paper } else { Scale::Small };
     let seed = 0xA2EA;
+    let jobs = sweep::default_jobs();
 
-    let (cc, ar) = eval::fig9(scale, seed);
+    let out = sweep::run(&[Fig::F9], scale, seed, jobs);
+    let (cc, ar) = (&out.tables[0], &out.tables[1]);
     cc.print();
     println!();
     ar.print();
     println!("paper: avg 4.87x (compute-centric) vs 7.82x (ARENA) @16 nodes");
     let last = eval::NODE_SWEEP.len() - 1;
     println!(
-        "ratio @16 here: {:.2}x (paper 1.61x)\n",
-        ar.mean_row()[last] / cc.mean_row()[last]
+        "ratio @16 here: {:.2}x (paper 1.61x); {} cells on {} workers\n",
+        ar.mean_row()[last] / cc.mean_row()[last],
+        out.cells,
+        out.workers
     );
 
     // how fast the simulator itself regenerates the figure's cells

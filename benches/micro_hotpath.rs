@@ -1,9 +1,15 @@
 //! Micro-benchmarks of the L3 hot paths: the per-token dispatcher
-//! filter, the ring/network model, the discrete-event engine, the
-//! coalescing unit, the CGRA launch path, and the PJRT execute path.
+//! filter, the ring/network model, the discrete-event engine (new
+//! slab+index-heap vs the old BinaryHeap baseline), the coalescing
+//! unit, the CGRA launch path, and the kernel execute path.
 //! These are the knobs the §Perf pass optimizes — see EXPERIMENTS.md.
 //!
-//!     cargo bench --bench micro_hotpath
+//!     cargo bench --bench micro_hotpath [-- --smoke]
+//!
+//! `--smoke` runs a fast CI-friendly pass (shorter budgets, skips the
+//! engine section).
+
+use std::time::Duration;
 
 use arena::benchkit::{black_box, throughput, Bench};
 use arena::cgra::{CgraNode, CoalesceUnit, GroupMappings};
@@ -15,8 +21,71 @@ use arena::runtime::{Engine, Tensor};
 use arena::sim::Engine as Des;
 use arena::token::{Range, TaskToken};
 
+/// The pre-overhaul DES: a `BinaryHeap` of whole `(at, seq, ev)`
+/// structs. Kept verbatim as the measurement baseline for the
+/// `des/100k schedule+pop` comparison.
+mod baseline_des {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    type Ps = u64;
+
+    #[derive(Clone, Debug)]
+    struct Scheduled<E> {
+        at: Ps,
+        seq: u64,
+        ev: E,
+    }
+
+    impl<E> PartialEq for Scheduled<E> {
+        fn eq(&self, other: &Self) -> bool {
+            self.at == other.at && self.seq == other.seq
+        }
+    }
+    impl<E> Eq for Scheduled<E> {}
+    impl<E> PartialOrd for Scheduled<E> {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl<E> Ord for Scheduled<E> {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+
+    pub struct Engine<E> {
+        heap: BinaryHeap<Scheduled<E>>,
+        now: Ps,
+        seq: u64,
+    }
+
+    impl<E> Engine<E> {
+        pub fn new() -> Self {
+            Engine { heap: BinaryHeap::new(), now: 0, seq: 0 }
+        }
+
+        pub fn schedule_at(&mut self, at: Ps, ev: E) {
+            let seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Scheduled { at, seq, ev });
+        }
+
+        pub fn next(&mut self) -> Option<(Ps, E)> {
+            let s = self.heap.pop()?;
+            self.now = s.at;
+            Some((s.at, s.ev))
+        }
+    }
+}
+
 fn main() {
-    let b = Bench::new();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = if smoke {
+        Bench::quick().with_budget(Duration::from_millis(500))
+    } else {
+        Bench::new()
+    };
     let cfg = ArenaConfig::default();
 
     // --- dispatcher filter: the per-token decision -------------------
@@ -49,9 +118,9 @@ fn main() {
     });
     println!("  -> {:.1} M hops/s", throughput(&r, 10_000) / 1e6);
 
-    // --- discrete-event engine ----------------------------------------
-    let r = b.run("des/100k schedule+pop", || {
-        let mut des: Des<u64> = Des::new();
+    // --- discrete-event engine: old BinaryHeap vs slab+index heap -----
+    let r_base = b.run("des-baseline/100k schedule+pop (BinaryHeap)", || {
+        let mut des: baseline_des::Engine<u64> = baseline_des::Engine::new();
         for i in 0..100_000u64 {
             des.schedule_at(i * 37 % 1_000_000, i);
         }
@@ -61,7 +130,58 @@ fn main() {
         }
         acc
     });
-    println!("  -> {:.1} M events/s", throughput(&r, 200_000) / 1e6);
+    let r_new = b.run("des/100k schedule+pop", || {
+        let mut des: Des<u64> = Des::with_capacity(100_000);
+        for i in 0..100_000u64 {
+            des.schedule_at(i * 37 % 1_000_000, i);
+        }
+        let mut acc = 0;
+        while let Some((_, v)) = des.next() {
+            acc += v;
+        }
+        acc
+    });
+    println!(
+        "  -> {:.1} M events/s ({:.2}x vs BinaryHeap baseline)",
+        throughput(&r_new, 200_000) / 1e6,
+        r_base.mean.as_secs_f64() / r_new.mean.as_secs_f64()
+    );
+
+    // interleaved schedule/pop — the pattern cluster::run drives
+    let r_base = b.run("des-baseline/interleaved 200k ops", || {
+        let mut des: baseline_des::Engine<u64> = baseline_des::Engine::new();
+        des.schedule_at(0, 0);
+        let mut now = 0u64;
+        let mut acc = 0u64;
+        for _ in 0..100_000u64 {
+            let Some((t, v)) = des.next() else { break };
+            now = t;
+            acc += v;
+            des.schedule_at(now + 385 + (v % 3) * 1250, v + 1);
+            if v % 4 == 0 {
+                des.schedule_at(now + 1_000_000, v + 2);
+            }
+        }
+        acc
+    });
+    let r_new = b.run("des/interleaved 200k ops", || {
+        let mut des: Des<u64> = Des::new();
+        des.schedule_at(0, 0);
+        let mut acc = 0u64;
+        for _ in 0..100_000u64 {
+            let Some((_, v)) = des.next() else { break };
+            acc += v;
+            des.schedule_in(385 + (v % 3) * 1250, v + 1);
+            if v % 4 == 0 {
+                des.schedule_in(1_000_000, v + 2);
+            }
+        }
+        acc
+    });
+    println!(
+        "  -> {:.2}x vs BinaryHeap baseline",
+        r_base.mean.as_secs_f64() / r_new.mean.as_secs_f64()
+    );
 
     // --- coalescing unit -----------------------------------------------
     let r = b.run("coalesce/8k adjacent spawns", || {
@@ -86,27 +206,32 @@ fn main() {
         now
     });
 
-    // --- PJRT execute (the AOT kernel hot path) -------------------------
+    if smoke {
+        println!("(--smoke: engine section skipped)");
+        return;
+    }
+
+    // --- kernel execute (the AOT-contract hot path) ---------------------
     match Engine::new() {
         Ok(mut eng) => {
             let a = Tensor::f32(vec![0.5; 64 * 64], &[64, 64]);
             let bb = Tensor::f32(vec![0.5; 64 * 64], &[64, 64]);
             eng.execute("gemm64", &[a.clone(), bb.clone()]).unwrap();
-            let r = b.run("pjrt/gemm64 warm execute", || {
+            let r = b.run("engine/gemm64 warm execute", || {
                 eng.execute("gemm64", &[a.clone(), bb.clone()]).unwrap()
             });
             let flops = 2.0 * 64.0 * 64.0 * 64.0;
             println!(
-                "  -> {:.2} GFLOP/s through PJRT",
+                "  -> {:.2} GFLOP/s through the engine",
                 flops / r.mean.as_secs_f64() / 1e9
             );
             let x = Tensor::f32(vec![1.0; 1024], &[1024]);
             let y = Tensor::f32(vec![1.0; 1024], &[1024]);
             let s = Tensor::f32(vec![2.0], &[1]);
-            b.run("pjrt/axpy warm execute (dispatch floor)", || {
+            b.run("engine/axpy warm execute (dispatch floor)", || {
                 eng.execute("axpy", &[s.clone(), x.clone(), y.clone()]).unwrap()
             });
         }
-        Err(e) => println!("pjrt benches skipped: {e}"),
+        Err(e) => println!("engine benches skipped: {e}"),
     }
 }

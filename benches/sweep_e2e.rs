@@ -1,0 +1,55 @@
+//! End-to-end sweep benchmark: regenerate every §5 figure through the
+//! shared sweep path serially and on a full worker pool, verify the
+//! outputs are bit-identical, and report the wall-clock speedup (the
+//! `arena sweep --all --jobs N` acceptance numbers).
+//!
+//!     cargo bench --bench sweep_e2e [-- --paper] [-- --smoke]
+
+use std::time::Instant;
+
+use arena::apps::Scale;
+use arena::sweep::{self, Fig};
+
+fn main() {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scale = if paper { Scale::Paper } else { Scale::Small };
+    let seed = 0xA2EA;
+    let figs = if smoke {
+        vec![Fig::F10, Fig::F12]
+    } else {
+        Fig::ALL.to_vec()
+    };
+    let cores = sweep::default_jobs();
+
+    let time_run = |jobs: usize| {
+        let t0 = Instant::now();
+        let out = sweep::run(&figs, scale, seed, jobs);
+        (t0.elapsed(), out)
+    };
+
+    // warm-up pass (page cache, allocator) — discarded
+    let _ = time_run(cores);
+
+    let (t_serial, out_serial) = time_run(1);
+    let (t_par, out_par) = time_run(cores);
+
+    assert_eq!(
+        out_serial.render(),
+        out_par.render(),
+        "sweep output must be bit-identical across --jobs values"
+    );
+
+    println!(
+        "sweep/all-figures ({} scale, {} cells):",
+        if paper { "paper" } else { "small" },
+        out_par.cells
+    );
+    println!("  --jobs 1   {:>9.2?}", t_serial);
+    println!("  --jobs {:<3} {:>9.2?}", cores, t_par);
+    println!(
+        "  speedup    {:>8.2}x on {} cores (tables bit-identical)",
+        t_serial.as_secs_f64() / t_par.as_secs_f64(),
+        cores
+    );
+}

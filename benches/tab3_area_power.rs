@@ -6,13 +6,15 @@
 
 use arena::apps::Scale;
 use arena::config::ArenaConfig;
-use arena::eval;
 use arena::power::{area, power, Activity};
+use arena::sweep::{self, Fig};
 
 fn main() {
     let paper = std::env::args().any(|a| a == "--paper");
     let scale = if paper { Scale::Paper } else { Scale::Small };
-    let (at, pt) = eval::fig13(scale, 0xA2EA);
+    let jobs = sweep::default_jobs();
+    let out = sweep::run(&[Fig::F13], scale, 0xA2EA, jobs);
+    let (at, pt) = (&out.tables[0], &out.tables[1]);
     at.print();
     let (w, h) = area(&ArenaConfig::default()).die_mm();
     println!("die {w:.2} mm x {h:.2} mm (paper: 2.19 x 1.24)\n");

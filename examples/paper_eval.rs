@@ -2,12 +2,18 @@
 //! the paper's §5 from one binary and prints the §5.2 headline
 //! comparison. This is the run recorded in EXPERIMENTS.md.
 //!
+//! Runs through the shared sweep path: every figure cell is simulated
+//! once on a worker pool (default: all host cores) and the tables are
+//! assembled deterministically — output is bit-identical to
+//! `--jobs 1`.
+//!
 //!     cargo run --release --example paper_eval            # paper scale
 //!     cargo run --release --example paper_eval -- --small # quick pass
 //!     cargo run --release --example paper_eval -- --fig 10
+//!     cargo run --release --example paper_eval -- --jobs 1
 
 use arena::apps::Scale;
-use arena::eval;
+use arena::sweep::{self, Fig};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -17,59 +23,57 @@ fn main() {
         Scale::Paper
     };
     let seed = 0xA2EA;
-    let only = args
-        .iter()
-        .position(|a| a == "--fig")
-        .and_then(|i| args.get(i + 1))
-        .cloned();
+    let arg_after = |flag: &str| {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let only = arg_after("--fig");
+    let jobs = arg_after("--jobs")
+        .and_then(|j| j.parse::<usize>().ok())
+        .unwrap_or_else(sweep::default_jobs);
     let want = |f: &str| only.as_deref().map(|o| o == f).unwrap_or(true);
 
     println!(
-        "== ARENA paper evaluation ({} scale, seed {seed:#x}) ==\n",
+        "== ARENA paper evaluation ({} scale, seed {seed:#x}, {jobs} jobs) ==\n",
         if scale == Scale::Paper { "paper" } else { "small" }
     );
 
-    if want("9") {
-        let (cc, ar) = eval::fig9(scale, seed);
-        cc.print();
-        println!();
-        ar.print();
-        println!(
-            "paper: avg 4.87x (compute-centric) vs 7.82x (ARENA) @16 nodes\n"
-        );
+    let figs: Vec<Fig> = Fig::ALL
+        .iter()
+        .copied()
+        .filter(|f| want(f.label()))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let out = sweep::run(&figs, scale, seed, jobs);
+    let elapsed = t0.elapsed();
+
+    // paper reference lines, printed after each figure's table(s)
+    let annotation = |f: Fig| match f {
+        Fig::F9 => "paper: avg 4.87x (compute-centric) vs 7.82x (ARENA) @16 nodes\n",
+        Fig::F10 => "paper: 53.9% average movement reduction @4 nodes\n",
+        Fig::F11 => "paper: avg 10.06x (compute-centric+CGRA) vs 21.29x (ARENA) @16\n",
+        Fig::F12 => "paper: avg 1.3x / 2.4x / 3.5x; DNA capped at ~1.7x\n",
+        Fig::F13 => "paper: 2.93 mm² @45 nm, 800 MHz, 759.8 mW average\n",
+    };
+    let tables_per_fig = |f: Fig| match f {
+        Fig::F9 | Fig::F11 | Fig::F13 => 2,
+        Fig::F10 | Fig::F12 => 1,
+    };
+    let mut at = 0;
+    for &f in &figs {
+        for _ in 0..tables_per_fig(f) {
+            out.tables[at].print();
+            println!();
+            at += 1;
+        }
+        println!("{}", annotation(f));
     }
-    if want("10") {
-        let t = eval::fig10(scale, seed);
-        t.print();
-        println!("paper: 53.9% average movement reduction @4 nodes\n");
-    }
-    if want("11") {
-        let (cc, ar) = eval::fig11(scale, seed);
-        cc.print();
-        println!();
-        ar.print();
-        println!(
-            "paper: avg 10.06x (compute-centric+CGRA) vs 21.29x (ARENA) @16\n"
-        );
-    }
-    if want("12") {
-        eval::fig12().print();
-        println!("paper: avg 1.3x / 2.4x / 3.5x; DNA capped at ~1.7x\n");
-    }
-    if want("13") {
-        let (at, pt) = eval::fig13(scale, seed);
-        at.print();
-        println!();
-        pt.print();
-        println!("paper: 2.93 mm² @45 nm, 800 MHz, 759.8 mW average\n");
-    }
-    if only.is_none() {
-        let h = eval::headline(scale, seed);
+
+    if let Some(h) = out.headline {
         println!("== §5.2 headline ==");
-        println!(
-            "{:<34} {:>8} {:>8}",
-            "metric", "paper", "here"
-        );
+        println!("{:<34} {:>8} {:>8}", "metric", "paper", "here");
         println!(
             "{:<34} {:>8} {:>7.2}x",
             "ARENA/CC software ratio @16", "1.61x", h.sw_ratio_16
@@ -87,4 +91,10 @@ fn main() {
             "movement reduction @4", "53.9%", 100.0 * h.movement_reduction
         );
     }
+    eprintln!(
+        "\nsweep: {} unique cells on {} worker(s) in {:.2}s",
+        out.cells,
+        out.workers,
+        elapsed.as_secs_f64()
+    );
 }

@@ -81,11 +81,36 @@ impl TaskRegistry {
     /// Insert a fully specified entry (used by the cluster to merge
     /// per-app registries).
     pub fn register_entry(&mut self, e: TaskEntry) {
-        assert!(e.id != crate::token::TERMINATE, "task id 0 is TERMINATE");
-        assert!(e.id < 16, "task ids are 4-bit on the wire");
+        if let Err(msg) = self.try_register_entry(e) {
+            panic!("{msg}");
+        }
+    }
+
+    /// Fallible registration: rejects the reserved TERMINATE id, ids
+    /// outside the 4-bit wire field, and duplicates. The cluster uses
+    /// this path to attach app context to the error instead of dying on
+    /// a bare assert (or, pre-fix, silently clobbering the first app's
+    /// entry and routing its tokens to the wrong partition).
+    pub fn try_register_entry(&mut self, e: TaskEntry) -> Result<(), String> {
+        if e.id == crate::token::TERMINATE {
+            return Err(format!(
+                "task id {} is TERMINATE (id 0 is reserved)",
+                e.id
+            ));
+        }
+        if e.id >= 16 {
+            return Err(format!(
+                "task id {} out of range: task ids are 4-bit on the wire \
+                 (0..=15, 0 reserved)",
+                e.id
+            ));
+        }
         let id = e.id;
-        let prev = self.entries.insert(id, e);
-        assert!(prev.is_none(), "task id {id} registered twice");
+        if self.entries.contains_key(&id) {
+            return Err(format!("task id {id} registered twice"));
+        }
+        self.entries.insert(id, e);
+        Ok(())
     }
 
     pub fn get(&self, id: TaskId) -> Option<&TaskEntry> {
@@ -195,7 +220,11 @@ impl<'a> ExecCtx<'a> {
 
 /// A complete ARENA application: registration, data distribution, root
 /// tasks, per-token execution, and a serial-oracle check.
-pub trait App {
+///
+/// `Send` is a supertrait so a whole [`crate::cluster::Cluster`] can be
+/// handed to a sweep worker thread (`arena sweep --jobs N`); app state
+/// is plain owned data, so every in-tree app satisfies it for free.
+pub trait App: Send {
     fn name(&self) -> &'static str;
 
     /// Size of the app's private global address space, in data words.

@@ -28,7 +28,8 @@ use crate::sim::Engine as Des;
 use crate::token::{Range, TaskId, TaskToken, WIRE_BYTES};
 
 /// Which substrate executes tasks (the two ARENA rows of Figs. 9/11).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// (`Ord`/`Hash` so sweep job keys can be sorted and memoized.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Model {
     /// ARENA runtime realized in software on CPU nodes.
     SoftwareCpu,
@@ -92,13 +93,23 @@ impl RunReport {
         self.ring.token_hops * WIRE_BYTES
     }
 
-    /// Bulk data movement in byte-hops (Fig. 10 "data" bars).
+    /// Bulk data movement in byte-hops (Fig. 10 "data" bars). Excludes
+    /// the 21-byte DTN fetch requests, which are control traffic — see
+    /// [`Self::control_movement_bytes`].
     pub fn data_movement_bytes(&self) -> u64 {
         self.ring.data_byte_hops
     }
 
+    /// DTN control-message traffic in byte-hops (fetch round-trip
+    /// requests). Previously mis-booked into the data counters.
+    pub fn control_movement_bytes(&self) -> u64 {
+        self.ring.ctrl_byte_hops
+    }
+
     pub fn total_movement_bytes(&self) -> u64 {
-        self.task_movement_bytes() + self.data_movement_bytes()
+        self.task_movement_bytes()
+            + self.data_movement_bytes()
+            + self.control_movement_bytes()
     }
 
     /// Coefficient of variation of per-node work (0 = perfect balance).
@@ -158,11 +169,36 @@ impl Cluster {
             (0..16).map(|_| None).collect();
         let mut parts = Vec::with_capacity(apps.len());
         let mut apps = apps;
+        let app_names: Vec<&'static str> =
+            apps.iter().map(|a| a.name()).collect();
+        let mut owner_of_id: std::collections::BTreeMap<TaskId, usize> =
+            std::collections::BTreeMap::new();
         for (ai, app) in apps.iter_mut().enumerate() {
             let mut local = TaskRegistry::new();
             app.register(&mut local);
             for e in local.iter() {
-                registry.register_entry(e.clone());
+                // Validate before touching the direct-indexed table: a
+                // clash between two apps used to silently clobber the
+                // first app's KernelInfo (routing its tokens into the
+                // second app's partition). Cross-app clashes name both
+                // apps; reserved/out-of-range ids get the registry's
+                // canonical error with the offending app attached.
+                if let Some(&prev) = owner_of_id.get(&e.id) {
+                    panic!(
+                        "task id {} registered by both app '{}' and app \
+                         '{}' — concurrently loaded apps need disjoint \
+                         task ids (use with_base_id)",
+                        e.id, app_names[prev], app_names[ai]
+                    );
+                }
+                registry
+                    .try_register_entry(e.clone())
+                    .unwrap_or_else(|msg| {
+                        panic!("app '{}': {msg}", app_names[ai])
+                    });
+                // the registry accepted the id, so 1..=15 holds and the
+                // direct index below cannot go out of bounds
+                owner_of_id.insert(e.id, ai);
                 let spec = kernel_for(e.kernel);
                 kernels[e.id as usize] = Some(KernelInfo {
                     app_idx: ai,
@@ -205,7 +241,16 @@ impl Cluster {
     /// Kernel info for a registered task id (hot-path lookup).
     #[inline]
     fn kernel(&self, id: TaskId) -> &KernelInfo {
-        self.kernels[id as usize].as_ref().expect("unregistered task id")
+        self.kernels
+            .get(id as usize)
+            .unwrap_or_else(|| {
+                panic!(
+                    "token carries task id {id}, outside the 4-bit wire \
+                     range (1..=15)"
+                )
+            })
+            .as_ref()
+            .unwrap_or_else(|| panic!("unregistered task id {id}"))
     }
 
     /// Local data range of `node` for the app owning `task_id`.
@@ -226,7 +271,9 @@ impl Cluster {
     /// Run every app to quiescence. Returns one report per app plus the
     /// shared infrastructure counters (ring, queues) in each.
     pub fn run(&mut self, mut engine: Option<&mut Engine>) -> RunReport {
-        let mut des: Des<Ev> = Des::new();
+        // slab sized for the common peak (a few events per node); grows
+        // transparently for token floods
+        let mut des: Des<Ev> = Des::with_capacity(64 * self.nodes.len());
         let mut pump_pending = vec![false; self.nodes.len()];
 
         // Leader start-up: inject every root token at node 0, then the
@@ -395,13 +442,14 @@ impl Cluster {
         progress |= self.try_launch(des, now, n, engine);
 
         // forward everything queued for the next hop; the link model
-        // serializes back-to-back sends.
+        // serializes back-to-back sends. TERMINATE never transits the
+        // send queue (the runtime handles it out-of-band in
+        // finish_terminate), so lap accounting lives there alone —
+        // this drain used to double-count probes at a second site.
         while let Some(t) = self.nodes[n].disp.send.pop() {
+            debug_assert!(!t.is_terminate(), "TERMINATE in the send queue");
             let at = self.ring.send_token(&self.cfg, now, n);
             let next = self.ring.next_hop(n);
-            if t.is_terminate() && next == 0 {
-                self.terminate_laps += 1;
-            }
             des.schedule_at(at, Ev::Arrive(next, t));
             progress = true;
         }
@@ -428,19 +476,26 @@ impl Cluster {
 
     /// TERMINATE handled at a quiescent node: count the pass, forward
     /// the probe, exit on the second consecutive clean pass.
+    ///
+    /// `terminate_laps` counts *completed circulations*: the probe
+    /// crossing the wrap-around link back to node 0. The increment sits
+    /// inside the forwarding branch — when the fully-exited ring
+    /// swallows the probe it never reaches node 0 and no lap is
+    /// counted. (It used to count on `next == 0` even for the swallowed
+    /// probe, and a second site in the send-queue drain could count the
+    /// same probe again: laps were over-reported by one or more.)
     fn finish_terminate(&mut self, des: &mut Des<Ev>, now: Ps, n: usize) {
         let exits = self.nodes[n].terminate_step();
+        if exits && self.nodes.iter().all(|nd| nd.done) {
+            // the last node swallows the probe so the DES can drain
+            return;
+        }
         let at = self.ring.send_token(&self.cfg, now, n);
         let next = self.ring.next_hop(n);
         if next == 0 {
             self.terminate_laps += 1;
         }
-        if !(exits && self.nodes.iter().all(|nd| nd.done)) {
-            // forward unless the whole ring has exited (the last node
-            // swallows the probe so the DES can drain).
-            des.schedule_at(at, Ev::Arrive(next, TaskToken::terminate()));
-        }
-        let _ = exits;
+        des.schedule_at(at, Ev::Arrive(next, TaskToken::terminate()));
     }
 
     /// Steps (3)-(5): resource check, remote acquire, launch.
@@ -554,7 +609,8 @@ impl Cluster {
                 return now;
             }
             let words = tok.remote.len() as u64;
-            let req_at = self.ring.send_data(&self.cfg, now, n, src, WIRE_BYTES);
+            // request header is control traffic, the payload is data
+            let req_at = self.ring.send_ctrl(&self.cfg, now, n, src, WIRE_BYTES);
             return self.ring.send_data(&self.cfg, req_at, src, n, words * WORD_BYTES);
         }
         let parts = &self.parts[info.app_idx];
@@ -565,8 +621,8 @@ impl Cluster {
             let end = tok.remote.end.min(parts[owner].end);
             let words = (end - at) as u64;
             if owner != n {
-                // request message out, payload back.
-                let req_at = self.ring.send_data(&self.cfg, now, n, owner, WIRE_BYTES);
+                // request message out (control), payload back (data).
+                let req_at = self.ring.send_ctrl(&self.cfg, now, n, owner, WIRE_BYTES);
                 let got = self.ring.send_data(
                     &self.cfg,
                     req_at,
@@ -803,9 +859,31 @@ mod tests {
         assert_eq!(a.ring, b.ring);
     }
 
+    /// Lap-accounting regression (unified counting): for a single-wave
+    /// workload (no echoes, so no second wave of work) the probe makes
+    /// exactly two circulations — one where every node records its
+    /// first clean pass, and a second where every node exits. Only the
+    /// first crosses the wrap-around link back to node 0 (the second is
+    /// swallowed by the last exiting node), so the count is exactly 1
+    /// for every ring size. The old double-site accounting reported
+    /// 2-3.
     #[test]
-    fn terminate_takes_at_least_two_laps() {
-        let r = run(4, Model::SoftwareCpu, false);
+    fn terminate_laps_exact_for_single_wave() {
+        for nodes in [1, 2, 4] {
+            let r = run(nodes, Model::SoftwareCpu, false);
+            assert_eq!(
+                r.terminate_laps, 1,
+                "{nodes} nodes: laps={}",
+                r.terminate_laps
+            );
+        }
+    }
+
+    #[test]
+    fn terminate_laps_grow_with_late_work() {
+        // echoes spawn a second wave after the probe's first pass, so
+        // the probe needs at least one extra circulation.
+        let r = run(4, Model::SoftwareCpu, true);
         assert!(r.terminate_laps >= 2, "laps={}", r.terminate_laps);
     }
 
@@ -874,6 +952,98 @@ mod tests {
         assert!(r.remote_fetches > 0);
         assert!(r.remote_bytes > 0);
         assert!(r.ring.data_byte_hops > 0, "payloads moved on the DTN");
+        // fetch requests are control traffic, not data: one 21-byte
+        // request per payload message, booked separately.
+        assert_eq!(r.ring.ctrl_msgs, r.ring.data_msgs);
+        assert_eq!(r.ring.ctrl_bytes, r.ring.ctrl_msgs * WIRE_BYTES);
+        assert_eq!(r.ring.data_bytes, r.remote_bytes);
+        assert!(r.control_movement_bytes() > 0);
+        assert!(
+            r.control_movement_bytes() < r.data_movement_bytes(),
+            "requests must not dominate payloads"
+        );
+    }
+
+    /// Every mirrored fetch in RemoteReader resolves to remote owners,
+    /// so payload data counters carry only payload bytes — the old
+    /// booking added 21 request bytes per fetch into `data_bytes`.
+    #[test]
+    fn fetch_requests_not_counted_as_data() {
+        let cfg = ArenaConfig::default().with_nodes(4);
+        let mut cl = Cluster::new(
+            cfg,
+            Model::SoftwareCpu,
+            vec![Box::new(RemoteReader { words: 1024, state: vec![0; 1024] })],
+        );
+        let r = cl.run(None);
+        cl.check().unwrap();
+        // payload byte accounting is exact: fetched words * 4 bytes
+        assert_eq!(r.ring.data_bytes, r.remote_bytes);
+        assert_eq!(r.ring.ctrl_bytes % WIRE_BYTES, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered by both app")]
+    fn duplicate_task_id_across_apps_is_rejected() {
+        let cfg = ArenaConfig::default().with_nodes(2);
+        // both apps default to task id 1 (+2 for echoes): a clash
+        let _ = Cluster::new(
+            cfg,
+            Model::SoftwareCpu,
+            vec![
+                Box::new(TouchAll::new(64, false)),
+                Box::new(TouchAll::new(64, false)),
+            ],
+        );
+    }
+
+    /// App that registers an id outside the 4-bit wire field.
+    struct BadIdApp;
+    impl App for BadIdApp {
+        fn name(&self) -> &'static str {
+            "bad-id"
+        }
+        fn words(&self) -> u32 {
+            16
+        }
+        fn register(&self, reg: &mut TaskRegistry) {
+            reg.register(9, "spmv", true);
+        }
+        fn init(&mut self, _cfg: &ArenaConfig, _parts: &[Range]) {}
+        fn root_tokens(&self) -> Vec<TaskToken> {
+            // a token with a task id the 4-bit wire field cannot carry
+            vec![TaskToken::new(20, Range::new(0, 16), 0.0)]
+        }
+        fn execute(
+            &mut self,
+            _node: usize,
+            _tok: &TaskToken,
+            _ctx: &mut ExecCtx,
+        ) -> Exec {
+            Exec::default()
+        }
+        fn total_units(&self) -> u64 {
+            0
+        }
+        fn check(&self) -> Result<(), String> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the 4-bit wire range")]
+    fn oversized_token_id_is_a_clear_error() {
+        let cfg = ArenaConfig::default().with_nodes(2);
+        let mut cl = Cluster::new(cfg, Model::SoftwareCpu, vec![Box::new(BadIdApp)]);
+        let _ = cl.run(None);
+    }
+
+    /// Sweep workers move whole clusters and reports across threads.
+    #[test]
+    fn cluster_and_report_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<Cluster>();
+        assert_send::<RunReport>();
     }
 
     #[test]

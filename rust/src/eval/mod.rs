@@ -6,12 +6,12 @@
 //! numbers in EXPERIMENTS.md come from exactly one code path.
 
 use crate::apps::{make_app, Scale, ALL};
-use crate::baseline::{run_bsp, serial_ps};
 use crate::cluster::{Cluster, Model, RunReport};
 use crate::config::ArenaConfig;
 use crate::mapper::kernels::kernel_for;
 use crate::power::{area, power, Activity};
 use crate::runtime::Engine;
+use crate::sweep::CellStore;
 
 /// Node counts evaluated in the paper's scalability figures.
 pub const NODE_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
@@ -117,6 +117,13 @@ pub fn run_arena(
 /// a serial single-node run, for 1..16 nodes.
 /// Returns (compute-centric table, ARENA table).
 pub fn fig9(scale: Scale, seed: u64) -> (Table, Table) {
+    fig9_with(&mut CellStore::new(scale, seed))
+}
+
+/// Fig. 9 assembled from a (possibly pre-filled) cell store — the
+/// sweep path. Baselines and runs are memoized in the store, so the
+/// cells shared with Figs. 10/11 and the headline compute once.
+pub fn fig9_with(store: &mut CellStore) -> (Table, Table) {
     let headers: Vec<String> =
         NODE_SWEEP.iter().map(|n| format!("{n}n")).collect();
     let href: Vec<&str> = headers.iter().map(String::as_str).collect();
@@ -129,16 +136,14 @@ pub fn fig9(scale: Scale, seed: u64) -> (Table, Table) {
         &href,
     );
     for app in ALL {
-        let serial =
-            serial_ps(app, scale, seed, &ArenaConfig::default()) as f64;
+        let serial = store.serial_ps(app) as f64;
         let mut ccv = Vec::new();
         let mut arv = Vec::new();
         for &n in &NODE_SWEEP {
-            let cfg = ArenaConfig::default().with_nodes(n);
-            let bsp = run_bsp(app, scale, seed, &cfg, false);
-            ccv.push(serial / bsp.makespan_ps as f64);
-            let r = run_arena(app, scale, seed, n, Model::SoftwareCpu, None);
-            arv.push(serial / r.makespan_ps as f64);
+            let bsp = store.bsp(app, n, false).makespan_ps;
+            ccv.push(serial / bsp as f64);
+            let mk = store.arena(app, n, Model::SoftwareCpu).makespan_ps;
+            arv.push(serial / mk as f64);
         }
         cc.row(app, ccv);
         ar.row(app, arv);
@@ -151,19 +156,31 @@ pub fn fig9(scale: Scale, seed: u64) -> (Table, Table) {
 /// Columns: task movement, bulk data movement, total (all normalized to
 /// the compute-centric total = 1.0).
 pub fn fig10(scale: Scale, seed: u64) -> Table {
+    fig10_with(&mut CellStore::new(scale, seed))
+}
+
+/// Fig. 10 from the cell store (shares the 4-node arena-sw runs with
+/// Fig. 9). The paper's bars are task and bulk-data movement; the DTN
+/// fetch-request round-trips are broken out as a `ctrl` column (they
+/// used to be mis-booked into `data`), and `total` includes all three
+/// so it agrees with [`RunReport::total_movement_bytes`].
+pub fn fig10_with(store: &mut CellStore) -> Table {
     let nodes = 4;
     let mut t = Table::new(
         "Fig 10 — ARENA movement (normalized to compute-centric total), 4 nodes",
-        &["task", "data", "total"],
+        &["task", "data", "ctrl", "total"],
     );
     for app in ALL {
-        let cfg = ArenaConfig::default().with_nodes(nodes);
-        let bsp = run_bsp(app, scale, seed, &cfg, false);
-        let r = run_arena(app, scale, seed, nodes, Model::SoftwareCpu, None);
-        let base = bsp.data_movement_bytes.max(1) as f64;
-        let task = r.task_movement_bytes() as f64 / base;
-        let data = r.data_movement_bytes() as f64 / base;
-        t.row(app, vec![task, data, task + data]);
+        let base = store.bsp(app, nodes, false).data_movement_bytes.max(1) as f64;
+        let (task, data, ctrl) = {
+            let r = store.arena(app, nodes, Model::SoftwareCpu);
+            (
+                r.task_movement_bytes() as f64 / base,
+                r.data_movement_bytes() as f64 / base,
+                r.control_movement_bytes() as f64 / base,
+            )
+        };
+        t.row(app, vec![task, data, ctrl, task + data + ctrl]);
     }
     t
 }
@@ -172,6 +189,11 @@ pub fn fig10(scale: Scale, seed: u64) -> Table {
 /// statically-configured CGRA vs ARENA with runtime reconfiguration)
 /// over serial CPU, 1..16 nodes.
 pub fn fig11(scale: Scale, seed: u64) -> (Table, Table) {
+    fig11_with(&mut CellStore::new(scale, seed))
+}
+
+/// Fig. 11 from the cell store.
+pub fn fig11_with(store: &mut CellStore) -> (Table, Table) {
     let headers: Vec<String> =
         NODE_SWEEP.iter().map(|n| format!("{n}n")).collect();
     let href: Vec<&str> = headers.iter().map(String::as_str).collect();
@@ -184,16 +206,14 @@ pub fn fig11(scale: Scale, seed: u64) -> (Table, Table) {
         &href,
     );
     for app in ALL {
-        let serial =
-            serial_ps(app, scale, seed, &ArenaConfig::default()) as f64;
+        let serial = store.serial_ps(app) as f64;
         let mut ccv = Vec::new();
         let mut arv = Vec::new();
         for &n in &NODE_SWEEP {
-            let cfg = ArenaConfig::default().with_nodes(n);
-            let bsp = run_bsp(app, scale, seed, &cfg, true);
-            ccv.push(serial / bsp.makespan_ps as f64);
-            let r = run_arena(app, scale, seed, n, Model::Cgra, None);
-            arv.push(serial / r.makespan_ps as f64);
+            let bsp = store.bsp(app, n, true).makespan_ps;
+            ccv.push(serial / bsp as f64);
+            let mk = store.arena(app, n, Model::Cgra).makespan_ps;
+            arv.push(serial / mk as f64);
         }
         cc.row(app, ccv);
         ar.row(app, arv);
@@ -230,6 +250,12 @@ pub fn fig12() -> Table {
 /// Fig. 13 / §5.3 — per-node area (mm²) and per-app average power (mW)
 /// from activity-scaled simulation runs.
 pub fn fig13(scale: Scale, seed: u64) -> (Table, Table) {
+    fig13_with(&mut CellStore::new(scale, seed))
+}
+
+/// Fig. 13 from the cell store (shares the 4-node arena-cgra runs with
+/// Fig. 11).
+pub fn fig13_with(store: &mut CellStore) -> (Table, Table) {
     let cfg = ArenaConfig::default();
     let a = area(&cfg);
     let mut at = Table::new("Fig 13a — node area breakdown (mm²)", &["mm2"]);
@@ -246,9 +272,12 @@ pub fn fig13(scale: Scale, seed: u64) -> (Table, Table) {
     );
     for app in ALL {
         let c4 = ArenaConfig::default().with_nodes(4);
-        let r = run_arena(app, scale, seed, 4, Model::Cgra, None);
-        let act = Activity::from_report(&r, &c4);
-        pt.row(app, vec![power(&c4, &act).total()]);
+        let total = {
+            let r = store.arena(app, 4, Model::Cgra);
+            let act = Activity::from_report(r, &c4);
+            power(&c4, &act).total()
+        };
+        pt.row(app, vec![total]);
     }
     let avg = pt.mean_row()[0];
     pt.row("average", vec![avg]);
@@ -269,15 +298,22 @@ pub struct Headline {
 }
 
 pub fn headline(scale: Scale, seed: u64) -> Headline {
-    let (cc9, ar9) = fig9(scale, seed);
-    let (cc11, ar11) = fig11(scale, seed);
-    let m10 = fig10(scale, seed);
+    headline_with(&mut CellStore::new(scale, seed))
+}
+
+/// Headline ratios from the cell store. With a pre-filled store this
+/// re-reads the Fig. 9/10/11 cells instead of re-simulating all three
+/// figures (the pre-sweep harness tripled the work of `fig all`).
+pub fn headline_with(store: &mut CellStore) -> Headline {
+    let (cc9, ar9) = fig9_with(store);
+    let (cc11, ar11) = fig11_with(store);
+    let m10 = fig10_with(store);
     let last = NODE_SWEEP.len() - 1;
     let sw_cc = cc9.mean_row()[last];
     let sw_ar = ar9.mean_row()[last];
     let hw_cc = cc11.mean_row()[last];
     let hw_ar = ar11.mean_row()[last];
-    let total_norm = m10.mean_row()[2];
+    let total_norm = m10.mean_row()[3]; // task + data + ctrl
     Headline {
         sw_ratio_16: sw_ar / sw_cc,
         cgra_ratio_16: hw_ar / hw_cc,
@@ -326,10 +362,13 @@ mod tests {
         let t = fig10(Scale::Small, 7);
         let m = t.mean_row();
         assert!(
-            m[2] < 1.0,
+            m[3] < 1.0,
             "ARENA must move less than compute-centric: {:.2}",
-            m[2]
+            m[3]
         );
+        // control round-trips are broken out, not hidden in data
+        assert!(m[2] >= 0.0);
+        assert!((m[0] + m[1] + m[2] - m[3]).abs() < 1e-12, "total = sum");
     }
 
     #[test]

@@ -36,5 +36,6 @@ pub mod proptest_lite;
 pub mod ring;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod token;
 pub mod util;

@@ -21,6 +21,7 @@ use arena::cluster::{Model, RunReport};
 use arena::config::ArenaConfig;
 use arena::eval;
 use arena::runtime::Engine;
+use arena::sweep;
 
 const USAGE: &str = "\
 usage: arena <command> [options]
@@ -29,6 +30,9 @@ commands:
   run     --app <name> --model <model> [--nodes N] [--scale small|paper]
           [--seed S] [--engine] [--config FILE] [--set k=v ...]
   fig     <9|10|11|12|13|all> [--scale small|paper] [--seed S]
+  sweep   [--all | 9 10 11 12 13] [--jobs N] [--scale small|paper]
+          [--seed S]   regenerate figures on a worker pool; output is
+          bit-identical for every --jobs value
   apps    list applications and models
   config  [--config FILE] [--set k=v ...]   print effective config
 
@@ -39,7 +43,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cli::parse(
         &argv,
-        &["app", "model", "nodes", "scale", "seed", "config", "fig"],
+        &["app", "model", "nodes", "scale", "seed", "config", "fig", "jobs"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -50,6 +54,7 @@ fn main() {
     let code = match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("fig") => cmd_fig(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("apps") => {
             println!("applications: {}", ALL.join(" "));
             println!("models: arena-cgra arena-sw bsp-cpu bsp-cgra serial");
@@ -229,6 +234,59 @@ fn cmd_run(args: &cli::Args) -> i32 {
     }
 }
 
+fn cmd_sweep(args: &cli::Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let scale = scale_of(args)?;
+        let seed = args
+            .parse_opt::<u64>("seed")
+            .map_err(|e| e.to_string())?
+            .unwrap_or(0xA2EA);
+        let jobs = match args.parse_opt::<usize>("jobs").map_err(|e| e.to_string())? {
+            Some(0) => return Err("--jobs must be >= 1".into()),
+            Some(n) => n,
+            None => sweep::default_jobs(),
+        };
+        let figs: Vec<sweep::Fig> =
+            if args.flag("all") || args.positional.is_empty() {
+                sweep::Fig::ALL.to_vec()
+            } else {
+                args.positional
+                    .iter()
+                    .map(|p| {
+                        sweep::Fig::parse(p).ok_or_else(|| {
+                            format!("unknown figure '{p}' (9|10|11|12|13)")
+                        })
+                    })
+                    .collect::<Result<_, _>>()?
+            };
+        let t0 = std::time::Instant::now();
+        let out = sweep::run(&figs, scale, seed, jobs);
+        print!("{}", out.render());
+        if let Some(h) = out.headline {
+            println!("## §5.2 headline (paper: 1.61x / 2.17x / 4.37x / 53.9%)");
+            println!("sw ratio @16       {:.2}x", h.sw_ratio_16);
+            println!("cgra ratio @16     {:.2}x", h.cgra_ratio_16);
+            println!("overall @16        {:.2}x", h.overall_ratio_16);
+            println!("movement reduction {:.1}%", 100.0 * h.movement_reduction);
+            println!();
+        }
+        eprintln!(
+            "sweep: {} unique cells on {} worker(s) in {:.2}s",
+            out.cells,
+            out.workers,
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            2
+        }
+    }
+}
+
 fn cmd_fig(args: &cli::Args) -> i32 {
     let run = || -> Result<(), String> {
         let scale = scale_of(args)?;
@@ -243,16 +301,19 @@ fn cmd_fig(args: &cli::Args) -> i32 {
             .or(args.opt("fig"))
             .unwrap_or("all");
         let all = which == "all";
+        // one shared store so `fig all` computes each cell once (the
+        // headline used to re-simulate figs 9-11 from scratch)
+        let mut store = sweep::CellStore::new(scale, seed);
         if all || which == "9" {
-            let (cc, ar) = eval::fig9(scale, seed);
+            let (cc, ar) = eval::fig9_with(&mut store);
             cc.print();
             ar.print();
         }
         if all || which == "10" {
-            eval::fig10(scale, seed).print();
+            eval::fig10_with(&mut store).print();
         }
         if all || which == "11" {
-            let (cc, ar) = eval::fig11(scale, seed);
+            let (cc, ar) = eval::fig11_with(&mut store);
             cc.print();
             ar.print();
         }
@@ -260,12 +321,12 @@ fn cmd_fig(args: &cli::Args) -> i32 {
             eval::fig12().print();
         }
         if all || which == "13" {
-            let (at, pt) = eval::fig13(scale, seed);
+            let (at, pt) = eval::fig13_with(&mut store);
             at.print();
             pt.print();
         }
         if all {
-            let h = eval::headline(scale, seed);
+            let h = eval::headline_with(&mut store);
             println!("## §5.2 headline (paper: 1.61x / 2.17x / 4.37x / 53.9%)");
             println!("sw ratio @16       {:.2}x", h.sw_ratio_16);
             println!("cgra ratio @16     {:.2}x", h.cgra_ratio_16);

@@ -124,6 +124,107 @@ fn tensor_spec(j: &Json, ctx: &str) -> Result<TensorSpec, ManifestError> {
 }
 
 impl Manifest {
+    /// The baked-in artifact contract: exactly the shapes
+    /// `python/compile/model.py` exports (its `ARTIFACTS` table). Used
+    /// when no `artifacts/` directory has been generated — the runtime
+    /// then executes the contract with host-reference kernels, so the
+    /// full stack works out of the box in environments without JAX.
+    pub fn builtin() -> Manifest {
+        fn f32s(shape: &[usize]) -> TensorSpec {
+            TensorSpec { dtype: DType::F32, shape: shape.to_vec() }
+        }
+        fn i32s(shape: &[usize]) -> TensorSpec {
+            TensorSpec { dtype: DType::I32, shape: shape.to_vec() }
+        }
+        let table: &[(&str, Vec<TensorSpec>, Vec<TensorSpec>)] = &[
+            (
+                "axpy",
+                vec![f32s(&[1]), f32s(&[1024]), f32s(&[1024])],
+                vec![f32s(&[1024])],
+            ),
+            (
+                "gemm64",
+                vec![f32s(&[64, 64]), f32s(&[64, 64])],
+                vec![f32s(&[64, 64])],
+            ),
+            (
+                "gemm128",
+                vec![f32s(&[128, 128]), f32s(&[128, 128])],
+                vec![f32s(&[128, 128])],
+            ),
+            (
+                "spmv",
+                vec![f32s(&[64, 16]), i32s(&[64, 16]), f32s(&[256])],
+                vec![f32s(&[64])],
+            ),
+            (
+                "nw64",
+                vec![i32s(&[64]), i32s(&[64]), f32s(&[65]), f32s(&[65])],
+                vec![f32s(&[65, 65])],
+            ),
+            (
+                "gcn_l1",
+                vec![f32s(&[64, 512]), f32s(&[512, 128]), f32s(&[128, 32])],
+                vec![f32s(&[64, 32])],
+            ),
+            (
+                "gcn_l2",
+                vec![f32s(&[64, 512]), f32s(&[512, 32]), f32s(&[32, 8])],
+                vec![f32s(&[64, 8])],
+            ),
+            (
+                "nbody",
+                vec![f32s(&[64, 4]), f32s(&[256, 4])],
+                vec![f32s(&[64, 4])],
+            ),
+            (
+                "nbody_step",
+                vec![f32s(&[64, 4]), f32s(&[64, 4])],
+                vec![f32s(&[64, 4]), f32s(&[64, 4])],
+            ),
+            (
+                "bfs",
+                vec![f32s(&[64, 256]), f32s(&[256])],
+                vec![f32s(&[64])],
+            ),
+        ];
+        let dir = PathBuf::from("<builtin>");
+        let mut m = Manifest { dir: dir.clone(), ..Default::default() };
+        for (name, inputs, outputs) in table {
+            m.artifacts.insert(
+                name.to_string(),
+                ArtifactSpec {
+                    name: name.to_string(),
+                    file: dir.join(format!("{name}.hlo.txt")),
+                    inputs: inputs.clone(),
+                    outputs: outputs.clone(),
+                    sha256: String::new(),
+                },
+            );
+        }
+        // python/compile/model.py MANIFEST_CONSTANTS
+        for (k, v) in [
+            ("nw_match", 1.0),
+            ("nw_mismatch", -1.0),
+            ("nw_gap", -1.0),
+            ("nbody_eps", 1e-2),
+            ("nbody_dt", 1e-2),
+        ] {
+            m.constants.insert(k.to_string(), v);
+        }
+        m
+    }
+
+    /// Load `dir/manifest.json` when present, else fall back to the
+    /// [`Self::builtin`] contract (no artifacts generated yet).
+    pub fn load_or_builtin(dir: &Path) -> Result<Manifest, ManifestError> {
+        if dir.join("manifest.json").exists() {
+            Manifest::load(dir)
+        } else {
+            Ok(Manifest::builtin())
+        }
+    }
+
     /// Load and validate `dir/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
         let path = dir.join("manifest.json");
@@ -217,12 +318,14 @@ mod tests {
 
     #[test]
     fn loads_repo_manifest() {
-        let m = Manifest::load(&default_dir()).expect("manifest loads");
+        // disk manifest when `make artifacts` ran, builtin otherwise —
+        // either way the full artifact set must be described.
+        let m = Manifest::load_or_builtin(&default_dir())
+            .expect("manifest loads");
         assert!(m.artifacts.len() >= 8, "expected the full artifact set");
         for name in ["axpy", "gemm64", "gemm128", "spmv", "bfs", "nw64",
                      "gcn_l1", "gcn_l2", "nbody", "nbody_step"] {
             let a = m.get(name).unwrap_or_else(|| panic!("missing {name}"));
-            assert!(a.file.exists(), "{name}: {} missing", a.file.display());
             assert!(!a.inputs.is_empty());
             assert!(!a.outputs.is_empty());
         }
@@ -230,7 +333,7 @@ mod tests {
 
     #[test]
     fn manifest_shapes_match_kernel_contract() {
-        let m = Manifest::load(&default_dir()).unwrap();
+        let m = Manifest::load_or_builtin(&default_dir()).unwrap();
         let gemm = m.get("gemm64").unwrap();
         assert_eq!(gemm.inputs[0].shape, vec![64, 64]);
         assert_eq!(gemm.outputs[0].shape, vec![64, 64]);
@@ -244,10 +347,23 @@ mod tests {
 
     #[test]
     fn constants_present() {
-        let m = Manifest::load(&default_dir()).unwrap();
+        let m = Manifest::load_or_builtin(&default_dir()).unwrap();
         for k in ["nbody_dt", "nbody_eps", "nw_gap", "nw_match"] {
             assert!(m.constant(k).is_some(), "missing constant {k}");
         }
+    }
+
+    #[test]
+    fn builtin_matches_python_export_table() {
+        // the baked-in contract mirrors python/compile/model.py ARTIFACTS
+        let m = Manifest::builtin();
+        assert_eq!(m.artifacts.len(), 10);
+        let nw = m.get("nw64").unwrap();
+        assert_eq!(nw.inputs[0].dtype, DType::I32);
+        assert_eq!(nw.inputs[2].shape, vec![65]);
+        assert_eq!(nw.outputs[0].shape, vec![65, 65]);
+        assert_eq!(m.constant("nbody_dt"), Some(1e-2));
+        assert_eq!(m.constant("nw_gap"), Some(-1.0));
     }
 
     #[test]

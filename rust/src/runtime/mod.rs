@@ -1,24 +1,33 @@
-//! PJRT execution engine — the only place Rust touches XLA.
+//! Kernel execution engine — the L3 coordinator's window onto the AOT
+//! artifact contract.
 //!
-//! `Engine` wraps the `xla` crate's CPU PJRT client: it loads the HLO
-//! *text* artifacts `python/compile/aot.py` produced, compiles each one
-//! once (executable cache keyed by artifact name), and executes them
-//! from the L3 hot path with typed host tensors. Python is never on this
-//! path — after `make artifacts` the binary is self-contained.
+//! The original design wrapped the `xla` crate's CPU PJRT client and
+//! executed the HLO *text* artifacts `python/compile/aot.py` produces.
+//! That crate is not available in the offline registry, so the missing
+//! dependency is stubbed behind the same API: `Engine` keeps the
+//! manifest-validated `execute(name, tensors)` surface (arity, shape
+//! and dtype checks, executable cache accounting) but dispatches to
+//! **host reference kernels** that implement each artifact's exact
+//! semantics (`python/compile/model.py`). The apps, examples and
+//! numerics tests run unchanged; timing still comes exclusively from
+//! the cycle model, mirroring the paper's PyMTL/functional split, so
+//! nothing in the evaluation depends on which backend computes the
+//! numbers.
 //!
-//! Shape/dtype validation happens here against the manifest, so a drift
-//! between the lowered computation and the caller fails with a named
-//! error instead of a PJRT abort.
+//! When an `artifacts/` directory exists its `manifest.json` is loaded
+//! and validated as before (shape drift between the python layer and
+//! Rust still fails with a named error); without one, the baked-in
+//! contract from [`Manifest::builtin`] is used.
 
 pub mod artifacts;
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 use std::fmt;
 use std::path::Path;
 
 pub use artifacts::{default_dir, ArtifactSpec, DType, Manifest, TensorSpec};
 
-/// A host-side tensor crossing the Rust <-> PJRT boundary.
+/// A host-side tensor crossing the Rust <-> kernel boundary.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
     F32(Vec<f32>, Vec<usize>),
@@ -78,31 +87,12 @@ impl Tensor {
     fn matches(&self, spec: &TensorSpec) -> bool {
         self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
     }
-
-    fn to_literal(&self) -> std::result::Result<xla::Literal, xla::Error> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Tensor::F32(d, _) => xla::Literal::vec1(d),
-            Tensor::I32(d, _) => xla::Literal::vec1(d),
-        };
-        lit.reshape(&dims)
-    }
-
-    fn from_literal(
-        lit: &xla::Literal,
-        spec: &TensorSpec,
-    ) -> std::result::Result<Tensor, xla::Error> {
-        Ok(match spec.dtype {
-            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?, spec.shape.clone()),
-            DType::I32 => Tensor::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
-        })
-    }
 }
 
 /// Engine counters (exported to metrics / perf benches).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct EngineStats {
-    /// HLO artifacts compiled (cold path).
+    /// Artifacts prepared on first use (cold path).
     pub compiles: u64,
     /// Executions dispatched (hot path).
     pub executions: u64,
@@ -116,7 +106,8 @@ pub enum EngineError {
     ArityMismatch { name: String, expected: usize, got: usize },
     SpecMismatch { name: String, index: usize, expected: String, got: String },
     Manifest(artifacts::ManifestError),
-    Xla(xla::Error),
+    /// The host backend has no kernel for a (disk-manifest) artifact.
+    Unsupported(String),
 }
 
 impl fmt::Display for EngineError {
@@ -131,21 +122,17 @@ impl fmt::Display for EngineError {
             ),
             EngineError::SpecMismatch { name, index, expected, got } => write!(
                 f,
-                "{name}: input {index} expected {expected}, got {got}"
+                "{name}: tensor {index} expected {expected}, got {got}"
             ),
             EngineError::Manifest(e) => write!(f, "{e}"),
-            EngineError::Xla(e) => write!(f, "xla: {e}"),
+            EngineError::Unsupported(n) => {
+                write!(f, "artifact '{n}' has no host-reference kernel")
+            }
         }
     }
 }
 
 impl std::error::Error for EngineError {}
-
-impl From<xla::Error> for EngineError {
-    fn from(e: xla::Error) -> Self {
-        EngineError::Xla(e)
-    }
-}
 
 impl From<artifacts::ManifestError> for EngineError {
     fn from(e: artifacts::ManifestError) -> Self {
@@ -155,25 +142,25 @@ impl From<artifacts::ManifestError> for EngineError {
 
 pub type Result<T> = std::result::Result<T, EngineError>;
 
-/// PJRT client + manifest + compiled-executable cache.
+/// Manifest + host-kernel dispatch + "executable" cache accounting.
 pub struct Engine {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Artifacts prepared so far (stands in for the executable cache).
+    loaded: HashSet<String>,
     stats: EngineStats,
 }
 
 impl Engine {
-    /// Open the CPU PJRT client over the default artifacts directory.
+    /// Open the engine over the default artifacts directory (falling
+    /// back to the baked-in contract when none was generated).
     pub fn new() -> Result<Engine> {
         Engine::with_dir(&default_dir())
     }
 
     pub fn with_dir(dir: &Path) -> Result<Engine> {
         Ok(Engine {
-            client: xla::PjRtClient::cpu()?,
-            manifest: Manifest::load(dir)?,
-            cache: HashMap::new(),
+            manifest: Manifest::load_or_builtin(dir)?,
+            loaded: HashSet::new(),
             stats: EngineStats::default(),
         })
     }
@@ -187,27 +174,29 @@ impl Engine {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "host-reference".into()
     }
 
-    /// Compile (or fetch from cache) the named artifact.
+    /// Prepare the named artifact (cache fill; cheap for host kernels,
+    /// kept for parity with the PJRT compile step).
     pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
+        if self.loaded.contains(name) {
             return Ok(());
         }
         let spec = self
             .manifest
             .get(name)
             .ok_or_else(|| EngineError::UnknownArtifact(name.into()))?;
-        let proto = xla::HloModuleProto::from_text_file(&spec.file)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
+        // fail at load time, like a PJRT compile error would
+        kernels::supported(&spec.name)
+            .then_some(())
+            .ok_or_else(|| EngineError::Unsupported(name.into()))?;
         self.stats.compiles += 1;
-        self.cache.insert(name.to_string(), exe);
+        self.loaded.insert(name.to_string());
         Ok(())
     }
 
-    /// Pre-compile every artifact in the manifest (leader warm-up).
+    /// Pre-load every artifact in the manifest (leader warm-up).
     pub fn load_all(&mut self) -> Result<()> {
         let names: Vec<String> =
             self.manifest.names().map(String::from).collect();
@@ -220,7 +209,7 @@ impl Engine {
     /// Execute `name` with `inputs`, returning the outputs.
     ///
     /// Validates arity/shape/dtype against the manifest; the artifact is
-    /// compiled on first use and cached afterwards.
+    /// prepared on first use and cached afterwards.
     pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let spec = self
             .manifest
@@ -245,35 +234,37 @@ impl Engine {
             }
         }
 
-        let hit = self.cache.contains_key(name);
+        let hit = self.loaded.contains(name);
         self.load(name)?;
         if hit {
             self.stats.cache_hits += 1;
         }
-        let exe = self.cache.get(name).expect("just loaded");
 
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(Tensor::to_literal)
-            .collect::<std::result::Result<_, _>>()?;
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0]
-            .to_literal_sync()?;
+        let outputs = kernels::dispatch(&spec, inputs)?;
         self.stats.executions += 1;
 
-        // aot.py lowers with return_tuple=True: unwrap the n-tuple.
-        let parts = result.to_tuple()?;
-        if parts.len() != spec.outputs.len() {
+        // Validate outputs against the manifest like the PJRT path did:
+        // a user-edited manifest.json whose output specs contradict its
+        // inputs must fail with a named error, not hand back
+        // spec-mismatched tensors.
+        if outputs.len() != spec.outputs.len() {
             return Err(EngineError::ArityMismatch {
                 name: name.into(),
                 expected: spec.outputs.len(),
-                got: parts.len(),
+                got: outputs.len(),
             });
         }
-        parts
-            .iter()
-            .zip(&spec.outputs)
-            .map(|(l, s)| Tensor::from_literal(l, s).map_err(Into::into))
-            .collect()
+        for (i, (o, s)) in outputs.iter().zip(&spec.outputs).enumerate() {
+            if !o.matches(s) {
+                return Err(EngineError::SpecMismatch {
+                    name: name.into(),
+                    index: i,
+                    expected: s.to_string(),
+                    got: format!("{}{:?}", o.dtype(), o.shape()),
+                });
+            }
+        }
+        Ok(outputs)
     }
 
     /// Convenience: single-output artifact -> flat f32 vector.
@@ -284,12 +275,217 @@ impl Engine {
     }
 }
 
+/// Host reference kernels, one per artifact of
+/// `python/compile/model.py::ARTIFACTS`. Constants (NW scoring, N-body
+/// softening/dt) match the manifest-recorded values.
+mod kernels {
+    use super::{ArtifactSpec, EngineError, Result, Tensor};
+
+    const NW_MATCH: f32 = 1.0;
+    const NW_MISMATCH: f32 = -1.0;
+    const NW_GAP: f32 = -1.0;
+    const NBODY_EPS: f32 = 1e-2;
+    const NBODY_DT: f32 = 1e-2;
+
+    pub fn supported(name: &str) -> bool {
+        matches!(
+            name,
+            "axpy" | "gemm64" | "gemm128" | "spmv" | "nw64" | "gcn_l1"
+                | "gcn_l2" | "nbody" | "nbody_step" | "bfs"
+        )
+    }
+
+    pub fn dispatch(spec: &ArtifactSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match spec.name.as_str() {
+            "axpy" => Ok(axpy(inputs)),
+            "gemm64" | "gemm128" => Ok(gemm(inputs)),
+            "spmv" => Ok(spmv_ell(inputs)),
+            "nw64" => Ok(nw_block(inputs)),
+            "gcn_l1" => Ok(gcn_layer(inputs, true)),
+            "gcn_l2" => Ok(gcn_layer(inputs, false)),
+            "nbody" => Ok(nbody_acc(inputs)),
+            "nbody_step" => Ok(nbody_step(inputs)),
+            "bfs" => Ok(bfs_reach(inputs)),
+            other => Err(EngineError::Unsupported(other.into())),
+        }
+    }
+
+    /// alpha*x + y.
+    fn axpy(inputs: &[Tensor]) -> Vec<Tensor> {
+        let a = inputs[0].as_f32()[0];
+        let x = inputs[1].as_f32();
+        let y = inputs[2].as_f32();
+        let out: Vec<f32> =
+            x.iter().zip(y).map(|(&xi, &yi)| a * xi + yi).collect();
+        let shape = inputs[1].shape().to_vec();
+        vec![Tensor::F32(out, shape)]
+    }
+
+    /// C = A(m×k) · B(k×n), row-major.
+    fn gemm(inputs: &[Tensor]) -> Vec<Tensor> {
+        let (m, k) = (inputs[0].shape()[0], inputs[0].shape()[1]);
+        let n = inputs[1].shape()[1];
+        let a = inputs[0].as_f32();
+        let b = inputs[1].as_f32();
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                let av = a[i * k + l];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    c[i * n + j] += av * b[l * n + j];
+                }
+            }
+        }
+        vec![Tensor::F32(c, vec![m, n])]
+    }
+
+    /// ELL SPMV: y[r] = Σ_w vals[r,w] * x[cols[r,w]].
+    fn spmv_ell(inputs: &[Tensor]) -> Vec<Tensor> {
+        let (rows, width) = (inputs[0].shape()[0], inputs[0].shape()[1]);
+        let vals = inputs[0].as_f32();
+        let cols = inputs[1].as_i32();
+        let x = inputs[2].as_f32();
+        let y: Vec<f32> = (0..rows)
+            .map(|r| {
+                (0..width)
+                    .map(|w| {
+                        let c = cols[r * width + w];
+                        if c < 0 {
+                            0.0 // padding lane
+                        } else {
+                            vals[r * width + w] * x[c as usize]
+                        }
+                    })
+                    .sum()
+            })
+            .collect();
+        vec![Tensor::F32(y, vec![rows])]
+    }
+
+    /// One NW DP block with injected top/left boundaries; returns the
+    /// full (b+1)×(b+1) score matrix.
+    fn nw_block(inputs: &[Tensor]) -> Vec<Tensor> {
+        let b = inputs[0].shape()[0];
+        let sa = inputs[0].as_i32();
+        let sb = inputs[1].as_i32();
+        let top = inputs[2].as_f32();
+        let left = inputs[3].as_f32();
+        let w = b + 1;
+        let mut h = vec![0.0f32; w * w];
+        h[..w].copy_from_slice(&top[..w]);
+        for i in 0..w {
+            h[i * w] = left[i];
+        }
+        for i in 1..w {
+            for j in 1..w {
+                let s = if sa[i - 1] == sb[j - 1] { NW_MATCH } else { NW_MISMATCH };
+                let diag = h[(i - 1) * w + j - 1] + s;
+                let up = h[(i - 1) * w + j] + NW_GAP;
+                let lf = h[i * w + j - 1] + NW_GAP;
+                h[i * w + j] = diag.max(up).max(lf);
+            }
+        }
+        vec![Tensor::F32(h, vec![w, w])]
+    }
+
+    /// act(A_blk @ (H @ W)) — one GCN layer over a row block of Â.
+    fn gcn_layer(inputs: &[Tensor], relu: bool) -> Vec<Tensor> {
+        let hw = gemm(&[inputs[1].clone(), inputs[2].clone()]);
+        let mut out = gemm(&[inputs[0].clone(), hw[0].clone()]);
+        if relu {
+            if let Tensor::F32(d, _) = &mut out[0] {
+                for v in d.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+        out
+    }
+
+    /// Softened all-pairs gravity on a particle block vs the full set;
+    /// f64 accumulation like the serial oracle so results are
+    /// order-insensitive.
+    fn nbody_acc(inputs: &[Tensor]) -> Vec<Tensor> {
+        let mi = inputs[0].shape()[0];
+        let na = inputs[1].shape()[0];
+        let pos_i = inputs[0].as_f32();
+        let all = inputs[1].as_f32();
+        let mut out = vec![0.0f32; mi * 4];
+        for i in 0..mi {
+            let (xi, yi, zi) =
+                (pos_i[i * 4], pos_i[i * 4 + 1], pos_i[i * 4 + 2]);
+            let mut acc = [0.0f64; 3];
+            for j in 0..na {
+                let dx = (all[j * 4] - xi) as f64;
+                let dy = (all[j * 4 + 1] - yi) as f64;
+                let dz = (all[j * 4 + 2] - zi) as f64;
+                let m = all[j * 4 + 3] as f64;
+                let r2 =
+                    dx * dx + dy * dy + dz * dz + (NBODY_EPS as f64).powi(2);
+                let inv_r3 = m / (r2 * r2.sqrt());
+                acc[0] += dx * inv_r3;
+                acc[1] += dy * inv_r3;
+                acc[2] += dz * inv_r3;
+            }
+            for k in 0..3 {
+                out[i * 4 + k] = acc[k] as f32;
+            }
+        }
+        vec![Tensor::F32(out, vec![mi, 4])]
+    }
+
+    /// Leapfrog step of a self-contained block: vel += dt*acc,
+    /// pos.xyz += dt*vel.xyz (mass channel untouched).
+    fn nbody_step(inputs: &[Tensor]) -> Vec<Tensor> {
+        let n = inputs[0].shape()[0];
+        let pos = inputs[0].as_f32();
+        let vel = inputs[1].as_f32();
+        let acc_t =
+            nbody_acc(&[inputs[0].clone(), inputs[0].clone()]);
+        let acc = acc_t[0].as_f32();
+        let mut vel2 = vel.to_vec();
+        let mut pos2 = pos.to_vec();
+        for i in 0..n {
+            for k in 0..4 {
+                vel2[i * 4 + k] += NBODY_DT * acc[i * 4 + k];
+            }
+            for k in 0..3 {
+                pos2[i * 4 + k] += NBODY_DT * vel2[i * 4 + k];
+            }
+        }
+        vec![
+            Tensor::F32(pos2, vec![n, 4]),
+            Tensor::F32(vel2, vec![n, 4]),
+        ]
+    }
+
+    /// reach[r] = Σ_{j : adj[r,j] > 0} frontier[j].
+    fn bfs_reach(inputs: &[Tensor]) -> Vec<Tensor> {
+        let (rows, n) = (inputs[0].shape()[0], inputs[0].shape()[1]);
+        let adj = inputs[0].as_f32();
+        let frontier = inputs[1].as_f32();
+        let out: Vec<f32> = (0..rows)
+            .map(|r| {
+                (0..n)
+                    .map(|j| {
+                        if adj[r * n + j] > 0.0 { frontier[j] } else { 0.0 }
+                    })
+                    .sum()
+            })
+            .collect();
+        vec![Tensor::F32(out, vec![rows])]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn engine() -> Engine {
-        Engine::new().expect("PJRT CPU client + manifest")
+        Engine::new().expect("engine over builtin or generated manifest")
     }
 
     #[test]
@@ -394,5 +590,12 @@ mod tests {
             e.execute("axpy", &bad2),
             Err(EngineError::SpecMismatch { index: 0, .. })
         ));
+    }
+
+    #[test]
+    fn load_all_prepares_everything() {
+        let mut e = engine();
+        e.load_all().unwrap();
+        assert_eq!(e.stats().compiles as usize, e.manifest().names().count());
     }
 }

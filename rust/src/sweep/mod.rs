@@ -1,0 +1,445 @@
+//! Parallel figure-sweep subsystem.
+//!
+//! Reproducing the paper's §5 is itself a throughput workload: every
+//! figure cell `(app × nodes × model)` is an independent deterministic
+//! simulation, yet the original harness ran them strictly serially and
+//! re-derived the serial/BSP baselines per figure (and a third time for
+//! the §5.2 headline). This module factors the evaluation into
+//!
+//! 1. a **job enumeration** — each requested figure lists the cells it
+//!    needs ([`Fig::jobs`]); the union is deduplicated, so e.g. the
+//!    `(app, 4 nodes, arena-sw)` run is computed once and shared by
+//!    Fig. 9, Fig. 10 and the headline;
+//! 2. a **memoized cell store** ([`CellStore`]) holding every computed
+//!    serial baseline, BSP run and ARENA simulation, keyed
+//!    deterministically;
+//! 3. a **scoped worker pool** ([`CellStore::prefill`]) that executes
+//!    the job list on `--jobs N` threads (`std::thread::scope`, no new
+//!    dependencies — [`crate::cluster::Cluster`] and
+//!    [`crate::cluster::RunReport`] are `Send`);
+//! 4. a single-threaded **assembly** pass that builds the tables from
+//!    the store, so output is bit-identical for any `--jobs` value.
+//!
+//! `arena sweep --all --jobs N`, `examples/paper_eval.rs` and the
+//! `fig*`/`tab3` benches all run through this path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::apps::{Scale, ALL};
+use crate::baseline::{run_bsp, serial_ps, BspReport};
+use crate::cluster::{Model, RunReport};
+use crate::config::{ArenaConfig, Ps};
+use crate::eval::{self, Headline, Table, NODE_SWEEP};
+
+/// Default worker count: every host core (the sweep is embarrassingly
+/// parallel and each cell is CPU-bound).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// One unit of sweep work: a single figure cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Job {
+    /// Serial single-node CPU baseline (figure denominator).
+    Serial { app: &'static str },
+    /// Compute-centric BSP run (`cgra` = Baseline-2 offload model).
+    Bsp { app: &'static str, nodes: usize, cgra: bool },
+    /// Full ARENA discrete-event simulation.
+    Arena { app: &'static str, nodes: usize, model: Model },
+}
+
+/// Computed value of one cell.
+enum Cell {
+    Serial(Ps),
+    Bsp(BspReport),
+    Arena(RunReport),
+}
+
+fn compute(scale: Scale, seed: u64, job: Job) -> Cell {
+    match job {
+        Job::Serial { app } => {
+            Cell::Serial(serial_ps(app, scale, seed, &ArenaConfig::default()))
+        }
+        Job::Bsp { app, nodes, cgra } => {
+            let cfg = ArenaConfig::default().with_nodes(nodes);
+            Cell::Bsp(run_bsp(app, scale, seed, &cfg, cgra))
+        }
+        Job::Arena { app, nodes, model } => {
+            Cell::Arena(eval::run_arena(app, scale, seed, nodes, model, None))
+        }
+    }
+}
+
+/// Memoized (scale, seed)-scoped result store for every figure cell.
+/// Reads fill lazily (single-threaded); [`Self::prefill`] batches the
+/// fills onto a worker pool.
+pub struct CellStore {
+    scale: Scale,
+    seed: u64,
+    serial: BTreeMap<&'static str, Ps>,
+    bsp: BTreeMap<(&'static str, usize, bool), BspReport>,
+    arena: BTreeMap<(&'static str, usize, Model), RunReport>,
+}
+
+impl CellStore {
+    pub fn new(scale: Scale, seed: u64) -> Self {
+        CellStore {
+            scale,
+            seed,
+            serial: BTreeMap::new(),
+            bsp: BTreeMap::new(),
+            arena: BTreeMap::new(),
+        }
+    }
+
+    pub fn scale(&self) -> Scale {
+        self.scale
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Cells computed so far.
+    pub fn len(&self) -> usize {
+        self.serial.len() + self.bsp.len() + self.arena.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn contains(&self, job: &Job) -> bool {
+        match *job {
+            Job::Serial { app } => self.serial.contains_key(app),
+            Job::Bsp { app, nodes, cgra } => {
+                self.bsp.contains_key(&(app, nodes, cgra))
+            }
+            Job::Arena { app, nodes, model } => {
+                self.arena.contains_key(&(app, nodes, model))
+            }
+        }
+    }
+
+    fn insert(&mut self, job: Job, cell: Cell) {
+        match (job, cell) {
+            (Job::Serial { app }, Cell::Serial(ps)) => {
+                self.serial.insert(app, ps);
+            }
+            (Job::Bsp { app, nodes, cgra }, Cell::Bsp(r)) => {
+                self.bsp.insert((app, nodes, cgra), r);
+            }
+            (Job::Arena { app, nodes, model }, Cell::Arena(r)) => {
+                self.arena.insert((app, nodes, model), r);
+            }
+            _ => unreachable!("job/cell kind mismatch"),
+        }
+    }
+
+    /// Serial baseline time (memoized).
+    pub fn serial_ps(&mut self, app: &'static str) -> Ps {
+        if !self.serial.contains_key(app) {
+            let v = compute(self.scale, self.seed, Job::Serial { app });
+            self.insert(Job::Serial { app }, v);
+        }
+        self.serial[app]
+    }
+
+    /// BSP run (memoized).
+    pub fn bsp(&mut self, app: &'static str, nodes: usize, cgra: bool) -> &BspReport {
+        let key = (app, nodes, cgra);
+        if !self.bsp.contains_key(&key) {
+            let v = compute(self.scale, self.seed, Job::Bsp { app, nodes, cgra });
+            self.insert(Job::Bsp { app, nodes, cgra }, v);
+        }
+        &self.bsp[&key]
+    }
+
+    /// ARENA simulation (memoized).
+    pub fn arena(
+        &mut self,
+        app: &'static str,
+        nodes: usize,
+        model: Model,
+    ) -> &RunReport {
+        let key = (app, nodes, model);
+        if !self.arena.contains_key(&key) {
+            let v =
+                compute(self.scale, self.seed, Job::Arena { app, nodes, model });
+            self.insert(Job::Arena { app, nodes, model }, v);
+        }
+        &self.arena[&key]
+    }
+
+    /// Execute every not-yet-cached job on `workers` threads and absorb
+    /// the results. Each job is an independent deterministic simulation
+    /// (pure function of `(scale, seed, job)`), so the store contents —
+    /// and everything assembled from them — are identical for any
+    /// worker count.
+    pub fn prefill(&mut self, jobs: &[Job], workers: usize) {
+        let mut todo: Vec<Job> =
+            jobs.iter().copied().filter(|j| !self.contains(j)).collect();
+        todo.sort();
+        todo.dedup();
+        if todo.is_empty() {
+            return;
+        }
+        let workers = workers.max(1).min(todo.len());
+        if workers == 1 {
+            for &job in &todo {
+                let v = compute(self.scale, self.seed, job);
+                self.insert(job, v);
+            }
+            return;
+        }
+        let (scale, seed) = (self.scale, self.seed);
+        let next = AtomicUsize::new(0);
+        let done: Mutex<Vec<(usize, Cell)>> =
+            Mutex::new(Vec::with_capacity(todo.len()));
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= todo.len() {
+                        break;
+                    }
+                    let cell = compute(scale, seed, todo[i]);
+                    done.lock().expect("worker poisoned the store").push((i, cell));
+                });
+            }
+        });
+        let mut done = done.into_inner().expect("worker poisoned the store");
+        // insertion order is irrelevant for the keyed maps, but sort
+        // anyway so any iteration-order-sensitive consumer stays stable
+        done.sort_by_key(|(i, _)| *i);
+        for (i, cell) in done {
+            self.insert(todo[i], cell);
+        }
+    }
+}
+
+/// The §5 artifacts the sweep can regenerate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Fig {
+    F9,
+    F10,
+    F11,
+    F12,
+    F13,
+}
+
+impl Fig {
+    pub const ALL: [Fig; 5] = [Fig::F9, Fig::F10, Fig::F11, Fig::F12, Fig::F13];
+
+    pub fn parse(s: &str) -> Option<Fig> {
+        match s {
+            "9" => Some(Fig::F9),
+            "10" => Some(Fig::F10),
+            "11" => Some(Fig::F11),
+            "12" => Some(Fig::F12),
+            "13" => Some(Fig::F13),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Fig::F9 => "9",
+            Fig::F10 => "10",
+            Fig::F11 => "11",
+            Fig::F12 => "12",
+            Fig::F13 => "13",
+        }
+    }
+
+    /// Simulation cells this figure consumes. Overlaps across figures
+    /// (e.g. the 4-node arena-sw runs shared by Figs. 9 and 10) dedupe
+    /// in the store.
+    pub fn jobs(self) -> Vec<Job> {
+        let mut out = Vec::new();
+        match self {
+            Fig::F9 => {
+                for app in ALL {
+                    out.push(Job::Serial { app });
+                    for &n in &NODE_SWEEP {
+                        out.push(Job::Bsp { app, nodes: n, cgra: false });
+                        out.push(Job::Arena {
+                            app,
+                            nodes: n,
+                            model: Model::SoftwareCpu,
+                        });
+                    }
+                }
+            }
+            Fig::F10 => {
+                for app in ALL {
+                    out.push(Job::Bsp { app, nodes: 4, cgra: false });
+                    out.push(Job::Arena {
+                        app,
+                        nodes: 4,
+                        model: Model::SoftwareCpu,
+                    });
+                }
+            }
+            Fig::F11 => {
+                for app in ALL {
+                    out.push(Job::Serial { app });
+                    for &n in &NODE_SWEEP {
+                        out.push(Job::Bsp { app, nodes: n, cgra: true });
+                        out.push(Job::Arena {
+                            app,
+                            nodes: n,
+                            model: Model::Cgra,
+                        });
+                    }
+                }
+            }
+            Fig::F12 => {} // analytic: mapper only, no simulations
+            Fig::F13 => {
+                for app in ALL {
+                    out.push(Job::Arena {
+                        app,
+                        nodes: 4,
+                        model: Model::Cgra,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Assembled sweep result.
+pub struct SweepOutput {
+    /// Figure tables in ascending figure order.
+    pub tables: Vec<Table>,
+    /// §5.2 headline, when Figs. 9-11 were all requested.
+    pub headline: Option<Headline>,
+    /// Unique simulation cells computed.
+    pub cells: usize,
+    /// Worker threads used.
+    pub workers: usize,
+}
+
+impl SweepOutput {
+    /// Canonical rendering of every table (the determinism contract:
+    /// byte-identical across `--jobs` values).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for t in &self.tables {
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Run the sweep for `figs` at `(scale, seed)` on `workers` threads.
+pub fn run(figs: &[Fig], scale: Scale, seed: u64, workers: usize) -> SweepOutput {
+    let mut figs: Vec<Fig> = figs.to_vec();
+    figs.sort();
+    figs.dedup();
+
+    let mut jobs = Vec::new();
+    for f in &figs {
+        jobs.extend(f.jobs());
+    }
+
+    let mut store = CellStore::new(scale, seed);
+    store.prefill(&jobs, workers);
+
+    let mut tables = Vec::new();
+    for f in &figs {
+        match f {
+            Fig::F9 => {
+                let (cc, ar) = eval::fig9_with(&mut store);
+                tables.push(cc);
+                tables.push(ar);
+            }
+            Fig::F10 => tables.push(eval::fig10_with(&mut store)),
+            Fig::F11 => {
+                let (cc, ar) = eval::fig11_with(&mut store);
+                tables.push(cc);
+                tables.push(ar);
+            }
+            Fig::F12 => tables.push(eval::fig12()),
+            Fig::F13 => {
+                let (at, pt) = eval::fig13_with(&mut store);
+                tables.push(at);
+                tables.push(pt);
+            }
+        }
+    }
+    let headline = [Fig::F9, Fig::F10, Fig::F11]
+        .iter()
+        .all(|f| figs.contains(f))
+        .then(|| eval::headline_with(&mut store));
+
+    SweepOutput { tables, headline, cells: store.len(), workers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_enumeration_dedupes_across_figures() {
+        let mut jobs: Vec<Job> = Fig::F9
+            .jobs()
+            .into_iter()
+            .chain(Fig::F10.jobs())
+            .collect();
+        let total = jobs.len();
+        jobs.sort();
+        jobs.dedup();
+        // fig10's 12 jobs (6 bsp@4 + 6 arena-sw@4) are all contained in
+        // fig9's sweep
+        assert_eq!(jobs.len(), total - 12);
+    }
+
+    #[test]
+    fn store_memoizes_cells() {
+        let mut store = CellStore::new(Scale::Small, 7);
+        let a = store.serial_ps("gemm");
+        let b = store.serial_ps("gemm");
+        assert_eq!(a, b);
+        assert_eq!(store.len(), 1, "second read served from cache");
+        store.bsp("gemm", 4, false);
+        store.bsp("gemm", 4, false);
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn prefill_matches_lazy_fill() {
+        let jobs = [
+            Job::Serial { app: "gemm" },
+            Job::Bsp { app: "gemm", nodes: 4, cgra: false },
+            Job::Arena { app: "gemm", nodes: 2, model: Model::SoftwareCpu },
+        ];
+        let mut par = CellStore::new(Scale::Small, 7);
+        par.prefill(&jobs, 4);
+        let mut lazy = CellStore::new(Scale::Small, 7);
+        assert_eq!(lazy.serial_ps("gemm"), par.serial_ps("gemm"));
+        assert_eq!(
+            lazy.bsp("gemm", 4, false).makespan_ps,
+            par.bsp("gemm", 4, false).makespan_ps
+        );
+        assert_eq!(
+            lazy.arena("gemm", 2, Model::SoftwareCpu).makespan_ps,
+            par.arena("gemm", 2, Model::SoftwareCpu).makespan_ps
+        );
+        assert_eq!(par.len(), 3, "prefill computed exactly the job list");
+    }
+
+    #[test]
+    fn fig12_needs_no_simulation() {
+        let out = run(&[Fig::F12], Scale::Small, 7, 4);
+        assert_eq!(out.cells, 0);
+        assert_eq!(out.tables.len(), 1);
+        assert!(out.headline.is_none());
+    }
+}

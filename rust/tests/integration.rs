@@ -121,7 +121,9 @@ fn terminate_protocol_quiesces_with_slow_network() {
     );
     let r = cl.run(None);
     cl.check().expect("slow network changes time, not results");
-    assert!(r.terminate_laps >= 2);
+    // laps now count completed circulations only (the swallowed final
+    // circulation is not a lap); any run quiesces with at least one.
+    assert!(r.terminate_laps >= 1);
 }
 
 #[test]

@@ -1,6 +1,7 @@
-//! PJRT numerics: every AOT artifact loaded and executed from Rust,
-//! checked against host-side oracles. This proves the full
-//! python-Pallas → HLO-text → xla-crate → PJRT round trip, the same
+//! Artifact numerics: every AOT-contract kernel executed through the
+//! runtime engine and checked against host-side oracles. With generated
+//! artifacts this exercises the disk manifest; without them, the
+//! built-in contract and host-reference backend — either way the same
 //! contract `python/tests/` proves from the other side.
 
 use arena::apps::workloads::{

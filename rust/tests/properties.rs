@@ -230,6 +230,84 @@ fn des_pops_in_nondecreasing_time_order() {
 }
 
 #[test]
+fn des_random_schedules_pop_in_time_then_seq_order() {
+    // guard for the slab+index-heap engine: under random schedule
+    // orders, pops come out sorted by (time, schedule seq) — i.e.
+    // same-timestamp events stay FIFO. The payload records insertion
+    // order, so the check is exact.
+    forall("des-time-seq", 300, 0x5E90, |rng| {
+        let mut des: Des<u64> = Des::new();
+        let n = 50 + rng.below(1500);
+        // few distinct timestamps -> many ties
+        let horizon = 1 + rng.below(50);
+        let mut scheduled: Vec<(u64, u64)> = Vec::new(); // (at, seq)
+        for i in 0..n {
+            let at = rng.below(horizon);
+            des.schedule_at(at, i);
+            scheduled.push((at, i));
+        }
+        scheduled.sort();
+        let mut popped = Vec::new();
+        while let Some((t, v)) = des.next() {
+            popped.push((t, v));
+        }
+        prop_assert!(
+            popped == scheduled,
+            "pop order diverged from (time, seq) sort"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn des_interleaved_matches_reference_model() {
+    // model-based test: random interleavings of schedule/pop against a
+    // naive sorted-vector oracle (the strongest guard on the new event
+    // queue's structural invariants).
+    forall("des-model", 120, 0xD35A0D, |rng| {
+        let mut des: Des<u64> = Des::new();
+        let mut oracle: Vec<(u64, u64)> = Vec::new(); // (at, seq)
+        let mut seq = 0u64;
+        let mut now = 0u64;
+        let steps = 200 + rng.below(1500);
+        for _ in 0..steps {
+            if rng.below(10) < 6 {
+                let at = now + rng.below(100_000);
+                des.schedule_at(at, seq);
+                oracle.push((at, seq));
+                seq += 1;
+            } else {
+                let got = des.next();
+                let want_idx = oracle
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, &k)| k)
+                    .map(|(i, _)| i);
+                match (got, want_idx) {
+                    (None, None) => {}
+                    (Some((t, v)), Some(i)) => {
+                        let (at, s) = oracle.remove(i);
+                        prop_assert!(
+                            (t, v) == (at, s),
+                            "popped ({t}, {v}), oracle says ({at}, {s})"
+                        );
+                        now = t;
+                    }
+                    (g, w) => {
+                        prop_assert!(false, "emptiness mismatch: {g:?} {w:?}")
+                    }
+                }
+            }
+            prop_assert!(
+                des.pending() == oracle.len(),
+                "pending diverged from oracle"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn token_coalesce_is_commutative_and_exact() {
     forall("token-coalesce", 2000, 0x70CE, |rng| {
         let id = 1 + rng.below(14) as u8;

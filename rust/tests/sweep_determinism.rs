@@ -1,0 +1,61 @@
+//! Sweep determinism: `arena sweep --all --jobs N` must produce
+//! bit-identical figure tables for every worker count, because each
+//! cell is an independent deterministic simulation and assembly is
+//! single-threaded over a deterministically keyed store.
+
+use arena::apps::Scale;
+use arena::sweep::{self, CellStore, Fig, Job};
+use arena::cluster::Model;
+
+#[test]
+fn all_figures_bit_identical_for_1_and_8_jobs() {
+    let seed = 0xA2EA;
+    let serial = sweep::run(&Fig::ALL, Scale::Small, seed, 1);
+    let par = sweep::run(&Fig::ALL, Scale::Small, seed, 8);
+
+    assert_eq!(serial.cells, par.cells, "same unique cell set");
+    assert_eq!(serial.tables.len(), par.tables.len());
+    // byte-for-byte, not approximately: the rendered tables are the
+    // deliverable the paper-eval pipeline records
+    assert_eq!(serial.render(), par.render());
+
+    let (hs, hp) = (serial.headline.unwrap(), par.headline.unwrap());
+    assert_eq!(hs.sw_ratio_16.to_bits(), hp.sw_ratio_16.to_bits());
+    assert_eq!(hs.cgra_ratio_16.to_bits(), hp.cgra_ratio_16.to_bits());
+    assert_eq!(hs.overall_ratio_16.to_bits(), hp.overall_ratio_16.to_bits());
+    assert_eq!(
+        hs.movement_reduction.to_bits(),
+        hp.movement_reduction.to_bits()
+    );
+}
+
+#[test]
+fn sweep_matches_legacy_figure_builders() {
+    // the shared path reproduces the pre-sweep per-figure output
+    let seed = 5;
+    let out = sweep::run(&[Fig::F10], Scale::Small, seed, 4);
+    let legacy = arena::eval::fig10(Scale::Small, seed);
+    assert_eq!(out.tables[0].render(), legacy.render());
+}
+
+#[test]
+fn oversubscribed_pool_is_still_deterministic() {
+    // more workers than jobs: pool must not duplicate or drop cells
+    let jobs = [
+        Job::Arena { app: "gemm", nodes: 2, model: Model::SoftwareCpu },
+        Job::Arena { app: "spmv", nodes: 2, model: Model::SoftwareCpu },
+    ];
+    let mut a = CellStore::new(Scale::Small, 3);
+    a.prefill(&jobs, 64);
+    let mut b = CellStore::new(Scale::Small, 3);
+    b.prefill(&jobs, 1);
+    assert_eq!(a.len(), 2);
+    assert_eq!(
+        a.arena("gemm", 2, Model::SoftwareCpu).makespan_ps,
+        b.arena("gemm", 2, Model::SoftwareCpu).makespan_ps
+    );
+    assert_eq!(
+        a.arena("spmv", 2, Model::SoftwareCpu).events,
+        b.arena("spmv", 2, Model::SoftwareCpu).events
+    );
+}
