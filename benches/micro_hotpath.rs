@@ -1,7 +1,8 @@
 //! Micro-benchmarks of the L3 hot paths: the per-token dispatcher
 //! filter, the ring/network model, the discrete-event engine (new
 //! slab+index-heap vs the old BinaryHeap baseline), the coalescing
-//! unit, the CGRA launch path, and the kernel execute path.
+//! unit, the placement-directory owner lookup (vs the old linear
+//! scan), the CGRA launch path, and the kernel execute path.
 //! These are the knobs the §Perf pass optimizes — see EXPERIMENTS.md.
 //!
 //!     cargo bench --bench micro_hotpath [-- --smoke]
@@ -11,11 +12,13 @@
 
 use std::time::Duration;
 
+use arena::api;
 use arena::benchkit::{black_box, throughput, Bench};
 use arena::cgra::{CgraNode, CoalesceUnit, GroupMappings};
 use arena::config::ArenaConfig;
 use arena::dispatcher::filter;
 use arena::mapper::kernels::gemm_kernel;
+use arena::placement::{Directory, Layout};
 use arena::ring::RingNet;
 use arena::runtime::{Engine, Tensor};
 use arena::sim::Engine as Des;
@@ -192,6 +195,45 @@ fn main() {
         c.drain().len()
     });
     println!("  -> {:.1} M spawns/s", throughput(&r, 8192) / 1e6);
+
+    // --- placement directory: owner lookup on the fetch/filter path ---
+    // acceptance: the directory must be no slower than the old linear
+    // scan at 4 nodes and faster at >= 16.
+    let words = 1u32 << 20;
+    let addrs: Vec<u32> = (0..4096u64)
+        .map(|i| (i.wrapping_mul(2_654_435_761) % words as u64) as u32)
+        .collect();
+    for &n in &[4usize, 16, 64] {
+        let parts = api::stripe(words, n);
+        let dir = Directory::new(Layout::Block, "bench", words, n, 1, 0);
+        let r_lin = b.run(
+            &format!("placement/linear owner_of x4k ({n} nodes)"),
+            || {
+                addrs
+                    .iter()
+                    .map(|&a| api::owner_of(black_box(&parts), a))
+                    .sum::<usize>()
+            },
+        );
+        let r_dir = b.run(
+            &format!("placement/directory owner x4k ({n} nodes)"),
+            || {
+                addrs
+                    .iter()
+                    .map(|&a| black_box(&dir).owner(a))
+                    .sum::<usize>()
+            },
+        );
+        println!(
+            "  -> {:.2}x vs linear scan",
+            r_lin.mean.as_secs_f64() / r_dir.mean.as_secs_f64()
+        );
+    }
+    // a searched layout for comparison (no O(1) fast path)
+    let dir = Directory::new(Layout::Shuffle, "bench", words, 16, 256, 7);
+    b.run("placement/directory owner x4k (shuffle, 16 nodes)", || {
+        addrs.iter().map(|&a| black_box(&dir).owner(a)).sum::<usize>()
+    });
 
     // --- CGRA launch path -----------------------------------------------
     let maps = GroupMappings::build(&gemm_kernel(), &cfg);

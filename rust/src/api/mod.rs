@@ -20,6 +20,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::ArenaConfig;
+use crate::placement::Directory;
 use crate::runtime::Engine;
 use crate::token::{NodeId, Range, TaskId, TaskToken};
 
@@ -228,15 +229,24 @@ pub trait App: Send {
     fn name(&self) -> &'static str;
 
     /// Size of the app's private global address space, in data words.
-    /// The cluster stripes `[0, words)` over the nodes.
+    /// The cluster places `[0, words)` over the nodes through a
+    /// [`Directory`] built from the configured layout.
     fn words(&self) -> u32;
+
+    /// Indivisible placement unit in words (a DP block, a vertex slot,
+    /// a matrix row, a particle quad…). Layouts never split a granule
+    /// across owners. Defaults to word granularity.
+    fn placement_granule(&self) -> u32 {
+        1
+    }
 
     /// `ARENA_task_register` calls (one or more kernels).
     fn register(&self, reg: &mut TaskRegistry);
 
-    /// Distribute the working set over `parts` (the per-node local
-    /// address ranges, computed by the cluster) and build initial state.
-    fn init(&mut self, cfg: &ArenaConfig, parts: &[Range]);
+    /// Build initial state against the address→node mapping the
+    /// cluster computed (`dir` owns the per-node extents and the owner
+    /// lookup; apps clone it for spawn-routing decisions).
+    fn init(&mut self, cfg: &ArenaConfig, dir: &Directory);
 
     /// Tokens the leader injects once the system starts (root tasks).
     fn root_tokens(&self) -> Vec<TaskToken>;
@@ -255,9 +265,11 @@ pub trait App: Send {
     fn check(&self) -> Result<(), String>;
 }
 
-/// Equal striping of `[0, words)` over `n` nodes — the paper asserts no
-/// prior knowledge of data distribution, so the default is the naive
-/// contiguous split (skew experiments override per-part lengths).
+/// Equal striping of `[0, words)` over `n` nodes — the pre-placement
+/// partitioner, identical to what `Layout::Block` produces. Kept (with
+/// [`owner_of`]) as the measured baseline for the directory's O(log n)
+/// lookup in `benches/micro_hotpath.rs`; runtime code resolves owners
+/// through [`crate::placement::Directory`] instead.
 pub fn stripe(words: u32, n: usize) -> Vec<Range> {
     let n32 = n as u32;
     let base = words / n32;
@@ -272,7 +284,10 @@ pub fn stripe(words: u32, n: usize) -> Vec<Range> {
     parts
 }
 
-/// Which node owns global word address `a` under partition `parts`.
+/// Which node owns global word address `a` under partition `parts` —
+/// the old linear scan, kept as the micro-bench baseline (see module
+/// note on [`stripe`]). The runtime's directory lookup reports misses
+/// with app + layout context; this one cannot, having neither.
 pub fn owner_of(parts: &[Range], a: u32) -> usize {
     parts
         .iter()

@@ -19,6 +19,7 @@
 
 use crate::api::{App, Exec, ExecCtx, TaskRegistry};
 use crate::config::ArenaConfig;
+use crate::placement::Directory;
 use crate::runtime::Tensor;
 use crate::token::{Range, TaskId, TaskToken};
 
@@ -35,7 +36,7 @@ pub struct DnaApp {
     h: Vec<f32>,
     done: Vec<bool>,
     spawned: Vec<bool>,
-    parts: Vec<Range>,
+    dir: Directory,
     pub pjrt_blocks: u64,
 }
 
@@ -52,7 +53,7 @@ impl DnaApp {
             h: Vec::new(),
             done: Vec::new(),
             spawned: Vec::new(),
-            parts: Vec::new(),
+            dir: Directory::unplaced(),
             pjrt_blocks: 0,
         }
     }
@@ -164,8 +165,8 @@ impl DnaApp {
             let ta = self.block_addr(bi - 1, bj);
             let bsz = (self.b * self.b) as u32;
             let halo = Range::new(ta + bsz - self.b as u32, ta + bsz);
-            let target = crate::api::owner_of(&self.parts, tok.task.start);
-            let halo_owner = crate::api::owner_of(&self.parts, halo.start);
+            let target = self.dir.owner(tok.task.start);
+            let halo_owner = self.dir.owner(halo.start);
             if target != halo_owner {
                 ctx.spawn_with_remote(tok.task_id, tok.task, 0.0, halo);
                 return;
@@ -188,20 +189,27 @@ impl App for DnaApp {
         (self.l * self.l) as u32
     }
 
+    /// One B×B DP block is indivisible.
+    fn placement_granule(&self) -> u32 {
+        (self.b * self.b) as u32
+    }
+
     fn register(&self, reg: &mut TaskRegistry) {
         reg.register(self.base_id, "dna", true);
     }
 
-    fn init(&mut self, cfg: &ArenaConfig, parts: &[Range]) {
+    fn init(&mut self, cfg: &ArenaConfig, dir: &Directory) {
         let bsz = (self.b * self.b) as u32;
-        for p in parts {
-            assert!(
-                p.start % bsz == 0 && p.end % bsz == 0,
-                "DNA: {} nodes do not block-align {} blocks of {} words",
-                cfg.nodes,
-                self.nb() * self.nb(),
-                bsz
-            );
+        for p in 0..cfg.nodes {
+            for r in dir.extents(p) {
+                assert!(
+                    r.start % bsz == 0 && r.end % bsz == 0,
+                    "DNA: {} nodes do not block-align {} blocks of {} words",
+                    cfg.nodes,
+                    self.nb() * self.nb(),
+                    bsz
+                );
+            }
         }
         self.seq_a = gen_sequence(self.l, self.seed);
         self.seq_b = gen_sequence(self.l, self.seed ^ 0xD);
@@ -216,7 +224,7 @@ impl App for DnaApp {
         let nb2 = self.nb() * self.nb();
         self.done = vec![false; nb2];
         self.spawned = vec![false; nb2];
-        self.parts = parts.to_vec();
+        self.dir = dir.clone();
     }
 
     fn root_tokens(&self) -> Vec<TaskToken> {

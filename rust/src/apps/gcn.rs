@@ -16,8 +16,11 @@
 //! h-dim). Layer-2 pushes (c-dim) are counted at the same granularity,
 //! a deliberately conservative overcount noted in DESIGN.md.
 
+use std::collections::BTreeMap;
+
 use crate::api::{App, Exec, ExecCtx, TaskRegistry};
 use crate::config::ArenaConfig;
+use crate::placement::Directory;
 use crate::token::{Range, TaskId, TaskToken};
 
 use super::workloads::{gcn_ref, gen_gcn, GcnData};
@@ -61,7 +64,7 @@ pub struct GcnApp {
     z2: Vec<f32>,
     agg2: Vec<f32>,
     y: Vec<f32>,
-    parts: Vec<Range>,
+    dir: Directory,
     /// Per (layer, node): pushes still expected before finalize.
     expect: Vec<u32>,
     remaining: [Vec<u32>; 2],
@@ -93,7 +96,7 @@ impl GcnApp {
             z2: vec![],
             agg2: vec![],
             y: vec![],
-            parts: vec![],
+            dir: Directory::unplaced(),
             expect: vec![],
             remaining: [vec![], vec![]],
             fired: [vec![], vec![]],
@@ -127,10 +130,6 @@ impl GcnApp {
     /// One vertex occupies `h` words of the address space.
     fn slot(&self) -> u32 {
         self.h as u32
-    }
-
-    fn node_of(&self, vtx: u32) -> usize {
-        crate::api::owner_of(&self.parts, vtx * self.slot())
     }
 
     /// Word range -> vertex range.
@@ -173,38 +172,40 @@ impl GcnApp {
         }
         let mut units = (rows.len() as usize * dim_in * dim_out) as u64;
 
-        // self + local-neighbour pushes, and per remote node one spawn
-        // per *contiguous run* of needed z-rows: the sparse graph means
-        // each neighbour node usually needs only scattered source rows,
-        // and segmenting keeps the REMOTE payloads at what is actually
-        // referenced instead of a min..max covering range.
+        // self + local-neighbour pushes, and per remote *owner extent*
+        // one spawn per contiguous run of needed z-rows: the sparse
+        // graph means each neighbour usually needs only scattered
+        // source rows, and segmenting keeps the REMOTE payloads at what
+        // is actually referenced instead of a min..max covering range.
+        // Grouping by extent (not node) keeps the covering target range
+        // on a single owner, so a push is never split by the filter —
+        // under the block layout extents == nodes and this is the old
+        // per-node grouping exactly.
         let agg_id = if layer == 0 { self.l1_agg() } else { self.l2_agg() };
-        let nparts = self.parts.len();
-        let mut needed: Vec<Vec<u32>> = vec![Vec::new(); nparts];
-        let mut remote_dst: Vec<(u32, u32)> = vec![(u32::MAX, 0); nparts];
+        let slot = self.slot();
+        let ne = self.dir.extent_count();
+        let mut needed: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        let mut remote_dst: Vec<(u32, u32)> = vec![(u32::MAX, 0); ne];
         for i in rows.start..rows.end {
             units += self.push_local(i, i, layer); // self-loop
             let adj = std::mem::take(&mut self.data.adj);
             for &t in &adj[i as usize] {
-                let tn = self.node_of(t);
-                if tn == node {
+                let te = self.dir.extent_index(t * slot);
+                if self.dir.extent_owner(te) == node {
                     units += self.push_local(i, t, layer);
                 } else {
-                    needed[tn].push(i);
-                    let (tlo, thi) = &mut remote_dst[tn];
+                    needed.entry(te).or_default().push(i);
+                    let (tlo, thi) = &mut remote_dst[te];
                     *tlo = (*tlo).min(t);
                     *thi = (*thi).max(t + 1);
                 }
             }
             self.data.adj = adj;
         }
-        for q in 0..nparts {
-            let (tlo, thi) = remote_dst[q];
-            if needed[q].is_empty() {
-                continue;
-            }
-            needed[q].dedup();
-            for seg in segments(&needed[q], SEG_GAP) {
+        for (te, srcs) in &mut needed {
+            let (tlo, thi) = remote_dst[*te];
+            srcs.dedup();
+            for seg in segments(srcs, SEG_GAP) {
                 ctx.spawn_with_remote(
                     agg_id,
                     self.words_of(Range::new(tlo, thi)),
@@ -249,27 +250,33 @@ impl GcnApp {
     }
 
     /// If node `p` has everything for `layer`, finalize its rows
-    /// (mean + activation) and kick the next stage.
+    /// (mean + activation) and kick the next stage — one layer-2
+    /// combine per local extent (extents of one node are never
+    /// adjacent, so the coalescer cannot merge them across an owner
+    /// boundary).
     fn maybe_finalize(&mut self, p: usize, layer: usize, ctx: &mut ExecCtx) {
         if self.fired[layer][p] || self.remaining[layer][p] > 0 {
             return;
         }
         self.fired[layer][p] = true;
-        let rows = self.verts(self.parts[p]);
         let dim = if layer == 0 { self.h } else { self.c };
-        for i in rows.start..rows.end {
-            let deg = (self.data.adj[i as usize].len() + 1) as f32;
-            for j in 0..dim {
-                let idx = i as usize * dim + j;
-                if layer == 0 {
-                    self.h1[idx] = (self.agg1[idx] / deg).max(0.0); // ReLU
-                } else {
-                    self.y[idx] = self.agg2[idx] / deg;
+        for e in 0..self.dir.extents(p).len() {
+            let ext = self.dir.extents(p)[e];
+            let rows = self.verts(ext);
+            for i in rows.start..rows.end {
+                let deg = (self.data.adj[i as usize].len() + 1) as f32;
+                for j in 0..dim {
+                    let idx = i as usize * dim + j;
+                    if layer == 0 {
+                        self.h1[idx] = (self.agg1[idx] / deg).max(0.0); // ReLU
+                    } else {
+                        self.y[idx] = self.agg2[idx] / deg;
+                    }
                 }
             }
-        }
-        if layer == 0 {
-            ctx.spawn(self.l2_combine(), self.parts[p], 0.0);
+            if layer == 0 {
+                ctx.spawn(self.l2_combine(), ext, 0.0);
+            }
         }
     }
 }
@@ -283,6 +290,11 @@ impl App for GcnApp {
         (self.v * self.h) as u32
     }
 
+    /// One vertex slot (`h` words) is indivisible.
+    fn placement_granule(&self) -> u32 {
+        self.h as u32
+    }
+
     fn register(&self, reg: &mut TaskRegistry) {
         reg.register(self.l1_combine(), "gcn", true);
         reg.register(self.l1_agg(), "gcn", false);
@@ -290,7 +302,7 @@ impl App for GcnApp {
         reg.register(self.l2_agg(), "gcn", false);
     }
 
-    fn init(&mut self, cfg: &ArenaConfig, parts: &[Range]) {
+    fn init(&mut self, cfg: &ArenaConfig, dir: &Directory) {
         assert_eq!(
             self.v % cfg.nodes,
             0,
@@ -305,36 +317,35 @@ impl App for GcnApp {
         self.z2 = vec![0.0; self.v * self.c];
         self.agg2 = vec![0.0; self.v * self.c];
         self.y = vec![0.0; self.v * self.c];
-        self.parts = parts.to_vec();
+        self.dir = dir.clone();
         let n = cfg.nodes;
-        // expected pushes per node: one combine (its own) + one agg per
-        // remote node with cross edges into it.
-        // expected pushes per node: its own combine + however many
-        // push segments each remote node will generate toward it (a
-        // pure function of graph + partition, so both sides agree).
+        // expected pushes per node: one combine per local extent +
+        // however many push segments each (source extent → target
+        // extent) pair will generate toward it — a pure function of
+        // graph + placement, so both sides agree. Combine tasks arrive
+        // one per extent (the filter carves the root/l2 tokens at
+        // extent bounds), hence the per-source-extent segmentation.
         let slot = self.h as u32;
-        let mut needed: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); n]; n];
+        let mut needed: BTreeMap<(usize, usize), Vec<u32>> = BTreeMap::new();
         for (u, l) in self.data.adj.iter().enumerate() {
-            let un = crate::api::owner_of(parts, u as u32 * slot);
+            let ue = dir.extent_index(u as u32 * slot);
+            let un = dir.extent_owner(ue);
             for &t in l {
-                let tn = crate::api::owner_of(parts, t * slot);
-                if un != tn {
-                    needed[un][tn].push(u as u32);
+                let te = dir.extent_index(t * slot);
+                if un != dir.extent_owner(te) {
+                    needed.entry((ue, te)).or_default().push(u as u32);
                 }
             }
         }
-        self.expect = (0..n)
-            .map(|p| {
-                let mut c = 1u32;
-                for q in 0..n {
-                    let mut srcs = std::mem::take(&mut needed[q][p]);
-                    srcs.sort_unstable();
-                    srcs.dedup();
-                    c += segments(&srcs, SEG_GAP).len() as u32;
-                }
-                c
-            })
-            .collect();
+        let mut expect: Vec<u32> =
+            (0..n).map(|p| dir.extents(p).len() as u32).collect();
+        for ((_, te), srcs) in needed.iter_mut() {
+            srcs.sort_unstable();
+            srcs.dedup();
+            expect[dir.extent_owner(*te)] +=
+                segments(srcs, SEG_GAP).len() as u32;
+        }
+        self.expect = expect;
         self.remaining = [self.expect.clone(), self.expect.clone()];
         self.fired = [vec![false; n], vec![false; n]];
     }

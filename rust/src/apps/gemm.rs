@@ -19,6 +19,7 @@
 
 use crate::api::{App, Exec, ExecCtx, TaskRegistry};
 use crate::config::ArenaConfig;
+use crate::placement::Directory;
 use crate::runtime::Tensor;
 use crate::token::{Range, TaskId, TaskToken};
 
@@ -31,7 +32,7 @@ pub struct GemmApp {
     a: Vec<f32>,
     b: Vec<f32>,
     c: Vec<f32>,
-    parts: Vec<Range>,
+    dir: Directory,
     /// Count of PJRT tile executions (observability for tests).
     pub pjrt_tiles: u64,
 }
@@ -45,7 +46,7 @@ impl GemmApp {
             a: Vec::new(),
             b: Vec::new(),
             c: Vec::new(),
-            parts: Vec::new(),
+            dir: Directory::unplaced(),
             pjrt_tiles: 0,
         }
     }
@@ -142,12 +143,18 @@ impl App for GemmApp {
         (self.n * self.n) as u32
     }
 
+    /// One matrix row (N words) is indivisible: panels stay row-aligned
+    /// under every layout.
+    fn placement_granule(&self) -> u32 {
+        self.n as u32
+    }
+
     fn register(&self, reg: &mut TaskRegistry) {
         reg.register(self.init_id(), "gemm", true);
         reg.register_streaming(self.stream_id(), "gemm");
     }
 
-    fn init(&mut self, cfg: &ArenaConfig, parts: &[Range]) {
+    fn init(&mut self, cfg: &ArenaConfig, dir: &Directory) {
         assert_eq!(
             (self.n * self.n) % (cfg.nodes * self.n),
             0,
@@ -158,7 +165,7 @@ impl App for GemmApp {
         self.a = gen_matrix(self.n, self.n, self.seed);
         self.b = gen_matrix(self.n, self.n, self.seed ^ 0xB);
         self.c = vec![0.0; self.n * self.n];
-        self.parts = parts.to_vec();
+        self.dir = dir.clone();
     }
 
     fn root_tokens(&self) -> Vec<TaskToken> {
@@ -166,12 +173,14 @@ impl App for GemmApp {
     }
 
     fn execute(&mut self, node: usize, tok: &TaskToken, ctx: &mut ExecCtx) -> Exec {
-        let rows = self.rows_of(tok.task);
-        let n = self.parts.len();
-        // param encodes the systolic step; at step s this node holds
-        // the B panel of node (self - s).
+        let n = self.dir.nodes();
+        // param encodes the systolic step. A panel is one *owner
+        // extent* of B rows; it originates at its home (the INIT task's
+        // own range) and circulates the whole ring once. Under the
+        // block layout each node is one extent, which is exactly the
+        // paper's n-panel rotation.
         let (s, panel) = if tok.task_id == self.init_id() {
-            (0, self.parts[node])
+            (0, tok.task)
         } else {
             (tok.param as usize, tok.remote)
         };
@@ -182,13 +191,34 @@ impl App for GemmApp {
             let next = (node + 1) % n;
             ctx.spawn_forward(
                 self.stream_id(),
-                self.parts[next],
+                self.dir.anchor(next),
                 (s + 1) as f32,
                 panel,
             );
         }
-        let kr = self.rows_of(panel);
-        let units = self.accumulate(rows, kr, ctx);
+        let units = if tok.task_id == self.init_id() {
+            // local×local: this extent's C rows against every panel
+            // homed here (one extent under block — the old path).
+            // Indexed loops: `Range` is Copy, so each extent is copied
+            // out before `accumulate` takes `&mut self` — no per-task
+            // allocation on this hot path.
+            let rows = self.rows_of(tok.task);
+            let mut u = 0;
+            for i in 0..self.dir.extents(node).len() {
+                let kr = self.rows_of(self.dir.extents(node)[i]);
+                u += self.accumulate(rows, kr, ctx);
+            }
+            u
+        } else {
+            // guest panel: accumulate into every local row block.
+            let kr = self.rows_of(panel);
+            let mut u = 0;
+            for i in 0..self.dir.extents(node).len() {
+                let rows = self.rows_of(self.dir.extents(node)[i]);
+                u += self.accumulate(rows, kr, ctx);
+            }
+            u
+        };
         Exec { units, local_bytes: units * 4 }
     }
 

@@ -17,6 +17,7 @@
 
 use crate::api::{App, Exec, ExecCtx, TaskRegistry};
 use crate::config::ArenaConfig;
+use crate::placement::Directory;
 use crate::token::{Range, TaskId, TaskToken};
 
 use super::workloads::{gen_particles, nbody_step_ref, NBODY_DT, NBODY_EPS};
@@ -32,7 +33,13 @@ pub struct NbodyApp {
     pos_next: Vec<f32>,
     vel: Vec<f32>,
     acc: Vec<f32>,
-    parts: Vec<Range>,
+    dir: Directory,
+    /// Per node: chunks interacted with this iteration (own extents'
+    /// force tasks + streamed guest chunks). A node has seen everything
+    /// when the count reaches the total extent count.
+    seen: Vec<u32>,
+    /// Total owner extents (== nodes under the block layout).
+    total_chunks: u32,
     updates_done: usize,
     iter: u32,
 }
@@ -48,7 +55,9 @@ impl NbodyApp {
             pos_next: vec![],
             vel: vec![],
             acc: vec![],
-            parts: vec![],
+            dir: Directory::unplaced(),
+            seen: vec![],
+            total_chunks: 0,
             updates_done: 0,
             iter: 0,
         }
@@ -124,13 +133,18 @@ impl App for NbodyApp {
         (self.n_particles * 4) as u32
     }
 
+    /// One particle quad ([x, y, z, m]) is indivisible.
+    fn placement_granule(&self) -> u32 {
+        4
+    }
+
     fn register(&self, reg: &mut TaskRegistry) {
         reg.register(self.force_id(), "nbody", true);
         reg.register_streaming(self.stream_id(), "nbody");
         reg.register(self.update_id(), "nbody", false);
     }
 
-    fn init(&mut self, cfg: &ArenaConfig, parts: &[Range]) {
+    fn init(&mut self, cfg: &ArenaConfig, dir: &Directory) {
         assert_eq!(
             self.n_particles % cfg.nodes,
             0,
@@ -143,7 +157,9 @@ impl App for NbodyApp {
         self.pos = pos;
         self.vel = vel;
         self.acc = vec![0.0; self.n_particles * 3];
-        self.parts = parts.to_vec();
+        self.dir = dir.clone();
+        self.total_chunks = dir.extent_count() as u32;
+        self.seen = vec![0; cfg.nodes];
     }
 
     fn root_tokens(&self) -> Vec<TaskToken> {
@@ -152,33 +168,55 @@ impl App for NbodyApp {
     }
 
     fn execute(&mut self, node: usize, tok: &TaskToken, ctx: &mut ExecCtx) -> Exec {
-        let n = self.parts.len();
+        let n = self.dir.nodes();
         let locals = Self::bodies(tok.task);
         let units = if tok.task_id == self.force_id()
             || tok.task_id == self.stream_id()
         {
-            // param encodes the systolic step within the iteration;
-            // at step s this node works on the chunk of node (self-s),
-            // so chunks flow clockwise — the same direction as the
-            // token ring, keeping both the spawn and the transfer at
-            // one hop.
+            // param encodes the systolic step within the iteration. A
+            // chunk is one owner extent of position quads: a step-0
+            // FORCE interacts its extent with every co-located chunk,
+            // then the extent flows clockwise for n-1 hops, so every
+            // node meets every remote chunk exactly once — the same
+            // rotation as before, at extent rather than node
+            // granularity (identical under the block layout).
             let s = tok.param as usize;
-            let guest = (node + n - s) % n;
-            let u = self.interact(locals, Self::bodies(self.parts[guest]));
+            // indexed loops: each extent is Copy'd out before the
+            // `&mut self` interact call — no per-task allocation
+            let (chunk, u) = if s == 0 {
+                let mut u = 0;
+                for i in 0..self.dir.extents(node).len() {
+                    let l = self.dir.extents(node)[i];
+                    u += self.interact(locals.clone(), Self::bodies(l));
+                }
+                (tok.task, u)
+            } else {
+                let chunk = tok.remote;
+                let mut u = 0;
+                for i in 0..self.dir.extents(node).len() {
+                    let l = self.dir.extents(node)[i];
+                    u += self.interact(Self::bodies(l), Self::bodies(chunk));
+                }
+                (chunk, u)
+            };
             if s + 1 < n {
                 // the guest chunk is read-only to this task: forward it
                 // at launch so the neighbour's fetch overlaps compute
                 let next = (node + 1) % n;
                 ctx.spawn_forward(
                     self.stream_id(),
-                    self.parts[next],
+                    self.dir.anchor(next),
                     (s + 1) as f32,
-                    self.parts[guest],
+                    chunk,
                 );
             }
-            if s + 1 >= n {
+            self.seen[node] += 1;
+            if self.seen[node] == self.total_chunks {
                 // this node has now seen every chunk
-                ctx.spawn(self.update_id(), tok.task, 0.0);
+                for i in 0..self.dir.extents(node).len() {
+                    let l = self.dir.extents(node)[i];
+                    ctx.spawn(self.update_id(), l, 0.0);
+                }
             }
             u
         } else {
@@ -191,15 +229,16 @@ impl App for NbodyApp {
                 }
             }
             self.updates_done += 1;
-            if self.updates_done == n {
+            if self.updates_done == self.total_chunks as usize {
                 // iteration barrier: flip buffers, start the next round
                 self.updates_done = 0;
                 self.iter += 1;
                 self.pos.copy_from_slice(&self.pos_next);
                 self.acc.fill(0.0);
+                self.seen.fill(0);
                 if self.iter < self.iters {
-                    for q in 0..n {
-                        ctx.spawn(self.force_id(), self.parts[q], 0.0);
+                    for e in 0..self.dir.extent_count() {
+                        ctx.spawn(self.force_id(), self.dir.extent(e), 0.0);
                     }
                 }
             }

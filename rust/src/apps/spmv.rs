@@ -9,6 +9,7 @@
 
 use crate::api::{App, Exec, ExecCtx, TaskRegistry};
 use crate::config::ArenaConfig;
+use crate::placement::Directory;
 use crate::token::{Range, TaskId, TaskToken};
 
 use super::workloads::{gen_csr, Csr};
@@ -22,7 +23,7 @@ pub struct SpmvApp {
     mat: Csr,
     x: Vec<f32>,
     y: Vec<f32>,
-    parts: Vec<Range>,
+    dir: Directory,
 }
 
 impl SpmvApp {
@@ -36,7 +37,7 @@ impl SpmvApp {
             mat: Csr { n: 0, row_ptr: vec![0], col: vec![], val: vec![] },
             x: Vec::new(),
             y: Vec::new(),
-            parts: Vec::new(),
+            dir: Directory::unplaced(),
         }
     }
 
@@ -89,12 +90,12 @@ impl App for SpmvApp {
         reg.register(self.acc_id(), "spmv", false);
     }
 
-    fn init(&mut self, _cfg: &ArenaConfig, parts: &[Range]) {
+    fn init(&mut self, _cfg: &ArenaConfig, dir: &Directory) {
         self.mat = gen_csr(self.n, self.band, self.extra, self.seed);
         let mut rng = crate::util::Rng::new(self.seed ^ 0xF00D);
         self.x = (0..self.n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
         self.y = vec![0.0; self.n];
-        self.parts = parts.to_vec();
+        self.dir = dir.clone();
     }
 
     fn root_tokens(&self) -> Vec<TaskToken> {
@@ -104,32 +105,40 @@ impl App for SpmvApp {
     fn execute(&mut self, node: usize, tok: &TaskToken, ctx: &mut ExecCtx) -> Exec {
         let units = if tok.task_id == self.init_id() {
             // which remote x-segments do these rows actually touch?
-            let parts = self.parts.clone();
-            for (q, part) in parts.iter().enumerate() {
-                if q == node || part.is_empty() {
-                    continue;
-                }
-                let mut lo = u32::MAX;
-                let mut hi = 0u32;
-                for i in tok.task.start..tok.task.end {
-                    let (cs, _) = self.mat.row(i as usize);
-                    for &c in cs {
-                        if part.start <= c && c < part.end {
-                            lo = lo.min(c);
-                            hi = hi.max(c + 1);
-                        }
-                    }
-                }
-                if lo < hi {
-                    ctx.spawn_with_remote(
-                        self.acc_id(),
-                        tok.task,
-                        0.0,
-                        Range::new(lo, hi),
-                    );
+            // One covering probe per *owner extent* — under the block
+            // layout extents == nodes, so this is exactly the old
+            // per-node band probe; under interleaved layouts the
+            // directory carves the band at every ownership change.
+            let ne = self.dir.extent_count();
+            let mut lo = vec![u32::MAX; ne];
+            let mut hi = vec![0u32; ne];
+            for i in tok.task.start..tok.task.end {
+                let (cs, _) = self.mat.row(i as usize);
+                for &c in cs {
+                    let e = self.dir.extent_index(c);
+                    lo[e] = lo[e].min(c);
+                    hi[e] = hi[e].max(c + 1);
                 }
             }
-            self.accumulate(tok.task, self.parts[node])
+            for e in 0..ne {
+                if self.dir.extent_owner(e) == node || lo[e] >= hi[e] {
+                    continue;
+                }
+                ctx.spawn_with_remote(
+                    self.acc_id(),
+                    tok.task,
+                    0.0,
+                    Range::new(lo[e], hi[e]),
+                );
+            }
+            // locally satisfiable part: every x-extent homed here
+            // (extent Copy'd out, so no allocation per task)
+            let mut u = 0;
+            for e in 0..self.dir.extents(node).len() {
+                let ext = self.dir.extents(node)[e];
+                u += self.accumulate(tok.task, ext);
+            }
+            u
         } else {
             self.accumulate(tok.task, tok.remote)
         };

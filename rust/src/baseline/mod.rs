@@ -16,11 +16,21 @@
 //! under the Table-2 network model; [`serial_ps`] is the 1-node CPU
 //! denominator every figure normalizes by.
 
-use crate::api::{owner_of, stripe, WORD_BYTES};
+use crate::api::WORD_BYTES;
 use crate::apps::{workloads, Scale};
 use crate::config::{ArenaConfig, Ps};
 use crate::mapper::kernels::kernel_for;
+use crate::placement::{Directory, Layout};
 use crate::token::Range;
+
+/// BSP plans repartition contiguously regardless of the ARENA-side
+/// placement knob (a compute-centric code redistributes its arrays
+/// when it starts), so every planner resolves ownership through a
+/// block-layout [`Directory`] — same boundaries as the old
+/// `api::stripe`, O(1) owner lookup instead of the linear scan.
+fn bsp_dir(words: usize, n: usize) -> Directory {
+    Directory::new(Layout::Block, "bsp-plan", words as u32, n, 1, 0)
+}
 
 /// Communication phase of one superstep.
 #[derive(Clone, Debug)]
@@ -192,14 +202,14 @@ pub fn plan(app: &str, scale: Scale, seed: u64, n: usize) -> Vec<Superstep> {
 fn plan_sssp(size: usize, deg: usize, seed: u64, n: usize) -> Vec<Superstep> {
     let adj = workloads::gen_graph(size, deg, seed);
     let levels = workloads::bfs_levels(&adj, 0);
-    let parts = stripe(size as u32, n);
+    let dir = bsp_dir(size, n);
     let max_level = levels.iter().copied().filter(|&l| l != u32::MAX).max().unwrap_or(0);
     let mut steps = Vec::new();
     for l in 0..=max_level {
         let mut units = vec![0u64; n];
         let mut update_words = vec![0u64; n];
         for (v, &lv) in levels.iter().enumerate() {
-            let p = owner_of(&parts, v as u32);
+            let p = dir.owner(v as u32);
             if lv == l {
                 units[p] += size as u64; // dense row scan
                 // (id, level) per out-edge, 2 words each
@@ -234,15 +244,14 @@ fn plan_gemm(size: usize, n: usize) -> Vec<Superstep> {
 /// CSR rows — whose nonzero counts are *not* balanced.
 fn plan_spmv(size: usize, band: usize, extra: usize, seed: u64, n: usize) -> Vec<Superstep> {
     let mat = workloads::gen_csr(size, band, extra, seed);
-    let parts = stripe(size as u32, n);
+    let dir = bsp_dir(size, n);
     let mut units = vec![0u64; n];
     for i in 0..size {
-        let p = owner_of(&parts, i as u32);
+        let p = dir.owner(i as u32);
         let (cols, _) = mat.row(i);
         units[p] += cols.len() as u64;
     }
-    let x_words: Vec<u64> =
-        parts.iter().map(|r| r.len() as u64).collect();
+    let x_words: Vec<u64> = (0..n).map(|p| dir.local_words(p)).collect();
     vec![Superstep { units, comm: Comm::AllGather { words: x_words } }]
 }
 
@@ -252,7 +261,7 @@ fn plan_spmv(size: usize, band: usize, extra: usize, seed: u64, n: usize) -> Vec
 /// (the zig-zag distribution gives every thread remote sub-blocks).
 fn plan_dna(l: usize, b: usize, n: usize) -> Vec<Superstep> {
     let nb = l / b;
-    let parts = stripe((l * l) as u32, n);
+    let dir = bsp_dir(l * l, n);
     let block_words = (b * b) as u32;
     let mut steps = Vec::new();
     for d in 0..(2 * nb - 1) {
@@ -267,7 +276,7 @@ fn plan_dna(l: usize, b: usize, n: usize) -> Vec<Superstep> {
                 continue;
             }
             let addr = ((bi * nb + bj) as u32) * block_words;
-            let p = owner_of(&parts, addr);
+            let p = dir.owner(addr);
             units[p] += (b * b) as u64;
             boundary[p] += 2 * b as u64; // bottom row + right column
         }
@@ -284,12 +293,12 @@ fn plan_dna(l: usize, b: usize, n: usize) -> Vec<Superstep> {
 /// every row), then aggregate locally.
 fn plan_gcn(v: usize, f: usize, h: usize, c: usize, seed: u64, n: usize) -> Vec<Superstep> {
     let d = workloads::gen_gcn(v, f, h, c, seed);
-    let parts = stripe(v as u32, n);
+    let dir = bsp_dir(v, n);
     let mut edges = vec![0u64; n];
     for (u, l) in d.adj.iter().enumerate() {
-        edges[owner_of(&parts, u as u32)] += l.len() as u64 + 1; // + self
+        edges[dir.owner(u as u32)] += l.len() as u64 + 1; // + self
     }
-    let rows: Vec<u64> = parts.iter().map(|r| r.len() as u64).collect();
+    let rows: Vec<u64> = (0..n).map(|p| dir.local_words(p)).collect();
     let mut steps = Vec::new();
     for (din, dout) in [(f, h), (h, c)] {
         // combine: rows_p * din * dout MACs, then allgather z rows
@@ -322,7 +331,8 @@ fn plan_nbody(n_particles: usize, iters: u32, n: usize) -> Vec<Superstep> {
         .collect()
 }
 
-/// Per-app data partition used by the planner (shared with the apps).
+/// Per-app data partition used by the planner (shared with the apps):
+/// one contiguous range per node, from the block-layout directory.
 pub fn partition(app: &str, scale: Scale, n: usize) -> Vec<Range> {
     let d = dims(app, scale);
     let words = match app {
@@ -334,7 +344,10 @@ pub fn partition(app: &str, scale: Scale, n: usize) -> Vec<Range> {
         "nbody" => d[0] * 4,
         other => panic!("unknown app '{other}'"),
     };
-    stripe(words as u32, n)
+    let dir = bsp_dir(words, n);
+    (0..n)
+        .map(|p| dir.extents(p).first().copied().unwrap_or_else(Range::empty))
+        .collect()
 }
 
 #[cfg(test)]

@@ -16,12 +16,13 @@
 //! claim): each app owns a private address space; the filter resolves a
 //! token against the local range of *its* app's partition.
 
-use crate::api::{owner_of, stripe, App, ExecCtx, TaskRegistry, WORD_BYTES};
+use crate::api::{App, ExecCtx, TaskRegistry, WORD_BYTES};
 use crate::cgra::{CgraStats, CoalesceStats, GroupMappings};
 use crate::config::{ArenaConfig, Ps};
 use crate::dispatcher::DispatcherStats;
 use crate::mapper::kernels::{kernel_for, KernelSpec};
 use crate::node::{Compute, Node, SW_TOKEN_OVERHEAD_CYCLES};
+use crate::placement::Directory;
 use crate::ring::{RingNet, RingStats};
 use crate::runtime::Engine;
 use crate::sim::Engine as Des;
@@ -64,6 +65,8 @@ pub struct RunReport {
     pub app: String,
     pub model: &'static str,
     pub nodes: usize,
+    /// Data-placement layout the run used (`block` | `cyclic` | …).
+    pub layout: &'static str,
     /// Wall-clock of the simulated run (first injection -> quiescence).
     pub makespan_ps: Ps,
     pub ring: RingStats,
@@ -79,6 +82,14 @@ pub struct RunReport {
     pub remote_bytes: u64,
     /// Scratchpad traffic across all nodes (power activity factor).
     pub local_bytes: u64,
+    /// Per-node local-hit fraction: of the words each node's tasks
+    /// referenced — payload-free task ranges (local by construction,
+    /// once each) plus acquired REMOTE ranges segment-by-segment —
+    /// how many were already homed there. Task ranges of
+    /// payload-carrying tokens are routing metadata and excluded, so
+    /// the fraction is comparable across layouts. Nodes that touched
+    /// nothing report 1.0.
+    pub locality: Vec<f64>,
     pub events: u64,
     pub terminate_laps: u64,
 }
@@ -110,6 +121,15 @@ impl RunReport {
         self.task_movement_bytes()
             + self.data_movement_bytes()
             + self.control_movement_bytes()
+    }
+
+    /// Mean local-hit fraction across the nodes (the skew-sweep
+    /// locality metric).
+    pub fn mean_locality(&self) -> f64 {
+        if self.locality.is_empty() {
+            return 1.0;
+        }
+        self.locality.iter().sum::<f64>() / self.locality.len() as f64
     }
 
     /// Coefficient of variation of per-node work (0 = perfect balance).
@@ -145,8 +165,8 @@ pub struct Cluster {
     cfg: ArenaConfig,
     model: Model,
     apps: Vec<Box<dyn App>>,
-    /// Per-app partition of its private address space.
-    parts: Vec<Vec<Range>>,
+    /// Per-app address→node directory (the placement subsystem).
+    dirs: Vec<Directory>,
     registry: TaskRegistry,
     /// Direct-indexed by the 4-bit TaskId (hot path: one
     /// lookup per filtered token).
@@ -167,7 +187,7 @@ impl Cluster {
         let mut registry = TaskRegistry::new();
         let mut kernels: Vec<Option<KernelInfo>> =
             (0..16).map(|_| None).collect();
-        let mut parts = Vec::with_capacity(apps.len());
+        let mut dirs = Vec::with_capacity(apps.len());
         let mut apps = apps;
         let app_names: Vec<&'static str> =
             apps.iter().map(|a| a.name()).collect();
@@ -207,9 +227,16 @@ impl Cluster {
                     spec,
                 });
             }
-            let p = stripe(app.words(), n);
-            app.init(&cfg, &p);
-            parts.push(p);
+            let dir = Directory::new(
+                cfg.layout,
+                app.name(),
+                app.words(),
+                n,
+                app.placement_granule(),
+                cfg.seed,
+            );
+            app.init(&cfg, &dir);
+            dirs.push(dir);
         }
         let n_apps = apps.len();
         let nodes = (0..n)
@@ -221,7 +248,7 @@ impl Cluster {
             cfg,
             model,
             apps,
-            parts,
+            dirs,
             registry,
             kernels,
             max_events: 2_000_000_000,
@@ -253,10 +280,19 @@ impl Cluster {
             .unwrap_or_else(|| panic!("unregistered task id {id}"))
     }
 
-    /// Local data range of `node` for the app owning `task_id`.
-    fn local_range(&self, node: usize, task_id: TaskId) -> Range {
-        let ai = self.kernel(task_id).app_idx;
-        self.parts[ai][node]
+    /// Range the dispatcher filter cuts `tok` against on `node`: the
+    /// first local extent (of the owning app's directory) overlapping
+    /// the token's range. An empty range (nothing local overlaps)
+    /// makes the filter convey the token unchanged — byte-identical to
+    /// the old single-stripe behaviour when the layout is `block`.
+    fn filter_range(&self, node: usize, tok: &TaskToken) -> Range {
+        let ai = self.kernel(tok.task_id).app_idx;
+        self.dirs[ai].filter_extent(node, tok.task)
+    }
+
+    /// Directory of the app owning `task_id` (test observability).
+    pub fn directory_for(&self, task_id: TaskId) -> &Directory {
+        &self.dirs[self.kernel(task_id).app_idx]
     }
 
     /// Dispatcher clock period: fabric cycles for the hardware
@@ -427,7 +463,7 @@ impl Cluster {
                     self.nodes[n].touch();
                 }
             } else {
-                let local = self.local_range(n, tok.task_id);
+                let local = self.filter_range(n, &tok);
                 if self.nodes[n].disp.process(tok, local).is_ok() {
                     self.nodes[n].disp.recv.pop();
                     self.nodes[n].touch();
@@ -556,8 +592,8 @@ impl Cluster {
         }
 
         // timed execution on the substrate (split borrows: kernels and
-        // parts are read-only while the node's compute state mutates).
-        let Cluster { kernels, nodes, parts, cfg, .. } = self;
+        // dirs are read-only while the node's compute state mutates).
+        let Cluster { kernels, nodes, dirs, cfg, .. } = self;
         let info = kernels[tok.task_id as usize]
             .as_ref()
             .expect("unregistered task id");
@@ -571,7 +607,7 @@ impl Cluster {
                 done
             }
             Compute::Cgra(cgra) => {
-                let local_len = parts[app_idx][n].len() as u64;
+                let local_len = dirs[app_idx].local_words(n);
                 match cgra.launch(now, &tok, local_len, exec.units, &info.mappings)
                 {
                     Some(l) => l.done,
@@ -591,6 +627,17 @@ impl Cluster {
         self.nodes[n].stats.tasks += 1;
         self.nodes[n].stats.units += exec.units;
         self.nodes[n].stats.local_bytes += exec.local_bytes;
+        // Locality booking: task ranges are local by the filter's
+        // construction, counted once here. Tokens carrying a REMOTE
+        // payload are excluded — their task range is routing metadata
+        // (a streaming anchor, or rows re-read once per acquired
+        // segment), so booking it would skew the metric by layout;
+        // their data reads were booked segment-by-segment at fetch
+        // time instead.
+        if !tok.needs_remote_data() {
+            self.nodes[n].stats.touched_words += tok.task.len() as u64;
+            self.nodes[n].stats.local_hit_words += tok.task.len() as u64;
+        }
         self.app_stats[app_idx].0 += 1;
         self.app_stats[app_idx].1 += exec.units;
         self.nodes[n].touch();
@@ -598,39 +645,44 @@ impl Cluster {
     }
 
     /// `ARENA_data_acquire`: pull `tok.remote` over the data-transfer
-    /// network — from the range's home node(s), or from the token's
-    /// parent for streaming kernels. Returns the completion time.
+    /// network — from the range's home node(s) per the directory, or
+    /// from the token's parent for streaming kernels. Returns the
+    /// completion time and books the locality counters.
     fn fetch_remote(&mut self, now: Ps, n: usize, tok: &TaskToken) -> Ps {
         let info = self.kernel(tok.task_id);
+        let app_idx = info.app_idx;
         if info.fetch_from_parent {
             // the spawning node's scratchpad holds a live copy
             let src = tok.from_node as usize;
+            let words = tok.remote.len() as u64;
+            self.nodes[n].stats.touched_words += words;
             if src == n {
+                self.nodes[n].stats.local_hit_words += words;
                 return now;
             }
-            let words = tok.remote.len() as u64;
             // request header is control traffic, the payload is data
             let req_at = self.ring.send_ctrl(&self.cfg, now, n, src, WIRE_BYTES);
             return self.ring.send_data(&self.cfg, req_at, src, n, words * WORD_BYTES);
         }
-        let parts = &self.parts[info.app_idx];
+        // walk the remote range extent by extent (owner lookup is the
+        // directory's O(1)/O(log n) hot path, not a linear scan)
+        let Cluster { dirs, ring, cfg, nodes, .. } = self;
+        let dir = &dirs[app_idx];
         let mut t_done = now;
         let mut at = tok.remote.start;
         while at < tok.remote.end {
-            let owner = owner_of(parts, at);
-            let end = tok.remote.end.min(parts[owner].end);
+            let (owner, ext) = dir.owner_extent(at);
+            let end = tok.remote.end.min(ext.end);
             let words = (end - at) as u64;
+            nodes[n].stats.touched_words += words;
             if owner != n {
                 // request message out (control), payload back (data).
-                let req_at = self.ring.send_ctrl(&self.cfg, now, n, owner, WIRE_BYTES);
-                let got = self.ring.send_data(
-                    &self.cfg,
-                    req_at,
-                    owner,
-                    n,
-                    words * WORD_BYTES,
-                );
+                let req_at = ring.send_ctrl(cfg, now, n, owner, WIRE_BYTES);
+                let got =
+                    ring.send_data(cfg, req_at, owner, n, words * WORD_BYTES);
                 t_done = t_done.max(got);
+            } else {
+                nodes[n].stats.local_hit_words += words;
             }
             at = end;
         }
@@ -642,6 +694,7 @@ impl Cluster {
         let mut cgra = CgraStats::default();
         let mut coalesce = CoalesceStats::default();
         let mut node_units = Vec::with_capacity(self.nodes.len());
+        let mut locality = Vec::with_capacity(self.nodes.len());
         let mut tasks = 0;
         let mut fetches = 0;
         let mut fetched = 0;
@@ -673,6 +726,11 @@ impl Cluster {
             coalesce.emitted += cs.emitted;
             coalesce.spill_peak = coalesce.spill_peak.max(cs.spill_peak);
             node_units.push(nd.stats.units);
+            locality.push(if nd.stats.touched_words == 0 {
+                1.0
+            } else {
+                nd.stats.local_hit_words as f64 / nd.stats.touched_words as f64
+            });
             tasks += nd.stats.tasks;
             fetches += nd.stats.fetches;
             fetched += nd.stats.fetched_bytes;
@@ -687,6 +745,7 @@ impl Cluster {
                 .join("+"),
             model: self.model.label(),
             nodes: self.nodes.len(),
+            layout: self.cfg.layout.label(),
             makespan_ps: makespan,
             ring: self.ring.stats.clone(),
             dispatcher,
@@ -703,6 +762,7 @@ impl Cluster {
             remote_fetches: fetches,
             remote_bytes: fetched,
             local_bytes,
+            locality,
             events,
             terminate_laps: self.terminate_laps,
         }
@@ -725,6 +785,7 @@ impl Cluster {
 mod tests {
     use super::*;
     use crate::api::Exec;
+    use crate::placement::Layout;
 
     /// Toy app: word `i` of an N-word vector must be incremented once.
     /// The root task covers the whole space; the filter splits it per
@@ -756,7 +817,7 @@ mod tests {
                 reg.register(2, "spmv", false);
             }
         }
-        fn init(&mut self, _cfg: &ArenaConfig, _parts: &[Range]) {}
+        fn init(&mut self, _cfg: &ArenaConfig, _dir: &Directory) {}
         fn root_tokens(&self) -> Vec<TaskToken> {
             vec![TaskToken::new(1, Range::new(0, self.words), 0.0)]
         }
@@ -859,6 +920,82 @@ mod tests {
         assert_eq!(a.ring, b.ring);
     }
 
+    fn run_layout(layout: Layout, echoes: bool) -> RunReport {
+        let cfg = ArenaConfig::default().with_nodes(4).with_layout(layout);
+        let mut cl = Cluster::new(
+            cfg,
+            Model::SoftwareCpu,
+            vec![Box::new(TouchAll::new(4096, echoes))],
+        );
+        let r = cl.run(None);
+        cl.check().expect("functional check under non-block layout");
+        r
+    }
+
+    #[test]
+    fn every_layout_touches_the_whole_space() {
+        for layout in Layout::ALL {
+            let r = run_layout(layout, true);
+            assert_eq!(r.layout, layout.label());
+            assert_eq!(r.node_units.iter().sum::<u64>(), 2 * 4096, "{layout}");
+            assert_eq!(r.locality.len(), 4);
+            assert!(
+                r.locality.iter().all(|&f| (0.0..=1.0).contains(&f)),
+                "{layout}: locality out of range {:?}",
+                r.locality
+            );
+        }
+    }
+
+    #[test]
+    fn interleaved_layouts_shatter_tokens_but_stay_correct() {
+        // cyclic at word granularity: the root token is carved into one
+        // piece per extent, so far more tasks execute than the 4 of the
+        // block stripe — and the result is still exact.
+        let block = run_layout(Layout::Block, false);
+        let cyclic = run_layout(Layout::Cyclic, false);
+        assert_eq!(block.tasks_executed, 4);
+        assert!(
+            cyclic.tasks_executed > block.tasks_executed,
+            "cyclic {} !> block {}",
+            cyclic.tasks_executed,
+            block.tasks_executed
+        );
+        assert!(
+            cyclic.task_movement_bytes() > block.task_movement_bytes(),
+            "interleaving must cost token movement"
+        );
+    }
+
+    #[test]
+    fn zipf_layout_skews_the_load() {
+        let r = run_layout(Layout::Zipf, false);
+        // node 0 holds the Zipf head, so it executes the most work
+        let max = *r.node_units.iter().max().unwrap();
+        assert_eq!(r.node_units[0], max, "{:?}", r.node_units);
+        assert!(r.imbalance() > 0.2, "no skew: {:?}", r.node_units);
+    }
+
+    #[test]
+    fn remote_fetches_respect_shuffled_owners() {
+        let cfg = ArenaConfig::default()
+            .with_nodes(4)
+            .with_layout(Layout::Shuffle);
+        let mut cl = Cluster::new(
+            cfg,
+            Model::SoftwareCpu,
+            vec![Box::new(RemoteReader { words: 1024, state: vec![0; 1024] })],
+        );
+        let r = cl.run(None);
+        cl.check().unwrap();
+        assert!(r.remote_fetches > 0);
+        // only the genuinely remote segments travel the DTN, so the
+        // wire payload never exceeds the acquired words
+        assert!(r.ring.data_bytes <= r.remote_bytes);
+        assert!(r.ring.data_bytes > 0, "some mirrored words are remote");
+        assert!(r.mean_locality() < 1.0, "mirrored reads can't be all-local");
+    }
+
     /// Lap-accounting regression (unified counting): for a single-wave
     /// workload (no echoes, so no second wave of work) the probe makes
     /// exactly two circulations — one where every node records its
@@ -904,7 +1041,7 @@ mod tests {
             reg.register(3, "spmv", true);
             reg.register(4, "spmv", false);
         }
-        fn init(&mut self, _cfg: &ArenaConfig, _parts: &[Range]) {}
+        fn init(&mut self, _cfg: &ArenaConfig, _dir: &Directory) {}
         fn root_tokens(&self) -> Vec<TaskToken> {
             vec![TaskToken::new(3, Range::new(0, self.words), 0.0)]
         }
@@ -1009,7 +1146,7 @@ mod tests {
         fn register(&self, reg: &mut TaskRegistry) {
             reg.register(9, "spmv", true);
         }
-        fn init(&mut self, _cfg: &ArenaConfig, _parts: &[Range]) {}
+        fn init(&mut self, _cfg: &ArenaConfig, _dir: &Directory) {}
         fn root_tokens(&self) -> Vec<TaskToken> {
             // a token with a task id the 4-bit wire field cannot carry
             vec![TaskToken::new(20, Range::new(0, 16), 0.0)]
@@ -1060,8 +1197,8 @@ mod tests {
             fn register(&self, reg: &mut TaskRegistry) {
                 reg.register(7, "gemm", true);
             }
-            fn init(&mut self, c: &ArenaConfig, p: &[Range]) {
-                self.0.init(c, p)
+            fn init(&mut self, c: &ArenaConfig, d: &Directory) {
+                self.0.init(c, d)
             }
             fn root_tokens(&self) -> Vec<TaskToken> {
                 vec![TaskToken::new(7, Range::new(0, self.0.words), 0.0)]

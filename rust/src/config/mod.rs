@@ -9,6 +9,8 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
 
+use crate::placement::Layout;
+
 /// Simulation time is integer picoseconds (lcm-friendly for the 800 MHz
 /// CGRA clock, the 2.6 GHz CPU clock and the 1 µs network hop).
 pub type Ps = u64;
@@ -49,7 +51,10 @@ pub struct ArenaConfig {
     pub group_alloc: GroupAlloc,
     /// Coalescing unit enabled (ablation knob; paper has it on).
     pub coalescing: bool,
-    /// Workload RNG seed.
+    /// Data-placement layout for every app's address space (the skew
+    /// axis; `block` reproduces the pre-placement figures exactly).
+    pub layout: Layout,
+    /// Workload RNG seed (also feeds the `shuffle` placement).
     pub seed: u64,
 }
 
@@ -105,6 +110,7 @@ impl Default for ArenaConfig {
             reconfig_cycles: 8,
             group_alloc: GroupAlloc::Dynamic,
             coalescing: true,
+            layout: Layout::Block,
             seed: 0xA2EA,
         }
     }
@@ -139,6 +145,11 @@ impl ArenaConfig {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_layout(mut self, layout: Layout) -> Self {
+        self.layout = layout;
         self
     }
 
@@ -183,6 +194,11 @@ impl ArenaConfig {
                 })?
             }
             "coalescing" => next.coalescing = parse!(val),
+            "layout" => {
+                next.layout = Layout::parse(val).ok_or_else(|| {
+                    ConfigError::BadValue(key.into(), val.into())
+                })?
+            }
             "seed" => next.seed = parse_seed(val).map_err(bad!())?,
             _ => return Err(ConfigError::UnknownKey(key.into())),
         }
@@ -251,6 +267,7 @@ impl ArenaConfig {
         m.insert("reconfig_cycles", self.reconfig_cycles.to_string());
         m.insert("group_alloc", self.group_alloc.name().to_string());
         m.insert("coalescing", self.coalescing.to_string());
+        m.insert("layout", self.layout.label().to_string());
         m.insert("seed", self.seed.to_string());
         m.iter()
             .map(|(k, v)| format!("{k} = {v}\n"))
@@ -336,6 +353,9 @@ mod tests {
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("seed", "0xDEAD").is_ok());
         assert_eq!(c.seed, 0xDEAD);
+        assert!(c.set("layout", "cyclic").is_ok());
+        assert_eq!(c.layout, Layout::Cyclic);
+        assert!(c.set("layout", "diagonal").is_err());
     }
 
     #[test]

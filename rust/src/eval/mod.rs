@@ -9,12 +9,16 @@ use crate::apps::{make_app, Scale, ALL};
 use crate::cluster::{Cluster, Model, RunReport};
 use crate::config::ArenaConfig;
 use crate::mapper::kernels::kernel_for;
+use crate::placement::Layout;
 use crate::power::{area, power, Activity};
 use crate::runtime::Engine;
 use crate::sweep::CellStore;
 
 /// Node counts evaluated in the paper's scalability figures.
 pub const NODE_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Ring size of the skew-sensitivity sweep (Fig. 10's cluster).
+pub const SKEW_NODES: usize = 4;
 
 /// A printable result table (one paper artifact).
 #[derive(Clone, Debug)]
@@ -96,7 +100,8 @@ impl Table {
     }
 }
 
-/// Run one ARENA simulation (the DES path shared by every figure).
+/// Run one ARENA simulation (the DES path shared by every figure),
+/// under the block layout the paper's figures assume.
 pub fn run_arena(
     app: &str,
     scale: Scale,
@@ -105,10 +110,29 @@ pub fn run_arena(
     model: Model,
     engine: Option<&mut Engine>,
 ) -> RunReport {
-    let cfg = ArenaConfig::default().with_nodes(nodes).with_seed(seed);
+    run_arena_at(app, scale, seed, nodes, model, Layout::Block, engine)
+}
+
+/// Run one ARENA simulation under an explicit data-placement layout
+/// (the skew-sensitivity axis).
+pub fn run_arena_at(
+    app: &str,
+    scale: Scale,
+    seed: u64,
+    nodes: usize,
+    model: Model,
+    layout: Layout,
+    engine: Option<&mut Engine>,
+) -> RunReport {
+    let cfg = ArenaConfig::default()
+        .with_nodes(nodes)
+        .with_seed(seed)
+        .with_layout(layout);
     let mut cl = Cluster::new(cfg, model, vec![make_app(app, scale, seed)]);
     let r = cl.run(engine);
-    cl.check().unwrap_or_else(|e| panic!("{app} failed its oracle: {e}"));
+    cl.check().unwrap_or_else(|e| {
+        panic!("{app} [layout {layout}] failed its oracle: {e}")
+    });
     r
 }
 
@@ -282,6 +306,72 @@ pub fn fig13_with(store: &mut CellStore) -> (Table, Table) {
     let avg = pt.mean_row()[0];
     pt.row("average", vec![avg]);
     (at, pt)
+}
+
+/// Skew-sensitivity sweep: makespan, total data movement and locality
+/// of every app under every placement layout, per execution model, on
+/// the Fig. 10 cluster size. Makespan and movement are normalized to
+/// the block layout (block ≡ 1.0), so the table reads directly as
+/// "what does skew cost": values > 1 mean the layout erodes ARENA's
+/// win. Assembled from the memoized store — `--all-layouts` sweeps and
+/// serial runs are bit-identical for any `--jobs` value.
+pub fn skew_with(store: &mut CellStore) -> Vec<Table> {
+    let headers: Vec<String> =
+        Layout::ALL.iter().map(|l| l.label().to_string()).collect();
+    let href: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut out = Vec::new();
+    for model in [Model::SoftwareCpu, Model::Cgra] {
+        let mut mk = Table::new(
+            &format!(
+                "Skew A — makespan vs layout (norm. to block), {}, {} nodes",
+                model.label(),
+                SKEW_NODES
+            ),
+            &href,
+        );
+        let mut mv = Table::new(
+            &format!(
+                "Skew B — total movement vs layout (norm. to block), {}, \
+                 {} nodes",
+                model.label(),
+                SKEW_NODES
+            ),
+            &href,
+        );
+        let mut loc = Table::new(
+            &format!(
+                "Skew C — mean local-hit fraction per layout, {}, {} nodes",
+                model.label(),
+                SKEW_NODES
+            ),
+            &href,
+        );
+        for app in ALL {
+            let (base_mk, base_mv) = {
+                let r = store.arena_at(app, SKEW_NODES, model, Layout::Block);
+                (
+                    r.makespan_ps as f64,
+                    r.total_movement_bytes().max(1) as f64,
+                )
+            };
+            let mut vmk = Vec::new();
+            let mut vmv = Vec::new();
+            let mut vloc = Vec::new();
+            for &l in &Layout::ALL {
+                let r = store.arena_at(app, SKEW_NODES, model, l);
+                vmk.push(r.makespan_ps as f64 / base_mk);
+                vmv.push(r.total_movement_bytes() as f64 / base_mv);
+                vloc.push(r.mean_locality());
+            }
+            mk.row(app, vmk);
+            mv.row(app, vmv);
+            loc.row(app, vloc);
+        }
+        out.push(mk);
+        out.push(mv);
+        out.push(loc);
+    }
+    out
 }
 
 /// §5.2 headline numbers, computed from the same runs as Figs. 9/11.

@@ -14,12 +14,16 @@
 //!   arena fig 10
 //!   arena config --set cgra_mhz=400 --set nodes=8
 
+// same crate-wide lint posture as the library (see rust/src/lib.rs)
+#![allow(clippy::too_many_arguments)]
+
 use arena::apps::{Scale, ALL};
 use arena::baseline::{run_bsp, serial_ps};
 use arena::cli;
 use arena::cluster::{Model, RunReport};
 use arena::config::ArenaConfig;
 use arena::eval;
+use arena::placement::Layout;
 use arena::runtime::Engine;
 use arena::sweep;
 
@@ -28,22 +32,29 @@ usage: arena <command> [options]
 
 commands:
   run     --app <name> --model <model> [--nodes N] [--scale small|paper]
-          [--seed S] [--engine] [--config FILE] [--set k=v ...]
+          [--seed S] [--layout L] [--engine] [--config FILE]
+          [--set k=v ...]
   fig     <9|10|11|12|13|all> [--scale small|paper] [--seed S]
   sweep   [--all | 9 10 11 12 13] [--jobs N] [--scale small|paper]
-          [--seed S]   regenerate figures on a worker pool; output is
-          bit-identical for every --jobs value
+          [--seed S] [--layout L]   regenerate figures on a worker
+          pool; output is bit-identical for every --jobs value
+  sweep   --all-layouts [--jobs N] [--scale small|paper] [--seed S]
+          skew-sensitivity sweep: every app x model x layout
   apps    list applications and models
   config  [--config FILE] [--set k=v ...]   print effective config
 
-models: arena-cgra | arena-sw | bsp-cpu | bsp-cgra | serial
+models:  arena-cgra | arena-sw | bsp-cpu | bsp-cgra | serial
+layouts: block | cyclic | zipf | shuffle
 ";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cli::parse(
         &argv,
-        &["app", "model", "nodes", "scale", "seed", "config", "fig", "jobs"],
+        &[
+            "app", "model", "nodes", "scale", "seed", "config", "fig",
+            "jobs", "layout",
+        ],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -84,6 +95,9 @@ fn build_config(args: &cli::Args) -> Result<ArenaConfig, String> {
     if let Some(s) = args.opt("seed") {
         cfg.set("seed", s).map_err(|e| e.to_string())?;
     }
+    if let Some(l) = args.opt("layout") {
+        cfg.set("layout", l).map_err(|e| e.to_string())?;
+    }
     for (k, v) in &args.sets {
         cfg.set(k, v).map_err(|e| e.to_string())?;
     }
@@ -115,6 +129,7 @@ fn print_report(r: &RunReport, serial: f64) {
     println!("app                {}", r.app);
     println!("model              {}", r.model);
     println!("nodes              {}", r.nodes);
+    println!("layout             {}", r.layout);
     println!("makespan           {:.3} ms", r.makespan_ms());
     println!("speedup vs serial  {:.2}x", serial / r.makespan_ps as f64);
     println!("tasks executed     {}", r.tasks_executed);
@@ -144,6 +159,14 @@ fn print_report(r: &RunReport, serial: f64) {
     println!(
         "coalescer          {} spawned, {} merged, {} spilled",
         r.coalesce.spawned, r.coalesce.coalesced, r.coalesce.spilled
+    );
+    println!(
+        "locality           mean {:.3} local-hit fraction (per node {:?})",
+        r.mean_locality(),
+        r.locality
+            .iter()
+            .map(|f| (f * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
     );
     if r.cgra.launches > 0 {
         println!(
@@ -246,6 +269,24 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             Some(n) => n,
             None => sweep::default_jobs(),
         };
+        if args.flag("all-layouts") {
+            let t0 = std::time::Instant::now();
+            let out = sweep::run_skew(scale, seed, jobs);
+            print!("{}", out.render());
+            eprintln!(
+                "skew sweep: {} unique cells on {} worker(s) in {:.2}s",
+                out.cells,
+                out.workers,
+                t0.elapsed().as_secs_f64()
+            );
+            return Ok(());
+        }
+        let layout = match args.opt("layout") {
+            Some(l) => Layout::parse(l).ok_or_else(|| {
+                format!("unknown layout '{l}' (block|cyclic|zipf|shuffle)")
+            })?,
+            None => Layout::Block,
+        };
         let figs: Vec<sweep::Fig> =
             if args.flag("all") || args.positional.is_empty() {
                 sweep::Fig::ALL.to_vec()
@@ -260,7 +301,7 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                     .collect::<Result<_, _>>()?
             };
         let t0 = std::time::Instant::now();
-        let out = sweep::run(&figs, scale, seed, jobs);
+        let out = sweep::run_at(&figs, scale, seed, jobs, layout);
         print!("{}", out.render());
         if let Some(h) = out.headline {
             println!("## §5.2 headline (paper: 1.61x / 2.17x / 4.37x / 53.9%)");

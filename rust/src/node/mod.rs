@@ -70,6 +70,14 @@ pub struct NodeStats {
     pub fetches: u64,
     /// Bytes fetched from remote nodes.
     pub fetched_bytes: u64,
+    /// Words this node's tasks referenced (payload-free task ranges +
+    /// acquired REMOTE ranges) — the locality denominator. Task ranges
+    /// of REMOTE-carrying tokens are routing metadata, not booked.
+    pub touched_words: u64,
+    /// Of those, words that were already homed here (payload-free task
+    /// ranges are local by the filter's construction; REMOTE segments
+    /// count when the directory resolves them to this node).
+    pub local_hit_words: u64,
     /// TERMINATE tokens handled.
     pub terminate_seen: u64,
     /// Tokens that arrived while the recv queue was full (ring

@@ -1,0 +1,635 @@
+//! Pluggable data placement: the address→node directory.
+//!
+//! The paper "presumes distributed data storage without asserting any
+//! prior knowledge on the data distribution" (§1) — but *which*
+//! distribution the data actually has decides how well bring-compute-
+//! to-data works. This module owns that axis. A [`Directory`] maps an
+//! app's global word addresses onto ring nodes through one of four
+//! [`Layout`]s:
+//!
+//! * `block`   — the classic contiguous stripe (the only layout the
+//!   pre-placement code supported, via `api::stripe`);
+//! * `cyclic`  — granule-interleaved round-robin (block-cyclic when the
+//!   app's granule is a tile/block);
+//! * `zipf`    — contiguous partitions with Zipf(1)-skewed sizes (node
+//!   0 holds the hot share — the "one node owns half the data" regime);
+//! * `shuffle` — a seeded random permutation of granules (placement
+//!   with no spatial structure at all).
+//!
+//! Internally a layout is normalized to an *extent table*: maximal
+//! contiguous runs of same-owner addresses, sorted by start. Owner
+//! lookup is O(1) arithmetic for `block`/`cyclic` and a sorted-boundary
+//! binary search (O(log extents)) otherwise — it sits on the fetch and
+//! filter hot paths, replacing the old linear scan over `Vec<Range>`
+//! (kept in `api::owner_of` as the measured baseline; see
+//! `benches/micro_hotpath.rs`).
+//!
+//! Layouts respect the app's *placement granule* (e.g. one DNA DP
+//! block, one GCN vertex slot, one GEMM row, one N-body quad), so an
+//! app's unit of work is never split across owners by the placement
+//! itself.
+
+use std::fmt;
+
+use crate::token::Range;
+use crate::util::Rng;
+
+/// Data-placement policy for one app's global address space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Layout {
+    /// Contiguous equal stripe (the pre-placement default).
+    Block,
+    /// Round-robin over granules (block-cyclic interleaving).
+    Cyclic,
+    /// Contiguous partitions, sizes ∝ 1/(rank+1) (Zipf exponent 1).
+    Zipf,
+    /// Seeded random shuffle of granules over the nodes.
+    Shuffle,
+}
+
+impl Layout {
+    pub const ALL: [Layout; 4] =
+        [Layout::Block, Layout::Cyclic, Layout::Zipf, Layout::Shuffle];
+
+    pub fn parse(s: &str) -> Option<Layout> {
+        match s {
+            "block" => Some(Layout::Block),
+            "cyclic" => Some(Layout::Cyclic),
+            "zipf" => Some(Layout::Zipf),
+            "shuffle" => Some(Layout::Shuffle),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Layout::Block => "block",
+            Layout::Cyclic => "cyclic",
+            Layout::Zipf => "zipf",
+            Layout::Shuffle => "shuffle",
+        }
+    }
+}
+
+impl fmt::Display for Layout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// An address fell outside the app's global space. Carries the app and
+/// layout so a miss names its context instead of dying on a bare
+/// `address {a} outside the global space` with no owner to blame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlacementError {
+    pub app: &'static str,
+    pub layout: Layout,
+    pub addr: u32,
+    pub words: u32,
+}
+
+impl fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "app '{}': address {} outside the global space [0, {}) \
+             (layout {})",
+            self.app, self.addr, self.words, self.layout
+        )
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+/// O(1) owner-lookup fast paths for the arithmetic layouts.
+#[derive(Clone, Copy, Debug)]
+enum Fast {
+    /// Binary search over the extent boundaries.
+    Search,
+    /// Contiguous stripe: first `rem` nodes hold `big` words (ending at
+    /// `boundary`), the rest hold `base`.
+    BlockStripe { boundary: u32, big: u32, base: u32, rem: u32 },
+    /// Round-robin granules: extent `a / granule`, owner `% nodes`.
+    Cyclic { granule: u32 },
+}
+
+/// The address→node mapping for one app under one [`Layout`].
+///
+/// Extent `i` is `[bounds[i], bounds[i+1])`, owned by `owners[i]`;
+/// adjacent extents never share an owner (maximal runs), except under
+/// the `cyclic` fast path where every granule is its own extent.
+#[derive(Clone, Debug)]
+pub struct Directory {
+    app: &'static str,
+    layout: Layout,
+    words: u32,
+    granule: u32,
+    nodes: usize,
+    /// Extent boundaries: `bounds[0] = 0 < … < bounds[m] = words`.
+    bounds: Vec<u32>,
+    /// `owners[i]` owns `[bounds[i], bounds[i+1])`.
+    owners: Vec<u32>,
+    /// Per-node extent lists, address-ascending (filter-side view).
+    by_node: Vec<Vec<Range>>,
+    node_words: Vec<u64>,
+    fast: Fast,
+}
+
+impl Directory {
+    /// Build the mapping of `words` addresses onto `nodes` under
+    /// `layout`. `granule` is the app's indivisible placement unit;
+    /// `seed` feeds the `shuffle` permutation (other layouts are
+    /// seed-independent). `app` is carried for error context.
+    pub fn new(
+        layout: Layout,
+        app: &'static str,
+        words: u32,
+        nodes: usize,
+        granule: u32,
+        seed: u64,
+    ) -> Directory {
+        assert!(words > 0, "app '{app}': empty global address space");
+        assert!(nodes >= 1, "app '{app}': need at least one node");
+        assert!(granule >= 1, "app '{app}': placement granule must be >= 1");
+        let (bounds, owners, fast) = if nodes == 1 {
+            // every layout collapses to one extent on a single node
+            (vec![0, words], vec![0u32], Fast::Search)
+        } else {
+            match layout {
+                Layout::Block => block_extents(words, nodes),
+                Layout::Cyclic => cyclic_extents(words, nodes, granule),
+                Layout::Zipf => zipf_extents(words, nodes, granule),
+                Layout::Shuffle => {
+                    shuffle_extents(words, nodes, granule, seed)
+                }
+            }
+        };
+        debug_assert_eq!(bounds.len(), owners.len() + 1);
+        debug_assert_eq!(*bounds.first().unwrap(), 0);
+        debug_assert_eq!(*bounds.last().unwrap(), words);
+        let mut by_node: Vec<Vec<Range>> = vec![Vec::new(); nodes];
+        let mut node_words = vec![0u64; nodes];
+        for (i, &o) in owners.iter().enumerate() {
+            let r = Range::new(bounds[i], bounds[i + 1]);
+            node_words[o as usize] += r.len() as u64;
+            by_node[o as usize].push(r);
+        }
+        Directory {
+            app,
+            layout,
+            words,
+            granule,
+            nodes,
+            bounds,
+            owners,
+            by_node,
+            node_words,
+            fast,
+        }
+    }
+
+    /// Placeholder directory for app state before `init` runs (a
+    /// 1-word space on one node; never looked up).
+    pub fn unplaced() -> Directory {
+        Directory::new(Layout::Block, "unplaced", 1, 1, 1, 0)
+    }
+
+    pub fn app(&self) -> &'static str {
+        self.app
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    pub fn words(&self) -> u32 {
+        self.words
+    }
+
+    pub fn granule(&self) -> u32 {
+        self.granule
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn extent_count(&self) -> usize {
+        self.owners.len()
+    }
+
+    /// Extent `idx` as an address range.
+    pub fn extent(&self, idx: usize) -> Range {
+        Range::new(self.bounds[idx], self.bounds[idx + 1])
+    }
+
+    pub fn extent_owner(&self, idx: usize) -> usize {
+        self.owners[idx] as usize
+    }
+
+    /// Index of the extent containing `a` (fallible form).
+    pub fn try_extent_index(&self, a: u32) -> Result<usize, PlacementError> {
+        if a >= self.words {
+            return Err(PlacementError {
+                app: self.app,
+                layout: self.layout,
+                addr: a,
+                words: self.words,
+            });
+        }
+        Ok(match self.fast {
+            Fast::BlockStripe { boundary, big, base, rem } => {
+                if a < boundary {
+                    (a / big) as usize
+                } else {
+                    (rem + (a - boundary) / base) as usize
+                }
+            }
+            Fast::Cyclic { granule } => (a / granule) as usize,
+            Fast::Search => {
+                let m = self.owners.len();
+                match self.bounds[..m].binary_search(&a) {
+                    Ok(i) => i,
+                    Err(i) => i - 1,
+                }
+            }
+        })
+    }
+
+    /// Index of the extent containing `a`; panics with app + layout
+    /// context on a miss (the structured replacement for the old bare
+    /// `owner_of` panic).
+    pub fn extent_index(&self, a: u32) -> usize {
+        self.try_extent_index(a).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Which node owns word address `a` (fallible form).
+    pub fn try_owner(&self, a: u32) -> Result<usize, PlacementError> {
+        Ok(self.owners[self.try_extent_index(a)?] as usize)
+    }
+
+    /// Which node owns word address `a`. O(1) for `block`/`cyclic`,
+    /// O(log extents) otherwise; panics with app + layout context when
+    /// `a` is outside the global space.
+    #[inline]
+    pub fn owner(&self, a: u32) -> usize {
+        self.owners[self.extent_index(a)] as usize
+    }
+
+    /// Owner and full extent of the address (the DTN fetch loop walks
+    /// remote ranges extent by extent).
+    pub fn owner_extent(&self, a: u32) -> (usize, Range) {
+        let i = self.extent_index(a);
+        (self.owners[i] as usize, self.extent(i))
+    }
+
+    /// Extents owned by `node`, address-ascending.
+    pub fn extents(&self, node: usize) -> &[Range] {
+        &self.by_node[node]
+    }
+
+    /// Total words homed on `node`.
+    pub fn local_words(&self, node: usize) -> u64 {
+        self.node_words[node]
+    }
+
+    /// A representative local extent of `node` (routing anchor for
+    /// tokens whose payload is carried in REMOTE). Empty if the node
+    /// owns nothing.
+    pub fn anchor(&self, node: usize) -> Range {
+        self.by_node[node].first().copied().unwrap_or_else(Range::empty)
+    }
+
+    /// The first extent of `node` overlapping `task` — what the
+    /// dispatcher filter cuts against. Returns an empty range when
+    /// nothing overlaps, which the filter conveys unchanged (an empty
+    /// range overlaps no token).
+    pub fn filter_extent(&self, node: usize, task: Range) -> Range {
+        let exts = &self.by_node[node];
+        let i = exts.partition_point(|r| r.end <= task.start);
+        if i < exts.len() && exts[i].start < task.end {
+            exts[i]
+        } else {
+            Range::empty()
+        }
+    }
+}
+
+/// Contiguous equal stripe — byte-for-byte the partition `api::stripe`
+/// produces (first `words % nodes` nodes get one extra word), so the
+/// `block` layout reproduces every pre-placement figure exactly.
+fn block_extents(words: u32, nodes: usize) -> (Vec<u32>, Vec<u32>, Fast) {
+    let n32 = nodes as u32;
+    let base = words / n32;
+    let rem = words % n32;
+    let mut bounds = vec![0u32];
+    let mut owners = Vec::new();
+    let mut at = 0u32;
+    for i in 0..n32 {
+        let len = base + u32::from(i < rem);
+        if len > 0 {
+            at += len;
+            bounds.push(at);
+            owners.push(i);
+        }
+    }
+    let fast = Fast::BlockStripe {
+        boundary: (base + 1) * rem,
+        big: base + 1,
+        base,
+        rem,
+    };
+    (bounds, owners, fast)
+}
+
+/// Round-robin granules: granule `g` lives on node `g % nodes`. Every
+/// granule is its own extent (neighbours always differ when
+/// `nodes > 1`), so the index is pure arithmetic.
+fn cyclic_extents(
+    words: u32,
+    nodes: usize,
+    granule: u32,
+) -> (Vec<u32>, Vec<u32>, Fast) {
+    let mut bounds = vec![0u32];
+    let mut owners = Vec::new();
+    let mut at = 0u32;
+    let mut g = 0u64;
+    while at < words {
+        let end = words.min(at.saturating_add(granule));
+        owners.push((g % nodes as u64) as u32);
+        bounds.push(end);
+        at = end;
+        g += 1;
+    }
+    (bounds, owners, Fast::Cyclic { granule })
+}
+
+/// Contiguous partitions with Zipf(1)-skewed sizes: node `i`'s share of
+/// the granules is ∝ 1/(i+1), apportioned by largest remainder with a
+/// 1-granule floor while supply lasts. Deterministic (seed-free).
+fn zipf_extents(
+    words: u32,
+    nodes: usize,
+    granule: u32,
+) -> (Vec<u32>, Vec<u32>, Fast) {
+    let g_total = (words as u64).div_ceil(granule as u64);
+    let mut share = vec![0u64; nodes];
+    if g_total <= nodes as u64 {
+        for s in share.iter_mut().take(g_total as usize) {
+            *s = 1;
+        }
+    } else {
+        let weights: Vec<f64> =
+            (0..nodes).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        let wsum: f64 = weights.iter().sum();
+        let mut frac: Vec<(f64, usize)> = Vec::with_capacity(nodes);
+        let mut assigned = 0u64;
+        for (i, w) in weights.iter().enumerate() {
+            let ideal = w / wsum * g_total as f64;
+            let fl = (ideal.floor() as u64).max(1);
+            share[i] = fl;
+            assigned += fl;
+            frac.push((ideal - ideal.floor(), i));
+        }
+        if assigned < g_total {
+            // hand out the leftovers by largest remainder, ties by rank
+            frac.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+            });
+            let mut left = g_total - assigned;
+            let mut k = 0usize;
+            while left > 0 {
+                share[frac[k % frac.len()].1] += 1;
+                left -= 1;
+                k += 1;
+            }
+        } else {
+            // the 1-granule floor overshot: reclaim round-robin from
+            // nodes still above the floor
+            let mut over = assigned - g_total;
+            let mut i = 0usize;
+            while over > 0 {
+                if share[i] > 1 {
+                    share[i] -= 1;
+                    over -= 1;
+                }
+                i = (i + 1) % nodes;
+            }
+        }
+    }
+    let mut bounds = vec![0u32];
+    let mut owners = Vec::new();
+    let mut done = 0u64;
+    for (i, &s) in share.iter().enumerate() {
+        if s == 0 {
+            continue;
+        }
+        done += s;
+        let end = ((done * granule as u64).min(words as u64)) as u32;
+        bounds.push(end);
+        owners.push(i as u32);
+    }
+    (bounds, owners, Fast::Search)
+}
+
+/// Seeded random shuffle of granules: permute the granule indices,
+/// deal node-balanced contiguous runs of the permutation to the nodes,
+/// then merge adjacent same-owner granules into maximal extents.
+fn shuffle_extents(
+    words: u32,
+    nodes: usize,
+    granule: u32,
+    seed: u64,
+) -> (Vec<u32>, Vec<u32>, Fast) {
+    let g_total = (words as u64).div_ceil(granule as u64) as usize;
+    let mut perm: Vec<u32> = (0..g_total as u32).collect();
+    Rng::new(seed ^ 0x5AFF1E).shuffle(&mut perm);
+    let mut owner_of_granule = vec![0u32; g_total];
+    let base = g_total / nodes;
+    let rem = g_total % nodes;
+    let mut pos = 0usize;
+    for nd in 0..nodes {
+        let cnt = base + usize::from(nd < rem);
+        for _ in 0..cnt {
+            owner_of_granule[perm[pos] as usize] = nd as u32;
+            pos += 1;
+        }
+    }
+    let mut bounds = vec![0u32];
+    let mut owners: Vec<u32> = Vec::new();
+    for (j, &o) in owner_of_granule.iter().enumerate() {
+        let end =
+            (((j as u64 + 1) * granule as u64).min(words as u64)) as u32;
+        if owners.last() == Some(&o) {
+            *bounds.last_mut().unwrap() = end;
+        } else {
+            bounds.push(end);
+            owners.push(o);
+        }
+    }
+    (bounds, owners, Fast::Search)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api;
+
+    fn tiles_exactly(dir: &Directory) {
+        // extents cover [0, words) with no gaps or overlap
+        let mut all: Vec<Range> = (0..dir.nodes())
+            .flat_map(|p| dir.extents(p).to_vec())
+            .collect();
+        all.sort_by_key(|r| r.start);
+        assert!(!all.is_empty());
+        assert_eq!(all.first().unwrap().start, 0);
+        assert_eq!(all.last().unwrap().end, dir.words());
+        for w in all.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "gap/overlap: {all:?}");
+        }
+    }
+
+    #[test]
+    fn block_matches_legacy_stripe() {
+        for (words, n) in [(100u32, 4usize), (7, 3), (16, 16), (5, 8), (4096, 5)]
+        {
+            let dir = Directory::new(Layout::Block, "t", words, n, 1, 0);
+            let parts = api::stripe(words, n);
+            tiles_exactly(&dir);
+            for p in 0..n {
+                let exts = dir.extents(p);
+                if parts[p].is_empty() {
+                    assert!(exts.is_empty(), "node {p} should be empty");
+                } else {
+                    assert_eq!(exts, &[parts[p]], "node {p}");
+                }
+                assert_eq!(dir.local_words(p), parts[p].len() as u64);
+            }
+            for a in 0..words {
+                assert_eq!(dir.owner(a), api::owner_of(&parts, a), "addr {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn cyclic_round_robins_granules() {
+        let dir = Directory::new(Layout::Cyclic, "t", 64, 4, 4, 0);
+        tiles_exactly(&dir);
+        for a in 0..64u32 {
+            assert_eq!(dir.owner(a), ((a / 4) % 4) as usize);
+        }
+        assert_eq!(dir.extent_count(), 16);
+        assert_eq!(dir.extents(1)[0], Range::new(4, 8));
+        assert_eq!(dir.local_words(0), 16);
+    }
+
+    #[test]
+    fn cyclic_short_tail_granule() {
+        let dir = Directory::new(Layout::Cyclic, "t", 10, 2, 4, 0);
+        tiles_exactly(&dir);
+        // granules [0,4) [4,8) [8,10): owners 0, 1, 0
+        assert_eq!(dir.owner(9), 0);
+        assert_eq!(dir.local_words(0), 6);
+        assert_eq!(dir.local_words(1), 4);
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_complete() {
+        let dir = Directory::new(Layout::Zipf, "t", 1024, 4, 8, 0);
+        tiles_exactly(&dir);
+        let sizes: Vec<u64> = (0..4).map(|p| dir.local_words(p)).collect();
+        assert_eq!(sizes.iter().sum::<u64>(), 1024);
+        for w in sizes.windows(2) {
+            assert!(w[0] >= w[1], "zipf sizes must be non-increasing: {sizes:?}");
+        }
+        assert!(sizes[0] > sizes[3], "no skew at all: {sizes:?}");
+        // every boundary is granule-aligned
+        for p in 0..4 {
+            for r in dir.extents(p) {
+                assert_eq!(r.start % 8, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_floor_one_granule_each() {
+        // 6 granules over 4 nodes: everyone gets at least one
+        let dir = Directory::new(Layout::Zipf, "t", 24, 4, 4, 0);
+        tiles_exactly(&dir);
+        for p in 0..4 {
+            assert!(dir.local_words(p) >= 4, "node {p} starved");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_seeded_permutation() {
+        let a = Directory::new(Layout::Shuffle, "t", 256, 4, 4, 7);
+        let b = Directory::new(Layout::Shuffle, "t", 256, 4, 4, 7);
+        let c = Directory::new(Layout::Shuffle, "t", 256, 4, 4, 8);
+        tiles_exactly(&a);
+        assert_eq!(a.extents(0), b.extents(0), "same seed, same placement");
+        assert!(
+            (0..4).any(|p| a.extents(p) != c.extents(p)),
+            "different seeds should differ"
+        );
+        // balanced within one granule
+        for p in 0..4 {
+            assert_eq!(a.local_words(p), 64);
+        }
+        // adjacent extents never share an owner (maximal runs)
+        for i in 0..a.extent_count() - 1 {
+            assert_ne!(a.extent_owner(i), a.extent_owner(i + 1));
+        }
+    }
+
+    #[test]
+    fn single_node_collapses_every_layout() {
+        for l in Layout::ALL {
+            let dir = Directory::new(l, "t", 100, 1, 8, 3);
+            assert_eq!(dir.extent_count(), 1);
+            assert_eq!(dir.extents(0), &[Range::new(0, 100)]);
+            assert_eq!(dir.owner(99), 0);
+        }
+    }
+
+    #[test]
+    fn filter_extent_finds_first_overlap() {
+        let dir = Directory::new(Layout::Cyclic, "t", 64, 4, 4, 0);
+        // node 1 owns [4,8), [20,24), [36,40), [52,56)
+        assert_eq!(dir.filter_extent(1, Range::new(0, 64)), Range::new(4, 8));
+        assert_eq!(
+            dir.filter_extent(1, Range::new(10, 40)),
+            Range::new(20, 24)
+        );
+        assert_eq!(dir.filter_extent(1, Range::new(8, 20)), Range::empty());
+        assert_eq!(
+            dir.filter_extent(1, Range::new(55, 64)),
+            Range::new(52, 56)
+        );
+    }
+
+    #[test]
+    fn owner_miss_names_app_and_layout() {
+        let dir = Directory::new(Layout::Cyclic, "gemm", 64, 4, 4, 0);
+        let err = dir.try_owner(64).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("app 'gemm'"), "{msg}");
+        assert!(msg.contains("layout cyclic"), "{msg}");
+        assert!(msg.contains("address 64"), "{msg}");
+        assert!(dir.try_owner(63).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "app 'gemm'")]
+    fn owner_miss_panics_with_context() {
+        Directory::new(Layout::Block, "gemm", 64, 4, 1, 0).owner(64);
+    }
+
+    #[test]
+    fn layout_parse_round_trips() {
+        for l in Layout::ALL {
+            assert_eq!(Layout::parse(l.label()), Some(l));
+        }
+        assert_eq!(Layout::parse("nope"), None);
+    }
+}

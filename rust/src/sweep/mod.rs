@@ -31,7 +31,8 @@ use crate::apps::{Scale, ALL};
 use crate::baseline::{run_bsp, serial_ps, BspReport};
 use crate::cluster::{Model, RunReport};
 use crate::config::{ArenaConfig, Ps};
-use crate::eval::{self, Headline, Table, NODE_SWEEP};
+use crate::eval::{self, Headline, Table, NODE_SWEEP, SKEW_NODES};
+use crate::placement::Layout;
 
 /// Default worker count: every host core (the sweep is embarrassingly
 /// parallel and each cell is CPU-bound).
@@ -41,7 +42,9 @@ pub fn default_jobs() -> usize {
         .unwrap_or(1)
 }
 
-/// One unit of sweep work: a single figure cell.
+/// One unit of sweep work: a single figure cell. ARENA cells are keyed
+/// by their data-placement layout too, so the standard (block) figures
+/// and the skew sweep share the store without collisions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Job {
     /// Serial single-node CPU baseline (figure denominator).
@@ -49,7 +52,7 @@ pub enum Job {
     /// Compute-centric BSP run (`cgra` = Baseline-2 offload model).
     Bsp { app: &'static str, nodes: usize, cgra: bool },
     /// Full ARENA discrete-event simulation.
-    Arena { app: &'static str, nodes: usize, model: Model },
+    Arena { app: &'static str, nodes: usize, model: Model, layout: Layout },
 }
 
 /// Computed value of one cell.
@@ -68,9 +71,9 @@ fn compute(scale: Scale, seed: u64, job: Job) -> Cell {
             let cfg = ArenaConfig::default().with_nodes(nodes);
             Cell::Bsp(run_bsp(app, scale, seed, &cfg, cgra))
         }
-        Job::Arena { app, nodes, model } => {
-            Cell::Arena(eval::run_arena(app, scale, seed, nodes, model, None))
-        }
+        Job::Arena { app, nodes, model, layout } => Cell::Arena(
+            eval::run_arena_at(app, scale, seed, nodes, model, layout, None),
+        ),
     }
 }
 
@@ -80,16 +83,25 @@ fn compute(scale: Scale, seed: u64, job: Job) -> Cell {
 pub struct CellStore {
     scale: Scale,
     seed: u64,
+    /// Layout the standard figure builders read their ARENA cells at
+    /// (`arena sweep --layout …`); the skew sweep addresses layouts
+    /// explicitly through [`Self::arena_at`].
+    layout: Layout,
     serial: BTreeMap<&'static str, Ps>,
     bsp: BTreeMap<(&'static str, usize, bool), BspReport>,
-    arena: BTreeMap<(&'static str, usize, Model), RunReport>,
+    arena: BTreeMap<(&'static str, usize, Model, Layout), RunReport>,
 }
 
 impl CellStore {
     pub fn new(scale: Scale, seed: u64) -> Self {
+        Self::with_layout(scale, seed, Layout::Block)
+    }
+
+    pub fn with_layout(scale: Scale, seed: u64, layout: Layout) -> Self {
         CellStore {
             scale,
             seed,
+            layout,
             serial: BTreeMap::new(),
             bsp: BTreeMap::new(),
             arena: BTreeMap::new(),
@@ -102,6 +114,10 @@ impl CellStore {
 
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
     }
 
     /// Cells computed so far.
@@ -119,8 +135,8 @@ impl CellStore {
             Job::Bsp { app, nodes, cgra } => {
                 self.bsp.contains_key(&(app, nodes, cgra))
             }
-            Job::Arena { app, nodes, model } => {
-                self.arena.contains_key(&(app, nodes, model))
+            Job::Arena { app, nodes, model, layout } => {
+                self.arena.contains_key(&(app, nodes, model, layout))
             }
         }
     }
@@ -133,8 +149,8 @@ impl CellStore {
             (Job::Bsp { app, nodes, cgra }, Cell::Bsp(r)) => {
                 self.bsp.insert((app, nodes, cgra), r);
             }
-            (Job::Arena { app, nodes, model }, Cell::Arena(r)) => {
-                self.arena.insert((app, nodes, model), r);
+            (Job::Arena { app, nodes, model, layout }, Cell::Arena(r)) => {
+                self.arena.insert((app, nodes, model, layout), r);
             }
             _ => unreachable!("job/cell kind mismatch"),
         }
@@ -159,18 +175,31 @@ impl CellStore {
         &self.bsp[&key]
     }
 
-    /// ARENA simulation (memoized).
+    /// ARENA simulation under the store's default layout (memoized).
     pub fn arena(
         &mut self,
         app: &'static str,
         nodes: usize,
         model: Model,
     ) -> &RunReport {
-        let key = (app, nodes, model);
+        let layout = self.layout;
+        self.arena_at(app, nodes, model, layout)
+    }
+
+    /// ARENA simulation under an explicit layout (memoized — the skew
+    /// sweep's read path).
+    pub fn arena_at(
+        &mut self,
+        app: &'static str,
+        nodes: usize,
+        model: Model,
+        layout: Layout,
+    ) -> &RunReport {
+        let key = (app, nodes, model, layout);
         if !self.arena.contains_key(&key) {
-            let v =
-                compute(self.scale, self.seed, Job::Arena { app, nodes, model });
-            self.insert(Job::Arena { app, nodes, model }, v);
+            let job = Job::Arena { app, nodes, model, layout };
+            let v = compute(self.scale, self.seed, job);
+            self.insert(job, v);
         }
         &self.arena[&key]
     }
@@ -256,10 +285,15 @@ impl Fig {
         }
     }
 
-    /// Simulation cells this figure consumes. Overlaps across figures
-    /// (e.g. the 4-node arena-sw runs shared by Figs. 9 and 10) dedupe
-    /// in the store.
+    /// Simulation cells this figure consumes, at the block layout.
     pub fn jobs(self) -> Vec<Job> {
+        self.jobs_at(Layout::Block)
+    }
+
+    /// Simulation cells this figure consumes when its ARENA runs use
+    /// `layout`. Overlaps across figures (e.g. the 4-node arena-sw
+    /// runs shared by Figs. 9 and 10) dedupe in the store.
+    pub fn jobs_at(self, layout: Layout) -> Vec<Job> {
         let mut out = Vec::new();
         match self {
             Fig::F9 => {
@@ -271,6 +305,7 @@ impl Fig {
                             app,
                             nodes: n,
                             model: Model::SoftwareCpu,
+                            layout,
                         });
                     }
                 }
@@ -282,6 +317,7 @@ impl Fig {
                         app,
                         nodes: 4,
                         model: Model::SoftwareCpu,
+                        layout,
                     });
                 }
             }
@@ -294,6 +330,7 @@ impl Fig {
                             app,
                             nodes: n,
                             model: Model::Cgra,
+                            layout,
                         });
                     }
                 }
@@ -305,12 +342,33 @@ impl Fig {
                         app,
                         nodes: 4,
                         model: Model::Cgra,
+                        layout,
                     });
                 }
             }
         }
         out
     }
+}
+
+/// Cells of the skew-sensitivity sweep: every app × execution model ×
+/// layout at the Fig. 10 cluster size. The block column is shared with
+/// the standard figures through the store.
+pub fn skew_jobs() -> Vec<Job> {
+    let mut out = Vec::new();
+    for app in ALL {
+        for model in [Model::SoftwareCpu, Model::Cgra] {
+            for layout in Layout::ALL {
+                out.push(Job::Arena {
+                    app,
+                    nodes: SKEW_NODES,
+                    model,
+                    layout,
+                });
+            }
+        }
+    }
+    out
 }
 
 /// Assembled sweep result.
@@ -338,18 +396,33 @@ impl SweepOutput {
     }
 }
 
-/// Run the sweep for `figs` at `(scale, seed)` on `workers` threads.
+/// Run the sweep for `figs` at `(scale, seed)` on `workers` threads,
+/// under the block layout (the paper's figures).
 pub fn run(figs: &[Fig], scale: Scale, seed: u64, workers: usize) -> SweepOutput {
+    run_at(figs, scale, seed, workers, Layout::Block)
+}
+
+/// Run the sweep for `figs` with every ARENA cell placed under
+/// `layout` (`arena sweep --layout <name>`): the figures' baselines
+/// stay block-partitioned BSP, so the tables show what the placement
+/// alone costs ARENA.
+pub fn run_at(
+    figs: &[Fig],
+    scale: Scale,
+    seed: u64,
+    workers: usize,
+    layout: Layout,
+) -> SweepOutput {
     let mut figs: Vec<Fig> = figs.to_vec();
     figs.sort();
     figs.dedup();
 
     let mut jobs = Vec::new();
     for f in &figs {
-        jobs.extend(f.jobs());
+        jobs.extend(f.jobs_at(layout));
     }
 
-    let mut store = CellStore::new(scale, seed);
+    let mut store = CellStore::with_layout(scale, seed, layout);
     store.prefill(&jobs, workers);
 
     let mut tables = Vec::new();
@@ -380,6 +453,16 @@ pub fn run(figs: &[Fig], scale: Scale, seed: u64, workers: usize) -> SweepOutput
         .then(|| eval::headline_with(&mut store));
 
     SweepOutput { tables, headline, cells: store.len(), workers }
+}
+
+/// Run the skew-sensitivity sweep (`arena sweep --all-layouts`): every
+/// app × model × layout cell on the worker pool, assembled into the
+/// Skew A/B/C tables. Bit-identical for any `workers` value.
+pub fn run_skew(scale: Scale, seed: u64, workers: usize) -> SweepOutput {
+    let mut store = CellStore::new(scale, seed);
+    store.prefill(&skew_jobs(), workers);
+    let tables = eval::skew_with(&mut store);
+    SweepOutput { tables, headline: None, cells: store.len(), workers }
 }
 
 #[cfg(test)]
@@ -418,7 +501,12 @@ mod tests {
         let jobs = [
             Job::Serial { app: "gemm" },
             Job::Bsp { app: "gemm", nodes: 4, cgra: false },
-            Job::Arena { app: "gemm", nodes: 2, model: Model::SoftwareCpu },
+            Job::Arena {
+                app: "gemm",
+                nodes: 2,
+                model: Model::SoftwareCpu,
+                layout: Layout::Block,
+            },
         ];
         let mut par = CellStore::new(Scale::Small, 7);
         par.prefill(&jobs, 4);
@@ -441,5 +529,32 @@ mod tests {
         assert_eq!(out.cells, 0);
         assert_eq!(out.tables.len(), 1);
         assert!(out.headline.is_none());
+    }
+
+    #[test]
+    fn skew_jobs_share_block_cells_with_fig10() {
+        // the block column of the skew sweep reuses the arena-sw@4
+        // cells Fig. 10 computes
+        let mut jobs: Vec<Job> =
+            skew_jobs().into_iter().chain(Fig::F10.jobs()).collect();
+        let total = jobs.len();
+        jobs.sort();
+        jobs.dedup();
+        // fig10 contributes 6 bsp cells; its 6 arena cells are already
+        // in the skew enumeration
+        assert_eq!(jobs.len(), total - 6);
+    }
+
+    #[test]
+    fn layout_keys_do_not_collide_in_the_store() {
+        let mut store = CellStore::new(Scale::Small, 7);
+        let a = store
+            .arena_at("spmv", 2, Model::SoftwareCpu, Layout::Block)
+            .makespan_ps;
+        let b = store
+            .arena_at("spmv", 2, Model::SoftwareCpu, Layout::Cyclic)
+            .makespan_ps;
+        assert_eq!(store.len(), 2, "two layouts, two cells");
+        assert_ne!(a, b, "interleaving must change the schedule");
     }
 }

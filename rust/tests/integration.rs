@@ -9,6 +9,7 @@ use arena::baseline::{run_bsp, serial_ps};
 use arena::cluster::{Cluster, Model, RunReport};
 use arena::config::ArenaConfig;
 use arena::eval;
+use arena::placement::Layout;
 
 fn run_checked(app: &str, nodes: usize, model: Model) -> RunReport {
     let cfg = ArenaConfig::default().with_nodes(nodes);
@@ -238,4 +239,83 @@ fn skewed_partition_still_correct() {
             run_checked(app, nodes, Model::Cgra);
         }
     }
+}
+
+fn run_layout(app: &str, layout: Layout, model: Model) -> RunReport {
+    let cfg = ArenaConfig::default().with_nodes(4).with_layout(layout);
+    let mut cl = Cluster::new(cfg, model, vec![make_app(app, Scale::Small, 77)]);
+    let r = cl.run(None);
+    cl.check().unwrap_or_else(|e| {
+        panic!("{app} [{}] ({:?}): {e}", layout.label(), model.label())
+    });
+    r
+}
+
+#[test]
+fn every_app_verifies_under_every_layout() {
+    // the placement subsystem's end-to-end gate: all six apps pass
+    // their serial oracle under all four layouts, on both substrates
+    for app in ALL {
+        for layout in Layout::ALL {
+            for model in [Model::SoftwareCpu, Model::Cgra] {
+                let r = run_layout(app, layout, model);
+                assert_eq!(r.layout, layout.label());
+                assert!(r.tasks_executed > 0, "{app} [{}]", layout.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn layout_runs_are_deterministic() {
+    for layout in [Layout::Cyclic, Layout::Shuffle] {
+        let a = run_layout("gcn", layout, Model::Cgra);
+        let b = run_layout("gcn", layout, Model::Cgra);
+        assert_eq!(a.makespan_ps, b.makespan_ps, "{layout}");
+        assert_eq!(a.events, b.events, "{layout}");
+        assert_eq!(a.ring, b.ring, "{layout}");
+    }
+}
+
+#[test]
+fn work_is_invariant_across_layouts() {
+    // placement changes where work runs, never how much (sssp excluded:
+    // its async relaxation does layout-dependent redundant work)
+    for app in ["gemm", "spmv", "dna", "gcn", "nbody"] {
+        let base: u64 = run_layout(app, Layout::Block, Model::SoftwareCpu)
+            .node_units
+            .iter()
+            .sum();
+        for layout in [Layout::Cyclic, Layout::Zipf, Layout::Shuffle] {
+            let total: u64 = run_layout(app, layout, Model::SoftwareCpu)
+                .node_units
+                .iter()
+                .sum();
+            assert_eq!(base, total, "{app}: units changed under {layout}");
+        }
+    }
+}
+
+#[test]
+fn interleaving_erodes_locality_and_movement() {
+    // the skew-sensitivity premise: cyclic word placement destroys the
+    // banded-SPMV locality the block stripe gets for free
+    let block = run_layout("spmv", Layout::Block, Model::SoftwareCpu);
+    let cyclic = run_layout("spmv", Layout::Cyclic, Model::SoftwareCpu);
+    assert!(
+        cyclic.remote_bytes > block.remote_bytes,
+        "cyclic {} !> block {}",
+        cyclic.remote_bytes,
+        block.remote_bytes
+    );
+    assert!(
+        cyclic.mean_locality() < block.mean_locality(),
+        "cyclic locality {:.3} !< block {:.3}",
+        cyclic.mean_locality(),
+        block.mean_locality()
+    );
+    assert!(
+        cyclic.makespan_ps > block.makespan_ps,
+        "shattered tokens must cost simulated time"
+    );
 }

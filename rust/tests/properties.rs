@@ -1,12 +1,13 @@
 //! Property-based tests over the coordinator's core invariants:
 //! the filter's partition property, coalescing-unit conservation,
-//! allocation-policy bounds, striping/ownership, ring timing monotony,
-//! config round-trips, and DES ordering — all under seeded random
-//! inputs via `proptest_lite`.
+//! allocation-policy bounds, striping/ownership, placement-directory
+//! invariants, ring timing monotony, config round-trips, and DES
+//! ordering — all under seeded random inputs via `proptest_lite`.
 
 use arena::cgra::{alloc_policy, CoalesceUnit};
 use arena::config::ArenaConfig;
 use arena::dispatcher::{filter, FilterCase};
+use arena::placement::{Directory, Layout};
 use arena::prop_assert;
 use arena::proptest_lite::forall;
 use arena::ring::RingNet;
@@ -163,6 +164,151 @@ fn stripe_owner_round_trip() {
                 "owner mismatch for {a}"
             );
         }
+        Ok(())
+    });
+}
+
+fn random_directory(rng: &mut Rng) -> Directory {
+    let layout = Layout::ALL[rng.below(4) as usize];
+    let granule = [1u32, 3, 4, 16, 64][rng.below(5) as usize];
+    let words = granule * (1 + rng.below(200) as u32);
+    let n = 1 + rng.below(16) as usize;
+    Directory::new(layout, "prop", words, n, granule, rng.next_u64())
+}
+
+#[test]
+fn placement_covers_the_space_with_no_overlap() {
+    forall("placement-cover", 600, 0x91ACE, |rng| {
+        let dir = random_directory(rng);
+        let mut all: Vec<Range> = (0..dir.nodes())
+            .flat_map(|p| dir.extents(p).to_vec())
+            .collect();
+        all.sort_by_key(|r| r.start);
+        prop_assert!(!all.is_empty(), "no extents at all");
+        prop_assert!(
+            all.first().unwrap().start == 0
+                && all.last().unwrap().end == dir.words(),
+            "space not covered: {all:?}"
+        );
+        for w in all.windows(2) {
+            prop_assert!(
+                w[0].end == w[1].start,
+                "gap or overlap at {:?}/{:?}",
+                w[0],
+                w[1]
+            );
+        }
+        // node_words agrees with the extent lists
+        let total: u64 = (0..dir.nodes()).map(|p| dir.local_words(p)).sum();
+        prop_assert!(
+            total == dir.words() as u64,
+            "local_words sum {total} != {}",
+            dir.words()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn directory_owner_agrees_with_brute_force_scan() {
+    forall("placement-owner", 600, 0xD17EC7, |rng| {
+        let dir = random_directory(rng);
+        for _ in 0..32 {
+            let a = rng.below(dir.words() as u64) as u32;
+            let p = dir.owner(a);
+            // brute force: exactly one node's extent list contains `a`
+            let holders: Vec<usize> = (0..dir.nodes())
+                .filter(|&q| {
+                    dir.extents(q)
+                        .iter()
+                        .any(|r| r.start <= a && a < r.end)
+                })
+                .collect();
+            prop_assert!(
+                holders == vec![p],
+                "addr {a}: owner() says {p}, scan says {holders:?}"
+            );
+            // and the extent index round-trips
+            let e = dir.extent_index(a);
+            let ext = dir.extent(e);
+            prop_assert!(
+                ext.start <= a && a < ext.end,
+                "extent_index({a}) -> {ext:?}"
+            );
+            prop_assert!(dir.extent_owner(e) == p, "extent owner mismatch");
+        }
+        prop_assert!(
+            dir.try_owner(dir.words()).is_err(),
+            "end-of-space lookup must miss"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn coalesced_tokens_never_cross_owner_boundaries_at_execution() {
+    // Adjacent spawns merge in the coalescing unit with no knowledge of
+    // placement, so a merged token CAN span an ownership change under
+    // cyclic/shuffled layouts. The guarantee lives in the
+    // directory-driven filter: walk every merged token around the ring
+    // and check each executed (wait-queue) piece lies inside a single
+    // extent of the executing node.
+    forall("placement-coalesce", 300, 0xC0A1E5CE, |rng| {
+        let layout = if rng.below(2) == 0 {
+            Layout::Cyclic
+        } else {
+            Layout::Shuffle
+        };
+        let granule = 1 + rng.below(8) as u32;
+        let words = granule * (8 + rng.below(64) as u32);
+        let n = 2 + rng.below(8) as usize;
+        let dir =
+            Directory::new(layout, "prop", words, n, granule, rng.next_u64());
+
+        // runs of adjacent unit spawns -> merged tokens
+        let mut c = CoalesceUnit::new(4, 4);
+        for _ in 0..24 {
+            let run = 1 + rng.below(12) as u32;
+            let start = rng.below((words - 1) as u64) as u32;
+            let end = words.min(start + run);
+            for a in start..end {
+                c.push(TaskToken::new(1, Range::new(a, a + 1), 2.0));
+            }
+        }
+
+        let mut queue: Vec<TaskToken> = c.drain();
+        let mut executed_words = 0u64;
+        let mut guard = 0u32;
+        while let Some(t) = queue.pop() {
+            guard += 1;
+            prop_assert!(guard < 100_000, "carving did not terminate");
+            // a token is always consumed first at its start's owner
+            let node = dir.owner(t.task.start);
+            let local = dir.filter_extent(node, t.task);
+            let out = filter(&t, local);
+            for p in out.wait.iter() {
+                executed_words += p.task.len() as u64;
+                let inside = dir
+                    .extents(node)
+                    .iter()
+                    .any(|r| r.contains(&p.task));
+                prop_assert!(
+                    inside,
+                    "piece {:?} executed on node {node} crosses an owner \
+                     boundary ({layout:?})",
+                    p.task
+                );
+            }
+            for p in out.send {
+                queue.push(p);
+            }
+        }
+        // carving conserves every spawned word
+        let pushed: u64 = c.stats.spawned;
+        prop_assert!(
+            executed_words >= pushed,
+            "words lost in the carve: {executed_words} < {pushed}"
+        );
         Ok(())
     });
 }

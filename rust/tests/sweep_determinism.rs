@@ -4,8 +4,9 @@
 //! single-threaded over a deterministically keyed store.
 
 use arena::apps::Scale;
-use arena::sweep::{self, CellStore, Fig, Job};
 use arena::cluster::Model;
+use arena::placement::Layout;
+use arena::sweep::{self, CellStore, Fig, Job};
 
 #[test]
 fn all_figures_bit_identical_for_1_and_8_jobs() {
@@ -39,11 +40,42 @@ fn sweep_matches_legacy_figure_builders() {
 }
 
 #[test]
+fn skew_sweep_bit_identical_across_jobs() {
+    // the --all-layouts sweep holds to the same determinism contract
+    let a = sweep::run_skew(Scale::Small, 7, 1);
+    let b = sweep::run_skew(Scale::Small, 7, 8);
+    assert_eq!(a.cells, b.cells, "same unique cell set");
+    assert_eq!(a.render(), b.render(), "skew tables must be bit-identical");
+    // 6 apps x 2 models x 4 layouts
+    assert_eq!(a.cells, 48);
+    assert_eq!(a.tables.len(), 6, "Skew A/B/C per model");
+}
+
+#[test]
+fn layout_sweep_block_matches_default_run() {
+    // `--layout block` must reproduce the standard figure tables
+    let plain = sweep::run(&[Fig::F10], Scale::Small, 5, 2);
+    let blocked =
+        sweep::run_at(&[Fig::F10], Scale::Small, 5, 2, Layout::Block);
+    assert_eq!(plain.render(), blocked.render());
+}
+
+#[test]
 fn oversubscribed_pool_is_still_deterministic() {
     // more workers than jobs: pool must not duplicate or drop cells
     let jobs = [
-        Job::Arena { app: "gemm", nodes: 2, model: Model::SoftwareCpu },
-        Job::Arena { app: "spmv", nodes: 2, model: Model::SoftwareCpu },
+        Job::Arena {
+            app: "gemm",
+            nodes: 2,
+            model: Model::SoftwareCpu,
+            layout: Layout::Block,
+        },
+        Job::Arena {
+            app: "spmv",
+            nodes: 2,
+            model: Model::SoftwareCpu,
+            layout: Layout::Shuffle,
+        },
     ];
     let mut a = CellStore::new(Scale::Small, 3);
     a.prefill(&jobs, 64);
@@ -55,7 +87,8 @@ fn oversubscribed_pool_is_still_deterministic() {
         b.arena("gemm", 2, Model::SoftwareCpu).makespan_ps
     );
     assert_eq!(
-        a.arena("spmv", 2, Model::SoftwareCpu).events,
-        b.arena("spmv", 2, Model::SoftwareCpu).events
+        a.arena_at("spmv", 2, Model::SoftwareCpu, Layout::Shuffle).events,
+        b.arena_at("spmv", 2, Model::SoftwareCpu, Layout::Shuffle).events
     );
+    assert_eq!(a.len(), 2, "reads served from the prefilled store");
 }
