@@ -2,8 +2,11 @@
 //! filter, the ring/network model, the discrete-event engine (new
 //! slab+index-heap vs the old BinaryHeap baseline), the coalescing
 //! unit, the placement-directory owner lookup (vs the old linear
-//! scan), the CGRA launch path, and the kernel execute path.
-//! These are the knobs the §Perf pass optimizes — see EXPERIMENTS.md.
+//! scan), the CGRA launch path, and the kernel execute path — the
+//! zero-copy engine measured against the seed clone-based reference
+//! (`runtime::reference`). These are the knobs the §Perf pass
+//! optimizes — see EXPERIMENTS.md. All measured results are also
+//! written to `BENCH_micro.json`.
 //!
 //!     cargo bench --bench micro_hotpath [-- --smoke]
 //!
@@ -13,14 +16,16 @@
 use std::time::Duration;
 
 use arena::api;
-use arena::benchkit::{black_box, throughput, Bench};
+use arena::benchkit::{
+    self, black_box, throughput, Bench, BenchResult,
+};
 use arena::cgra::{CgraNode, CoalesceUnit, GroupMappings};
 use arena::config::ArenaConfig;
 use arena::dispatcher::filter;
 use arena::mapper::kernels::gemm_kernel;
 use arena::placement::{Directory, Layout};
 use arena::ring::RingNet;
-use arena::runtime::{Engine, Tensor};
+use arena::runtime::{reference, Engine, Tensor};
 use arena::sim::Engine as Des;
 use arena::token::{Range, TaskToken};
 
@@ -82,6 +87,18 @@ mod baseline_des {
     }
 }
 
+fn write_record(all: &[BenchResult], smoke: bool) {
+    let fields = [
+        ("smoke", smoke.to_string()),
+        ("results", benchkit::results_json(all)),
+    ];
+    match benchkit::write_bench_json("BENCH_micro.json", "micro_hotpath", &fields)
+    {
+        Ok(()) => println!("record: BENCH_micro.json"),
+        Err(e) => eprintln!("record: BENCH_micro.json not written: {e}"),
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let b = if smoke {
@@ -90,6 +107,7 @@ fn main() {
         Bench::new()
     };
     let cfg = ArenaConfig::default();
+    let mut all: Vec<BenchResult> = Vec::new();
 
     // --- dispatcher filter: the per-token decision -------------------
     let local = Range::new(1000, 2000);
@@ -109,6 +127,7 @@ fn main() {
         "  -> {:.1} M tokens/s",
         throughput(&r, 1024) / 1e6
     );
+    all.push(r);
 
     // --- ring model ---------------------------------------------------
     let r = b.run("ring/send_token x 10k (16 nodes)", || {
@@ -120,6 +139,7 @@ fn main() {
         t
     });
     println!("  -> {:.1} M hops/s", throughput(&r, 10_000) / 1e6);
+    all.push(r);
 
     // --- discrete-event engine: old BinaryHeap vs slab+index heap -----
     let r_base = b.run("des-baseline/100k schedule+pop (BinaryHeap)", || {
@@ -149,6 +169,8 @@ fn main() {
         throughput(&r_new, 200_000) / 1e6,
         r_base.mean.as_secs_f64() / r_new.mean.as_secs_f64()
     );
+    all.push(r_base);
+    all.push(r_new);
 
     // interleaved schedule/pop — the pattern cluster::run drives
     let r_base = b.run("des-baseline/interleaved 200k ops", || {
@@ -185,6 +207,8 @@ fn main() {
         "  -> {:.2}x vs BinaryHeap baseline",
         r_base.mean.as_secs_f64() / r_new.mean.as_secs_f64()
     );
+    all.push(r_base);
+    all.push(r_new);
 
     // --- coalescing unit -----------------------------------------------
     let r = b.run("coalesce/8k adjacent spawns", || {
@@ -195,6 +219,7 @@ fn main() {
         c.drain().len()
     });
     println!("  -> {:.1} M spawns/s", throughput(&r, 8192) / 1e6);
+    all.push(r);
 
     // --- placement directory: owner lookup on the fetch/filter path ---
     // acceptance: the directory must be no slower than the old linear
@@ -228,16 +253,18 @@ fn main() {
             "  -> {:.2}x vs linear scan",
             r_lin.mean.as_secs_f64() / r_dir.mean.as_secs_f64()
         );
+        all.push(r_lin);
+        all.push(r_dir);
     }
     // a searched layout for comparison (no O(1) fast path)
     let dir = Directory::new(Layout::Shuffle, "bench", words, 16, 256, 7);
-    b.run("placement/directory owner x4k (shuffle, 16 nodes)", || {
+    all.push(b.run("placement/directory owner x4k (shuffle, 16 nodes)", || {
         addrs.iter().map(|&a| black_box(&dir).owner(a)).sum::<usize>()
-    });
+    }));
 
     // --- CGRA launch path -----------------------------------------------
     let maps = GroupMappings::build(&gemm_kernel(), &cfg);
-    b.run("cgra/launch+complete x 4k", || {
+    all.push(b.run("cgra/launch+complete x 4k", || {
         let mut node = CgraNode::new(&cfg);
         let mut now = 0;
         for i in 0..4096u32 {
@@ -246,34 +273,72 @@ fn main() {
             now = l.done;
         }
         now
-    });
+    }));
 
     if smoke {
         println!("(--smoke: engine section skipped)");
+        write_record(&all, smoke);
         return;
     }
 
-    // --- kernel execute (the AOT-contract hot path) ---------------------
+    // --- kernel execute (the AOT-contract hot path): zero-copy engine
+    // vs the seed clone-based reference kernels --------------------------
     match Engine::new() {
         Ok(mut eng) => {
             let a = Tensor::f32(vec![0.5; 64 * 64], &[64, 64]);
             let bb = Tensor::f32(vec![0.5; 64 * 64], &[64, 64]);
-            eng.execute("gemm64", &[a.clone(), bb.clone()]).unwrap();
+            let ins = [a, bb];
+            let spec = eng.manifest().get("gemm64").unwrap().clone();
+            eng.execute("gemm64", &ins).unwrap();
+            let r_ref = b.run("engine-baseline/gemm64 reference (seed)", || {
+                // the seed execute() cloned the ArtifactSpec per call
+                let s = spec.clone();
+                reference::dispatch(&s, &ins).unwrap()
+            });
             let r = b.run("engine/gemm64 warm execute", || {
-                eng.execute("gemm64", &[a.clone(), bb.clone()]).unwrap()
+                eng.execute("gemm64", &ins).unwrap()
             });
             let flops = 2.0 * 64.0 * 64.0 * 64.0;
             println!(
-                "  -> {:.2} GFLOP/s through the engine",
-                flops / r.mean.as_secs_f64() / 1e9
+                "  -> {:.2} GFLOP/s through the engine ({:.2}x vs seed \
+                 reference)",
+                flops / r.mean.as_secs_f64() / 1e9,
+                r_ref.mean.as_secs_f64() / r.mean.as_secs_f64()
             );
+            all.push(r_ref);
+            all.push(r);
+
+            // gcn_l1: the kernel the seed path cloned three tensors for
+            let gcn_ins = [
+                Tensor::f32(vec![0.01; 64 * 512], &[64, 512]),
+                Tensor::f32(vec![0.01; 512 * 128], &[512, 128]),
+                Tensor::f32(vec![0.01; 128 * 32], &[128, 32]),
+            ];
+            let gcn_spec = eng.manifest().get("gcn_l1").unwrap().clone();
+            eng.execute("gcn_l1", &gcn_ins).unwrap();
+            let r_ref = b.run("engine-baseline/gcn_l1 reference (seed)", || {
+                let s = gcn_spec.clone();
+                reference::dispatch(&s, &gcn_ins).unwrap()
+            });
+            let r = b.run("engine/gcn_l1 warm execute (scratch arena)", || {
+                eng.execute("gcn_l1", &gcn_ins).unwrap()
+            });
+            println!(
+                "  -> {:.2}x vs seed reference",
+                r_ref.mean.as_secs_f64() / r.mean.as_secs_f64()
+            );
+            all.push(r_ref);
+            all.push(r);
+
             let x = Tensor::f32(vec![1.0; 1024], &[1024]);
             let y = Tensor::f32(vec![1.0; 1024], &[1024]);
             let s = Tensor::f32(vec![2.0], &[1]);
-            b.run("engine/axpy warm execute (dispatch floor)", || {
-                eng.execute("axpy", &[s.clone(), x.clone(), y.clone()]).unwrap()
-            });
+            let axpy_ins = [s, x, y];
+            all.push(b.run("engine/axpy warm execute (dispatch floor)", || {
+                eng.execute("axpy", &axpy_ins).unwrap()
+            }));
         }
         Err(e) => println!("engine benches skipped: {e}"),
     }
+    write_record(&all, smoke);
 }

@@ -1,16 +1,24 @@
 //! End-to-end sweep benchmark: regenerate every §5 figure through the
 //! shared sweep path serially and on a full worker pool, verify the
 //! outputs are bit-identical, and report the wall-clock speedup (the
-//! `arena sweep --all --jobs N` acceptance numbers).
+//! `arena sweep --all --jobs N` acceptance numbers). Results — wall
+//! clocks, per-job timings and allocator counters — are also written
+//! to `BENCH_sweep.json` so the perf trajectory is machine-readable.
 //!
 //!     cargo bench --bench sweep_e2e [-- --paper] [-- --smoke]
 
 use std::time::Instant;
 
 use arena::apps::Scale;
+use arena::benchkit::{self, alloc};
 use arena::sweep::{self, Fig};
 
+/// Peak-alloc instrumentation (library code never registers this).
+#[global_allocator]
+static ALLOC: alloc::Counting = alloc::Counting;
+
 fn main() {
+    alloc::enable();
     let paper = std::env::args().any(|a| a == "--paper");
     let smoke = std::env::args().any(|a| a == "--smoke");
     let scale = if paper { Scale::Paper } else { Scale::Small };
@@ -28,11 +36,19 @@ fn main() {
         (t0.elapsed(), out)
     };
 
-    // warm-up pass (page cache, allocator) — discarded
+    // warm-up pass (page cache, allocator, shared workload memos) —
+    // discarded for timing, but its allocator footprint is the cold
+    // number worth recording
+    alloc::reset();
     let _ = time_run(cores);
+    let cold = alloc::stats();
 
+    alloc::reset();
     let (t_serial, out_serial) = time_run(1);
+    let serial_alloc = alloc::stats();
+    alloc::reset();
     let (t_par, out_par) = time_run(cores);
+    let par_alloc = alloc::stats();
 
     assert_eq!(
         out_serial.render(),
@@ -52,4 +68,48 @@ fn main() {
         t_serial.as_secs_f64() / t_par.as_secs_f64(),
         cores
     );
+    println!(
+        "  alloc      cold {:.1} MB total / warm serial {:.1} MB total, \
+         peak {:.1} MB",
+        cold.total_bytes as f64 / 1e6,
+        serial_alloc.total_bytes as f64 / 1e6,
+        serial_alloc.peak_bytes as f64 / 1e6,
+    );
+
+    // machine-readable record (per-job timings from the serial pass:
+    // unskewed by worker scheduling)
+    let jobs_json = benchkit::per_job_json(&out_serial.timings);
+    let fields = [
+        (
+            "scale",
+            format!("\"{}\"", if paper { "paper" } else { "small" }),
+        ),
+        ("smoke", smoke.to_string()),
+        ("cells", out_par.cells.to_string()),
+        ("cores", cores.to_string()),
+        (
+            "serial_ms",
+            format!("{:.3}", t_serial.as_secs_f64() * 1e3),
+        ),
+        (
+            "parallel_ms",
+            format!("{:.3}", t_par.as_secs_f64() * 1e3),
+        ),
+        (
+            "speedup",
+            format!("{:.3}", t_serial.as_secs_f64() / t_par.as_secs_f64()),
+        ),
+        ("alloc_total_bytes_cold", cold.total_bytes.to_string()),
+        (
+            "alloc_total_bytes_serial",
+            serial_alloc.total_bytes.to_string(),
+        ),
+        ("alloc_peak_bytes_serial", serial_alloc.peak_bytes.to_string()),
+        ("alloc_total_bytes_parallel", par_alloc.total_bytes.to_string()),
+        ("per_job", jobs_json),
+    ];
+    match benchkit::write_bench_json("BENCH_sweep.json", "sweep_e2e", &fields) {
+        Ok(()) => println!("  record     BENCH_sweep.json"),
+        Err(e) => eprintln!("  record     BENCH_sweep.json not written: {e}"),
+    }
 }

@@ -157,7 +157,27 @@ pub struct ExecCtx<'a> {
 
 impl<'a> ExecCtx<'a> {
     pub fn new(node: NodeId, engine: Option<&'a mut Engine>) -> Self {
-        ExecCtx { node, engine, spawns: Vec::new(), forwards: Vec::new() }
+        ExecCtx::with_buffers(node, engine, Vec::new(), Vec::new())
+    }
+
+    /// Construct over recycled spawn/forward buffers (the cluster's
+    /// allocation-free hot path: buffers are cleared here, filled by
+    /// the task, then handed back through [`Self::into_buffers`] so
+    /// their capacity survives across tasks).
+    pub fn with_buffers(
+        node: NodeId,
+        engine: Option<&'a mut Engine>,
+        mut spawns: Vec<TaskToken>,
+        mut forwards: Vec<TaskToken>,
+    ) -> Self {
+        spawns.clear();
+        forwards.clear();
+        ExecCtx { node, engine, spawns, forwards }
+    }
+
+    /// Decompose into the (spawns, forwards) buffers for recycling.
+    pub fn into_buffers(self) -> (Vec<TaskToken>, Vec<TaskToken>) {
+        (self.spawns, self.forwards)
     }
 
     /// `ARENA_task_spawn`: emit a new token; `FROMnode` is stamped
@@ -224,7 +244,8 @@ impl<'a> ExecCtx<'a> {
 ///
 /// `Send` is a supertrait so a whole [`crate::cluster::Cluster`] can be
 /// handed to a sweep worker thread (`arena sweep --jobs N`); app state
-/// is plain owned data, so every in-tree app satisfies it for free.
+/// is owned data plus `Arc`-shared immutable workloads, so every
+/// in-tree app satisfies it for free.
 pub trait App: Send {
     fn name(&self) -> &'static str;
 
@@ -335,6 +356,20 @@ mod tests {
         assert_eq!(s[0].param, 2.5);
         assert_eq!(s[1].remote, Range::new(100, 104));
         assert!(ctx.take_spawns().is_empty(), "drained");
+    }
+
+    #[test]
+    fn recycled_buffers_are_cleared_and_keep_capacity() {
+        let stale = vec![TaskToken::new(1, Range::new(0, 4), 0.0); 8];
+        let cap = stale.capacity();
+        let mut ctx = ExecCtx::with_buffers(2, None, stale, Vec::new());
+        assert_eq!(ctx.n_spawned(), 0, "stale tokens must be cleared");
+        ctx.spawn(1, Range::new(0, 2), 0.0);
+        let (spawns, forwards) = ctx.into_buffers();
+        assert_eq!(spawns.len(), 1);
+        assert_eq!(spawns[0].from_node, 2);
+        assert!(spawns.capacity() >= cap, "capacity recycled");
+        assert!(forwards.is_empty());
     }
 
     #[test]

@@ -23,15 +23,18 @@ use crate::placement::Directory;
 use crate::runtime::Tensor;
 use crate::token::{Range, TaskId, TaskToken};
 
-use super::workloads::{gen_sequence, nw_ref, NW_GAP, NW_MATCH, NW_MISMATCH};
+use std::sync::Arc;
+
+use super::workloads::{shared, NW_GAP, NW_MATCH, NW_MISMATCH};
 
 pub struct DnaApp {
     l: usize,
     b: usize,
     seed: u64,
     base_id: TaskId,
-    seq_a: Vec<u8>,
-    seq_b: Vec<u8>,
+    /// Shared immutable sequences (memoized across sweep cells).
+    seq_a: Arc<Vec<u8>>,
+    seq_b: Arc<Vec<u8>>,
     /// (L+1)×(L+1) DP matrix, row-major.
     h: Vec<f32>,
     done: Vec<bool>,
@@ -48,8 +51,8 @@ impl DnaApp {
             b,
             seed,
             base_id: 4,
-            seq_a: Vec::new(),
-            seq_b: Vec::new(),
+            seq_a: Arc::new(Vec::new()),
+            seq_b: Arc::new(Vec::new()),
             h: Vec::new(),
             done: Vec::new(),
             spawned: Vec::new(),
@@ -211,8 +214,8 @@ impl App for DnaApp {
                 );
             }
         }
-        self.seq_a = gen_sequence(self.l, self.seed);
-        self.seq_b = gen_sequence(self.l, self.seed ^ 0xD);
+        self.seq_a = shared::sequence(self.l, self.seed);
+        self.seq_b = shared::sequence(self.l, self.seed ^ 0xD);
         let w = self.l + 1;
         self.h = vec![0.0; w * w];
         for j in 0..w {
@@ -248,7 +251,7 @@ impl App for DnaApp {
     }
 
     fn check(&self) -> Result<(), String> {
-        let want = nw_ref(&self.seq_a, &self.seq_b);
+        let want = shared::nw(self.l, self.seed, self.seed ^ 0xD);
         let w = self.l + 1;
         for i in 0..w {
             for j in 0..w {

@@ -17,13 +17,14 @@
 //! a deliberately conservative overcount noted in DESIGN.md.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::api::{App, Exec, ExecCtx, TaskRegistry};
 use crate::config::ArenaConfig;
 use crate::placement::Directory;
 use crate::token::{Range, TaskId, TaskToken};
 
-use super::workloads::{gcn_ref, gen_gcn, GcnData};
+use super::workloads::{shared, GcnData};
 
 /// Max gap (in vertices) bridged inside one push segment: small gaps
 /// are cheaper to over-fetch than to pay another token for.
@@ -56,7 +57,11 @@ pub struct GcnApp {
     c: usize,
     seed: u64,
     base_id: TaskId,
-    data: GcnData,
+    /// Shared immutable workload (graph + weights), memoized across
+    /// sweep cells; execution reads it through a local `Arc` handle
+    /// (the seed code moved `adj` in and out of `self` around every
+    /// `&mut self` call instead).
+    data: Arc<GcnData>,
     /// Layer-1 combine (X·W1) rows, then layer-1 output after finalize.
     z1: Vec<f32>,
     agg1: Vec<f32>,
@@ -80,7 +85,7 @@ impl GcnApp {
             c,
             seed,
             base_id: 5,
-            data: GcnData {
+            data: Arc::new(GcnData {
                 adj: vec![],
                 feats: vec![],
                 w1: vec![],
@@ -89,7 +94,7 @@ impl GcnApp {
                 f: 0,
                 h: 0,
                 c: 0,
-            },
+            }),
             z1: vec![],
             agg1: vec![],
             h1: vec![],
@@ -186,10 +191,12 @@ impl GcnApp {
         let ne = self.dir.extent_count();
         let mut needed: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
         let mut remote_dst: Vec<(u32, u32)> = vec![(u32::MAX, 0); ne];
+        // local handle onto the shared graph: `push_local` takes
+        // `&mut self`, so the adjacency is read through its own Arc
+        let data = Arc::clone(&self.data);
         for i in rows.start..rows.end {
             units += self.push_local(i, i, layer); // self-loop
-            let adj = std::mem::take(&mut self.data.adj);
-            for &t in &adj[i as usize] {
+            for &t in &data.adj[i as usize] {
                 let te = self.dir.extent_index(t * slot);
                 if self.dir.extent_owner(te) == node {
                     units += self.push_local(i, t, layer);
@@ -200,7 +207,6 @@ impl GcnApp {
                     *thi = (*thi).max(t + 1);
                 }
             }
-            self.data.adj = adj;
         }
         for (te, srcs) in &mut needed {
             let (tlo, thi) = remote_dst[*te];
@@ -237,14 +243,13 @@ impl GcnApp {
         let mut units = 0;
         let src = self.verts(tok.remote);
         let targets = self.verts(tok.task);
+        let data = Arc::clone(&self.data);
         for t in targets.start..targets.end {
-            let adj = std::mem::take(&mut self.data.adj);
-            for &s in &adj[t as usize] {
+            for &s in &data.adj[t as usize] {
                 if src.start <= s && s < src.end {
                     units += self.push_local(s, t, layer);
                 }
             }
-            self.data.adj = adj;
         }
         units
     }
@@ -310,7 +315,7 @@ impl App for GcnApp {
             self.v,
             cfg.nodes
         );
-        self.data = gen_gcn(self.v, self.f, self.h, self.c, self.seed);
+        self.data = shared::gcn(self.v, self.f, self.h, self.c, self.seed);
         self.z1 = vec![0.0; self.v * self.h];
         self.agg1 = vec![0.0; self.v * self.h];
         self.h1 = vec![0.0; self.v * self.h];
@@ -380,8 +385,9 @@ impl App for GcnApp {
     }
 
     fn check(&self) -> Result<(), String> {
-        let want = gcn_ref(&self.data);
-        for (i, (&got, &w)) in self.y.iter().zip(&want).enumerate() {
+        let want =
+            shared::gcn_oracle(self.v, self.f, self.h, self.c, self.seed);
+        for (i, (&got, &w)) in self.y.iter().zip(want.iter()).enumerate() {
             let tol = 1e-3 * (1.0 + w.abs());
             if (got - w).abs() > tol {
                 return Err(format!(

@@ -23,14 +23,17 @@ use crate::placement::Directory;
 use crate::runtime::Tensor;
 use crate::token::{Range, TaskId, TaskToken};
 
-use super::workloads::{gen_matrix, matmul_ref};
+use std::sync::Arc;
+
+use super::workloads::shared;
 
 pub struct GemmApp {
     n: usize,
     seed: u64,
     base_id: TaskId,
-    a: Vec<f32>,
-    b: Vec<f32>,
+    /// Shared immutable inputs (memoized across sweep cells).
+    a: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
     c: Vec<f32>,
     dir: Directory,
     /// Count of PJRT tile executions (observability for tests).
@@ -43,8 +46,8 @@ impl GemmApp {
             n,
             seed,
             base_id: 2,
-            a: Vec::new(),
-            b: Vec::new(),
+            a: Arc::new(Vec::new()),
+            b: Arc::new(Vec::new()),
             c: Vec::new(),
             dir: Directory::unplaced(),
             pjrt_tiles: 0,
@@ -162,8 +165,8 @@ impl App for GemmApp {
             self.n,
             cfg.nodes
         );
-        self.a = gen_matrix(self.n, self.n, self.seed);
-        self.b = gen_matrix(self.n, self.n, self.seed ^ 0xB);
+        self.a = shared::matrix(self.n, self.n, self.seed);
+        self.b = shared::matrix(self.n, self.n, self.seed ^ 0xB);
         self.c = vec![0.0; self.n * self.n];
         self.dir = dir.clone();
     }
@@ -227,8 +230,9 @@ impl App for GemmApp {
     }
 
     fn check(&self) -> Result<(), String> {
-        let want = matmul_ref(&self.a, &self.b, self.n, self.n, self.n);
-        for (i, (&got, &w)) in self.c.iter().zip(&want).enumerate() {
+        let want =
+            shared::matmul(self.n, self.n, self.n, self.seed, self.seed ^ 0xB);
+        for (i, (&got, &w)) in self.c.iter().zip(want.iter()).enumerate() {
             let tol = 1e-3 * (1.0 + w.abs());
             if (got - w).abs() > tol {
                 return Err(format!(

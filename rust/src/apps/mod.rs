@@ -59,3 +59,104 @@ pub fn make_app(name: &str, scale: Scale, seed: u64) -> Box<dyn App> {
 
 /// All evaluated app names, in the paper's figure order.
 pub const ALL: [&str; 6] = ["sssp", "gemm", "spmv", "dna", "gcn", "nbody"];
+
+/// Can `app` at `scale` be block-partitioned over `nodes` ring nodes?
+/// Mirrors each app's init-time divisibility asserts (row/block/vertex/
+/// quad alignment of the equal stripe) so the large-scale sweep can
+/// enumerate node counts without tripping them. Guarded against drift
+/// by `supported_matrix_matches_init_asserts` below.
+pub fn supports(name: &str, scale: Scale, nodes: usize) -> bool {
+    match (name, scale) {
+        // relax tokens / CSR rows are word-granular: any partition works
+        ("sssp", _) | ("spmv", _) => true,
+        // GEMM stripes must stay row-aligned: N % nodes == 0
+        ("gemm", Scale::Small) => 64 % nodes == 0,
+        ("gemm", Scale::Paper) => 512 % nodes == 0,
+        // DNA stripes must stay B²-block-aligned
+        ("dna", Scale::Small) => (128 * 128) % (nodes * 32 * 32) == 0,
+        ("dna", Scale::Paper) => (1024 * 1024) % (nodes * 64 * 64) == 0,
+        // GCN / N-body: vertices / particle quads divide evenly
+        ("gcn", Scale::Small) => 256 % nodes == 0,
+        ("gcn", Scale::Paper) => 2048 % nodes == 0,
+        ("nbody", Scale::Small) => 256 % nodes == 0,
+        ("nbody", Scale::Paper) => 2048 % nodes == 0,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, Model};
+    use crate::config::ArenaConfig;
+
+    /// `supports` must agree with the apps' own init-time asserts at
+    /// *both* scales: for every supported (app, scale, nodes) cell,
+    /// constructing the cluster (which runs `App::init` against the
+    /// block directory) must not panic — including the 32..128 counts
+    /// of the large-scale sweep axis. Paper is the sweep CLI's default
+    /// scale, so drift between `supports` and a `paper()` constructor
+    /// would fail here, not mid-`--nodes 128` sweep.
+    #[test]
+    fn supported_matrix_matches_init_asserts() {
+        for scale in [Scale::Small, Scale::Paper] {
+            for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+                for app in ALL {
+                    if !supports(app, scale, nodes) {
+                        continue;
+                    }
+                    let cfg = ArenaConfig::default().with_nodes(nodes);
+                    let _ = Cluster::new(
+                        cfg,
+                        Model::SoftwareCpu,
+                        vec![make_app(app, scale, 7)],
+                    );
+                }
+            }
+        }
+    }
+
+    /// The inverse direction: where `supports` says no, the app's init
+    /// must actually refuse the partition — otherwise dimension drift
+    /// could silently shrink the `--nodes` axis while both stay green.
+    /// (All paper-scale powers of two are supported, so the negative
+    /// cells exist only at Small scale.)
+    #[test]
+    fn unsupported_cells_actually_fail_init() {
+        let mut negatives = 0;
+        for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+            for app in ALL {
+                if supports(app, Scale::Small, nodes) {
+                    continue;
+                }
+                negatives += 1;
+                let r = std::panic::catch_unwind(|| {
+                    let cfg = ArenaConfig::default().with_nodes(nodes);
+                    let _ = Cluster::new(
+                        cfg,
+                        Model::SoftwareCpu,
+                        vec![make_app(app, Scale::Small, 7)],
+                    );
+                });
+                assert!(
+                    r.is_err(),
+                    "{app}@{nodes}: supports() says unsupported but init \
+                     accepted the partition — update supports()"
+                );
+            }
+        }
+        assert!(negatives > 0, "expected some unsupported Small cells");
+    }
+
+    #[test]
+    fn paper_scale_supports_the_full_axis() {
+        for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+            for app in ALL {
+                assert!(
+                    supports(app, Scale::Paper, nodes),
+                    "{app} must partition at paper scale over {nodes} nodes"
+                );
+            }
+        }
+    }
+}

@@ -20,7 +20,7 @@ use crate::config::ArenaConfig;
 use crate::placement::Directory;
 use crate::token::{Range, TaskId, TaskToken};
 
-use super::workloads::{gen_particles, nbody_step_ref, NBODY_DT, NBODY_EPS};
+use super::workloads::{shared, NBODY_DT, NBODY_EPS};
 
 pub struct NbodyApp {
     n_particles: usize,
@@ -152,10 +152,10 @@ impl App for NbodyApp {
             self.n_particles,
             cfg.nodes
         );
-        let (pos, vel) = gen_particles(self.n_particles, self.seed);
-        self.pos_next = pos.clone();
-        self.pos = pos;
-        self.vel = vel;
+        let init = shared::particles(self.n_particles, self.seed);
+        self.pos_next = init.0.clone();
+        self.pos = init.0.clone();
+        self.vel = init.1.clone();
         self.acc = vec![0.0; self.n_particles * 3];
         self.dir = dir.clone();
         self.total_chunks = dir.extent_count() as u32;
@@ -254,11 +254,12 @@ impl App for NbodyApp {
     }
 
     fn check(&self) -> Result<(), String> {
-        let (mut pos, mut vel) = gen_particles(self.n_particles, self.seed);
-        for _ in 0..self.iters {
-            nbody_step_ref(&mut pos, &mut vel);
-        }
-        for (i, (&got, &w)) in self.pos.iter().zip(&pos).enumerate() {
+        let want = shared::nbody_trajectory(
+            self.n_particles,
+            self.iters,
+            self.seed,
+        );
+        for (i, (&got, &w)) in self.pos.iter().zip(want.iter()).enumerate() {
             if (got - w).abs() > 1e-3 {
                 return Err(format!(
                     "particle {} coord {}: {got} != {w}",

@@ -12,7 +12,9 @@ use crate::config::ArenaConfig;
 use crate::placement::Directory;
 use crate::token::{Range, TaskId, TaskToken};
 
-use super::workloads::{gen_csr, Csr};
+use std::sync::Arc;
+
+use super::workloads::{shared, Csr};
 
 pub struct SpmvApp {
     n: usize,
@@ -20,7 +22,8 @@ pub struct SpmvApp {
     extra: usize,
     seed: u64,
     base_id: TaskId,
-    mat: Csr,
+    /// Shared immutable matrix (memoized across sweep cells).
+    mat: Arc<Csr>,
     x: Vec<f32>,
     y: Vec<f32>,
     dir: Directory,
@@ -34,7 +37,7 @@ impl SpmvApp {
             extra,
             seed,
             base_id: 3,
-            mat: Csr { n: 0, row_ptr: vec![0], col: vec![], val: vec![] },
+            mat: Arc::new(Csr { n: 0, row_ptr: vec![0], col: vec![], val: vec![] }),
             x: Vec::new(),
             y: Vec::new(),
             dir: Directory::unplaced(),
@@ -91,7 +94,7 @@ impl App for SpmvApp {
     }
 
     fn init(&mut self, _cfg: &ArenaConfig, dir: &Directory) {
-        self.mat = gen_csr(self.n, self.band, self.extra, self.seed);
+        self.mat = shared::csr(self.n, self.band, self.extra, self.seed);
         let mut rng = crate::util::Rng::new(self.seed ^ 0xF00D);
         self.x = (0..self.n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
         self.y = vec![0.0; self.n];
@@ -205,7 +208,7 @@ mod tests {
     #[test]
     fn work_conserved() {
         let r = run(4, Model::Cgra);
-        let mat = gen_csr(512, 16, 2, 9);
+        let mat = shared::csr(512, 16, 2, 9);
         assert_eq!(r.node_units.iter().sum::<u64>(), mat.nnz() as u64);
     }
 }

@@ -16,14 +16,17 @@ use crate::config::ArenaConfig;
 use crate::placement::Directory;
 use crate::token::{Range, TaskId, TaskToken};
 
-use super::workloads::{bfs_levels, gen_graph};
+use std::sync::Arc;
+
+use super::workloads::shared;
 
 pub struct SsspApp {
     size: usize,
     deg: usize,
     seed: u64,
     base_id: TaskId,
-    adj: Vec<Vec<u32>>,
+    /// Shared immutable adjacency (memoized across sweep cells).
+    adj: Arc<Vec<Vec<u32>>>,
     level: Vec<u32>,
 }
 
@@ -34,7 +37,7 @@ impl SsspApp {
             deg,
             seed,
             base_id: 1,
-            adj: Vec::new(),
+            adj: Arc::new(Vec::new()),
             level: Vec::new(),
         }
     }
@@ -71,7 +74,7 @@ impl App for SsspApp {
     fn init(&mut self, _cfg: &ArenaConfig, _dir: &Directory) {
         // relax tokens carry their own routing (unit ranges filtered at
         // the owner), so SSSP is placement-oblivious by construction
-        self.adj = gen_graph(self.size, self.deg, self.seed);
+        self.adj = shared::graph(self.size, self.deg, self.seed);
         self.level = vec![u32::MAX; self.size];
     }
 
@@ -109,8 +112,8 @@ impl App for SsspApp {
     }
 
     fn check(&self) -> Result<(), String> {
-        let want = bfs_levels(&self.adj, 0);
-        for (i, (&got, &w)) in self.level.iter().zip(&want).enumerate() {
+        let want = shared::levels(self.size, self.deg, self.seed);
+        for (i, (&got, &w)) in self.level.iter().zip(want.iter()).enumerate() {
             if got != w {
                 return Err(format!("vertex {i}: level {got} != {w}"));
             }

@@ -338,9 +338,165 @@ pub fn nbody_step_ref(pos: &mut [f32], vel: &mut [f32]) {
     }
 }
 
+/// Memoized, `Arc`-shared workload data and serial oracles.
+///
+/// Every sweep cell used to regenerate its app's inputs and recompute
+/// the serial oracle from scratch — for paper-scale GEMM the oracle
+/// alone is another 512³ MACs *per figure cell*, and the generators
+/// re-allocate megabytes per run. Everything here is a pure function
+/// of its parameters + seed, so caching is invisible to determinism:
+/// the first caller computes, everyone else gets the same `Arc`.
+/// A cache miss computes *outside* the lock (two racing workers may
+/// both compute; `or_insert` keeps the first — identical — value), so
+/// the sweep's worker pool never serializes behind a slow oracle.
+pub mod shared {
+    use std::collections::BTreeMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+
+    use super::*;
+
+    fn memo<K: Ord + Clone, V>(
+        cell: &'static OnceLock<Mutex<BTreeMap<K, Arc<V>>>>,
+        key: K,
+        compute: impl FnOnce() -> V,
+    ) -> Arc<V> {
+        let map = cell.get_or_init(Mutex::default);
+        if let Some(v) = map.lock().expect("workload cache poisoned").get(&key)
+        {
+            return v.clone();
+        }
+        let v = Arc::new(compute());
+        map.lock()
+            .expect("workload cache poisoned")
+            .entry(key)
+            .or_insert(v)
+            .clone()
+    }
+
+    type Cache<K, V> = OnceLock<Mutex<BTreeMap<K, Arc<V>>>>;
+
+    /// Shared [`gen_graph`] result.
+    pub fn graph(n: usize, deg: usize, seed: u64) -> Arc<Vec<Vec<u32>>> {
+        static C: Cache<(usize, usize, u64), Vec<Vec<u32>>> = OnceLock::new();
+        memo(&C, (n, deg, seed), || gen_graph(n, deg, seed))
+    }
+
+    /// Shared BFS-level oracle over the shared graph.
+    pub fn levels(n: usize, deg: usize, seed: u64) -> Arc<Vec<u32>> {
+        static C: Cache<(usize, usize, u64), Vec<u32>> = OnceLock::new();
+        memo(&C, (n, deg, seed), || bfs_levels(&graph(n, deg, seed), 0))
+    }
+
+    /// Shared [`gen_matrix`] result.
+    pub fn matrix(rows: usize, cols: usize, seed: u64) -> Arc<Vec<f32>> {
+        static C: Cache<(usize, usize, u64), Vec<f32>> = OnceLock::new();
+        memo(&C, (rows, cols, seed), || gen_matrix(rows, cols, seed))
+    }
+
+    /// Shared GEMM oracle: `matrix(m,k,seed_a) · matrix(k,n,seed_b)`.
+    pub fn matmul(
+        m: usize,
+        k: usize,
+        n: usize,
+        seed_a: u64,
+        seed_b: u64,
+    ) -> Arc<Vec<f32>> {
+        static C: Cache<(usize, usize, usize, u64, u64), Vec<f32>> =
+            OnceLock::new();
+        memo(&C, (m, k, n, seed_a, seed_b), || {
+            matmul_ref(&matrix(m, k, seed_a), &matrix(k, n, seed_b), m, k, n)
+        })
+    }
+
+    /// Shared [`gen_csr`] result.
+    pub fn csr(n: usize, band: usize, extra: usize, seed: u64) -> Arc<Csr> {
+        static C: Cache<(usize, usize, usize, u64), Csr> = OnceLock::new();
+        memo(&C, (n, band, extra, seed), || gen_csr(n, band, extra, seed))
+    }
+
+    /// Shared [`gen_sequence`] result.
+    pub fn sequence(len: usize, seed: u64) -> Arc<Vec<u8>> {
+        static C: Cache<(usize, u64), Vec<u8>> = OnceLock::new();
+        memo(&C, (len, seed), || gen_sequence(len, seed))
+    }
+
+    /// Shared NW oracle over two shared sequences.
+    pub fn nw(len: usize, seed_a: u64, seed_b: u64) -> Arc<Vec<f32>> {
+        static C: Cache<(usize, u64, u64), Vec<f32>> = OnceLock::new();
+        memo(&C, (len, seed_a, seed_b), || {
+            nw_ref(&sequence(len, seed_a), &sequence(len, seed_b))
+        })
+    }
+
+    /// Shared [`gen_gcn`] result.
+    pub fn gcn(
+        v: usize,
+        f: usize,
+        h: usize,
+        c: usize,
+        seed: u64,
+    ) -> Arc<GcnData> {
+        static C: Cache<(usize, usize, usize, usize, u64), GcnData> =
+            OnceLock::new();
+        memo(&C, (v, f, h, c, seed), || gen_gcn(v, f, h, c, seed))
+    }
+
+    /// Shared 2-layer GCN forward oracle.
+    pub fn gcn_oracle(
+        v: usize,
+        f: usize,
+        h: usize,
+        c: usize,
+        seed: u64,
+    ) -> Arc<Vec<f32>> {
+        static C: Cache<(usize, usize, usize, usize, u64), Vec<f32>> =
+            OnceLock::new();
+        memo(&C, (v, f, h, c, seed), || gcn_ref(&gcn(v, f, h, c, seed)))
+    }
+
+    /// Shared [`gen_particles`] result (positions, velocities).
+    pub fn particles(n: usize, seed: u64) -> Arc<(Vec<f32>, Vec<f32>)> {
+        static C: Cache<(usize, u64), (Vec<f32>, Vec<f32>)> = OnceLock::new();
+        memo(&C, (n, seed), || gen_particles(n, seed))
+    }
+
+    /// Shared N-body trajectory oracle: positions after `iters` serial
+    /// leapfrog steps (the O(iters·n²) half of every N-body check).
+    pub fn nbody_trajectory(n: usize, iters: u32, seed: u64) -> Arc<Vec<f32>> {
+        static C: Cache<(usize, u32, u64), Vec<f32>> = OnceLock::new();
+        memo(&C, (n, iters, seed), || {
+            let p = particles(n, seed);
+            let (mut pos, mut vel) = (p.0.clone(), p.1.clone());
+            for _ in 0..iters {
+                nbody_step_ref(&mut pos, &mut vel);
+            }
+            pos
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shared_caches_return_identical_arcs() {
+        let a = shared::graph(64, 4, 9);
+        let b = shared::graph(64, 4, 9);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "second read is the cache");
+        assert_eq!(*a, gen_graph(64, 4, 9), "cache matches the generator");
+        let l = shared::levels(64, 4, 9);
+        assert_eq!(*l, bfs_levels(&a, 0));
+        let m = shared::matmul(8, 8, 8, 3, 4);
+        let want =
+            matmul_ref(&gen_matrix(8, 8, 3), &gen_matrix(8, 8, 4), 8, 8, 8);
+        assert_eq!(*m, want);
+        let t = shared::nbody_trajectory(16, 2, 5);
+        let (mut pos, mut vel) = gen_particles(16, 5);
+        nbody_step_ref(&mut pos, &mut vel);
+        nbody_step_ref(&mut pos, &mut vel);
+        assert_eq!(*t, pos);
+    }
 
     #[test]
     fn graph_is_fully_reachable() {

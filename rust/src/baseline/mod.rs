@@ -200,8 +200,10 @@ pub fn plan(app: &str, scale: Scale, seed: u64, n: usize) -> Vec<Superstep> {
 /// ("repeated all-to-all communications are essentially desired for
 /// broadcasting vertex updating information", paper §3.1).
 fn plan_sssp(size: usize, deg: usize, seed: u64, n: usize) -> Vec<Superstep> {
-    let adj = workloads::gen_graph(size, deg, seed);
-    let levels = workloads::bfs_levels(&adj, 0);
+    // shared, memoized workload: every BSP cell of the node sweep
+    // prices the same graph without regenerating it
+    let adj = workloads::shared::graph(size, deg, seed);
+    let levels = workloads::shared::levels(size, deg, seed);
     let dir = bsp_dir(size, n);
     let max_level = levels.iter().copied().filter(|&l| l != u32::MAX).max().unwrap_or(0);
     let mut steps = Vec::new();
@@ -243,7 +245,7 @@ fn plan_gemm(size: usize, n: usize) -> Vec<Superstep> {
 /// segments each node needs), then one compute phase over the local
 /// CSR rows — whose nonzero counts are *not* balanced.
 fn plan_spmv(size: usize, band: usize, extra: usize, seed: u64, n: usize) -> Vec<Superstep> {
-    let mat = workloads::gen_csr(size, band, extra, seed);
+    let mat = workloads::shared::csr(size, band, extra, seed);
     let dir = bsp_dir(size, n);
     let mut units = vec![0u64; n];
     for i in 0..size {
@@ -292,7 +294,7 @@ fn plan_dna(l: usize, b: usize, n: usize) -> Vec<Superstep> {
 /// *entire* activation matrix (no locality knowledge -> every node gets
 /// every row), then aggregate locally.
 fn plan_gcn(v: usize, f: usize, h: usize, c: usize, seed: u64, n: usize) -> Vec<Superstep> {
-    let d = workloads::gen_gcn(v, f, h, c, seed);
+    let d = workloads::shared::gcn(v, f, h, c, seed);
     let dir = bsp_dir(v, n);
     let mut edges = vec![0u64; n];
     for (u, l) in d.adj.iter().enumerate() {

@@ -133,6 +133,201 @@ pub fn throughput(r: &BenchResult, items: u64) -> f64 {
     items as f64 / r.mean.as_secs_f64()
 }
 
+/// Counting global allocator — the peak-alloc instrumentation behind
+/// `BENCH_sweep.json`. A binary opts in with
+/// `#[global_allocator] static A: benchkit::alloc::Counting =
+/// benchkit::alloc::Counting;` (the `arena` CLI and the perf benches
+/// do); the library itself never registers it, so tests and downstream
+/// users keep the system allocator untouched. Counting is additionally
+/// gated behind [`enable`]: until a binary turns it on (the benches at
+/// startup; the CLI only when `--bench-json` is requested), the hot
+/// path is a single relaxed load, so ordinary runs don't contend on
+/// the counter cache lines.
+pub mod alloc {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+    static LIVE: AtomicU64 = AtomicU64::new(0);
+    static PEAK: AtomicU64 = AtomicU64::new(0);
+    static TOTAL_BYTES: AtomicU64 = AtomicU64::new(0);
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    /// Forwarding allocator that tracks live/peak/total bytes.
+    pub struct Counting;
+
+    /// Start counting. Call as early as possible: blocks allocated
+    /// before this point were never added to `live_bytes`, so their
+    /// later frees deduct from counted bytes (live/peak understate by
+    /// up to the pre-enable live footprint — a few KB of argv/env when
+    /// armed at the top of `main`, which is why callers enable there).
+    /// The saturating subtraction only bounds the distortion at zero.
+    pub fn enable() {
+        ENABLED.store(true, Ordering::Relaxed);
+    }
+
+    fn on_alloc(size: u64) {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        TOTAL_BYTES.fetch_add(size, Ordering::Relaxed);
+        let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
+        PEAK.fetch_max(live, Ordering::Relaxed);
+    }
+
+    fn on_free(size: u64) {
+        // saturating: blocks allocated before `enable()` were never
+        // counted into LIVE
+        let _ = LIVE.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(size))
+        });
+    }
+
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc(layout);
+            if !p.is_null() && ENABLED.load(Ordering::Relaxed) {
+                on_alloc(layout.size() as u64);
+            }
+            p
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout);
+            if ENABLED.load(Ordering::Relaxed) {
+                on_free(layout.size() as u64);
+            }
+        }
+
+        unsafe fn realloc(
+            &self,
+            ptr: *mut u8,
+            layout: Layout,
+            new_size: usize,
+        ) -> *mut u8 {
+            let p = System.realloc(ptr, layout, new_size);
+            if !p.is_null() && ENABLED.load(Ordering::Relaxed) {
+                // signed delta so a growing realloc doesn't transiently
+                // count both the old and new block into the peak
+                ALLOCS.fetch_add(1, Ordering::Relaxed);
+                TOTAL_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+                let (old, new) = (layout.size() as u64, new_size as u64);
+                if new >= old {
+                    let live =
+                        LIVE.fetch_add(new - old, Ordering::Relaxed) + (new - old);
+                    PEAK.fetch_max(live, Ordering::Relaxed);
+                } else {
+                    on_free(old - new);
+                }
+            }
+            p
+        }
+    }
+
+    /// Snapshot of the counters (zeros unless [`Counting`] is the
+    /// registered global allocator *and* [`enable`] was called).
+    #[derive(Clone, Copy, Debug, Default)]
+    pub struct AllocStats {
+        pub live_bytes: u64,
+        pub peak_bytes: u64,
+        pub total_bytes: u64,
+        pub allocs: u64,
+    }
+
+    pub fn stats() -> AllocStats {
+        AllocStats {
+            live_bytes: LIVE.load(Ordering::Relaxed),
+            peak_bytes: PEAK.load(Ordering::Relaxed),
+            total_bytes: TOTAL_BYTES.load(Ordering::Relaxed),
+            allocs: ALLOCS.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Re-arm the peak/total counters (between measured phases). Live
+    /// bytes are left alone — they track real outstanding memory.
+    pub fn reset() {
+        PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+        TOTAL_BYTES.store(0, Ordering::Relaxed);
+        ALLOCS.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Escape a string for inclusion in the hand-rolled BENCH_*.json
+/// output (no serde in the offline registry).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render measured results as a JSON array fragment:
+/// `[{"name": …, "mean_ns": …, "median_ns": …, "stddev_ns": …,
+/// "iters": …}, …]`.
+pub fn results_json(results: &[BenchResult]) -> String {
+    let mut out = String::from("[");
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"mean_ns\":{},\"median_ns\":{},\
+             \"stddev_ns\":{},\"iters\":{}}}",
+            json_escape(&r.name),
+            r.mean.as_nanos(),
+            r.median.as_nanos(),
+            r.stddev.as_nanos(),
+            r.iters,
+        ));
+    }
+    out.push(']');
+    out
+}
+
+/// Render per-job sweep timings as a JSON array fragment:
+/// `[{"job": <label>, "ms": <wall-clock>}, …]` — the one schema shared
+/// by `arena sweep --bench-json` and the `sweep_e2e` bench.
+pub fn per_job_json(timings: &[(String, f64)]) -> String {
+    let mut out = String::from("[");
+    for (i, (label, ms)) in timings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"job\":\"{}\",\"ms\":{ms:.3}}}",
+            json_escape(label)
+        ));
+    }
+    out.push(']');
+    out
+}
+
+/// Write a machine-readable bench report. `fields` are pre-rendered
+/// JSON values (numbers, strings with quotes, arrays) keyed by name;
+/// the file is a single object `{"bench": <name>, ...fields}`.
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    fields: &[(&str, String)],
+) -> std::io::Result<()> {
+    let mut out = String::from("{");
+    out.push_str(&format!("\"bench\":\"{}\"", json_escape(bench)));
+    for (k, v) in fields {
+        out.push_str(&format!(",\"{}\":{}", json_escape(k), v));
+    }
+    out.push_str("}\n");
+    std::fs::write(path, out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +350,38 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.mean.as_nanos() > 0);
         assert!(throughput(&r, 10_000) > 0.0);
+    }
+
+    #[test]
+    fn json_rendering_is_valid() {
+        let r = BenchResult {
+            name: "a \"quoted\" name".into(),
+            iters: 3,
+            mean: Duration::from_nanos(1500),
+            median: Duration::from_nanos(1400),
+            stddev: Duration::from_nanos(100),
+        };
+        let s = results_json(&[r]);
+        assert!(s.starts_with('[') && s.ends_with(']'));
+        assert!(s.contains("\\\"quoted\\\""));
+        assert!(s.contains("\"mean_ns\":1500"));
+        // round-trip through the in-tree JSON reader
+        let parsed = crate::util::json::Json::parse(&s).expect("valid json");
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(
+            arr[0].get("name").unwrap().as_str(),
+            Some("a \"quoted\" name")
+        );
+    }
+
+    #[test]
+    fn alloc_stats_are_monotone_snapshots() {
+        // without the allocator registered the counters stay zero; the
+        // API must still be callable
+        let s = alloc::stats();
+        let _ = (s.live_bytes, s.peak_bytes, s.total_bytes, s.allocs);
+        alloc::reset();
     }
 
     #[test]

@@ -42,7 +42,10 @@ impl CoalesceUnit {
         CoalesceUnit {
             queues: (0..queues).map(|_| VecDeque::with_capacity(depth)).collect(),
             depth,
-            spill: VecDeque::new(),
+            // pre-sized for the common burst (a full set of queues
+            // overflowing once) so the first spill doesn't allocate on
+            // the spawn hot path; grows transparently beyond that
+            spill: VecDeque::with_capacity(queues * depth),
             merging: true,
             stats: CoalesceStats::default(),
         }

@@ -47,16 +47,21 @@ impl Model {
     }
 }
 
-/// Discrete events the cluster schedules.
+/// Discrete events the cluster schedules. The payloads are small and
+/// `Copy`-cheap by design: a task's spawn list lives in the cluster's
+/// spawn slab and the event carries only the slot, so DES heap churn
+/// never moves (or allocates) token vectors.
 enum Ev {
     /// Token delivered to `node` (off the ring or re-injected locally).
     Arrive(usize, TaskToken),
     /// Run one dispatcher step on `node`.
     Pump(usize),
-    /// Task finished on `node`; release its spawned tokens.
-    Complete(usize, Vec<TaskToken>),
-    /// Remote data for a parked token landed at `node`.
-    DataReady(usize, TaskToken),
+    /// Task finished on `node`; its spawned tokens are in spawn-slab
+    /// slot `slot`.
+    Complete(usize, u32),
+    /// Remote data landed at `node` for the token parked in fetch-slab
+    /// slot `slot`.
+    DataReady(usize, u32),
 }
 
 /// Aggregated outcome of one cluster run.
@@ -178,6 +183,14 @@ pub struct Cluster {
     terminate_laps: u64,
     /// (tasks, units) per app index (multi-user fairness accounting).
     app_stats: Vec<(u64, u64)>,
+    /// Spawn lists in flight between task launch and its Complete
+    /// event, addressed by the slot the event carries.
+    spawn_slab: Vec<Vec<TaskToken>>,
+    spawn_free: Vec<u32>,
+    /// Emptied token buffers recycled across tasks (ExecCtx spawn and
+    /// forward buffers) — the hot path allocates only until the pool
+    /// warms up.
+    vec_pool: Vec<Vec<TaskToken>>,
 }
 
 impl Cluster {
@@ -254,6 +267,9 @@ impl Cluster {
             max_events: 2_000_000_000,
             terminate_laps: 0,
             app_stats: vec![(0, 0); n_apps],
+            spawn_slab: Vec::new(),
+            spawn_free: Vec::new(),
+            vec_pool: Vec::new(),
         }
     }
 
@@ -342,24 +358,22 @@ impl Cluster {
                     pump_pending[n] = false;
                     self.on_pump(&mut des, now, n, &mut engine, &mut pump_pending);
                 }
-                Ev::Complete(n, spawns) => {
+                Ev::Complete(n, slot) => {
                     self.nodes[n].running -= 1;
-                    for s in spawns {
+                    let mut spawns =
+                        std::mem::take(&mut self.spawn_slab[slot as usize]);
+                    self.spawn_free.push(slot);
+                    for s in spawns.drain(..) {
                         self.nodes[n].coalescer.push(s);
                     }
+                    self.vec_pool.push(spawns);
                     self.schedule_pump(&mut des, now, n, &mut pump_pending);
                 }
-                Ev::DataReady(n, tok) => {
-                    let node = &mut self.nodes[n];
-                    let idx = node
-                        .fetching
-                        .iter()
-                        .position(|t| t == &tok)
-                        .expect("DataReady for unknown fetch");
+                Ev::DataReady(n, slot) => {
                     // data now local: execute directly (the REMOTE
                     // fields stay on the token — apps use them to
                     // identify the fetched panel).
-                    let t = node.fetching.swap_remove(idx);
+                    let t = self.nodes[n].fetching.take(slot);
                     self.exec_or_requeue(&mut des, now, n, t, &mut engine);
                     self.schedule_pump(&mut des, now, n, &mut pump_pending);
                 }
@@ -553,11 +567,11 @@ impl Cluster {
             if tok.needs_remote_data() {
                 self.nodes[n].disp.wait.pop();
                 let ready_at = self.fetch_remote(now, n, &tok);
-                self.nodes[n].fetching.push(tok);
+                let slot = self.nodes[n].fetching.park(tok);
                 self.nodes[n].stats.fetches += 1;
                 self.nodes[n].stats.fetched_bytes +=
                     tok.remote.len() as u64 * WORD_BYTES;
-                des.schedule_at(ready_at, Ev::DataReady(n, tok));
+                des.schedule_at(ready_at, Ev::DataReady(n, slot));
                 progress = true;
                 continue; // head-of-line cleared; consider the next
             }
@@ -582,14 +596,31 @@ impl Cluster {
     ) {
         let app_idx = self.kernel(tok.task_id).app_idx;
 
-        // functional execution: mutate app state, collect spawns.
-        let mut ctx = ExecCtx::new(n as u8, engine.as_deref_mut());
+        // functional execution: mutate app state, collect spawns into
+        // recycled buffers (no allocation once the pool is warm).
+        let spawn_buf = self.vec_pool.pop().unwrap_or_default();
+        let fwd_buf = self.vec_pool.pop().unwrap_or_default();
+        let mut ctx =
+            ExecCtx::with_buffers(n as u8, engine.as_deref_mut(), spawn_buf, fwd_buf);
         let exec = self.apps[app_idx].execute(n, &tok, &mut ctx);
-        let spawns = ctx.take_spawns();
+        let (spawns, mut forwards) = ctx.into_buffers();
         // forwarding tokens (spawn FU mid-execution) leave immediately
-        for f in ctx.take_forwards() {
+        for f in forwards.drain(..) {
             self.nodes[n].coalescer.push(f);
         }
+        self.vec_pool.push(forwards);
+        // the spawn list parks in the slab until the Complete event
+        let slot = match self.spawn_free.pop() {
+            Some(s) => {
+                debug_assert!(self.spawn_slab[s as usize].is_empty());
+                self.spawn_slab[s as usize] = spawns;
+                s
+            }
+            None => {
+                self.spawn_slab.push(spawns);
+                (self.spawn_slab.len() - 1) as u32
+            }
+        };
 
         // timed execution on the substrate (split borrows: kernels and
         // dirs are read-only while the node's compute state mutates).
@@ -641,7 +672,7 @@ impl Cluster {
         self.app_stats[app_idx].0 += 1;
         self.app_stats[app_idx].1 += exec.units;
         self.nodes[n].touch();
-        des.schedule_at(done, Ev::Complete(n, spawns));
+        des.schedule_at(done, Ev::Complete(n, slot));
     }
 
     /// `ARENA_data_acquire`: pull `tok.remote` over the data-transfer

@@ -20,6 +20,23 @@ pub const NODE_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
 /// Ring size of the skew-sensitivity sweep (Fig. 10's cluster).
 pub const SKEW_NODES: usize = 4;
 
+/// Node counts of the large-scale axis (`arena sweep --nodes N`):
+/// powers of two from 1 up to `max`, restricted to counts every app
+/// can be block-partitioned over at `scale` (each dropped count is the
+/// caller's to report — nothing is silently truncated here beyond the
+/// support filter).
+pub fn scale_axis(max: usize, scale: Scale) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut n = 1usize;
+    while n <= max {
+        if crate::apps::ALL.iter().all(|app| crate::apps::supports(app, scale, n)) {
+            out.push(n);
+        }
+        n *= 2;
+    }
+    out
+}
+
 /// A printable result table (one paper artifact).
 #[derive(Clone, Debug)]
 pub struct Table {
@@ -374,6 +391,39 @@ pub fn skew_with(store: &mut CellStore) -> Vec<Table> {
     out
 }
 
+/// Large-scale sweep tables (`arena sweep --nodes N`): ARENA speedup
+/// over the serial baseline at every axis node count, per execution
+/// model — the figure-9/11 trend extended past the paper's 16 nodes.
+/// Assembled from the memoized store, so the 1..16 columns are the
+/// very cells the standard figures computed.
+pub fn scale_with(store: &mut CellStore, counts: &[usize]) -> (Table, Table) {
+    let headers: Vec<String> =
+        counts.iter().map(|n| format!("{n}n")).collect();
+    let href: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut sw = Table::new(
+        "Scale — ARENA data-centric (software) speedup vs serial",
+        &href,
+    );
+    let mut hw = Table::new(
+        "Scale — ARENA + runtime-reconfigured CGRA speedup vs serial",
+        &href,
+    );
+    for app in ALL {
+        let serial = store.serial_ps(app) as f64;
+        let mut swv = Vec::new();
+        let mut hwv = Vec::new();
+        for &n in counts {
+            let mk = store.arena(app, n, Model::SoftwareCpu).makespan_ps;
+            swv.push(serial / mk as f64);
+            let mk = store.arena(app, n, Model::Cgra).makespan_ps;
+            hwv.push(serial / mk as f64);
+        }
+        sw.row(app, swv);
+        hw.row(app, hwv);
+    }
+    (sw, hw)
+}
+
 /// §5.2 headline numbers, computed from the same runs as Figs. 9/11.
 #[derive(Clone, Copy, Debug)]
 pub struct Headline {
@@ -445,6 +495,18 @@ mod tests {
                 "{app} under dna's ceiling"
             );
         }
+    }
+
+    #[test]
+    fn scale_axis_respects_app_support() {
+        assert_eq!(
+            scale_axis(128, Scale::Paper),
+            vec![1, 2, 4, 8, 16, 32, 64, 128]
+        );
+        // Small-scale DNA blocks stop aligning past 16 nodes, so the
+        // axis self-caps instead of tripping an init assert
+        assert_eq!(scale_axis(128, Scale::Small), vec![1, 2, 4, 8, 16]);
+        assert_eq!(scale_axis(1, Scale::Paper), vec![1]);
     }
 
     #[test]

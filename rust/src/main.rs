@@ -19,6 +19,7 @@
 
 use arena::apps::{Scale, ALL};
 use arena::baseline::{run_bsp, serial_ps};
+use arena::benchkit;
 use arena::cli;
 use arena::cluster::{Model, RunReport};
 use arena::config::ArenaConfig;
@@ -26,6 +27,11 @@ use arena::eval;
 use arena::placement::Layout;
 use arena::runtime::Engine;
 use arena::sweep;
+
+/// Peak-alloc instrumentation for `sweep --bench-json` (the library
+/// never registers an allocator; the binary opts in).
+#[global_allocator]
+static ALLOC: benchkit::alloc::Counting = benchkit::alloc::Counting;
 
 const USAGE: &str = "\
 usage: arena <command> [options]
@@ -36,8 +42,11 @@ commands:
           [--set k=v ...]
   fig     <9|10|11|12|13|all> [--scale small|paper] [--seed S]
   sweep   [--all | 9 10 11 12 13] [--jobs N] [--scale small|paper]
-          [--seed S] [--layout L]   regenerate figures on a worker
-          pool; output is bit-identical for every --jobs value
+          [--seed S] [--layout L] [--nodes N] [--bench-json FILE]
+          regenerate figures on a worker pool; output is bit-identical
+          for every --jobs value. --nodes extends the sweep with a
+          large-scale axis (powers of two up to N, max 128);
+          --bench-json records per-job wall-clock + allocator stats
   sweep   --all-layouts [--jobs N] [--scale small|paper] [--seed S]
           skew-sensitivity sweep: every app x model x layout
   apps    list applications and models
@@ -49,11 +58,16 @@ layouts: block | cyclic | zipf | shuffle
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    // allocator counting is pay-for-play; arm it before anything else
+    // allocates so the --bench-json record misses as little as possible
+    if argv.iter().any(|a| a == "--bench-json") {
+        benchkit::alloc::enable();
+    }
     let args = match cli::parse(
         &argv,
         &[
             "app", "model", "nodes", "scale", "seed", "config", "fig",
-            "jobs", "layout",
+            "jobs", "layout", "bench-json",
         ],
     ) {
         Ok(a) => a,
@@ -257,6 +271,43 @@ fn cmd_run(args: &cli::Args) -> i32 {
     }
 }
 
+/// Write the sweep's perf record: wall-clock, per-job timings and the
+/// counting allocator's stats, as a single machine-readable object.
+fn write_sweep_bench_json(
+    path: &str,
+    out: &sweep::SweepOutput,
+    wall: std::time::Duration,
+    scale: Scale,
+    seed: u64,
+    max_nodes: Option<usize>,
+) -> Result<(), String> {
+    let a = benchkit::alloc::stats();
+    let jobs_json = benchkit::per_job_json(&out.timings);
+    let fields = [
+        (
+            "scale",
+            format!(
+                "\"{}\"",
+                if scale == Scale::Paper { "paper" } else { "small" }
+            ),
+        ),
+        ("seed", seed.to_string()),
+        ("jobs", out.workers.to_string()),
+        ("cells", out.cells.to_string()),
+        (
+            "nodes_axis",
+            max_nodes.map_or("null".into(), |n| n.to_string()),
+        ),
+        ("wall_ms", format!("{:.3}", wall.as_secs_f64() * 1e3)),
+        ("alloc_peak_bytes", a.peak_bytes.to_string()),
+        ("alloc_total_bytes", a.total_bytes.to_string()),
+        ("allocs", a.allocs.to_string()),
+        ("per_job", jobs_json),
+    ];
+    benchkit::write_bench_json(path, "sweep", &fields)
+        .map_err(|e| format!("cannot write {path}: {e}"))
+}
+
 fn cmd_sweep(args: &cli::Args) -> i32 {
     let run = || -> Result<(), String> {
         let scale = scale_of(args)?;
@@ -269,15 +320,37 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             Some(n) => n,
             None => sweep::default_jobs(),
         };
+        let max_nodes = args
+            .parse_opt::<usize>("nodes")
+            .map_err(|e| e.to_string())?;
+        if let Some(n) = max_nodes {
+            if n == 0 || n > 128 {
+                return Err(format!(
+                    "--nodes {n}: the scale axis covers 1..=128 nodes"
+                ));
+            }
+        }
         if args.flag("all-layouts") {
+            if max_nodes.is_some() {
+                return Err(
+                    "--nodes is a figure-sweep axis; it does not apply to \
+                     --all-layouts (the skew sweep is fixed at the Fig. 10 \
+                     cluster size)"
+                        .into(),
+                );
+            }
             let t0 = std::time::Instant::now();
             let out = sweep::run_skew(scale, seed, jobs);
             print!("{}", out.render());
+            let wall = t0.elapsed();
+            if let Some(path) = args.opt("bench-json") {
+                write_sweep_bench_json(path, &out, wall, scale, seed, None)?;
+            }
             eprintln!(
                 "skew sweep: {} unique cells on {} worker(s) in {:.2}s",
                 out.cells,
                 out.workers,
-                t0.elapsed().as_secs_f64()
+                wall.as_secs_f64()
             );
             return Ok(());
         }
@@ -287,6 +360,19 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             })?,
             None => Layout::Block,
         };
+        if let Some(n) = max_nodes {
+            let axis = eval::scale_axis(n, scale);
+            // largest power of two <= n is where an unconstrained axis
+            // would end; announce any app-constraint cap (no silent
+            // truncation)
+            let top = 1usize << (usize::BITS - 1 - n.leading_zeros());
+            if axis.last().copied() != Some(top) {
+                eprintln!(
+                    "note: scale axis self-capped to {axis:?} (app \
+                     partition constraints at this scale)"
+                );
+            }
+        }
         let figs: Vec<sweep::Fig> =
             if args.flag("all") || args.positional.is_empty() {
                 sweep::Fig::ALL.to_vec()
@@ -301,7 +387,8 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                     .collect::<Result<_, _>>()?
             };
         let t0 = std::time::Instant::now();
-        let out = sweep::run_at(&figs, scale, seed, jobs, layout);
+        let out =
+            sweep::run_scaled(&figs, scale, seed, jobs, layout, max_nodes);
         print!("{}", out.render());
         if let Some(h) = out.headline {
             println!("## §5.2 headline (paper: 1.61x / 2.17x / 4.37x / 53.9%)");
@@ -311,11 +398,26 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             println!("movement reduction {:.1}%", 100.0 * h.movement_reduction);
             println!();
         }
+        let wall = t0.elapsed();
+        if max_nodes.is_some() {
+            // per-job wall-clock on stderr (stdout stays byte-identical
+            // across reruns — the determinism contract)
+            let mut by_cost: Vec<&(String, f64)> = out.timings.iter().collect();
+            by_cost.sort_by(|a, b| b.1.total_cmp(&a.1));
+            eprintln!("per-job wall-clock (slowest first):");
+            for (label, ms) in by_cost {
+                eprintln!("  {ms:>10.3} ms  {label}");
+            }
+        }
+        if let Some(path) = args.opt("bench-json") {
+            write_sweep_bench_json(path, &out, wall, scale, seed, max_nodes)?;
+            eprintln!("bench record written to {path}");
+        }
         eprintln!(
             "sweep: {} unique cells on {} worker(s) in {:.2}s",
             out.cells,
             out.workers,
-            t0.elapsed().as_secs_f64()
+            wall.as_secs_f64()
         );
         Ok(())
     };

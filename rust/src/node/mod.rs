@@ -85,6 +85,64 @@ pub struct NodeStats {
     pub recv_stalls: u64,
 }
 
+/// Tokens parked on in-flight remote fetches, addressed by slot: the
+/// DataReady event carries the slot index, so completion is a direct
+/// O(1) take instead of the old O(F) equality scan over a `Vec`.
+/// Slots are recycled LIFO; the slab never shrinks (its high-water
+/// mark is the node's peak fetch concurrency).
+#[derive(Debug, Default)]
+pub struct FetchSlab {
+    slots: Vec<Option<TaskToken>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl FetchSlab {
+    pub fn new() -> Self {
+        FetchSlab::default()
+    }
+
+    /// Park a token; returns the slot the DataReady event must carry.
+    pub fn park(&mut self, t: TaskToken) -> u32 {
+        self.live += 1;
+        match self.free.pop() {
+            Some(s) => {
+                debug_assert!(self.slots[s as usize].is_none());
+                self.slots[s as usize] = Some(t);
+                s
+            }
+            None => {
+                self.slots.push(Some(t));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Take the token parked in `slot` (DataReady completion).
+    pub fn take(&mut self, slot: u32) -> TaskToken {
+        let t = self.slots[slot as usize]
+            .take()
+            .expect("DataReady for unknown fetch");
+        self.free.push(slot);
+        self.live -= 1;
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.free.clear();
+        self.live = 0;
+    }
+}
+
 /// Everything one ring node owns.
 #[derive(Debug)]
 pub struct Node {
@@ -99,8 +157,8 @@ pub struct Node {
     /// Spawn buffer between the executing tasks and the dispatcher.
     pub coalescer: CoalesceUnit,
     /// Tokens whose remote data is in flight (acked into execution by
-    /// the DataReady event).
-    pub fetching: Vec<TaskToken>,
+    /// the slot-addressed DataReady event).
+    pub fetching: FetchSlab,
     /// Tasks currently executing (scheduled Complete events).
     pub running: usize,
     /// Fig. 5 `terminate` flag: one clean TERMINATE pass seen.
@@ -130,7 +188,7 @@ impl Node {
                     CoalesceUnit::new(cfg.spawn_queues, cfg.spawn_queue_depth);
                 if cfg.coalescing { c } else { c.without_merging() }
             },
-            fetching: Vec::new(),
+            fetching: FetchSlab::new(),
             running: 0,
             terminate_flag: false,
             parked_terminate: false,
@@ -215,7 +273,7 @@ mod tests {
         n.running = 1;
         assert!(!n.quiescent(0));
         n.running = 0;
-        n.fetching.push(TaskToken::new(1, Range::new(0, 1), 0.0));
+        n.fetching.park(TaskToken::new(1, Range::new(0, 1), 0.0));
         assert!(!n.quiescent(0));
         n.fetching.clear();
         n.coalescer.push(TaskToken::new(1, Range::new(0, 1), 0.0));
@@ -250,6 +308,23 @@ mod tests {
         n.touch(); // a real token was processed between passes
         assert!(!n.terminate_step(), "pass counter restarted");
         assert!(n.terminate_step());
+    }
+
+    #[test]
+    fn fetch_slab_recycles_slots() {
+        let mut s = FetchSlab::new();
+        let t = |a: u32| TaskToken::new(1, Range::new(a, a + 1), 0.0);
+        let s0 = s.park(t(0));
+        let s1 = s.park(t(1));
+        assert_ne!(s0, s1);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.take(s0).task.start, 0);
+        // freed slot is reused before the slab grows
+        let s2 = s.park(t(2));
+        assert_eq!(s2, s0);
+        assert_eq!(s.take(s1).task.start, 1);
+        assert_eq!(s.take(s2).task.start, 2);
+        assert!(s.is_empty());
     }
 
     #[test]

@@ -26,6 +26,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::apps::{Scale, ALL};
 use crate::baseline::{run_bsp, serial_ps, BspReport};
@@ -53,6 +54,24 @@ pub enum Job {
     Bsp { app: &'static str, nodes: usize, cgra: bool },
     /// Full ARENA discrete-event simulation.
     Arena { app: &'static str, nodes: usize, model: Model, layout: Layout },
+}
+
+impl Job {
+    /// Stable machine-readable label (BENCH_sweep.json per-job keys).
+    pub fn label(&self) -> String {
+        match *self {
+            Job::Serial { app } => format!("serial/{app}"),
+            Job::Bsp { app, nodes, cgra } => format!(
+                "bsp/{app}/n{nodes}/{}",
+                if cgra { "cgra" } else { "cpu" }
+            ),
+            Job::Arena { app, nodes, model, layout } => format!(
+                "arena/{app}/n{nodes}/{}/{}",
+                model.label(),
+                layout.label()
+            ),
+        }
+    }
 }
 
 /// Computed value of one cell.
@@ -90,6 +109,10 @@ pub struct CellStore {
     serial: BTreeMap<&'static str, Ps>,
     bsp: BTreeMap<(&'static str, usize, bool), BspReport>,
     arena: BTreeMap<(&'static str, usize, Model, Layout), RunReport>,
+    /// Per-job wall-clock of every `prefill` compute, in deterministic
+    /// job order (instrumentation only — never part of the rendered
+    /// tables, which stay bit-identical across runs and `--jobs`).
+    timings: Vec<(Job, Duration)>,
 }
 
 impl CellStore {
@@ -105,6 +128,7 @@ impl CellStore {
             serial: BTreeMap::new(),
             bsp: BTreeMap::new(),
             arena: BTreeMap::new(),
+            timings: Vec::new(),
         }
     }
 
@@ -118,6 +142,12 @@ impl CellStore {
 
     pub fn layout(&self) -> Layout {
         self.layout
+    }
+
+    /// Wall-clock of every job computed through [`Self::prefill`], in
+    /// job order (durations vary run to run; the job set does not).
+    pub fn timings(&self) -> &[(Job, Duration)] {
+        &self.timings
     }
 
     /// Cells computed so far.
@@ -220,14 +250,16 @@ impl CellStore {
         let workers = workers.max(1).min(todo.len());
         if workers == 1 {
             for &job in &todo {
+                let t0 = Instant::now();
                 let v = compute(self.scale, self.seed, job);
+                self.timings.push((job, t0.elapsed()));
                 self.insert(job, v);
             }
             return;
         }
         let (scale, seed) = (self.scale, self.seed);
         let next = AtomicUsize::new(0);
-        let done: Mutex<Vec<(usize, Cell)>> =
+        let done: Mutex<Vec<(usize, Cell, Duration)>> =
             Mutex::new(Vec::with_capacity(todo.len()));
         std::thread::scope(|s| {
             for _ in 0..workers {
@@ -236,16 +268,21 @@ impl CellStore {
                     if i >= todo.len() {
                         break;
                     }
+                    let t0 = Instant::now();
                     let cell = compute(scale, seed, todo[i]);
-                    done.lock().expect("worker poisoned the store").push((i, cell));
+                    let dt = t0.elapsed();
+                    done.lock()
+                        .expect("worker poisoned the store")
+                        .push((i, cell, dt));
                 });
             }
         });
         let mut done = done.into_inner().expect("worker poisoned the store");
         // insertion order is irrelevant for the keyed maps, but sort
         // anyway so any iteration-order-sensitive consumer stays stable
-        done.sort_by_key(|(i, _)| *i);
-        for (i, cell) in done {
+        done.sort_by_key(|(i, _, _)| *i);
+        for (i, cell, dt) in done {
+            self.timings.push((todo[i], dt));
             self.insert(todo[i], cell);
         }
     }
@@ -373,7 +410,8 @@ pub fn skew_jobs() -> Vec<Job> {
 
 /// Assembled sweep result.
 pub struct SweepOutput {
-    /// Figure tables in ascending figure order.
+    /// Figure tables in ascending figure order (plus the Scale tables
+    /// when a `--nodes` axis was requested).
     pub tables: Vec<Table>,
     /// §5.2 headline, when Figs. 9-11 were all requested.
     pub headline: Option<Headline>,
@@ -381,6 +419,18 @@ pub struct SweepOutput {
     pub cells: usize,
     /// Worker threads used.
     pub workers: usize,
+    /// Per-job wall-clock (label, milliseconds) — instrumentation for
+    /// BENCH_sweep.json; deliberately not part of [`Self::render`], so
+    /// the rendered tables stay byte-identical across reruns.
+    pub timings: Vec<(String, f64)>,
+}
+
+fn timing_labels(store: &CellStore) -> Vec<(String, f64)> {
+    store
+        .timings()
+        .iter()
+        .map(|(j, d)| (j.label(), d.as_secs_f64() * 1e3))
+        .collect()
 }
 
 impl SweepOutput {
@@ -413,6 +463,23 @@ pub fn run_at(
     workers: usize,
     layout: Layout,
 ) -> SweepOutput {
+    run_scaled(figs, scale, seed, workers, layout, None)
+}
+
+/// Run the figure sweep and, when `max_nodes` is given, extend it with
+/// the large-scale axis: serial + ARENA (both models) cells at every
+/// [`eval::scale_axis`] node count up to `max_nodes`, assembled into
+/// two extra "Scale" tables after the figures. All cells — figures and
+/// scale axis — go through one prefill pass on the shared pool, and
+/// the 1..16 columns reuse the figure cells via the store.
+pub fn run_scaled(
+    figs: &[Fig],
+    scale: Scale,
+    seed: u64,
+    workers: usize,
+    layout: Layout,
+    max_nodes: Option<usize>,
+) -> SweepOutput {
     let mut figs: Vec<Fig> = figs.to_vec();
     figs.sort();
     figs.dedup();
@@ -420,6 +487,24 @@ pub fn run_at(
     let mut jobs = Vec::new();
     for f in &figs {
         jobs.extend(f.jobs_at(layout));
+    }
+    let axis: Vec<usize> = match max_nodes {
+        Some(max) => eval::scale_axis(max, scale),
+        None => Vec::new(),
+    };
+    if !axis.is_empty() {
+        // one serial denominator per app, plus both ARENA models at
+        // every axis count
+        for app in ALL {
+            jobs.push(Job::Serial { app });
+        }
+        for &n in &axis {
+            for app in ALL {
+                for model in [Model::SoftwareCpu, Model::Cgra] {
+                    jobs.push(Job::Arena { app, nodes: n, model, layout });
+                }
+            }
+        }
     }
 
     let mut store = CellStore::with_layout(scale, seed, layout);
@@ -447,12 +532,18 @@ pub fn run_at(
             }
         }
     }
+    if !axis.is_empty() {
+        let (sw, hw) = eval::scale_with(&mut store, &axis);
+        tables.push(sw);
+        tables.push(hw);
+    }
     let headline = [Fig::F9, Fig::F10, Fig::F11]
         .iter()
         .all(|f| figs.contains(f))
         .then(|| eval::headline_with(&mut store));
 
-    SweepOutput { tables, headline, cells: store.len(), workers }
+    let timings = timing_labels(&store);
+    SweepOutput { tables, headline, cells: store.len(), workers, timings }
 }
 
 /// Run the skew-sensitivity sweep (`arena sweep --all-layouts`): every
@@ -462,7 +553,8 @@ pub fn run_skew(scale: Scale, seed: u64, workers: usize) -> SweepOutput {
     let mut store = CellStore::new(scale, seed);
     store.prefill(&skew_jobs(), workers);
     let tables = eval::skew_with(&mut store);
-    SweepOutput { tables, headline: None, cells: store.len(), workers }
+    let timings = timing_labels(&store);
+    SweepOutput { tables, headline: None, cells: store.len(), workers, timings }
 }
 
 #[cfg(test)]
@@ -529,6 +621,22 @@ mod tests {
         assert_eq!(out.cells, 0);
         assert_eq!(out.tables.len(), 1);
         assert!(out.headline.is_none());
+    }
+
+    #[test]
+    fn scaled_sweep_appends_scale_tables_deterministically() {
+        let a = run_scaled(&[Fig::F12], Scale::Small, 7, 1, Layout::Block, Some(8));
+        let b = run_scaled(&[Fig::F12], Scale::Small, 7, 4, Layout::Block, Some(8));
+        assert_eq!(a.render(), b.render(), "scale axis must stay bit-identical");
+        // fig12 is analytic; the two Scale tables carry the axis
+        assert_eq!(a.tables.len(), 3);
+        assert!(a.tables[1].title.starts_with("Scale"));
+        assert_eq!(a.tables[1].headers, vec!["1n", "2n", "4n", "8n"]);
+        // 6 serial + 6 apps x 2 models x 4 counts, all timed
+        assert_eq!(a.cells, 6 + 48);
+        assert_eq!(a.timings.len(), a.cells, "every computed job is timed");
+        assert!(a.timings.iter().all(|(_, ms)| *ms >= 0.0));
+        assert!(a.timings.iter().any(|(l, _)| l == "arena/gemm/n8/arena-sw/block"));
     }
 
     #[test]

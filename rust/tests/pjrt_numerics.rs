@@ -7,11 +7,68 @@
 use arena::apps::workloads::{
     gen_matrix, gen_sequence, matmul_ref, nbody_accel, nw_ref, NBODY_DT,
 };
-use arena::runtime::{DType, Engine, Tensor};
+use arena::runtime::{reference, DType, Engine, Tensor, TensorSpec};
 use arena::util::Rng;
 
 fn engine() -> Engine {
     Engine::new().expect("run `make artifacts` first")
+}
+
+/// Deterministic inputs for an artifact's spec: f32 in [-1, 1), i32 in
+/// [0, 4) (valid as NW alphabet letters and as in-range ELL column
+/// indices for every builtin shape).
+fn gen_inputs(specs: &[TensorSpec], seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    specs
+        .iter()
+        .map(|s| match s.dtype {
+            DType::F32 => Tensor::f32(
+                (0..s.numel()).map(|_| rng.f32_range(-1.0, 1.0)).collect(),
+                &s.shape,
+            ),
+            DType::I32 => Tensor::i32(
+                (0..s.numel()).map(|_| rng.below(4) as i32).collect(),
+                &s.shape,
+            ),
+        })
+        .collect()
+}
+
+/// Golden-output equivalence: the zero-copy engine (Arc tensors,
+/// scratch arena, cache-blocked gemm) must be *bit-identical* to the
+/// seed clone-based kernels (`runtime::reference`) for every builtin
+/// artifact — the representation changed, the arithmetic did not.
+#[test]
+fn zero_copy_engine_bit_identical_to_seed_reference() {
+    let mut e = engine();
+    let names: Vec<String> =
+        e.manifest().names().map(String::from).collect();
+    assert!(names.len() >= 10);
+    for (i, name) in names.iter().enumerate() {
+        let spec = e.manifest().get(name).unwrap().clone();
+        let inputs = gen_inputs(&spec.inputs, 0xC0FFEE ^ i as u64);
+        let got = e.execute(name, &inputs).unwrap();
+        let want = reference::dispatch(&spec, &inputs).unwrap();
+        assert_eq!(got.len(), want.len(), "{name}: output arity");
+        for (oi, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.shape(), w.shape(), "{name}[{oi}]: shape");
+            assert_eq!(g.dtype(), w.dtype(), "{name}[{oi}]: dtype");
+            match g.dtype() {
+                DType::F32 => {
+                    for (j, (a, b)) in
+                        g.as_f32().iter().zip(w.as_f32()).enumerate()
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{name}[{oi}][{j}]: {a} != {b} (bitwise)"
+                        );
+                    }
+                }
+                DType::I32 => assert_eq!(g.as_i32(), w.as_i32(), "{name}[{oi}]"),
+            }
+        }
+    }
 }
 
 #[test]

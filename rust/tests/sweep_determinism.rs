@@ -3,8 +3,9 @@
 //! cell is an independent deterministic simulation and assembly is
 //! single-threaded over a deterministically keyed store.
 
-use arena::apps::Scale;
+use arena::apps::{self, Scale};
 use arena::cluster::Model;
+use arena::eval;
 use arena::placement::Layout;
 use arena::sweep::{self, CellStore, Fig, Job};
 
@@ -58,6 +59,43 @@ fn layout_sweep_block_matches_default_run() {
     let blocked =
         sweep::run_at(&[Fig::F10], Scale::Small, 5, 2, Layout::Block);
     assert_eq!(plain.render(), blocked.render());
+}
+
+/// DES determinism at the large-scale axis top: two same-seed runs on
+/// a 128-node ring must be byte-identical in every observable counter
+/// (the `arena sweep --all --nodes 128` acceptance gate, at the Small
+/// instances that partition over 128 nodes).
+#[test]
+fn des_determinism_at_128_nodes() {
+    for (app, model) in [
+        ("sssp", Model::SoftwareCpu),
+        ("spmv", Model::SoftwareCpu),
+        ("nbody", Model::Cgra),
+    ] {
+        assert!(apps::supports(app, Scale::Small, 128), "{app}");
+        let run = || {
+            eval::run_arena_at(
+                app,
+                Scale::Small,
+                7,
+                128,
+                model,
+                Layout::Block,
+                None,
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.nodes, 128);
+        assert_eq!(a.makespan_ps, b.makespan_ps, "{app}: makespan drifted");
+        assert_eq!(a.events, b.events, "{app}: event count drifted");
+        assert_eq!(a.node_units, b.node_units, "{app}: balance drifted");
+        assert_eq!(a.ring, b.ring, "{app}: traffic drifted");
+        assert_eq!(
+            a.terminate_laps, b.terminate_laps,
+            "{app}: termination drifted"
+        );
+    }
 }
 
 #[test]
