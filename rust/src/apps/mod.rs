@@ -27,6 +27,7 @@ pub use spmv::SpmvApp;
 pub use sssp::SsspApp;
 
 use crate::api::App;
+use crate::token::TaskId;
 
 /// Problem-size presets.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,27 +39,94 @@ pub enum Scale {
 }
 
 /// Factory used by the launcher, benches and examples. `seed` feeds the
-/// workload generators; task ids are the defaults (single-app runs).
+/// workload generators; task ids are the defaults (single-app runs) —
+/// one workload table shared with [`make_app_based`], so the figure
+/// path and the serve trace-replay path cannot drift apart.
 pub fn make_app(name: &str, scale: Scale, seed: u64) -> Box<dyn App> {
-    match (name, scale) {
-        ("sssp", Scale::Small) => Box::new(SsspApp::new(256, 4, seed)),
-        ("sssp", Scale::Paper) => Box::new(SsspApp::paper(seed)),
-        ("gemm", Scale::Small) => Box::new(GemmApp::new(64, seed)),
-        ("gemm", Scale::Paper) => Box::new(GemmApp::paper(seed)),
-        ("spmv", Scale::Small) => Box::new(SpmvApp::new(512, 16, 2, seed)),
-        ("spmv", Scale::Paper) => Box::new(SpmvApp::paper(seed)),
-        ("dna", Scale::Small) => Box::new(DnaApp::new(128, 32, seed)),
-        ("dna", Scale::Paper) => Box::new(DnaApp::paper(seed)),
-        ("gcn", Scale::Small) => Box::new(GcnApp::new(256, 32, 16, 8, seed)),
-        ("gcn", Scale::Paper) => Box::new(GcnApp::paper(seed)),
-        ("nbody", Scale::Small) => Box::new(NbodyApp::new(256, 2, seed)),
-        ("nbody", Scale::Paper) => Box::new(NbodyApp::paper(seed)),
-        (other, _) => panic!("unknown app '{other}'"),
+    make_app_based(name, scale, seed, default_base_id(name))
+}
+
+/// Each app's constructor-default base task id (`with_base_id` at this
+/// base is the identity, so [`make_app`] can delegate to
+/// [`make_app_based`]). Guarded by `default_bases_are_the_identity`.
+fn default_base_id(name: &str) -> TaskId {
+    match name {
+        "sssp" => 1,
+        "gemm" => 2,
+        "spmv" => 3,
+        "dna" => 4,
+        "gcn" => 5,
+        "nbody" => 10,
+        other => panic!("unknown app '{other}'"),
     }
 }
 
 /// All evaluated app names, in the paper's figure order.
 pub const ALL: [&str; 6] = ["sssp", "gemm", "spmv", "dna", "gcn", "nbody"];
+
+/// How many consecutive 4-bit task ids an app instance registers
+/// (`base_id .. base_id + span`). `arena serve` packs a mixed-app
+/// trace into the 15-id wire space with this; guarded against drift by
+/// `id_span_matches_registration` below.
+pub fn id_span(name: &str) -> Option<TaskId> {
+    match name {
+        "sssp" | "dna" => Some(1),
+        "gemm" | "spmv" => Some(2),
+        "nbody" => Some(3),
+        "gcn" => Some(4),
+        _ => None,
+    }
+}
+
+/// [`make_app`] with an explicit base task id, so several instances —
+/// including several of the same application — can share one ring with
+/// disjoint id namespaces (the `arena serve` trace-replay path).
+pub fn make_app_based(
+    name: &str,
+    scale: Scale,
+    seed: u64,
+    base: TaskId,
+) -> Box<dyn App> {
+    match (name, scale) {
+        ("sssp", Scale::Small) => {
+            Box::new(SsspApp::new(256, 4, seed).with_base_id(base))
+        }
+        ("sssp", Scale::Paper) => {
+            Box::new(SsspApp::paper(seed).with_base_id(base))
+        }
+        ("gemm", Scale::Small) => {
+            Box::new(GemmApp::new(64, seed).with_base_id(base))
+        }
+        ("gemm", Scale::Paper) => {
+            Box::new(GemmApp::paper(seed).with_base_id(base))
+        }
+        ("spmv", Scale::Small) => {
+            Box::new(SpmvApp::new(512, 16, 2, seed).with_base_id(base))
+        }
+        ("spmv", Scale::Paper) => {
+            Box::new(SpmvApp::paper(seed).with_base_id(base))
+        }
+        ("dna", Scale::Small) => {
+            Box::new(DnaApp::new(128, 32, seed).with_base_id(base))
+        }
+        ("dna", Scale::Paper) => {
+            Box::new(DnaApp::paper(seed).with_base_id(base))
+        }
+        ("gcn", Scale::Small) => {
+            Box::new(GcnApp::new(256, 32, 16, 8, seed).with_base_id(base))
+        }
+        ("gcn", Scale::Paper) => {
+            Box::new(GcnApp::paper(seed).with_base_id(base))
+        }
+        ("nbody", Scale::Small) => {
+            Box::new(NbodyApp::new(256, 2, seed).with_base_id(base))
+        }
+        ("nbody", Scale::Paper) => {
+            Box::new(NbodyApp::paper(seed).with_base_id(base))
+        }
+        (other, _) => panic!("unknown app '{other}'"),
+    }
+}
 
 /// Can `app` at `scale` be block-partitioned over `nodes` ring nodes?
 /// Mirrors each app's init-time divisibility asserts (row/block/vertex/
@@ -146,6 +214,48 @@ mod tests {
             }
         }
         assert!(negatives > 0, "expected some unsupported Small cells");
+    }
+
+    /// `default_base_id` must match each constructor's built-in base:
+    /// registering a `make_app` instance yields exactly the ids
+    /// `default .. default + span` (so the delegation to
+    /// `make_app_based` is the identity).
+    #[test]
+    fn default_bases_are_the_identity() {
+        use crate::api::TaskRegistry;
+        for app in ALL {
+            let a = make_app(app, Scale::Small, 7);
+            let mut reg = TaskRegistry::new();
+            a.register(&mut reg);
+            let ids: Vec<_> = reg.iter().map(|e| e.id).collect();
+            let base = default_base_id(app);
+            let span = id_span(app).unwrap();
+            assert_eq!(
+                ids,
+                (base..base + span).collect::<Vec<_>>(),
+                "{app}: default base drifted from the constructor"
+            );
+        }
+    }
+
+    /// `id_span` must agree with what each app actually registers at a
+    /// shifted base: exactly the ids `base .. base + span`, no more.
+    #[test]
+    fn id_span_matches_registration() {
+        use crate::api::TaskRegistry;
+        for app in ALL {
+            let span = id_span(app).expect("every listed app has a span");
+            let base = 3; // arbitrary shifted base inside 1..=15
+            let a = make_app_based(app, Scale::Small, 7, base);
+            let mut reg = TaskRegistry::new();
+            a.register(&mut reg);
+            let ids: Vec<_> = reg.iter().map(|e| e.id).collect();
+            assert_eq!(
+                ids,
+                (base..base + span).collect::<Vec<_>>(),
+                "{app}: registered ids drifted from id_span"
+            );
+        }
     }
 
     #[test]

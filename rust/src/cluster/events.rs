@@ -1,0 +1,38 @@
+//! Discrete events the cluster schedules, and the open-system arrival
+//! schedule that injects applications into a running ring.
+
+use crate::config::Ps;
+use crate::token::TaskToken;
+
+/// Discrete events the cluster schedules. The payloads are small and
+/// `Copy`-cheap by design: a task's spawn list lives in the cluster's
+/// spawn slab and the event carries only the slot, so DES heap churn
+/// never moves (or allocates) token vectors.
+pub(super) enum Ev {
+    /// Token delivered to `node` (off the ring or re-injected locally).
+    Arrive(usize, TaskToken),
+    /// Run one dispatcher step on `node`.
+    Pump(usize),
+    /// Task finished on `node`; its spawned tokens are in spawn-slab
+    /// slot `slot`.
+    Complete(usize, u32),
+    /// Remote data landed at `node` for the token parked in fetch-slab
+    /// slot `slot`.
+    DataReady(usize, u32),
+}
+
+/// One application's injection into the open system: the app's root
+/// tokens enter the ring at node `node` at simulated time `at`.
+///
+/// The closed-system `Cluster::run` is the degenerate schedule — every
+/// app at the configured root node at `t = 0`. `arena serve` replays a
+/// trace of these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Arrival {
+    /// Index into the cluster's app list.
+    pub app: usize,
+    /// Simulated injection time (ps).
+    pub at: Ps,
+    /// Ring node the root tokens enter at.
+    pub node: usize,
+}

@@ -1,0 +1,259 @@
+//! Run reports: aggregate counters plus per-application latency.
+
+use crate::cgra::{CgraStats, CoalesceStats};
+use crate::config::Ps;
+use crate::dispatcher::DispatcherStats;
+use crate::ring::RingStats;
+use crate::token::WIRE_BYTES;
+
+use super::Cluster;
+
+/// Per-application accounting kept during a run (multi-user fairness
+/// plus the open-system latency metrics `arena serve` reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub(super) struct AppStat {
+    pub tasks: u64,
+    pub units: u64,
+    /// Injection time of the app's root tokens (ps).
+    pub arrival: Ps,
+    /// First time any of the app's tasks was dispatched to a compute
+    /// substrate (`None` until it happens).
+    pub first_dispatch: Option<Ps>,
+    /// Completion time of the app's last task.
+    pub last_done: Ps,
+    /// Locality numerator/denominator, booked at the same sites as the
+    /// per-node counters (see `NodeStats::touched_words`).
+    pub touched_words: u64,
+    pub local_hit_words: u64,
+}
+
+/// Per-application outcome of one (possibly open-system) run: when the
+/// app arrived, how long its first token queued, and when its last
+/// task finished. All times are simulated ps.
+#[derive(Clone, Debug)]
+pub struct AppLatency {
+    pub name: String,
+    /// Root-token injection time.
+    pub arrival_ps: Ps,
+    /// First task dispatch (None if the app never executed — a
+    /// malformed trace; every in-tree app executes at least one task).
+    pub first_dispatch_ps: Option<Ps>,
+    /// Last task completion.
+    pub done_ps: Ps,
+    pub tasks: u64,
+    pub units: u64,
+    /// Local-hit fraction of the words this app's tasks referenced.
+    pub locality: f64,
+}
+
+impl AppLatency {
+    /// Arrival → last-task-completion (the serve latency metric).
+    pub fn latency_ps(&self) -> Ps {
+        self.done_ps.saturating_sub(self.arrival_ps)
+    }
+
+    /// Arrival → first dispatch: how long the app's work sat queued
+    /// (ring circulation + dispatcher queues) before any of it ran.
+    pub fn queue_ps(&self) -> Ps {
+        self.first_dispatch_ps
+            .unwrap_or(self.arrival_ps)
+            .saturating_sub(self.arrival_ps)
+    }
+}
+
+/// Aggregated outcome of one cluster run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub app: String,
+    pub model: &'static str,
+    pub nodes: usize,
+    /// Data-placement layout the run used (`block` | `cyclic` | …).
+    pub layout: &'static str,
+    /// Dispatch policy label (`greedy` | `locality(θ)` | `convey`).
+    pub policy: String,
+    /// Wall-clock of the simulated run (first injection -> quiescence).
+    pub makespan_ps: Ps,
+    pub ring: RingStats,
+    pub dispatcher: DispatcherStats,
+    pub cgra: CgraStats,
+    pub coalesce: CoalesceStats,
+    /// Work units executed per node (load balance).
+    pub node_units: Vec<u64>,
+    /// Per-application (name, tasks, units) — multi-user fairness.
+    pub per_app: Vec<(String, u64, u64)>,
+    /// Per-application arrival/dispatch/completion times and locality
+    /// (the open-system latency record; one entry per app, in app
+    /// order).
+    pub app_latency: Vec<AppLatency>,
+    pub tasks_executed: u64,
+    pub remote_fetches: u64,
+    pub remote_bytes: u64,
+    /// Scratchpad traffic across all nodes (power activity factor).
+    pub local_bytes: u64,
+    /// Per-node local-hit fraction: of the words each node's tasks
+    /// referenced — payload-free task ranges (local by construction,
+    /// once each) plus acquired REMOTE ranges segment-by-segment —
+    /// how many were already homed there. Task ranges of
+    /// payload-carrying tokens are routing metadata and excluded, so
+    /// the fraction is comparable across layouts. Nodes that touched
+    /// nothing report 1.0.
+    pub locality: Vec<f64>,
+    pub events: u64,
+    pub terminate_laps: u64,
+}
+
+impl RunReport {
+    pub fn makespan_ms(&self) -> f64 {
+        self.makespan_ps as f64 / 1e9
+    }
+
+    /// Task movement on the wire, in byte-hops (Fig. 10 "task" bars).
+    pub fn task_movement_bytes(&self) -> u64 {
+        self.ring.token_hops * WIRE_BYTES
+    }
+
+    /// Bulk data movement in byte-hops (Fig. 10 "data" bars). Excludes
+    /// the 21-byte DTN fetch requests, which are control traffic — see
+    /// [`Self::control_movement_bytes`].
+    pub fn data_movement_bytes(&self) -> u64 {
+        self.ring.data_byte_hops
+    }
+
+    /// DTN control-message traffic in byte-hops (fetch round-trip
+    /// requests). Previously mis-booked into the data counters.
+    pub fn control_movement_bytes(&self) -> u64 {
+        self.ring.ctrl_byte_hops
+    }
+
+    pub fn total_movement_bytes(&self) -> u64 {
+        self.task_movement_bytes()
+            + self.data_movement_bytes()
+            + self.control_movement_bytes()
+    }
+
+    /// Mean local-hit fraction across the nodes (the skew-sweep
+    /// locality metric).
+    pub fn mean_locality(&self) -> f64 {
+        if self.locality.is_empty() {
+            return 1.0;
+        }
+        self.locality.iter().sum::<f64>() / self.locality.len() as f64
+    }
+
+    /// Coefficient of variation of per-node work (0 = perfect balance).
+    pub fn imbalance(&self) -> f64 {
+        let n = self.node_units.len() as f64;
+        let mean = self.node_units.iter().sum::<u64>() as f64 / n;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = self
+            .node_units
+            .iter()
+            .map(|&u| (u as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        var.sqrt() / mean
+    }
+}
+
+impl Cluster {
+    pub(super) fn report(&mut self, makespan: Ps, events: u64) -> RunReport {
+        let mut dispatcher = DispatcherStats::default();
+        let mut cgra = CgraStats::default();
+        let mut coalesce = CoalesceStats::default();
+        let mut node_units = Vec::with_capacity(self.nodes.len());
+        let mut locality = Vec::with_capacity(self.nodes.len());
+        let mut tasks = 0;
+        let mut fetches = 0;
+        let mut fetched = 0;
+        let mut local_bytes = 0;
+        for nd in &self.nodes {
+            let d = &nd.disp.stats;
+            dispatcher.filtered += d.filtered;
+            dispatcher.conveyed += d.conveyed;
+            dispatcher.offloaded += d.offloaded;
+            dispatcher.split_superset += d.split_superset;
+            dispatcher.split_partial += d.split_partial;
+            dispatcher.filter_cycles += d.filter_cycles;
+            dispatcher.stalls += d.stalls;
+            if let Some(c) = nd.cgra() {
+                let s = &c.stats;
+                cgra.launches += s.launches;
+                cgra.reconfigs += s.reconfigs;
+                cgra.reconfig_cycles += s.reconfig_cycles;
+                cgra.compute_cycles += s.compute_cycles;
+                cgra.group_busy_cycles += s.group_busy_cycles;
+                for i in 0..3 {
+                    cgra.alloc_histogram[i] += s.alloc_histogram[i];
+                }
+            }
+            let cs = &nd.coalescer.stats;
+            coalesce.spawned += cs.spawned;
+            coalesce.coalesced += cs.coalesced;
+            coalesce.spilled += cs.spilled;
+            coalesce.emitted += cs.emitted;
+            coalesce.spill_peak = coalesce.spill_peak.max(cs.spill_peak);
+            node_units.push(nd.stats.units);
+            locality.push(if nd.stats.touched_words == 0 {
+                1.0
+            } else {
+                nd.stats.local_hit_words as f64 / nd.stats.touched_words as f64
+            });
+            tasks += nd.stats.tasks;
+            fetches += nd.stats.fetches;
+            fetched += nd.stats.fetched_bytes;
+            local_bytes += nd.stats.local_bytes;
+        }
+        let app_latency = self
+            .apps
+            .iter()
+            .zip(&self.app_stats)
+            .map(|(a, s)| AppLatency {
+                name: a.name().to_string(),
+                arrival_ps: s.arrival,
+                first_dispatch_ps: s.first_dispatch,
+                done_ps: s.last_done,
+                tasks: s.tasks,
+                units: s.units,
+                locality: if s.touched_words == 0 {
+                    1.0
+                } else {
+                    s.local_hit_words as f64 / s.touched_words as f64
+                },
+            })
+            .collect();
+        RunReport {
+            app: self
+                .apps
+                .iter()
+                .map(|a| a.name())
+                .collect::<Vec<_>>()
+                .join("+"),
+            model: self.model.label(),
+            nodes: self.nodes.len(),
+            layout: self.cfg.layout.label(),
+            policy: self.policy.label(),
+            makespan_ps: makespan,
+            ring: self.ring.stats.clone(),
+            dispatcher,
+            cgra,
+            coalesce,
+            node_units,
+            per_app: self
+                .apps
+                .iter()
+                .zip(&self.app_stats)
+                .map(|(a, s)| (a.name().to_string(), s.tasks, s.units))
+                .collect(),
+            app_latency,
+            tasks_executed: tasks,
+            remote_fetches: fetches,
+            remote_bytes: fetched,
+            local_bytes,
+            locality,
+            events,
+            terminate_laps: self.terminate_laps,
+        }
+    }
+}

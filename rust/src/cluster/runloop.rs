@@ -1,0 +1,466 @@
+//! The Fig. 5 runtime loop on the DES: arrivals, dispatcher pumping,
+//! launch, remote acquire and spawn recycling.
+
+use crate::api::{ExecCtx, WORD_BYTES};
+use crate::config::Ps;
+use crate::node::{Compute, SW_TOKEN_OVERHEAD_CYCLES};
+use crate::runtime::Engine;
+use crate::sim::Engine as Des;
+use crate::token::{TaskToken, WIRE_BYTES};
+
+use super::events::{Arrival, Ev};
+use super::report::RunReport;
+use super::Cluster;
+
+impl Cluster {
+    /// Run every app to quiescence as a closed system: all root tokens
+    /// injected at the configured root node (`inject_node`, default 0)
+    /// at `t = 0`. Returns one report with per-app rows.
+    pub fn run(&mut self, engine: Option<&mut Engine>) -> RunReport {
+        let node = self.cfg.inject_node;
+        let arrivals: Vec<Arrival> = (0..self.apps.len())
+            .map(|app| Arrival { app, at: 0, node })
+            .collect();
+        self.run_with_arrivals(&arrivals, engine)
+    }
+
+    /// Run as an open system: each app's root tokens enter the ring at
+    /// its [`Arrival`]'s time and node (the `arena serve` trace-replay
+    /// path). Every app must appear in exactly one arrival; the
+    /// TERMINATE probe trails the last injection so the ring cannot
+    /// quiesce while work is still scheduled to arrive.
+    pub fn run_with_arrivals(
+        &mut self,
+        arrivals: &[Arrival],
+        mut engine: Option<&mut Engine>,
+    ) -> RunReport {
+        let n_nodes = self.nodes.len();
+        let mut seen = vec![false; self.apps.len()];
+        for a in arrivals {
+            assert!(
+                a.app < self.apps.len(),
+                "arrival names app index {} but only {} app(s) are loaded",
+                a.app,
+                self.apps.len()
+            );
+            assert!(
+                a.node < n_nodes,
+                "arrival for app '{}' names node {} but the ring has {} \
+                 node(s)",
+                self.apps[a.app].name(),
+                a.node,
+                n_nodes
+            );
+            assert!(
+                !seen[a.app],
+                "app '{}' appears in two arrivals — each loaded app is \
+                 injected exactly once",
+                self.apps[a.app].name()
+            );
+            seen[a.app] = true;
+        }
+        assert!(
+            seen.iter().all(|&s| s),
+            "every loaded app needs an arrival ({} app(s), {} arrival(s))",
+            self.apps.len(),
+            arrivals.len()
+        );
+
+        // slab sized for the common peak (a few events per node); grows
+        // transparently for token floods
+        let mut des: Des<Ev> = Des::with_capacity(64 * n_nodes);
+        let mut pump_pending = vec![false; n_nodes];
+
+        // Leader start-up: inject each app's root tokens at its arrival
+        // time/node, then the TERMINATE probe behind the last of them
+        // (FIFO ties keep the order, so the probe cannot overtake a
+        // same-instant root token at its injection node).
+        let mut last = (0, self.cfg.inject_node);
+        for a in arrivals {
+            self.app_stats[a.app].arrival = a.at;
+            for t in self.apps[a.app].root_tokens() {
+                des.schedule_at(a.at, Ev::Arrive(a.node, t));
+            }
+            if a.at >= last.0 {
+                last = (a.at, a.node);
+            }
+        }
+        self.probe_origin = last.1;
+        des.schedule_at(last.0, Ev::Arrive(last.1, TaskToken::terminate()));
+
+        let max_events = self.max_events;
+        let mut makespan: Ps = 0;
+        let mut guard = 0u64;
+        while let Some((now, ev)) = des.next() {
+            guard += 1;
+            if guard > max_events {
+                panic!(
+                    "cluster exceeded {max_events} events at t={now}ps — \
+                     livelock? pending={}",
+                    des.pending()
+                );
+            }
+            makespan = makespan.max(now);
+            match ev {
+                Ev::Arrive(n, tok) => {
+                    self.on_arrive(&mut des, now, n, tok, &mut pump_pending)
+                }
+                Ev::Pump(n) => {
+                    pump_pending[n] = false;
+                    self.on_pump(&mut des, now, n, &mut engine, &mut pump_pending);
+                }
+                Ev::Complete(n, slot) => {
+                    self.nodes[n].running -= 1;
+                    let mut spawns =
+                        std::mem::take(&mut self.spawn_slab[slot as usize]);
+                    self.spawn_free.push(slot);
+                    for s in spawns.drain(..) {
+                        self.nodes[n].coalescer.push(s);
+                    }
+                    self.vec_pool.push(spawns);
+                    self.schedule_pump(&mut des, now, n, &mut pump_pending);
+                }
+                Ev::DataReady(n, slot) => {
+                    // data now local: execute directly (the REMOTE
+                    // fields stay on the token — apps use them to
+                    // identify the fetched panel).
+                    let t = self.nodes[n].fetching.take(slot);
+                    self.exec_or_requeue(&mut des, now, n, t, &mut engine);
+                    self.schedule_pump(&mut des, now, n, &mut pump_pending);
+                }
+            }
+        }
+
+        // Quiescence sanity: every node exited via the protocol.
+        debug_assert!(
+            self.nodes.iter().all(|nd| nd.done),
+            "DES drained but nodes not terminated"
+        );
+
+        self.report(makespan, des.processed())
+    }
+
+    fn schedule_pump(
+        &mut self,
+        des: &mut Des<Ev>,
+        _now: Ps,
+        n: usize,
+        pending: &mut [bool],
+    ) {
+        if !pending[n] && !self.nodes[n].done {
+            pending[n] = true;
+            des.schedule_in(self.disp_cycle_ps(), Ev::Pump(n));
+        }
+    }
+
+    fn on_arrive(
+        &mut self,
+        des: &mut Des<Ev>,
+        _now: Ps,
+        n: usize,
+        tok: TaskToken,
+        pending: &mut [bool],
+    ) {
+        if self.nodes[n].done {
+            // protocol guarantees only TERMINATE can still arrive here;
+            // it is swallowed and the ring drains.
+            debug_assert!(tok.is_terminate(), "live token at a dead node");
+            return;
+        }
+        if let Err(t) = self.nodes[n].disp.recv.push(tok) {
+            // Recv queue full: the token parks in upstream link buffers
+            // (credit backpressure) and drains as recv frees — no retry
+            // storm, just occupancy.
+            self.nodes[n].stats.recv_stalls += 1;
+            self.nodes[n].inbound.push_back(t);
+        }
+        self.schedule_pump(des, _now, n, pending);
+    }
+
+    /// One dispatcher step (Fig. 5 loop body).
+    fn on_pump(
+        &mut self,
+        des: &mut Des<Ev>,
+        now: Ps,
+        n: usize,
+        engine: &mut Option<&mut Engine>,
+        pending: &mut [bool],
+    ) {
+        if self.nodes[n].done {
+            return;
+        }
+        let mut progress = false;
+
+        // drain upstream link buffers into recv as space frees
+        // (ring traffic has priority over locally spawned tokens).
+        while !self.nodes[n].disp.recv.is_full() {
+            match self.nodes[n].inbound.pop_front() {
+                Some(t) => {
+                    self.nodes[n].disp.recv.push(t).expect("checked space");
+                    progress = true;
+                }
+                None => break,
+            }
+        }
+        // (6) re-inject coalesced spawns into the local recv queue
+        // (Fig. 5 line 36) while there is space.
+        while !self.nodes[n].disp.recv.is_full() {
+            match self.nodes[n].coalescer.pop() {
+                Some(t) => {
+                    self.nodes[n].disp.recv.push(t).expect("checked space");
+                    progress = true;
+                }
+                None => break,
+            }
+        }
+
+        // (2) classify one token from the recv queue — the pluggable
+        // scheduling decision (sched::DispatchPolicy), distributed by
+        // the dispatcher against its queue capacities.
+        if let Some(&tok) = self.nodes[n].disp.recv.peek() {
+            if tok.is_terminate() {
+                self.nodes[n].disp.recv.pop();
+                progress = true;
+                if self.nodes[n].quiescent(now) {
+                    self.finish_terminate(des, now, n);
+                } else {
+                    // busy: park the probe until local quiescence and
+                    // restart its clean-pass count.
+                    self.nodes[n].parked_terminate = true;
+                    self.nodes[n].touch();
+                }
+            } else {
+                let local = self.filter_range(n, &tok);
+                let ctx = crate::sched::SchedCtx { nodes: self.nodes.len() };
+                let out = self.policy.classify(&tok, local, &ctx);
+                if self.nodes[n].disp.process_outcome(tok, out).is_ok() {
+                    self.nodes[n].disp.recv.pop();
+                    self.nodes[n].touch();
+                    progress = true;
+                }
+                // on Err the wait/send queues are full — the token
+                // stays in recv until a launch/forward frees space.
+            }
+        }
+
+        // (3)-(5) execution path: consider the head of the wait queue.
+        progress |= self.try_launch(des, now, n, engine);
+
+        // forward everything queued for the next hop; the link model
+        // serializes back-to-back sends. TERMINATE never transits the
+        // send queue (the runtime handles it out-of-band in
+        // finish_terminate), so lap accounting lives there alone —
+        // this drain used to double-count probes at a second site.
+        while let Some(mut t) = self.nodes[n].disp.send.pop() {
+            debug_assert!(!t.is_terminate(), "TERMINATE in the send queue");
+            t.record_hop();
+            let at = self.ring.send_token(&self.cfg, now, n);
+            let next = self.ring.next_hop(n);
+            des.schedule_at(at, Ev::Arrive(next, t));
+            progress = true;
+        }
+
+        // release a parked TERMINATE the moment the node drains.
+        if self.nodes[n].parked_terminate && self.nodes[n].quiescent(now) {
+            self.finish_terminate(des, now, n);
+            progress = true;
+        }
+
+        // Re-arm policy: pump again next cycle only while actually
+        // making progress. A blocked node is always woken by the event
+        // that unblocks it — Complete (compute slot frees), DataReady
+        // (fetch lands) and Arrive (new token) all schedule a pump —
+        // so no polling timers are needed.
+        let work_queued = !self.nodes[n].disp.recv.is_empty()
+            || !self.nodes[n].inbound.is_empty()
+            || !self.nodes[n].coalescer.is_empty()
+            || !self.nodes[n].disp.send.is_empty();
+        if progress && work_queued {
+            self.schedule_pump(des, now, n, pending);
+        }
+    }
+
+    /// Steps (3)-(5): resource check, remote acquire, launch.
+    /// Returns true if any token left the wait queue.
+    fn try_launch(
+        &mut self,
+        des: &mut Des<Ev>,
+        now: Ps,
+        n: usize,
+        engine: &mut Option<&mut Engine>,
+    ) -> bool {
+        let mut progress = false;
+        loop {
+            let Some(&tok) = self.nodes[n].disp.wait.peek() else {
+                return progress;
+            };
+            // (4) unavoidable remote data: acquire through the DTN and
+            // park the token until DataReady.
+            if tok.needs_remote_data() {
+                self.nodes[n].disp.wait.pop();
+                let ready_at = self.fetch_remote(now, n, &tok);
+                let slot = self.nodes[n].fetching.park(tok);
+                self.nodes[n].stats.fetches += 1;
+                self.nodes[n].stats.fetched_bytes +=
+                    tok.remote.len() as u64 * WORD_BYTES;
+                des.schedule_at(ready_at, Ev::DataReady(n, slot));
+                progress = true;
+                continue; // head-of-line cleared; consider the next
+            }
+            // (3) resource availability.
+            if !self.nodes[n].compute.ready(now) {
+                return progress;
+            }
+            self.nodes[n].disp.wait.pop();
+            self.exec_or_requeue(des, now, n, tok, engine);
+            progress = true;
+        }
+    }
+
+    /// Execute `tok` on node `n` right now (data is local).
+    fn exec_or_requeue(
+        &mut self,
+        des: &mut Des<Ev>,
+        now: Ps,
+        n: usize,
+        tok: TaskToken,
+        engine: &mut Option<&mut Engine>,
+    ) {
+        let app_idx = self.kernel(tok.task_id).app_idx;
+
+        // functional execution: mutate app state, collect spawns into
+        // recycled buffers (no allocation once the pool is warm).
+        let spawn_buf = self.vec_pool.pop().unwrap_or_default();
+        let fwd_buf = self.vec_pool.pop().unwrap_or_default();
+        let mut ctx =
+            ExecCtx::with_buffers(n as u8, engine.as_deref_mut(), spawn_buf, fwd_buf);
+        let exec = self.apps[app_idx].execute(n, &tok, &mut ctx);
+        let (spawns, mut forwards) = ctx.into_buffers();
+        // forwarding tokens (spawn FU mid-execution) leave immediately
+        for f in forwards.drain(..) {
+            self.nodes[n].coalescer.push(f);
+        }
+        self.vec_pool.push(forwards);
+        // the spawn list parks in the slab until the Complete event
+        let slot = match self.spawn_free.pop() {
+            Some(s) => {
+                debug_assert!(self.spawn_slab[s as usize].is_empty());
+                self.spawn_slab[s as usize] = spawns;
+                s
+            }
+            None => {
+                self.spawn_slab.push(spawns);
+                (self.spawn_slab.len() - 1) as u32
+            }
+        };
+
+        // timed execution on the substrate (split borrows: kernels and
+        // dirs are read-only while the node's compute state mutates).
+        let Cluster { kernels, nodes, dirs, cfg, .. } = self;
+        let info = kernels[tok.task_id as usize]
+            .as_ref()
+            .expect("unregistered task id");
+        let done = match &mut nodes[n].compute {
+            Compute::Cpu { busy_until } => {
+                let cycles =
+                    info.spec.cpu_cycles(exec.units) + SW_TOKEN_OVERHEAD_CYCLES;
+                let start = now.max(*busy_until);
+                let done = start + cycles * cfg.cpu_cycle_ps();
+                *busy_until = done;
+                done
+            }
+            Compute::Cgra(cgra) => {
+                let local_len = dirs[app_idx].local_words(n);
+                match cgra.launch(now, &tok, local_len, exec.units, &info.mappings)
+                {
+                    Some(l) => l.done,
+                    None => {
+                        // raced with another launch: retry at the next
+                        // instant a group frees (launch backpressure).
+                        let at = cgra.next_free_at();
+                        let l = cgra
+                            .launch(at, &tok, local_len, exec.units, &info.mappings)
+                            .expect("a group is free at next_free_at");
+                        l.done
+                    }
+                }
+            }
+        };
+        self.nodes[n].running += 1;
+        self.nodes[n].stats.tasks += 1;
+        self.nodes[n].stats.units += exec.units;
+        self.nodes[n].stats.local_bytes += exec.local_bytes;
+        // Locality booking: task ranges are local by the filter's
+        // construction, counted once here. Tokens carrying a REMOTE
+        // payload are excluded — their task range is routing metadata
+        // (a streaming anchor, or rows re-read once per acquired
+        // segment), so booking it would skew the metric by layout;
+        // their data reads were booked segment-by-segment at fetch
+        // time instead.
+        if !tok.needs_remote_data() {
+            self.nodes[n].stats.touched_words += tok.task.len() as u64;
+            self.nodes[n].stats.local_hit_words += tok.task.len() as u64;
+            self.app_stats[app_idx].touched_words += tok.task.len() as u64;
+            self.app_stats[app_idx].local_hit_words += tok.task.len() as u64;
+        }
+        let stat = &mut self.app_stats[app_idx];
+        stat.tasks += 1;
+        stat.units += exec.units;
+        // open-system latency booking: dispatch instant of the app's
+        // first task, completion of its latest
+        stat.first_dispatch = Some(stat.first_dispatch.unwrap_or(now).min(now));
+        stat.last_done = stat.last_done.max(done);
+        self.nodes[n].touch();
+        des.schedule_at(done, Ev::Complete(n, slot));
+    }
+
+    /// `ARENA_data_acquire`: pull `tok.remote` over the data-transfer
+    /// network — from the range's home node(s) per the directory, or
+    /// from the token's parent for streaming kernels. Returns the
+    /// completion time and books the locality counters (per node and
+    /// per app).
+    fn fetch_remote(&mut self, now: Ps, n: usize, tok: &TaskToken) -> Ps {
+        let info = self.kernel(tok.task_id);
+        let app_idx = info.app_idx;
+        if info.fetch_from_parent {
+            // the spawning node's scratchpad holds a live copy
+            let src = tok.from_node as usize;
+            let words = tok.remote.len() as u64;
+            self.nodes[n].stats.touched_words += words;
+            self.app_stats[app_idx].touched_words += words;
+            if src == n {
+                self.nodes[n].stats.local_hit_words += words;
+                self.app_stats[app_idx].local_hit_words += words;
+                return now;
+            }
+            // request header is control traffic, the payload is data
+            let req_at = self.ring.send_ctrl(&self.cfg, now, n, src, WIRE_BYTES);
+            return self.ring.send_data(&self.cfg, req_at, src, n, words * WORD_BYTES);
+        }
+        // walk the remote range extent by extent (owner lookup is the
+        // directory's O(1)/O(log n) hot path, not a linear scan)
+        let Cluster { dirs, ring, cfg, nodes, app_stats, .. } = self;
+        let dir = &dirs[app_idx];
+        let mut t_done = now;
+        let mut at = tok.remote.start;
+        while at < tok.remote.end {
+            let (owner, ext) = dir.owner_extent(at);
+            let end = tok.remote.end.min(ext.end);
+            let words = (end - at) as u64;
+            nodes[n].stats.touched_words += words;
+            app_stats[app_idx].touched_words += words;
+            if owner != n {
+                // request message out (control), payload back (data).
+                let req_at = ring.send_ctrl(cfg, now, n, owner, WIRE_BYTES);
+                let got =
+                    ring.send_data(cfg, req_at, owner, n, words * WORD_BYTES);
+                t_done = t_done.max(got);
+            } else {
+                nodes[n].stats.local_hit_words += words;
+                app_stats[app_idx].local_hit_words += words;
+            }
+            at = end;
+        }
+        t_done
+    }
+}

@@ -1,0 +1,45 @@
+//! The two-pass TERMINATE protocol (paper Fig. 5): a probe circulates
+//! behind the last injected root tokens; a node exits on its second
+//! consecutive clean pass; the last exiting node swallows the probe.
+
+use crate::config::Ps;
+use crate::sim::Engine as Des;
+use crate::token::TaskToken;
+
+use super::events::Ev;
+use super::Cluster;
+
+impl Cluster {
+    /// TERMINATE handled at a quiescent node: count the pass, forward
+    /// the probe, exit on the second consecutive clean pass.
+    ///
+    /// `terminate_laps` counts *completed circulations*: the probe
+    /// crossing back to the node it was injected at (`probe_origin` —
+    /// node 0 for the default closed run, the last arrival's node for
+    /// open-system traces; counting `next == 0` regardless of origin
+    /// would book a partial first lap as complete under `--inject-node
+    /// N`). The increment sits inside the forwarding branch — when the
+    /// fully-exited ring swallows the probe it never completes its
+    /// final circulation and no lap is counted. (It used to count on
+    /// `next == 0` even for the swallowed probe, and a second site in
+    /// the send-queue drain could count the same probe again: laps were
+    /// over-reported by one or more.)
+    pub(super) fn finish_terminate(
+        &mut self,
+        des: &mut Des<Ev>,
+        now: Ps,
+        n: usize,
+    ) {
+        let exits = self.nodes[n].terminate_step();
+        if exits && self.nodes.iter().all(|nd| nd.done) {
+            // the last node swallows the probe so the DES can drain
+            return;
+        }
+        let at = self.ring.send_token(&self.cfg, now, n);
+        let next = self.ring.next_hop(n);
+        if next == self.probe_origin {
+            self.terminate_laps += 1;
+        }
+        des.schedule_at(at, Ev::Arrive(next, TaskToken::terminate()));
+    }
+}

@@ -10,6 +10,7 @@ use std::fmt;
 use std::path::Path;
 
 use crate::placement::Layout;
+use crate::sched::{DispatchPolicy, PolicyKind};
 
 /// Simulation time is integer picoseconds (lcm-friendly for the 800 MHz
 /// CGRA clock, the 2.6 GHz CPU clock and the 1 µs network hop).
@@ -54,6 +55,16 @@ pub struct ArenaConfig {
     /// Data-placement layout for every app's address space (the skew
     /// axis; `block` reproduces the pre-placement figures exactly).
     pub layout: Layout,
+    /// Dispatch policy the node schedulers run (`greedy` reproduces
+    /// the paper's Case I–IV filter exactly; see [`crate::sched`]).
+    pub policy: PolicyKind,
+    /// Locality threshold for `policy = locality`, in per-mille
+    /// (500 = fire only where ≥ 50% of the token's range is local).
+    /// Stored integer so configs stay `Eq` and sweep keys hashable.
+    pub theta_pm: u32,
+    /// Ring node the leader injects root tokens at (`arena run
+    /// --inject-node N`; open-system traces override it per arrival).
+    pub inject_node: usize,
     /// Workload RNG seed (also feeds the `shuffle` placement).
     pub seed: u64,
 }
@@ -111,6 +122,9 @@ impl Default for ArenaConfig {
             group_alloc: GroupAlloc::Dynamic,
             coalescing: true,
             layout: Layout::Block,
+            policy: PolicyKind::Greedy,
+            theta_pm: 500,
+            inject_node: 0,
             seed: 0xA2EA,
         }
     }
@@ -153,8 +167,42 @@ impl ArenaConfig {
         self
     }
 
-    /// Apply `key = value` overrides (config file lines or `--set k=v`).
+    pub fn with_policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_theta_pm(mut self, theta_pm: u32) -> Self {
+        self.theta_pm = theta_pm;
+        self
+    }
+
+    /// Instantiate the configured dispatch policy.
+    pub fn dispatch_policy(&self) -> Box<dyn DispatchPolicy> {
+        self.policy.build(self.theta_pm)
+    }
+
+    /// Display label of the configured policy (reports / tables).
+    pub fn policy_label(&self) -> String {
+        self.policy.label(self.theta_pm)
+    }
+
+    /// Apply one `key = value` override, then re-validate (the CLI
+    /// `--set` path: each override must leave a coherent config).
     pub fn set(&mut self, key: &str, val: &str) -> Result<(), ConfigError> {
+        let mut next = self.clone();
+        next.assign(key, val)?;
+        next.validate()?;
+        *self = next;
+        Ok(())
+    }
+
+    /// Parse + assign one key without cross-field validation. `load`
+    /// uses this so a config file is order-independent (the flat dump
+    /// is alphabetical, which would otherwise check `inject_node`
+    /// against the not-yet-loaded `nodes`); validation runs once over
+    /// the fully loaded config.
+    fn assign(&mut self, key: &str, val: &str) -> Result<(), ConfigError> {
         macro_rules! bad {
             () => {
                 |_| ConfigError::BadValue(key.into(), val.into())
@@ -165,7 +213,7 @@ impl ArenaConfig {
                 $v.parse().map_err(bad!())?
             };
         }
-        let mut next = self.clone();
+        let next = self;
         match key {
             "nodes" => next.nodes = parse!(val),
             "nic_gbps" => next.nic_gbps = parse!(val),
@@ -199,11 +247,23 @@ impl ArenaConfig {
                     ConfigError::BadValue(key.into(), val.into())
                 })?
             }
+            "policy" => {
+                next.policy = PolicyKind::parse(val).ok_or_else(|| {
+                    ConfigError::BadValue(key.into(), val.into())
+                })?
+            }
+            "theta" => {
+                // fractional on the wire (0.5), per-mille in the struct
+                let theta: f64 = parse!(val);
+                if !(0.0..=1.0).contains(&theta) {
+                    return Err(ConfigError::BadValue(key.into(), val.into()));
+                }
+                next.theta_pm = (theta * 1000.0).round() as u32;
+            }
+            "inject_node" => next.inject_node = parse!(val),
             "seed" => next.seed = parse_seed(val).map_err(bad!())?,
             _ => return Err(ConfigError::UnknownKey(key.into())),
         }
-        next.validate()?;
-        *self = next;
         Ok(())
     }
 
@@ -221,6 +281,22 @@ impl ArenaConfig {
         if self.dispatcher_queue_depth == 0 {
             return Err(ConfigError::Invalid("queue depth must be >= 1".into()));
         }
+        if self.inject_node >= self.nodes {
+            return Err(ConfigError::Invalid(format!(
+                "inject_node {} out of range: the ring has {} node(s) \
+                 (valid: 0..={})",
+                self.inject_node,
+                self.nodes,
+                self.nodes - 1
+            )));
+        }
+        if self.theta_pm > 1000 {
+            return Err(ConfigError::Invalid(format!(
+                "theta {} out of range: the locality threshold is a \
+                 fraction in [0, 1]",
+                self.theta_pm as f64 / 1000.0
+            )));
+        }
         Ok(())
     }
 
@@ -237,8 +313,9 @@ impl ArenaConfig {
             let (k, v) = line.split_once('=').ok_or_else(|| {
                 ConfigError::Invalid(format!("line {}: missing '='", lineno + 1))
             })?;
-            cfg.set(k.trim(), v.trim())?;
+            cfg.assign(k.trim(), v.trim())?;
         }
+        cfg.validate()?;
         Ok(cfg)
     }
 
@@ -268,6 +345,9 @@ impl ArenaConfig {
         m.insert("group_alloc", self.group_alloc.name().to_string());
         m.insert("coalescing", self.coalescing.to_string());
         m.insert("layout", self.layout.label().to_string());
+        m.insert("policy", self.policy.name().to_string());
+        m.insert("theta", (self.theta_pm as f64 / 1000.0).to_string());
+        m.insert("inject_node", self.inject_node.to_string());
         m.insert("seed", self.seed.to_string());
         m.iter()
             .map(|(k, v)| format!("{k} = {v}\n"))
@@ -359,6 +439,33 @@ mod tests {
     }
 
     #[test]
+    fn policy_theta_inject_knobs() {
+        let mut c = ArenaConfig::default();
+        assert_eq!(c.policy, PolicyKind::Greedy);
+        assert_eq!(c.theta_pm, 500);
+        assert_eq!(c.inject_node, 0);
+        c.set("policy", "locality").unwrap();
+        assert_eq!(c.policy, PolicyKind::LocalityThreshold);
+        c.set("theta", "0.75").unwrap();
+        assert_eq!(c.theta_pm, 750);
+        assert_eq!(c.policy_label(), "locality(0.750)");
+        // knobs are order-independent: theta set first survives policy
+        let mut d = ArenaConfig::default();
+        d.set("theta", "0.25").unwrap();
+        d.set("policy", "locality").unwrap();
+        assert_eq!(d.policy_label(), "locality(0.250)");
+        assert!(c.set("policy", "roundrobin").is_err());
+        assert!(c.set("theta", "1.5").is_err());
+        assert!(c.set("theta", "-0.1").is_err());
+        // inject_node is validated against the ring size
+        c.set("inject_node", "3").unwrap();
+        let err = c.set("inject_node", "4").unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // shrinking the ring under the inject node is rejected too
+        assert!(c.set("nodes", "2").is_err());
+    }
+
+    #[test]
     fn dump_load_roundtrip() {
         let mut c = ArenaConfig::default();
         c.set("nodes", "8").unwrap();
@@ -369,5 +476,24 @@ mod tests {
         std::fs::write(&path, c.dump()).unwrap();
         let loaded = ArenaConfig::load(&path).unwrap();
         assert_eq!(loaded, c);
+    }
+
+    /// The flat dump is alphabetical, so `inject_node` precedes
+    /// `nodes` in the file; loading must not check it against the
+    /// default ring size mid-parse (validation runs once at the end).
+    #[test]
+    fn load_is_key_order_independent() {
+        let mut c = ArenaConfig::default();
+        c.set("nodes", "16").unwrap();
+        c.set("inject_node", "10").unwrap();
+        let dir = std::env::temp_dir().join("arena_cfg_order_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.txt");
+        std::fs::write(&path, c.dump()).unwrap();
+        let loaded = ArenaConfig::load(&path).unwrap();
+        assert_eq!(loaded, c);
+        // a genuinely invalid file still fails, just at the end
+        std::fs::write(&path, "inject_node = 10\n").unwrap();
+        assert!(ArenaConfig::load(&path).is_err());
     }
 }

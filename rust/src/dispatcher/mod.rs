@@ -1,110 +1,29 @@
-//! Task dispatcher: Filter Logic + Recv/Wait/Send queues (paper §4.2).
+//! Task dispatcher: Recv/Wait/Send queues + outcome distribution
+//! (paper §4.2).
 //!
-//! The filter implements the four §3.2 cases against the node's local
-//! data range: (I) irrelevant -> convey, (II) subset -> offload locally,
-//! (III) superset -> split in three, (IV) partial overlap -> split in
-//! two. Splitting preserves TASKid / PARAM / REMOTE / FROMnode — only
-//! the data range is cut, exactly what the RTL filter does.
+//! The classify/split *decision* lives in the scheduling layer
+//! ([`crate::sched`]): the runtime asks its [`DispatchPolicy`] for a
+//! [`FilterOutcome`] and this module distributes the pieces against the
+//! Table-2 queue capacities, all-or-nothing (hardware backpressure).
+//!
+//! [`filter`] below is the **seed implementation** of the paper's four
+//! §3.2 cases, kept verbatim as the golden oracle for the extraction:
+//! the `greedy_bitwise_equals_seed_filter` property test pins
+//! [`crate::sched::greedy`] (the moved copy the runtime actually runs)
+//! to it case-for-case and bit-for-bit, and `benches/micro_hotpath.rs`
+//! measures it. It is not on the runtime path.
+//!
+//! [`DispatchPolicy`]: crate::sched::DispatchPolicy
 
 use crate::token::{Range, TaskToken, TokenQueue};
 
-/// Cycles the filter pipeline spends per incoming token (decision).
-pub const FILTER_CYCLES: u64 = 1;
-/// Extra cycles per additional token a split produces.
-pub const SPLIT_CYCLES: u64 = 1;
+pub use crate::sched::{
+    FilterCase, FilterOutcome, Pieces, FILTER_CYCLES, SPLIT_CYCLES,
+};
 
-/// Which of the paper's four cases a token hit (stats / tests).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum FilterCase {
-    /// (I) range disjoint from local -> forward unchanged.
-    Convey,
-    /// (II) range within local -> execute here.
-    Local,
-    /// (III) range strictly covers local -> 3-way split.
-    SplitSuperset,
-    /// (IV) partial overlap -> 2-way split.
-    SplitPartial,
-}
-
-/// Fixed-capacity token list — the filter emits at most 1 local piece
-/// and at most 2 forwarded pieces, so the whole outcome lives on the
-/// stack (this is the per-token hot path; see EXPERIMENTS.md §Perf).
-#[derive(Clone, Copy, Debug)]
-pub struct Pieces<const N: usize> {
-    buf: [Option<TaskToken>; N],
-    len: usize,
-}
-
-impl<const N: usize> Default for Pieces<N> {
-    fn default() -> Self {
-        Pieces { buf: [None; N], len: 0 }
-    }
-}
-
-impl<const N: usize> IntoIterator for Pieces<N> {
-    type Item = TaskToken;
-    type IntoIter = std::iter::Flatten<std::array::IntoIter<Option<TaskToken>, N>>;
-
-    fn into_iter(self) -> Self::IntoIter {
-        self.buf.into_iter().flatten()
-    }
-}
-
-impl<const N: usize> Pieces<N> {
-    #[inline]
-    fn push(&mut self, t: TaskToken) {
-        self.buf[self.len] = Some(t);
-        self.len += 1;
-    }
-
-    #[inline]
-    pub fn len(&self) -> usize {
-        self.len
-    }
-
-    #[inline]
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    pub fn iter(&self) -> impl Iterator<Item = &TaskToken> {
-        self.buf[..self.len].iter().map(|t| t.as_ref().unwrap())
-    }
-
-    pub fn as_vec(&self) -> Vec<TaskToken> {
-        self.iter().copied().collect()
-    }
-}
-
-impl<const N: usize> std::ops::Index<usize> for Pieces<N> {
-    type Output = TaskToken;
-
-    fn index(&self, i: usize) -> &TaskToken {
-        assert!(i < self.len, "index {i} out of {}", self.len);
-        self.buf[i].as_ref().unwrap()
-    }
-}
-
-impl<const N: usize> PartialEq<Vec<TaskToken>> for Pieces<N> {
-    fn eq(&self, other: &Vec<TaskToken>) -> bool {
-        self.len == other.len()
-            && self.iter().zip(other).all(|(a, b)| a == b)
-    }
-}
-
-/// Outcome of filtering one token (allocation-free).
-#[derive(Clone, Copy, Debug)]
-pub struct FilterOutcome {
-    pub case: FilterCase,
-    /// Portions buffered for local execution (0 or 1).
-    pub wait: Pieces<1>,
-    /// Portions forwarded to the next node (0..2).
-    pub send: Pieces<2>,
-    /// Dispatcher cycles consumed.
-    pub cycles: u64,
-}
-
-/// Classify + split `token` against the node's `[local.start, local.end)`.
+/// Classify + split `token` against the node's `[local.start, local.end)`
+/// — the seed greedy filter (see module docs; the runtime uses
+/// [`crate::sched::greedy`] through a [`crate::sched::DispatchPolicy`]).
 #[inline]
 pub fn filter(token: &TaskToken, local: Range) -> FilterOutcome {
     debug_assert!(!token.is_terminate(), "TERMINATE handled by the runtime");
@@ -202,20 +121,15 @@ impl Dispatcher {
         }
     }
 
-    /// Space left before the wait/send queues would reject a 3-way split.
-    pub fn can_accept_split(&self) -> bool {
-        !self.wait.is_full() && self.send.capacity() - self.send.len() >= 2
-    }
-
-    /// Run the filter on one token and distribute the pieces.
-    /// Returns the outcome, or the token itself if a queue is full
-    /// (the caller retries later — hardware backpressure).
-    pub fn process(
+    /// Distribute a policy's outcome for `token` into the wait/send
+    /// queues. Returns the case, or the token itself if a queue lacks
+    /// space for the whole outcome (the caller retries later —
+    /// hardware backpressure; no partial effects).
+    pub fn process_outcome(
         &mut self,
         token: TaskToken,
-        local: Range,
+        out: FilterOutcome,
     ) -> Result<FilterCase, TaskToken> {
-        let out = filter(&token, local);
         // all-or-nothing: check capacity before mutating
         let wait_free = self.wait.capacity() - self.wait.len();
         let send_free = self.send.capacity() - self.send.len();
@@ -335,13 +249,16 @@ mod tests {
         // fill send queue so a case-III split (needs 2 send slots) bounces
         d.send.push(tok(0, 1)).unwrap();
         let t = tok(50, 300);
-        let r = d.process(t, LOCAL);
+        let r = d.process_outcome(t, filter(&t, LOCAL));
         assert_eq!(r, Err(t));
         assert_eq!(d.stats.stalls, 1);
         assert_eq!(d.wait.len(), 0, "no partial effects on failure");
         // drain and retry succeeds
         d.send.pop().unwrap();
-        assert_eq!(d.process(t, LOCAL), Ok(FilterCase::SplitSuperset));
+        assert_eq!(
+            d.process_outcome(t, filter(&t, LOCAL)),
+            Ok(FilterCase::SplitSuperset)
+        );
         assert_eq!(d.wait.len(), 1);
         assert_eq!(d.send.len(), 2);
     }
@@ -349,10 +266,9 @@ mod tests {
     #[test]
     fn dispatcher_counts_cases() {
         let mut d = Dispatcher::new(8);
-        d.process(tok(0, 50), LOCAL).unwrap();
-        d.process(tok(110, 120), LOCAL).unwrap();
-        d.process(tok(50, 150), LOCAL).unwrap();
-        d.process(tok(50, 250), LOCAL).unwrap();
+        for t in [tok(0, 50), tok(110, 120), tok(50, 150), tok(50, 250)] {
+            d.process_outcome(t, filter(&t, LOCAL)).unwrap();
+        }
         assert_eq!(d.stats.conveyed, 1);
         assert_eq!(d.stats.offloaded, 1);
         assert_eq!(d.stats.split_partial, 1);

@@ -145,6 +145,24 @@ pub fn run_arena_at(
         .with_nodes(nodes)
         .with_seed(seed)
         .with_layout(layout);
+    run_arena_with(app, scale, cfg, model, engine)
+}
+
+/// Run one ARENA simulation under a fully specified config — the
+/// `arena run` path, honoring every knob (layout, dispatch policy,
+/// theta, inject-node). The figure builders go through
+/// [`run_arena_at`], which pins everything but the layout to the
+/// Table-2 defaults. (`arena run --layout …` used to be silently
+/// dropped on the floor here; it now reaches the cluster.)
+pub fn run_arena_with(
+    app: &str,
+    scale: Scale,
+    cfg: ArenaConfig,
+    model: Model,
+    engine: Option<&mut Engine>,
+) -> RunReport {
+    let seed = cfg.seed;
+    let layout = cfg.layout;
     let mut cl = Cluster::new(cfg, model, vec![make_app(app, scale, seed)]);
     let r = cl.run(engine);
     cl.check().unwrap_or_else(|e| {

@@ -49,6 +49,8 @@ pub mod power;
 pub mod proptest_lite;
 pub mod ring;
 pub mod runtime;
+pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod token;

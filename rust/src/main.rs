@@ -26,6 +26,8 @@ use arena::config::ArenaConfig;
 use arena::eval;
 use arena::placement::Layout;
 use arena::runtime::Engine;
+use arena::sched::PolicyKind;
+use arena::serve;
 use arena::sweep;
 
 /// Peak-alloc instrumentation for `sweep --bench-json` (the library
@@ -38,9 +40,15 @@ usage: arena <command> [options]
 
 commands:
   run     --app <name> --model <model> [--nodes N] [--scale small|paper]
-          [--seed S] [--layout L] [--engine] [--config FILE]
-          [--set k=v ...]
+          [--seed S] [--layout L] [--policy P] [--theta X]
+          [--inject-node N] [--engine] [--config FILE] [--set k=v ...]
   fig     <9|10|11|12|13|all> [--scale small|paper] [--seed S]
+  serve   --trace FILE [--policy P] [--theta X] [--ab] [--model M]
+          [--nodes N] [--scale small|paper] [--seed S] [--jobs N]
+          [--bench-json FILE]
+          replay an open-system job trace (arrival-timed mixed apps)
+          and report throughput + p50/p95/p99 latency; --ab replays
+          the trace under every policy on a worker pool
   sweep   [--all | 9 10 11 12 13] [--jobs N] [--scale small|paper]
           [--seed S] [--layout L] [--nodes N] [--bench-json FILE]
           regenerate figures on a worker pool; output is bit-identical
@@ -49,11 +57,14 @@ commands:
           --bench-json records per-job wall-clock + allocator stats
   sweep   --all-layouts [--jobs N] [--scale small|paper] [--seed S]
           skew-sensitivity sweep: every app x model x layout
+  sweep   --serve TRACE [--jobs N] [--theta X] [...]
+          serve-table extension: the trace under every policy
   apps    list applications and models
   config  [--config FILE] [--set k=v ...]   print effective config
 
-models:  arena-cgra | arena-sw | bsp-cpu | bsp-cgra | serial
-layouts: block | cyclic | zipf | shuffle
+models:   arena-cgra | arena-sw | bsp-cpu | bsp-cgra | serial
+layouts:  block | cyclic | zipf | shuffle
+policies: greedy | locality (with --theta X in [0,1]) | convey
 ";
 
 fn main() {
@@ -67,7 +78,8 @@ fn main() {
         &argv,
         &[
             "app", "model", "nodes", "scale", "seed", "config", "fig",
-            "jobs", "layout", "bench-json",
+            "jobs", "layout", "bench-json", "trace", "policy", "theta",
+            "inject-node", "serve",
         ],
     ) {
         Ok(a) => a,
@@ -79,6 +91,7 @@ fn main() {
     let code = match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("fig") => cmd_fig(&args),
+        Some("serve") => cmd_serve(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("apps") => {
             println!("applications: {}", ALL.join(" "));
@@ -100,17 +113,27 @@ fn build_config(args: &cli::Args) -> Result<ArenaConfig, String> {
             .map_err(|e| e.to_string())?,
         None => ArenaConfig::default(),
     };
-    if let Some(n) = args
-        .parse_opt::<usize>("nodes")
-        .map_err(|e| e.to_string())?
-    {
-        cfg.nodes = n;
+    if let Some(n) = args.opt("nodes") {
+        // through set(), not a raw field write: re-validates the ring
+        // size against inject_node (a config file can legitimately set
+        // inject_node high; shrinking the ring under it must be the
+        // clean ConfigError, not a runtime assert)
+        cfg.set("nodes", n).map_err(|e| e.to_string())?;
     }
     if let Some(s) = args.opt("seed") {
         cfg.set("seed", s).map_err(|e| e.to_string())?;
     }
     if let Some(l) = args.opt("layout") {
         cfg.set("layout", l).map_err(|e| e.to_string())?;
+    }
+    if let Some(p) = args.opt("policy") {
+        cfg.set("policy", p).map_err(|e| e.to_string())?;
+    }
+    if let Some(t) = args.opt("theta") {
+        cfg.set("theta", t).map_err(|e| e.to_string())?;
+    }
+    if let Some(i) = args.opt("inject-node") {
+        cfg.set("inject_node", i).map_err(|e| e.to_string())?;
     }
     for (k, v) in &args.sets {
         cfg.set(k, v).map_err(|e| e.to_string())?;
@@ -144,6 +167,7 @@ fn print_report(r: &RunReport, serial: f64) {
     println!("model              {}", r.model);
     println!("nodes              {}", r.nodes);
     println!("layout             {}", r.layout);
+    println!("policy             {}", r.policy);
     println!("makespan           {:.3} ms", r.makespan_ms());
     println!("speedup vs serial  {:.2}x", serial / r.makespan_ps as f64);
     println!("tasks executed     {}", r.tasks_executed);
@@ -241,11 +265,10 @@ fn cmd_run(args: &cli::Args) -> i32 {
                 } else {
                     None
                 };
-                let r = eval::run_arena(
+                let r = eval::run_arena_with(
                     app,
                     scale,
-                    seed,
-                    cfg.nodes,
+                    cfg.clone(),
                     m,
                     engine.as_mut(),
                 );
@@ -308,8 +331,142 @@ fn write_sweep_bench_json(
         .map_err(|e| format!("cannot write {path}: {e}"))
 }
 
+/// Parse `--theta` into per-mille through the config's own `theta`
+/// knob (one parser, so `arena serve --theta X` and `arena run --set
+/// theta=X` cannot drift apart). Default 0.5 — the "majority of the
+/// data" reading of the paper's heuristic.
+fn theta_pm_of(args: &cli::Args) -> Result<u32, String> {
+    let mut cfg = ArenaConfig::default();
+    if let Some(v) = args.opt("theta") {
+        cfg.set("theta", v).map_err(|e| e.to_string())?;
+    }
+    Ok(cfg.theta_pm)
+}
+
+fn serve_spec_of(
+    args: &cli::Args,
+    trace_path: &str,
+) -> Result<serve::ServeSpec, String> {
+    let scale = scale_of(args)?;
+    let trace = serve::load_trace(std::path::Path::new(trace_path))?;
+    let nodes = args
+        .parse_opt::<usize>("nodes")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(4);
+    if nodes == 0 {
+        return Err("--nodes must be >= 1".into());
+    }
+    let seed = args
+        .parse_opt::<u64>("seed")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(0xA2EA);
+    let model = match args.opt_or("model", "arena-cgra") {
+        "arena-sw" => Model::SoftwareCpu,
+        "arena-cgra" => Model::Cgra,
+        other => {
+            return Err(format!(
+                "unknown serve model '{other}' (arena-sw | arena-cgra)"
+            ))
+        }
+    };
+    Ok(serve::ServeSpec { trace, scale, seed, nodes, model })
+}
+
+/// Shared by `arena serve` and `arena sweep --serve TRACE`: replay the
+/// trace under the selected policies on the worker pool and print the
+/// Serve tables (stdout stays byte-identical across `--jobs` values).
+fn run_serve(
+    args: &cli::Args,
+    trace_path: &str,
+    ab: bool,
+) -> Result<(), String> {
+    let spec = serve_spec_of(args, trace_path)?;
+    let theta_pm = theta_pm_of(args)?;
+    let policies: Vec<(PolicyKind, u32)> = if ab {
+        if args.opt("policy").is_some() {
+            return Err(
+                "--ab replays every policy; drop --policy or the --ab flag"
+                    .into(),
+            );
+        }
+        PolicyKind::ALL.iter().map(|&k| (k, theta_pm)).collect()
+    } else {
+        let kind = match args.opt("policy") {
+            Some(p) => PolicyKind::parse(p).ok_or_else(|| {
+                format!("unknown policy '{p}' (greedy|locality|convey)")
+            })?,
+            None => PolicyKind::Greedy,
+        };
+        vec![(kind, theta_pm)]
+    };
+    let jobs = match args.parse_opt::<usize>("jobs").map_err(|e| e.to_string())? {
+        Some(0) => return Err("--jobs must be >= 1".into()),
+        Some(n) => n,
+        None => sweep::default_jobs(),
+    };
+    let t0 = std::time::Instant::now();
+    let out = serve::run_ab(&spec, &policies, jobs)?;
+    print!("{}", out.render());
+    let wall = t0.elapsed();
+    if let Some(path) = args.opt("bench-json") {
+        let a = benchkit::alloc::stats();
+        let fields = [
+            ("trace", format!("\"{trace_path}\"")),
+            (
+                "scale",
+                format!(
+                    "\"{}\"",
+                    if spec.scale == Scale::Paper { "paper" } else { "small" }
+                ),
+            ),
+            ("seed", spec.seed.to_string()),
+            ("nodes", spec.nodes.to_string()),
+            ("trace_jobs", spec.trace.len().to_string()),
+            ("jobs", out.workers.to_string()),
+            ("policies", out.cells.to_string()),
+            ("wall_ms", format!("{:.3}", wall.as_secs_f64() * 1e3)),
+            ("alloc_peak_bytes", a.peak_bytes.to_string()),
+            ("alloc_total_bytes", a.total_bytes.to_string()),
+            ("allocs", a.allocs.to_string()),
+            ("per_policy", benchkit::per_job_json(&out.timings)),
+        ];
+        benchkit::write_bench_json(path, "serve", &fields)
+            .map_err(|e| format!("cannot write {path}: {e}"))?;
+        eprintln!("bench record written to {path}");
+    }
+    eprintln!(
+        "serve: {} policy replay(s) x {} job(s) on {} worker(s) in {:.2}s",
+        out.cells,
+        spec.trace.len(),
+        out.workers,
+        wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let trace = args.opt("trace").ok_or(
+            "missing --trace FILE (format: EXPERIMENTS.md §Serving)",
+        )?;
+        run_serve(args, trace, args.flag("ab"))
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            2
+        }
+    }
+}
+
 fn cmd_sweep(args: &cli::Args) -> i32 {
     let run = || -> Result<(), String> {
+        if let Some(trace) = args.opt("serve") {
+            // serve-table extension: the trace under every policy, on
+            // the same worker-pool + deterministic-assembly contract
+            return run_serve(args, trace, true);
+        }
         let scale = scale_of(args)?;
         let seed = args
             .parse_opt::<u64>("seed")

@@ -1,0 +1,508 @@
+//! Scheduling-policy layer: who decides where a circulating token
+//! fires.
+//!
+//! The paper hardwires one answer — the greedy Case I–IV filter of
+//! §3.2, cut against the node's local data range. Related data-centric
+//! architectures (FLIP, D³EO) treat that *where/when* decision as a
+//! first-class, tunable policy, and ARENA's own multi-tenant claim
+//! makes the policy axis worth exposing: under heavy mixed traffic the
+//! dispatch rule trades locality against queueing delay.
+//!
+//! This module owns the classify/split decision behind the
+//! [`DispatchPolicy`] trait. The queue machinery (Recv/Wait/Send,
+//! capacity backpressure, stats) stays in [`crate::dispatcher`]; a
+//! policy is a pure function from `(token, local range, ring context)`
+//! to a [`FilterOutcome`] that the dispatcher then distributes.
+//!
+//! Three policies ship:
+//!
+//! * [`Greedy`] — the paper's filter, moved here verbatim from the
+//!   seed `dispatcher::filter` (which is retained as the golden oracle;
+//!   a property test pins the two bit-identical). This is the default:
+//!   every §5 table is produced under it, unchanged.
+//! * [`LocalityThreshold`] — only place work on this node when the
+//!   local fraction of the token's range is at least `theta`, making
+//!   the paper's "majority of the data" heuristic an explicit knob.
+//!   After one full circulation without placement the policy falls
+//!   back to greedy (progress guarantee — see [`TaskToken::hops`]).
+//! * [`ConveyOnly`] — a compute-centric strawman: a token only fires
+//!   at the home node of its first address and is never grabbed
+//!   opportunistically en route. The policy A/B baseline.
+
+use crate::token::{Range, TaskToken};
+
+/// Cycles the filter pipeline spends per incoming token (decision).
+pub const FILTER_CYCLES: u64 = 1;
+/// Extra cycles per additional token a split produces.
+pub const SPLIT_CYCLES: u64 = 1;
+
+/// Which of the paper's four cases a token hit (stats / tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FilterCase {
+    /// (I) range disjoint from local -> forward unchanged.
+    Convey,
+    /// (II) range within local -> execute here.
+    Local,
+    /// (III) range strictly covers local -> 3-way split.
+    SplitSuperset,
+    /// (IV) partial overlap -> 2-way split.
+    SplitPartial,
+}
+
+/// Fixed-capacity token list — a policy emits at most 1 local piece
+/// and at most 2 forwarded pieces, so the whole outcome lives on the
+/// stack (this is the per-token hot path; see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug)]
+pub struct Pieces<const N: usize> {
+    buf: [Option<TaskToken>; N],
+    len: usize,
+}
+
+impl<const N: usize> Default for Pieces<N> {
+    fn default() -> Self {
+        Pieces { buf: [None; N], len: 0 }
+    }
+}
+
+impl<const N: usize> IntoIterator for Pieces<N> {
+    type Item = TaskToken;
+    type IntoIter = std::iter::Flatten<std::array::IntoIter<Option<TaskToken>, N>>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.buf.into_iter().flatten()
+    }
+}
+
+impl<const N: usize> Pieces<N> {
+    /// Append a piece (policy-internal; public so out-of-module
+    /// policies — and the retained seed filter — can build outcomes).
+    #[inline]
+    pub fn push(&mut self, t: TaskToken) {
+        self.buf[self.len] = Some(t);
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TaskToken> {
+        self.buf[..self.len].iter().map(|t| t.as_ref().unwrap())
+    }
+}
+
+impl<const N: usize> std::ops::Index<usize> for Pieces<N> {
+    type Output = TaskToken;
+
+    fn index(&self, i: usize) -> &TaskToken {
+        assert!(i < self.len, "index {i} out of {}", self.len);
+        self.buf[i].as_ref().unwrap()
+    }
+}
+
+impl<const N: usize> PartialEq<Vec<TaskToken>> for Pieces<N> {
+    fn eq(&self, other: &Vec<TaskToken>) -> bool {
+        self.len == other.len()
+            && self.iter().zip(other).all(|(a, b)| a == b)
+    }
+}
+
+impl<const N: usize, const M: usize> PartialEq<Pieces<M>> for Pieces<N> {
+    fn eq(&self, other: &Pieces<M>) -> bool {
+        self.len == other.len()
+            && self.iter().zip(other.iter()).all(|(a, b)| a == b)
+    }
+}
+
+/// Outcome of classifying one token (allocation-free).
+#[derive(Clone, Copy, Debug)]
+pub struct FilterOutcome {
+    pub case: FilterCase,
+    /// Portions buffered for local execution (0 or 1).
+    pub wait: Pieces<1>,
+    /// Portions forwarded to the next node (0..2).
+    pub send: Pieces<2>,
+    /// Dispatcher cycles consumed.
+    pub cycles: u64,
+}
+
+impl FilterOutcome {
+    /// Case-I outcome: forward the token unchanged (shared by every
+    /// policy's "not here" branch).
+    #[inline]
+    pub fn convey(token: &TaskToken) -> FilterOutcome {
+        let mut send: Pieces<2> = Pieces::default();
+        send.push(*token);
+        FilterOutcome {
+            case: FilterCase::Convey,
+            wait: Pieces::default(),
+            send,
+            cycles: FILTER_CYCLES,
+        }
+    }
+}
+
+/// Ring-wide facts a policy may consult beyond the token itself.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedCtx {
+    /// Ring size — `token.hops >= nodes` means one full circulation
+    /// without placement (every dispatcher has seen the token).
+    pub nodes: usize,
+}
+
+/// The pluggable classify/split decision (paper §3.2, Fig. 5 step 2).
+///
+/// Contract: the emitted pieces must tile `token.task` exactly (no
+/// gaps, no overlap), every `wait` piece must lie inside `local`, and
+/// all non-range token fields must be preserved on every piece — the
+/// dispatcher distributes the outcome all-or-nothing against its queue
+/// capacities and the runtime executes `wait` pieces as-is. A policy
+/// must also guarantee *progress*: a token may be conveyed only
+/// finitely many times before some node places it (otherwise the ring
+/// livelocks and the DES event guard trips).
+pub trait DispatchPolicy: Send {
+    /// Human-readable label (reports / serve tables).
+    fn label(&self) -> String;
+
+    /// Classify `token` against this node's `local` extent.
+    fn classify(
+        &self,
+        token: &TaskToken,
+        local: Range,
+        ctx: &SchedCtx,
+    ) -> FilterOutcome;
+}
+
+/// Shared geometry of the paper's greedy filter — the four-case
+/// classify/split moved out of the seed `dispatcher::filter`
+/// (retained there as the golden oracle; the `greedy_bitwise_equals_
+/// seed_filter` property pins this copy to it).
+#[inline]
+pub fn greedy(token: &TaskToken, local: Range) -> FilterOutcome {
+    debug_assert!(!token.is_terminate(), "TERMINATE handled by the runtime");
+    let t = token.task;
+    let sub = |r: Range| {
+        let mut c = *token;
+        c.task = r;
+        c
+    };
+    let mut wait: Pieces<1> = Pieces::default();
+    let mut send: Pieces<2> = Pieces::default();
+
+    if !t.overlaps(&local) {
+        // Case I: irrelevant to this node.
+        send.push(*token);
+        return FilterOutcome {
+            case: FilterCase::Convey,
+            wait,
+            send,
+            cycles: FILTER_CYCLES,
+        };
+    }
+    if local.contains(&t) {
+        // Case II: all data local.
+        wait.push(*token);
+        return FilterOutcome {
+            case: FilterCase::Local,
+            wait,
+            send,
+            cycles: FILTER_CYCLES,
+        };
+    }
+    if t.contains(&local) {
+        // Case III: task too coarse — keep the local slice, forward the
+        // head and tail remainders.
+        if t.start < local.start {
+            send.push(sub(Range::new(t.start, local.start)));
+        }
+        if local.end < t.end {
+            send.push(sub(Range::new(local.end, t.end)));
+        }
+        wait.push(sub(local));
+        return FilterOutcome {
+            case: FilterCase::SplitSuperset,
+            wait,
+            send,
+            cycles: FILTER_CYCLES + SPLIT_CYCLES * send.len() as u64,
+        };
+    }
+    // Case IV: partial overlap — keep the aligned part, forward the rest.
+    let keep = t.intersect(&local);
+    let rest = if t.start < local.start {
+        Range::new(t.start, local.start)
+    } else {
+        Range::new(local.end, t.end)
+    };
+    wait.push(sub(keep));
+    send.push(sub(rest));
+    FilterOutcome {
+        case: FilterCase::SplitPartial,
+        wait,
+        send,
+        cycles: FILTER_CYCLES + SPLIT_CYCLES,
+    }
+}
+
+/// The paper's greedy Case I–IV filter (the default policy; every §5
+/// figure is produced under it).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Greedy;
+
+impl DispatchPolicy for Greedy {
+    fn label(&self) -> String {
+        "greedy".into()
+    }
+
+    #[inline]
+    fn classify(
+        &self,
+        token: &TaskToken,
+        local: Range,
+        _ctx: &SchedCtx,
+    ) -> FilterOutcome {
+        greedy(token, local)
+    }
+}
+
+/// Place work here only when the *dispatcher's local extent* — the
+/// first extent of this node overlapping the token — covers at least
+/// `theta` of the token's range; otherwise convey the token unchanged
+/// and let a node holding more of its data claim it. Under the block
+/// layout a node is one extent, so this is exactly "≥ θ of the
+/// token's range is local here"; under interleaved layouts the
+/// per-extent fraction is a conservative under-estimate of the node's
+/// total share (the policy sees only what the dispatcher cut, by
+/// design — it stays a pure function of `(token, local, ctx)`), so a
+/// strict θ degrades toward convey-then-fallback. `theta = 0`
+/// degenerates to [`Greedy`]; `theta = 1` accepts only fully-local
+/// (Case II) tokens on the first lap.
+///
+/// Progress guarantee: once a token has circulated the whole ring
+/// without firing (`hops >= nodes`), the threshold is waived and the
+/// greedy split applies — a token is never conveyed more than one full
+/// lap past its first eligible node.
+#[derive(Clone, Copy, Debug)]
+pub struct LocalityThreshold {
+    /// Minimum local fraction in `[0, 1]`.
+    pub theta: f64,
+}
+
+impl DispatchPolicy for LocalityThreshold {
+    fn label(&self) -> String {
+        format!("locality({:.3})", self.theta)
+    }
+
+    #[inline]
+    fn classify(
+        &self,
+        token: &TaskToken,
+        local: Range,
+        ctx: &SchedCtx,
+    ) -> FilterOutcome {
+        let overlap = token.task.intersect(&local);
+        if overlap.is_empty() {
+            // nothing local: identical to greedy Case I
+            return greedy(token, local);
+        }
+        if (token.hops as usize) < ctx.nodes {
+            let fraction =
+                overlap.len() as f64 / token.task.len().max(1) as f64;
+            if fraction < self.theta {
+                return FilterOutcome::convey(token);
+            }
+        }
+        greedy(token, local)
+    }
+}
+
+/// Compute-centric strawman: a token fires only at the home node of
+/// its first address (the dispatcher there keeps the leading local
+/// piece and forwards the remainder onward to *its* home), and is
+/// never grabbed opportunistically by a node that merely holds some
+/// suffix of its range. This is the "bring data to a fixed place"
+/// discipline ARENA argues against — kept as the policy A/B baseline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConveyOnly;
+
+impl DispatchPolicy for ConveyOnly {
+    fn label(&self) -> String {
+        "convey".into()
+    }
+
+    #[inline]
+    fn classify(
+        &self,
+        token: &TaskToken,
+        local: Range,
+        _ctx: &SchedCtx,
+    ) -> FilterOutcome {
+        // `local` is the first extent of this node overlapping the
+        // token's range; the node owns the token's first address iff
+        // that extent contains it (extents are address-sorted).
+        if !local.is_empty()
+            && local.start <= token.task.start
+            && token.task.start < local.end
+        {
+            return greedy(token, local);
+        }
+        FilterOutcome::convey(token)
+    }
+}
+
+/// Config-level policy selector — `Copy`/`Ord`/`Hash` so sweep job
+/// keys and serve cells can be sorted and memoized. `theta` lives in
+/// [`crate::config::ArenaConfig`] (per-mille, so the pair stays `Eq`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PolicyKind {
+    Greedy,
+    LocalityThreshold,
+    ConveyOnly,
+}
+
+impl PolicyKind {
+    /// Every shipped policy, in A/B table order.
+    pub const ALL: [PolicyKind; 3] = [
+        PolicyKind::Greedy,
+        PolicyKind::LocalityThreshold,
+        PolicyKind::ConveyOnly,
+    ];
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "greedy" => Some(PolicyKind::Greedy),
+            "locality" => Some(PolicyKind::LocalityThreshold),
+            "convey" => Some(PolicyKind::ConveyOnly),
+            _ => None,
+        }
+    }
+
+    /// Config-file / CLI name (round-trips through [`Self::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Greedy => "greedy",
+            PolicyKind::LocalityThreshold => "locality",
+            PolicyKind::ConveyOnly => "convey",
+        }
+    }
+
+    /// Instantiate the policy. `theta_pm` is the locality threshold in
+    /// per-mille (500 = 0.5); the other policies ignore it.
+    pub fn build(self, theta_pm: u32) -> Box<dyn DispatchPolicy> {
+        match self {
+            PolicyKind::Greedy => Box::new(Greedy),
+            PolicyKind::LocalityThreshold => Box::new(LocalityThreshold {
+                theta: theta_pm as f64 / 1000.0,
+            }),
+            PolicyKind::ConveyOnly => Box::new(ConveyOnly),
+        }
+    }
+
+    /// Display label including the effective theta.
+    pub fn label(self, theta_pm: u32) -> String {
+        self.build(theta_pm).label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok(s: u32, e: u32) -> TaskToken {
+        TaskToken::new(3, Range::new(s, e), 7.5).from_node(2)
+    }
+
+    const LOCAL: Range = Range { start: 100, end: 200 };
+    const CTX: SchedCtx = SchedCtx { nodes: 4 };
+
+    fn assert_same(a: &FilterOutcome, b: &FilterOutcome) {
+        assert_eq!(a.case, b.case);
+        assert_eq!(a.cycles, b.cycles);
+        assert!(a.wait == b.wait, "{:?} != {:?}", a.wait, b.wait);
+        assert!(a.send == b.send, "{:?} != {:?}", a.send, b.send);
+    }
+
+    #[test]
+    fn greedy_policy_is_the_greedy_function() {
+        for t in [tok(0, 50), tok(120, 180), tok(50, 300), tok(150, 250)] {
+            assert_same(&Greedy.classify(&t, LOCAL, &CTX), &greedy(&t, LOCAL));
+        }
+    }
+
+    #[test]
+    fn threshold_conveys_below_theta_and_splits_above() {
+        let p = LocalityThreshold { theta: 0.6 };
+        // overlap 100/250 = 0.4 < 0.6: conveyed unchanged
+        let t = tok(50, 300);
+        let out = p.classify(&t, LOCAL, &CTX);
+        assert_eq!(out.case, FilterCase::Convey);
+        assert_eq!(out.send.len(), 1);
+        assert_eq!(out.send[0], t, "token must be conveyed unchanged");
+        // overlap 100/125 = 0.8 >= 0.6: greedy split applies
+        let t = tok(100, 225);
+        assert_same(&p.classify(&t, LOCAL, &CTX), &greedy(&t, LOCAL));
+        // no overlap at all is plain greedy Case I
+        let t = tok(0, 50);
+        assert_same(&p.classify(&t, LOCAL, &CTX), &greedy(&t, LOCAL));
+    }
+
+    #[test]
+    fn threshold_waived_after_a_full_lap() {
+        let p = LocalityThreshold { theta: 1.0 };
+        let mut t = tok(50, 300);
+        assert_eq!(p.classify(&t, LOCAL, &CTX).case, FilterCase::Convey);
+        for _ in 0..CTX.nodes {
+            t.record_hop();
+        }
+        // lapped: the greedy split fires even though fraction < theta
+        assert_same(&p.classify(&t, LOCAL, &CTX), &greedy(&t, LOCAL));
+    }
+
+    #[test]
+    fn theta_zero_is_greedy() {
+        let p = LocalityThreshold { theta: 0.0 };
+        for t in [tok(0, 50), tok(120, 180), tok(50, 300), tok(150, 250)] {
+            assert_same(&p.classify(&t, LOCAL, &CTX), &greedy(&t, LOCAL));
+        }
+    }
+
+    #[test]
+    fn convey_only_fires_at_the_home_of_the_first_address() {
+        let p = ConveyOnly;
+        // node owns the token's first address: leading piece executes
+        let t = tok(150, 250);
+        let out = p.classify(&t, LOCAL, &CTX);
+        assert_eq!(out.case, FilterCase::SplitPartial);
+        assert_eq!(out.wait[0].task, Range::new(150, 200));
+        // overlap exists but start is upstream: conveyed whole
+        let t = tok(50, 150);
+        let out = p.classify(&t, LOCAL, &CTX);
+        assert_eq!(out.case, FilterCase::Convey);
+        assert_eq!(out.send[0], t);
+        // fully local still executes
+        let t = tok(120, 180);
+        assert_eq!(p.classify(&t, LOCAL, &CTX).case, FilterCase::Local);
+        // empty local extent conveys
+        let out = p.classify(&tok(0, 10), Range::empty(), &CTX);
+        assert_eq!(out.case, FilterCase::Convey);
+    }
+
+    #[test]
+    fn kind_parse_build_label_round_trip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("nope"), None);
+        assert_eq!(PolicyKind::Greedy.label(500), "greedy");
+        assert_eq!(
+            PolicyKind::LocalityThreshold.label(750),
+            "locality(0.750)"
+        );
+        assert_eq!(PolicyKind::ConveyOnly.label(0), "convey");
+    }
+}

@@ -1,0 +1,458 @@
+//! Open-system multi-tenant serving (`arena serve`).
+//!
+//! The §5 figures run ARENA as a closed system: every app's root
+//! tokens enter at one node at `t = 0` and the metric is makespan.
+//! A serving system is open — jobs arrive over time, at different
+//! nodes, and the metrics are throughput and latency percentiles.
+//! This module replays a deterministic mixed-application job trace
+//! through [`Cluster::run_with_arrivals`] and reports, per job,
+//! arrival → first-dispatch (queueing) and arrival → completion
+//! (latency), plus nearest-rank p50/p95/p99 over the trace and
+//! sustained throughput.
+//!
+//! ## Trace format
+//!
+//! Plain text, one job per line, `#` comments and blank lines allowed:
+//!
+//! ```text
+//! # at_us  node  app
+//! 0        0     sssp
+//! 40       2     gemm
+//! 80       1     spmv
+//! ```
+//!
+//! `at_us` is the injection time in simulated microseconds, `node` the
+//! ring node the job's root tokens enter at, `app` one of
+//! [`crate::apps::ALL`]. The same application may appear several
+//! times; each job is an independent instance with a derived seed.
+//! Task ids are packed first-fit into the 4-bit wire space (15 ids;
+//! see [`crate::apps::id_span`]) — a trace that needs more is rejected
+//! with a clear error.
+//!
+//! ## Policy A/B
+//!
+//! [`run_ab`] replays one trace under several scheduling policies on a
+//! worker pool (each replay is an independent deterministic
+//! simulation), then assembles per-policy latency tables and a summary
+//! table single-threaded — byte-identical output for every `--jobs`
+//! value, the same contract as the figure sweep.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::apps::{id_span, make_app_based, Scale, ALL};
+use crate::cluster::{Arrival, Cluster, Model, RunReport};
+use crate::config::{ArenaConfig, Ps, PS_PER_US};
+use crate::eval::Table;
+use crate::sched::PolicyKind;
+
+/// One line of a serve trace: inject `app` at `node` at `at_us`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceJob {
+    pub at_us: u64,
+    pub node: usize,
+    pub app: String,
+}
+
+/// Parse a trace (see the module docs for the format).
+pub fn parse_trace(text: &str) -> Result<Vec<TraceJob>, String> {
+    let mut jobs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() != 3 {
+            return Err(format!(
+                "trace line {}: expected 'at_us node app', got '{line}'",
+                lineno + 1
+            ));
+        }
+        let at_us: u64 = fields[0].parse().map_err(|_| {
+            format!("trace line {}: bad time '{}'", lineno + 1, fields[0])
+        })?;
+        let node: usize = fields[1].parse().map_err(|_| {
+            format!("trace line {}: bad node '{}'", lineno + 1, fields[1])
+        })?;
+        let app = fields[2].to_string();
+        if !ALL.contains(&app.as_str()) {
+            return Err(format!(
+                "trace line {}: unknown app '{app}' (see `arena apps`)",
+                lineno + 1
+            ));
+        }
+        jobs.push(TraceJob { at_us, node, app });
+    }
+    if jobs.is_empty() {
+        return Err("trace contains no jobs".into());
+    }
+    Ok(jobs)
+}
+
+/// Load and parse a trace file.
+pub fn load_trace(path: &std::path::Path) -> Result<Vec<TraceJob>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse_trace(&text)
+}
+
+/// Everything one serve replay needs besides the policy.
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    pub trace: Vec<TraceJob>,
+    pub scale: Scale,
+    pub seed: u64,
+    pub nodes: usize,
+    pub model: Model,
+}
+
+/// One policy's replay of the trace. The policy display label rides
+/// in `report.policy`.
+pub struct ServeRun {
+    pub report: RunReport,
+    /// Arrival → completion per job, in trace order.
+    pub latencies_ps: Vec<Ps>,
+}
+
+impl ServeRun {
+    /// Sustained throughput: jobs per simulated second (trace length /
+    /// makespan).
+    pub fn jobs_per_s(&self) -> f64 {
+        self.latencies_ps.len() as f64
+            / (self.report.makespan_ps as f64 / 1e12)
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice:
+/// `sorted[ceil(pct/100 * n) - 1]`. With `n = 3`: p50 is the 2nd
+/// value, p95 and p99 the 3rd — hand-computable on a 3-job trace.
+pub fn percentile_ps(sorted: &[Ps], pct: u32) -> Ps {
+    assert!(!sorted.is_empty(), "percentile of an empty set");
+    assert!((1..=100).contains(&pct), "pct {pct} out of (0, 100]");
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "unsorted input");
+    let n = sorted.len();
+    let rank = (pct as usize * n).div_ceil(100);
+    sorted[rank.max(1) - 1]
+}
+
+fn ms(ps: Ps) -> f64 {
+    ps as f64 / 1e9
+}
+
+/// Derived per-job workload seed: job 0 keeps the base seed, later
+/// jobs decorrelate (two instances of the same app get distinct
+/// workloads), all deterministically.
+fn job_seed(seed: u64, i: usize) -> u64 {
+    seed.wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// Replay the trace once under one policy. Deterministic function of
+/// `(spec, kind, theta_pm)`.
+pub fn run_one(
+    spec: &ServeSpec,
+    kind: PolicyKind,
+    theta_pm: u32,
+) -> Result<ServeRun, String> {
+    let mut apps = Vec::with_capacity(spec.trace.len());
+    let mut arrivals = Vec::with_capacity(spec.trace.len());
+    let mut next_id: u16 = 1;
+    for (i, job) in spec.trace.iter().enumerate() {
+        if job.node >= spec.nodes {
+            return Err(format!(
+                "trace job {i} ('{}') arrives at node {} but the ring has \
+                 {} node(s)",
+                job.app, job.node, spec.nodes
+            ));
+        }
+        let span = id_span(&job.app)
+            .unwrap_or_else(|| panic!("unknown app '{}'", job.app))
+            as u16;
+        if next_id + span > 16 {
+            return Err(format!(
+                "trace job {i} ('{}') does not fit the 4-bit task-id \
+                 space: jobs 0..{i} already use ids 1..{next_id} of 15 \
+                 (shorten the trace or lighten the app mix)",
+                job.app
+            ));
+        }
+        apps.push(make_app_based(
+            &job.app,
+            spec.scale,
+            job_seed(spec.seed, i),
+            next_id as u8,
+        ));
+        next_id += span;
+        arrivals.push(Arrival {
+            app: i,
+            at: job.at_us * PS_PER_US,
+            node: job.node,
+        });
+    }
+    let cfg = ArenaConfig::default()
+        .with_nodes(spec.nodes)
+        .with_seed(spec.seed)
+        .with_policy(kind)
+        .with_theta_pm(theta_pm);
+    let mut cl = Cluster::new(cfg, spec.model, apps);
+    let report = cl.run_with_arrivals(&arrivals, None);
+    cl.check()
+        .map_err(|e| format!("policy {}: oracle failed: {e}", kind.name()))?;
+    let latencies_ps = report
+        .app_latency
+        .iter()
+        .map(|l| l.latency_ps())
+        .collect();
+    Ok(ServeRun { report, latencies_ps })
+}
+
+/// Assembled serve result (render is the determinism contract, like
+/// [`crate::sweep::SweepOutput`]).
+pub struct ServeOutput {
+    /// One per-job latency table per policy, then the A/B summary.
+    pub tables: Vec<Table>,
+    /// Policy replays computed.
+    pub cells: usize,
+    /// Worker threads used.
+    pub workers: usize,
+    /// Per-replay wall-clock (label, milliseconds) — instrumentation
+    /// for `--bench-json`, never part of [`Self::render`].
+    pub timings: Vec<(String, f64)>,
+}
+
+impl ServeOutput {
+    /// Canonical rendering (byte-identical across `--jobs` values).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for t in &self.tables {
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Replay the trace under every `(policy, theta_pm)` on a worker pool
+/// and assemble the Serve tables single-threaded, in the given policy
+/// order. Output is byte-identical for every `workers` value.
+pub fn run_ab(
+    spec: &ServeSpec,
+    policies: &[(PolicyKind, u32)],
+    workers: usize,
+) -> Result<ServeOutput, String> {
+    assert!(!policies.is_empty(), "need at least one policy");
+    let workers = workers.max(1).min(policies.len());
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, Result<ServeRun, String>, f64)>> =
+        Mutex::new(Vec::with_capacity(policies.len()));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= policies.len() {
+                    break;
+                }
+                let (kind, theta_pm) = policies[i];
+                let t0 = Instant::now();
+                let run = run_one(spec, kind, theta_pm);
+                let dt = t0.elapsed().as_secs_f64() * 1e3;
+                done.lock()
+                    .expect("serve worker poisoned the results")
+                    .push((i, run, dt));
+            });
+        }
+    });
+    let mut done = done.into_inner().expect("serve worker poisoned the results");
+    done.sort_by_key(|(i, _, _)| *i);
+
+    let mut runs = Vec::with_capacity(policies.len());
+    let mut timings = Vec::with_capacity(policies.len());
+    for (_, run, dt) in done {
+        let run = run?;
+        timings.push((format!("serve/{}", run.report.policy), dt));
+        runs.push(run);
+    }
+
+    let jobs = spec.trace.len();
+    let mut tables = Vec::with_capacity(runs.len() + 1);
+    for run in &runs {
+        let mut t = Table::new(
+            &format!(
+                "Serve — per-job latency (ms), policy {}, {}, {} nodes",
+                run.report.policy,
+                spec.model.label(),
+                spec.nodes
+            ),
+            &["arr", "start", "done", "queue", "latency", "local"],
+        );
+        for (i, l) in run.report.app_latency.iter().enumerate() {
+            t.row(
+                &format!("j{i}:{}", l.name),
+                vec![
+                    ms(l.arrival_ps),
+                    ms(l.first_dispatch_ps.unwrap_or(l.arrival_ps)),
+                    ms(l.done_ps),
+                    ms(l.queue_ps()),
+                    ms(l.latency_ps()),
+                    l.locality,
+                ],
+            );
+        }
+        tables.push(t);
+    }
+    let mut summary = Table::new(
+        &format!(
+            "Serve — policy A/B: makespan, throughput, latency \
+             percentiles ({jobs} jobs, {}, {} nodes)",
+            spec.model.label(),
+            spec.nodes
+        ),
+        &["mk_ms", "jobs/s", "p50_ms", "p95_ms", "p99_ms"],
+    );
+    for run in &runs {
+        let mut sorted = run.latencies_ps.clone();
+        sorted.sort_unstable();
+        summary.row(
+            &run.report.policy,
+            vec![
+                run.report.makespan_ms(),
+                run.jobs_per_s(),
+                ms(percentile_ps(&sorted, 50)),
+                ms(percentile_ps(&sorted, 95)),
+                ms(percentile_ps(&sorted, 99)),
+            ],
+        );
+    }
+    tables.push(summary);
+    Ok(ServeOutput { tables, cells: runs.len(), workers, timings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_parses_comments_blanks_and_fields() {
+        let jobs = parse_trace(
+            "# demo\n\n0 0 sssp\n40 2 gemm  # inline comment\n80 1 spmv\n",
+        )
+        .unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(
+            jobs[1],
+            TraceJob { at_us: 40, node: 2, app: "gemm".into() }
+        );
+    }
+
+    #[test]
+    fn trace_errors_carry_line_numbers() {
+        let e = parse_trace("0 0 sssp\nnonsense\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        let e = parse_trace("0 0 warp\n").unwrap_err();
+        assert!(e.contains("unknown app 'warp'"), "{e}");
+        let e = parse_trace("x 0 sssp\n").unwrap_err();
+        assert!(e.contains("bad time"), "{e}");
+        assert!(parse_trace("# only comments\n").is_err());
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v = [10, 20, 40];
+        assert_eq!(percentile_ps(&v, 50), 20, "ceil(1.5) = 2nd value");
+        assert_eq!(percentile_ps(&v, 95), 40, "ceil(2.85) = 3rd value");
+        assert_eq!(percentile_ps(&v, 99), 40);
+        assert_eq!(percentile_ps(&v, 100), 40);
+        assert_eq!(percentile_ps(&v, 1), 10);
+        let one = [7];
+        for pct in [1, 50, 99, 100] {
+            assert_eq!(percentile_ps(&one, pct), 7);
+        }
+        // even count: p50 is the lower-middle value under nearest rank
+        assert_eq!(percentile_ps(&[1, 2, 3, 4], 50), 2);
+    }
+
+    #[test]
+    fn id_packing_rejects_an_oversized_trace() {
+        // 4 gcn jobs need 16 ids; only 15 exist
+        let trace: Vec<TraceJob> = (0..4)
+            .map(|i| TraceJob { at_us: i, node: 0, app: "gcn".into() })
+            .collect();
+        let spec = ServeSpec {
+            trace,
+            scale: Scale::Small,
+            seed: 7,
+            nodes: 2,
+            model: Model::SoftwareCpu,
+        };
+        let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
+        assert!(e.contains("task-id space"), "{e}");
+    }
+
+    #[test]
+    fn out_of_range_arrival_node_is_a_clear_error() {
+        let spec = ServeSpec {
+            trace: vec![TraceJob { at_us: 0, node: 5, app: "sssp".into() }],
+            scale: Scale::Small,
+            seed: 7,
+            nodes: 4,
+            model: Model::SoftwareCpu,
+        };
+        let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
+        assert!(e.contains("node 5"), "{e}");
+    }
+
+    fn three_job_spec() -> ServeSpec {
+        ServeSpec {
+            trace: parse_trace("0 0 sssp\n40 2 gemm\n80 1 spmv\n").unwrap(),
+            scale: Scale::Small,
+            seed: 7,
+            nodes: 4,
+            model: Model::SoftwareCpu,
+        }
+    }
+
+    /// The satellite's hand-computable 3-job percentile check: with
+    /// three latencies, nearest-rank p50 is the middle one and p95 =
+    /// p99 = the maximum — the summary table must carry exactly those.
+    #[test]
+    fn three_job_percentiles_are_hand_computable() {
+        let spec = three_job_spec();
+        let run = run_one(&spec, PolicyKind::Greedy, 500).unwrap();
+        assert_eq!(run.latencies_ps.len(), 3);
+        let mut sorted = run.latencies_ps.clone();
+        sorted.sort_unstable();
+        assert_eq!(percentile_ps(&sorted, 50), sorted[1]);
+        assert_eq!(percentile_ps(&sorted, 95), sorted[2]);
+        assert_eq!(percentile_ps(&sorted, 99), sorted[2]);
+
+        let out = run_ab(&spec, &[(PolicyKind::Greedy, 500)], 1).unwrap();
+        let summary = out.tables.last().unwrap();
+        let got_p50 = summary.get("greedy", 2).unwrap();
+        let got_p95 = summary.get("greedy", 3).unwrap();
+        let got_p99 = summary.get("greedy", 4).unwrap();
+        assert_eq!(got_p50, sorted[1] as f64 / 1e9);
+        assert_eq!(got_p95, sorted[2] as f64 / 1e9);
+        assert_eq!(got_p99, got_p95);
+        // throughput = 3 jobs / makespan
+        let mk = summary.get("greedy", 0).unwrap();
+        let tput = summary.get("greedy", 1).unwrap();
+        assert!((tput - 3.0 / (mk / 1e3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeated_apps_get_distinct_workload_seeds() {
+        assert_ne!(job_seed(7, 0), job_seed(7, 1));
+        let spec = ServeSpec {
+            trace: parse_trace("0 0 sssp\n10 1 sssp\n").unwrap(),
+            scale: Scale::Small,
+            seed: 7,
+            nodes: 2,
+            model: Model::SoftwareCpu,
+        };
+        let run = run_one(&spec, PolicyKind::Greedy, 500).unwrap();
+        assert_eq!(run.report.app_latency.len(), 2);
+        // both instances executed and verified (check() passed)
+        assert!(run.report.app_latency.iter().all(|l| l.tasks > 0));
+    }
+}

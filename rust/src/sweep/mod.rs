@@ -22,6 +22,12 @@
 //!
 //! `arena sweep --all --jobs N`, `examples/paper_eval.rs` and the
 //! `fig*`/`tab3` benches all run through this path.
+//!
+//! The serve-table extension (`arena sweep --serve TRACE`, equivalent
+//! to `arena serve --trace TRACE --ab`) lives in [`crate::serve`]: it
+//! replays one open-system job trace under every scheduling policy on
+//! the same scoped-pool + deterministic-assembly contract, keyed by
+//! `(PolicyKind, theta)` instead of figure cells.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -70,6 +70,12 @@ pub struct TaskToken {
     pub remote: Range,
     /// Node that spawned this token.
     pub from_node: NodeId,
+    /// Ring hops this token has traveled — simulator-side routing
+    /// metadata (not one of the paper's wire fields and not counted in
+    /// [`WIRE_BYTES`]). Scheduling policies use it to detect a full
+    /// circulation without placement (the `LocalityThreshold` fallback
+    /// that guarantees progress); the paper's greedy filter ignores it.
+    pub hops: u16,
 }
 
 /// Wire size: TASKid+FROMnode share 1 byte; TASKstart/end, PARAM,
@@ -78,7 +84,21 @@ pub const WIRE_BYTES: u64 = 21;
 
 impl TaskToken {
     pub fn new(task_id: TaskId, task: Range, param: f32) -> Self {
-        TaskToken { task_id, task, param, remote: Range::empty(), from_node: 0 }
+        TaskToken {
+            task_id,
+            task,
+            param,
+            remote: Range::empty(),
+            from_node: 0,
+            hops: 0,
+        }
+    }
+
+    /// One ring hop traveled (called by the cluster when the token is
+    /// forwarded to the next node; saturates rather than wraps so a
+    /// long-circulating token stays "lapped").
+    pub fn record_hop(&mut self) {
+        self.hops = self.hops.saturating_add(1);
     }
 
     pub fn with_remote(mut self, remote: Range) -> Self {
@@ -233,6 +253,26 @@ mod tests {
         let r = TaskToken::new(2, Range::new(8, 16), 1.0)
             .with_remote(Range::new(0, 4));
         assert!(!a.can_coalesce(&r));
+    }
+
+    #[test]
+    fn hops_are_sim_metadata_not_wire_fields() {
+        // the hop count rides along for the scheduling layer but is
+        // not serialized: WIRE_BYTES stays the paper's 21
+        let mut t = TaskToken::new(2, Range::new(0, 8), 1.0);
+        assert_eq!(t.hops, 0);
+        t.record_hop();
+        t.record_hop();
+        assert_eq!(t.hops, 2);
+        t.hops = u16::MAX;
+        t.record_hop();
+        assert_eq!(t.hops, u16::MAX, "saturates, never wraps");
+        // hop counts never block coalescing (they are not a merge key)
+        let a = TaskToken::new(2, Range::new(0, 8), 1.0);
+        let mut b = TaskToken::new(2, Range::new(8, 16), 1.0);
+        b.record_hop();
+        assert!(a.can_coalesce(&b));
+        assert_eq!(a.coalesce(&b).task, Range::new(0, 16));
     }
 
     #[test]

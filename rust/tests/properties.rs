@@ -11,6 +11,7 @@ use arena::placement::{Directory, Layout};
 use arena::prop_assert;
 use arena::proptest_lite::forall;
 use arena::ring::RingNet;
+use arena::sched::{DispatchPolicy, Greedy, SchedCtx};
 use arena::sim::Engine as Des;
 use arena::token::{Range, TaskToken};
 use arena::{api, util::Rng};
@@ -67,6 +68,71 @@ fn filter_partitions_every_token() {
         }
         Ok(())
     });
+}
+
+/// Extraction guard: the `sched::Greedy` policy (the moved filter the
+/// runtime actually runs) must be bitwise-equal to the seed
+/// `dispatcher::filter` for every token × local-range geometry — same
+/// case, same pieces (every field, including the sim-side hop count),
+/// same cycle cost. All four FilterCases must be exercised, so the
+/// equivalence isn't vacuous over a lopsided sample.
+#[test]
+fn greedy_bitwise_equals_seed_filter() {
+    let mut hit = [0u64; 4];
+    forall("greedy-vs-seed", 4000, 0x62EED, |rng| {
+        let local = random_range(rng, 1000);
+        let mut t = TaskToken::new(
+            1 + rng.below(14) as u8,
+            random_range(rng, 1200),
+            rng.f32_range(-10.0, 10.0),
+        )
+        .from_node(rng.below(16) as u8);
+        // hops and REMOTE must ride along untouched
+        for _ in 0..rng.below(6) {
+            t.record_hop();
+        }
+        if rng.below(4) == 0 {
+            t = t.with_remote(random_range(rng, 500));
+        }
+        let seed_out = filter(&t, local);
+        let ctx = SchedCtx { nodes: 1 + rng.below(128) as usize };
+        let new_out = Greedy.classify(&t, local, &ctx);
+        prop_assert!(
+            new_out.case == seed_out.case,
+            "case diverged: {:?} != {:?}",
+            new_out.case,
+            seed_out.case
+        );
+        prop_assert!(
+            new_out.cycles == seed_out.cycles,
+            "cycles diverged: {} != {}",
+            new_out.cycles,
+            seed_out.cycles
+        );
+        prop_assert!(
+            new_out.wait == seed_out.wait,
+            "wait pieces diverged: {:?} != {:?}",
+            new_out.wait,
+            seed_out.wait
+        );
+        prop_assert!(
+            new_out.send == seed_out.send,
+            "send pieces diverged: {:?} != {:?}",
+            new_out.send,
+            seed_out.send
+        );
+        hit[match seed_out.case {
+            FilterCase::Convey => 0,
+            FilterCase::Local => 1,
+            FilterCase::SplitSuperset => 2,
+            FilterCase::SplitPartial => 3,
+        }] += 1;
+        Ok(())
+    });
+    assert!(
+        hit.iter().all(|&c| c > 0),
+        "sample missed a FilterCase: convey/local/superset/partial = {hit:?}"
+    );
 }
 
 #[test]

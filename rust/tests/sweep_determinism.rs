@@ -7,6 +7,8 @@ use arena::apps::{self, Scale};
 use arena::cluster::Model;
 use arena::eval;
 use arena::placement::Layout;
+use arena::sched::PolicyKind;
+use arena::serve;
 use arena::sweep::{self, CellStore, Fig, Job};
 
 #[test]
@@ -96,6 +98,84 @@ fn des_determinism_at_128_nodes() {
             "{app}: termination drifted"
         );
     }
+}
+
+fn serve_spec() -> serve::ServeSpec {
+    serve::ServeSpec {
+        trace: serve::parse_trace(
+            "0 0 sssp\n40 2 gemm\n80 1 spmv\n120 3 sssp\n",
+        )
+        .unwrap(),
+        scale: Scale::Small,
+        seed: 0xA2EA,
+        nodes: 4,
+        model: Model::SoftwareCpu,
+    }
+}
+
+/// Open-system determinism: the same trace + seed must render
+/// byte-identical Serve tables for every `--jobs` value (each policy
+/// replay is an independent deterministic simulation; assembly is
+/// single-threaded in policy order — the figure-sweep contract).
+#[test]
+fn serve_tables_bit_identical_across_jobs() {
+    let spec = serve_spec();
+    let policies: Vec<(PolicyKind, u32)> =
+        PolicyKind::ALL.iter().map(|&k| (k, 500)).collect();
+    let serial = serve::run_ab(&spec, &policies, 1).unwrap();
+    let par = serve::run_ab(&spec, &policies, 8).unwrap();
+    assert_eq!(serial.cells, par.cells, "same policy set");
+    assert_eq!(serial.tables.len(), par.tables.len());
+    assert_eq!(
+        serial.render(),
+        par.render(),
+        "serve tables must be byte-identical for every --jobs value"
+    );
+    // one per-job table per policy plus the A/B summary
+    assert_eq!(serial.tables.len(), PolicyKind::ALL.len() + 1);
+}
+
+/// The policy axis must matter: on the checked-in mixed trace the
+/// strawman policies land measurably away from greedy (this is the
+/// §acceptance "measurable makespan/latency difference", pinned here
+/// so the checked-in Serve table can't silently go flat).
+#[test]
+fn serve_policies_measurably_differ() {
+    let spec = serve_spec();
+    let out = serve::run_ab(
+        &spec,
+        &[
+            (PolicyKind::Greedy, 500),
+            (PolicyKind::LocalityThreshold, 900),
+            (PolicyKind::ConveyOnly, 500),
+        ],
+        4,
+    )
+    .unwrap();
+    let summary = out.tables.last().unwrap();
+    let mk = |row: &str| summary.get(row, 0).unwrap();
+    let p95 = |row: &str| summary.get(row, 3).unwrap();
+    let g_mk = mk("greedy");
+    let g_p95 = p95("greedy");
+    assert!(
+        (mk("locality(0.900)") - g_mk).abs() / g_mk > 0.001
+            || (p95("locality(0.900)") - g_p95).abs() / g_p95 > 0.001,
+        "locality(0.9) indistinguishable from greedy: mk {} vs {}, p95 {} \
+         vs {}",
+        mk("locality(0.900)"),
+        g_mk,
+        p95("locality(0.900)"),
+        g_p95
+    );
+    assert!(
+        (mk("convey") - g_mk).abs() / g_mk > 0.001
+            || (p95("convey") - g_p95).abs() / g_p95 > 0.001,
+        "convey indistinguishable from greedy: mk {} vs {}, p95 {} vs {}",
+        mk("convey"),
+        g_mk,
+        p95("convey"),
+        g_p95
+    );
 }
 
 #[test]
