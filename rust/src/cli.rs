@@ -1,10 +1,23 @@
 //! Tiny argument parser (no clap in the offline registry).
 //!
 //! Grammar: `arena <command> [positional...] [--flag] [--opt value]
-//! [--set key=value ...]`. Unknown options are errors; `--help` is the
-//! caller's job (the launcher prints its own usage).
+//! [--set key=value ...]`. `--help` is the caller's job (the launcher
+//! prints its own usage). Two guards keep the CLI honest:
+//!
+//! * [`ensure_known`] — each command declares the flags/options it
+//!   actually consumes and everything else is a clear error. The old
+//!   behaviour silently swallowed unknown `--flags` and dropped
+//!   `--set`/`--policy`/… on commands that never read them (PR 4 found
+//!   `--layout` dropped on `run`; the audit found the same failure
+//!   shape on `fig` and `sweep`).
+//! * [`build_config`] — the single CLI→[`ArenaConfig`] translation,
+//!   shared by `run`/`sweep`/`config` and pinned by a round-trip test
+//!   asserting every config-affecting flag changes the effective
+//!   config.
 
 use std::collections::BTreeMap;
+
+use crate::config::ArenaConfig;
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -60,6 +73,84 @@ pub fn parse(
         }
     }
     Ok(args)
+}
+
+/// CLI option name → config key, for every flag that feeds the
+/// effective [`ArenaConfig`]. One table so `build_config` and the
+/// round-trip test cannot drift apart: a new config-affecting option
+/// is added here (and sampled in the test) or it does not exist.
+pub const CONFIG_OPTS: [(&str, &str); 7] = [
+    ("nodes", "nodes"),
+    ("seed", "seed"),
+    ("layout", "layout"),
+    ("policy", "policy"),
+    ("theta", "theta"),
+    ("inject-node", "inject_node"),
+    ("topology", "topology"),
+];
+
+/// Build the effective config: `--config FILE` base (Table-2 defaults
+/// otherwise), then the named options, then `--set k=v` overrides in
+/// order. Each step re-validates, so e.g. shrinking the ring under a
+/// config file's `inject_node` is a clean error.
+pub fn build_config(args: &Args) -> Result<ArenaConfig, String> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => ArenaConfig::load(std::path::Path::new(path))
+            .map_err(|e| e.to_string())?,
+        None => ArenaConfig::default(),
+    };
+    for (opt, key) in CONFIG_OPTS {
+        if let Some(v) = args.opt(opt) {
+            cfg.set(key, v).map_err(|e| e.to_string())?;
+        }
+    }
+    for (k, v) in &args.sets {
+        cfg.set(k, v).map_err(|e| e.to_string())?;
+    }
+    Ok(cfg)
+}
+
+/// Reject anything the command does not consume: unknown flags,
+/// options that would be silently dropped, `--set` on commands that
+/// never build a config, and positional arguments on commands that
+/// take none. Callers pass the exact sets they read.
+pub fn ensure_known(
+    args: &Args,
+    flags: &[&str],
+    opts: &[&str],
+    allow_sets: bool,
+    allow_positional: bool,
+) -> Result<(), ParseError> {
+    let cmd = args.command.as_deref().unwrap_or("");
+    for f in &args.flags {
+        if !flags.contains(&f.as_str()) {
+            return Err(ParseError(format!(
+                "unknown flag --{f} for '{cmd}'"
+            )));
+        }
+    }
+    for k in args.options.keys() {
+        if !opts.contains(&k.as_str()) {
+            return Err(ParseError(format!(
+                "--{k} does not apply to '{cmd}' (it would be silently \
+                 dropped)"
+            )));
+        }
+    }
+    if !allow_sets && !args.sets.is_empty() {
+        return Err(ParseError(format!(
+            "--set overrides do not apply to '{cmd}' (they would be \
+             silently dropped)"
+        )));
+    }
+    if !allow_positional && !args.positional.is_empty() {
+        return Err(ParseError(format!(
+            "unexpected argument '{}' for '{cmd}' (it would be silently \
+             dropped)",
+            args.positional[0]
+        )));
+    }
+    Ok(())
 }
 
 impl Args {
@@ -127,5 +218,87 @@ mod tests {
         assert!(parse(&sv(&["--set", "novalue"]), &[]).is_err());
         let a = parse(&sv(&["run", "--nodes", "x"]), &["nodes"]).unwrap();
         assert!(a.parse_opt::<usize>("nodes").is_err());
+    }
+
+    #[test]
+    fn ensure_known_rejects_silently_dropped_knobs() {
+        let a = parse(&sv(&["fig", "10", "--jobs", "4"]), &["jobs"]).unwrap();
+        let e =
+            ensure_known(&a, &[], &["scale", "seed"], false, true).unwrap_err();
+        assert!(e.to_string().contains("--jobs"), "{e}");
+        let a = parse(&sv(&["run", "--engin"]), &[]).unwrap();
+        let e = ensure_known(&a, &["engine"], &[], true, false).unwrap_err();
+        assert!(e.to_string().contains("--engin"), "{e}");
+        let a = parse(&sv(&["fig", "--set", "nodes=8"]), &[]).unwrap();
+        let e = ensure_known(&a, &[], &[], false, true).unwrap_err();
+        assert!(e.to_string().contains("--set"), "{e}");
+        // stray positionals are rejected on commands that take none
+        // (`arena run gemm` — the user forgot --app)
+        let a = parse(&sv(&["run", "gemm"]), &[]).unwrap();
+        let e = ensure_known(&a, &[], &[], true, false).unwrap_err();
+        assert!(e.to_string().contains("gemm"), "{e}");
+        // everything declared passes
+        let a = parse(
+            &sv(&["run", "--engine", "--nodes", "8", "--set", "seed=1"]),
+            &["nodes"],
+        )
+        .unwrap();
+        ensure_known(&a, &["engine"], &["nodes"], true, false).unwrap();
+    }
+
+    /// The CLI→config audit, pinned: every public config-affecting
+    /// flag must visibly change the effective `ArenaConfig` (PR 4
+    /// found `--layout` silently dropped on `run`; this test makes the
+    /// whole class of bug impossible to reintroduce quietly).
+    #[test]
+    fn every_config_flag_reaches_the_effective_config() {
+        // one non-default sample value per entry of CONFIG_OPTS; a new
+        // entry without a sample is a hard test failure by design
+        let sample = |opt: &str| -> &'static str {
+            match opt {
+                "nodes" => "8",
+                "seed" => "0x7",
+                "layout" => "cyclic",
+                "policy" => "convey",
+                "theta" => "0.9",
+                "inject-node" => "2",
+                "topology" => "ideal",
+                other => panic!(
+                    "CONFIG_OPTS gained '{other}' without a round-trip \
+                     sample — extend this test"
+                ),
+            }
+        };
+        let valued: Vec<&str> = CONFIG_OPTS.iter().map(|(o, _)| *o).collect();
+        let default = ArenaConfig::default();
+        for (opt, key) in CONFIG_OPTS {
+            let argv = sv(&["run", &format!("--{opt}"), sample(opt)]);
+            let a = parse(&argv, &valued).unwrap();
+            let cfg = build_config(&a).unwrap();
+            assert_ne!(
+                cfg, default,
+                "--{opt} was dropped on the way to the config"
+            );
+            assert_ne!(
+                cfg.dump(),
+                default.dump(),
+                "--{opt} must be visible in the flat dump (key {key})"
+            );
+        }
+        // --set reaches the config through the same path
+        let a = parse(&sv(&["run", "--set", "packet_bytes=256"]), &[]).unwrap();
+        assert_eq!(build_config(&a).unwrap().packet_bytes, 256);
+        // option values themselves land on the right field
+        let a = parse(
+            &sv(&["run", "--topology", "torus2d", "--theta", "0.25"]),
+            &valued,
+        )
+        .unwrap();
+        let cfg = build_config(&a).unwrap();
+        assert_eq!(cfg.topology, crate::net::Topology::Torus2D);
+        assert_eq!(cfg.theta_pm, 250);
+        // and a bad value is a clean error, not a silent default
+        let a = parse(&sv(&["run", "--topology", "mesh"]), &valued).unwrap();
+        assert!(build_config(&a).is_err());
     }
 }

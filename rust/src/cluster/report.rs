@@ -67,12 +67,16 @@ pub struct RunReport {
     pub app: String,
     pub model: &'static str,
     pub nodes: usize,
+    /// Interconnect topology the run used (`ring` | `biring` | …).
+    pub topology: &'static str,
     /// Data-placement layout the run used (`block` | `cyclic` | …).
     pub layout: &'static str,
     /// Dispatch policy label (`greedy` | `locality(θ)` | `convey`).
     pub policy: String,
     /// Wall-clock of the simulated run (first injection -> quiescence).
     pub makespan_ps: Ps,
+    /// Network traffic counters. The field keeps its historic name;
+    /// the stats come from whichever interconnect topology ran.
     pub ring: RingStats,
     pub dispatcher: DispatcherStats,
     pub cgra: CgraStats,
@@ -232,10 +236,11 @@ impl Cluster {
                 .join("+"),
             model: self.model.label(),
             nodes: self.nodes.len(),
+            topology: self.net.label(),
             layout: self.cfg.layout.label(),
             policy: self.policy.label(),
             makespan_ps: makespan,
-            ring: self.ring.stats.clone(),
+            ring: self.net.stats().clone(),
             dispatcher,
             cgra,
             coalesce,

@@ -246,16 +246,27 @@ impl Cluster {
         // (3)-(5) execution path: consider the head of the wait queue.
         progress |= self.try_launch(des, now, n, engine);
 
-        // forward everything queued for the next hop; the link model
-        // serializes back-to-back sends. TERMINATE never transits the
-        // send queue (the runtime handles it out-of-band in
-        // finish_terminate), so lap accounting lives there alone —
-        // this drain used to double-count probes at a second site.
+        // forward everything queued for the network; the link model
+        // serializes back-to-back sends. Each token advances one link
+        // toward the home of its leading address (the unidirectional
+        // ring ignores the hint and conveys clockwise, the seed
+        // semantics) and lands in the next dispatcher, which classifies
+        // it in turn. TERMINATE never transits the send queue (the
+        // runtime handles it out-of-band in finish_terminate), so lap
+        // accounting lives there alone — this drain used to
+        // double-count probes at a second site.
         while let Some(mut t) = self.nodes[n].disp.send.pop() {
             debug_assert!(!t.is_terminate(), "TERMINATE in the send queue");
             t.record_hop();
-            let at = self.ring.send_token(&self.cfg, now, n);
-            let next = self.ring.next_hop(n);
+            // the home lookup (kernel + directory walk) is skipped on
+            // fabrics that ignore the hint — the default ring's send
+            // drain stays exactly the seed hot path
+            let dest = if self.net.routes_by_dest() {
+                self.token_home(n, &t)
+            } else {
+                n // "no better direction": advance the coverage cycle
+            };
+            let (at, next) = self.net.send_token(&self.cfg, now, n, dest);
             des.schedule_at(at, Ev::Arrive(next, t));
             progress = true;
         }
@@ -434,12 +445,12 @@ impl Cluster {
                 return now;
             }
             // request header is control traffic, the payload is data
-            let req_at = self.ring.send_ctrl(&self.cfg, now, n, src, WIRE_BYTES);
-            return self.ring.send_data(&self.cfg, req_at, src, n, words * WORD_BYTES);
+            let req_at = self.net.send_ctrl(&self.cfg, now, n, src, WIRE_BYTES);
+            return self.net.send_data(&self.cfg, req_at, src, n, words * WORD_BYTES);
         }
         // walk the remote range extent by extent (owner lookup is the
         // directory's O(1)/O(log n) hot path, not a linear scan)
-        let Cluster { dirs, ring, cfg, nodes, app_stats, .. } = self;
+        let Cluster { dirs, net, cfg, nodes, app_stats, .. } = self;
         let dir = &dirs[app_idx];
         let mut t_done = now;
         let mut at = tok.remote.start;
@@ -451,9 +462,9 @@ impl Cluster {
             app_stats[app_idx].touched_words += words;
             if owner != n {
                 // request message out (control), payload back (data).
-                let req_at = ring.send_ctrl(cfg, now, n, owner, WIRE_BYTES);
+                let req_at = net.send_ctrl(cfg, now, n, owner, WIRE_BYTES);
                 let got =
-                    ring.send_data(cfg, req_at, owner, n, words * WORD_BYTES);
+                    net.send_data(cfg, req_at, owner, n, words * WORD_BYTES);
                 t_done = t_done.max(got);
             } else {
                 nodes[n].stats.local_hit_words += words;

@@ -1,6 +1,15 @@
 //! The two-pass TERMINATE protocol (paper Fig. 5): a probe circulates
 //! behind the last injected root tokens; a node exits on its second
 //! consecutive clean pass; the last exiting node swallows the probe.
+//!
+//! The protocol is topology-agnostic by construction: the probe always
+//! walks the **coverage cycle** `0 → 1 → … → n-1 → 0` exposed by
+//! [`crate::net::Interconnect::next_hop`], delivered per step as one
+//! routed unit ([`crate::net::Interconnect::probe_hop`]) so it is never
+//! re-dispatched at en-route nodes — each circulation visits each node
+//! exactly once, on the ring and on every other topology, and the
+//! "two consecutive clean passes" argument holds verbatim. "Laps" are
+//! therefore coverage circulations, not physical ring laps.
 
 use crate::config::Ps;
 use crate::sim::Engine as Des;
@@ -13,8 +22,8 @@ impl Cluster {
     /// TERMINATE handled at a quiescent node: count the pass, forward
     /// the probe, exit on the second consecutive clean pass.
     ///
-    /// `terminate_laps` counts *completed circulations*: the probe
-    /// crossing back to the node it was injected at (`probe_origin` —
+    /// `terminate_laps` counts *completed coverage circulations*: the
+    /// probe crossing back to the node it was injected at (`probe_origin` —
     /// node 0 for the default closed run, the last arrival's node for
     /// open-system traces; counting `next == 0` regardless of origin
     /// would book a partial first lap as complete under `--inject-node
@@ -35,8 +44,8 @@ impl Cluster {
             // the last node swallows the probe so the DES can drain
             return;
         }
-        let at = self.ring.send_token(&self.cfg, now, n);
-        let next = self.ring.next_hop(n);
+        let at = self.net.probe_hop(&self.cfg, now, n);
+        let next = self.net.next_hop(n);
         if next == self.probe_origin {
             self.terminate_laps += 1;
         }

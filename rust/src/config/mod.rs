@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
 
+use crate::net::Topology;
 use crate::placement::Layout;
 use crate::sched::{DispatchPolicy, PolicyKind};
 
@@ -65,6 +66,14 @@ pub struct ArenaConfig {
     /// Ring node the leader injects root tokens at (`arena run
     /// --inject-node N`; open-system traces override it per arrival).
     pub inject_node: usize,
+    /// Interconnect topology (`ring` reproduces the paper exactly; see
+    /// [`crate::net`]).
+    pub topology: Topology,
+    /// Data-plane packetization: `0` = store-and-forward whole
+    /// messages per hop (the seed timing, bit for bit); `P > 0` = cut
+    /// through after a `P`-byte head packet (latency pipelines across
+    /// hops, bandwidth is unchanged).
+    pub packet_bytes: u64,
     /// Workload RNG seed (also feeds the `shuffle` placement).
     pub seed: u64,
 }
@@ -125,6 +134,8 @@ impl Default for ArenaConfig {
             policy: PolicyKind::Greedy,
             theta_pm: 500,
             inject_node: 0,
+            topology: Topology::Ring,
+            packet_bytes: 0,
             seed: 0xA2EA,
         }
     }
@@ -174,6 +185,16 @@ impl ArenaConfig {
 
     pub fn with_theta_pm(mut self, theta_pm: u32) -> Self {
         self.theta_pm = theta_pm;
+        self
+    }
+
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    pub fn with_packet_bytes(mut self, packet_bytes: u64) -> Self {
+        self.packet_bytes = packet_bytes;
         self
     }
 
@@ -261,6 +282,12 @@ impl ArenaConfig {
                 next.theta_pm = (theta * 1000.0).round() as u32;
             }
             "inject_node" => next.inject_node = parse!(val),
+            "topology" => {
+                next.topology = Topology::parse(val).ok_or_else(|| {
+                    ConfigError::BadValue(key.into(), val.into())
+                })?
+            }
+            "packet_bytes" => next.packet_bytes = parse!(val),
             "seed" => next.seed = parse_seed(val).map_err(bad!())?,
             _ => return Err(ConfigError::UnknownKey(key.into())),
         }
@@ -348,6 +375,8 @@ impl ArenaConfig {
         m.insert("policy", self.policy.name().to_string());
         m.insert("theta", (self.theta_pm as f64 / 1000.0).to_string());
         m.insert("inject_node", self.inject_node.to_string());
+        m.insert("topology", self.topology.label().to_string());
+        m.insert("packet_bytes", self.packet_bytes.to_string());
         m.insert("seed", self.seed.to_string());
         m.iter()
             .map(|(k, v)| format!("{k} = {v}\n"))
@@ -463,6 +492,25 @@ mod tests {
         assert!(err.to_string().contains("out of range"), "{err}");
         // shrinking the ring under the inject node is rejected too
         assert!(c.set("nodes", "2").is_err());
+    }
+
+    #[test]
+    fn topology_and_packet_knobs() {
+        let mut c = ArenaConfig::default();
+        assert_eq!(c.topology, Topology::Ring, "ring is the paper default");
+        assert_eq!(c.packet_bytes, 0, "store-and-forward is the default");
+        c.set("topology", "torus2d").unwrap();
+        assert_eq!(c.topology, Topology::Torus2D);
+        c.set("packet_bytes", "256").unwrap();
+        assert_eq!(c.packet_bytes, 256);
+        assert!(c.set("topology", "mesh3d").is_err());
+        assert!(c.set("packet_bytes", "nope").is_err());
+        // both round-trip through dump/load
+        let dir = std::env::temp_dir().join("arena_cfg_topo_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.txt");
+        std::fs::write(&path, c.dump()).unwrap();
+        assert_eq!(ArenaConfig::load(&path).unwrap(), c);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::apps::{make_app, Scale, ALL};
 use crate::cluster::{Cluster, Model, RunReport};
 use crate::config::ArenaConfig;
 use crate::mapper::kernels::kernel_for;
+use crate::net::Topology;
 use crate::placement::Layout;
 use crate::power::{area, power, Activity};
 use crate::runtime::Engine;
@@ -131,7 +132,7 @@ pub fn run_arena(
 }
 
 /// Run one ARENA simulation under an explicit data-placement layout
-/// (the skew-sensitivity axis).
+/// (the skew-sensitivity axis), on the paper's ring.
 pub fn run_arena_at(
     app: &str,
     scale: Scale,
@@ -141,10 +142,26 @@ pub fn run_arena_at(
     layout: Layout,
     engine: Option<&mut Engine>,
 ) -> RunReport {
+    run_arena_cell(app, scale, seed, nodes, model, layout, Topology::Ring, engine)
+}
+
+/// Run one ARENA simulation under an explicit layout *and* interconnect
+/// topology — the fully keyed sweep cell (skew and topology axes).
+pub fn run_arena_cell(
+    app: &str,
+    scale: Scale,
+    seed: u64,
+    nodes: usize,
+    model: Model,
+    layout: Layout,
+    topo: Topology,
+    engine: Option<&mut Engine>,
+) -> RunReport {
     let cfg = ArenaConfig::default()
         .with_nodes(nodes)
         .with_seed(seed)
-        .with_layout(layout);
+        .with_layout(layout)
+        .with_topology(topo);
     run_arena_with(app, scale, cfg, model, engine)
 }
 
@@ -405,6 +422,75 @@ pub fn skew_with(store: &mut CellStore) -> Vec<Table> {
         out.push(mk);
         out.push(mv);
         out.push(loc);
+    }
+    out
+}
+
+/// Topology-sensitivity sweep (`arena sweep --all-topologies`):
+/// makespan and total movement of every app under every interconnect
+/// topology, per execution model, on the Fig. 10 cluster size at the
+/// block layout. Both metrics are normalized to the paper's ring
+/// (ring ≡ 1.0), so the table reads directly as "what does the fabric
+/// buy": values < 1 mean the richer topology beats the ring, values
+/// > 1 mean the ring was already a good answer to its own question.
+/// Assembled from the memoized store — bit-identical for any `--jobs`
+/// value.
+pub fn topo_with(store: &mut CellStore) -> Vec<Table> {
+    let headers: Vec<String> =
+        Topology::ALL.iter().map(|t| t.label().to_string()).collect();
+    let href: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut out = Vec::new();
+    for model in [Model::SoftwareCpu, Model::Cgra] {
+        let mut mk = Table::new(
+            &format!(
+                "Topology A — makespan vs topology (norm. to ring), {}, \
+                 {} nodes",
+                model.label(),
+                SKEW_NODES
+            ),
+            &href,
+        );
+        let mut mv = Table::new(
+            &format!(
+                "Topology B — total movement in byte-hops vs topology \
+                 (norm. to ring), {}, {} nodes",
+                model.label(),
+                SKEW_NODES
+            ),
+            &href,
+        );
+        for app in ALL {
+            let (base_mk, base_mv) = {
+                let r = store.arena_cell(
+                    app,
+                    SKEW_NODES,
+                    model,
+                    Layout::Block,
+                    Topology::Ring,
+                );
+                (
+                    r.makespan_ps as f64,
+                    r.total_movement_bytes().max(1) as f64,
+                )
+            };
+            let mut vmk = Vec::new();
+            let mut vmv = Vec::new();
+            for &t in &Topology::ALL {
+                let r = store.arena_cell(
+                    app,
+                    SKEW_NODES,
+                    model,
+                    Layout::Block,
+                    t,
+                );
+                vmk.push(r.makespan_ps as f64 / base_mk);
+                vmv.push(r.total_movement_bytes() as f64 / base_mv);
+            }
+            mk.row(app, vmk);
+            mv.row(app, vmv);
+        }
+        out.push(mk);
+        out.push(mv);
     }
     out
 }

@@ -43,6 +43,7 @@ pub mod config;
 pub mod eval;
 pub mod dispatcher;
 pub mod mapper;
+pub mod net;
 pub mod node;
 pub mod placement;
 pub mod power;

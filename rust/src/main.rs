@@ -20,10 +20,11 @@
 use arena::apps::{Scale, ALL};
 use arena::baseline::{run_bsp, serial_ps};
 use arena::benchkit;
-use arena::cli;
+use arena::cli::{self, build_config};
 use arena::cluster::{Model, RunReport};
 use arena::config::ArenaConfig;
 use arena::eval;
+use arena::net::Topology;
 use arena::placement::Layout;
 use arena::runtime::Engine;
 use arena::sched::PolicyKind;
@@ -41,30 +42,36 @@ usage: arena <command> [options]
 commands:
   run     --app <name> --model <model> [--nodes N] [--scale small|paper]
           [--seed S] [--layout L] [--policy P] [--theta X]
-          [--inject-node N] [--engine] [--config FILE] [--set k=v ...]
+          [--inject-node N] [--topology T] [--engine] [--config FILE]
+          [--set k=v ...]
   fig     <9|10|11|12|13|all> [--scale small|paper] [--seed S]
   serve   --trace FILE [--policy P] [--theta X] [--ab] [--model M]
           [--nodes N] [--scale small|paper] [--seed S] [--jobs N]
-          [--bench-json FILE]
+          [--topology T] [--set k=v ...] [--bench-json FILE]
           replay an open-system job trace (arrival-timed mixed apps)
           and report throughput + p50/p95/p99 latency; --ab replays
           the trace under every policy on a worker pool
   sweep   [--all | 9 10 11 12 13] [--jobs N] [--scale small|paper]
-          [--seed S] [--layout L] [--nodes N] [--bench-json FILE]
+          [--seed S] [--layout L] [--topology T] [--nodes N]
+          [--bench-json FILE]
           regenerate figures on a worker pool; output is bit-identical
           for every --jobs value. --nodes extends the sweep with a
           large-scale axis (powers of two up to N, max 128);
           --bench-json records per-job wall-clock + allocator stats
   sweep   --all-layouts [--jobs N] [--scale small|paper] [--seed S]
           skew-sensitivity sweep: every app x model x layout
+  sweep   --all-topologies [--jobs N] [--scale small|paper] [--seed S]
+          topology-sensitivity sweep: every app x model x interconnect
   sweep   --serve TRACE [--jobs N] [--theta X] [...]
           serve-table extension: the trace under every policy
   apps    list applications and models
   config  [--config FILE] [--set k=v ...]   print effective config
 
-models:   arena-cgra | arena-sw | bsp-cpu | bsp-cgra | serial
-layouts:  block | cyclic | zipf | shuffle
-policies: greedy | locality (with --theta X in [0,1]) | convey
+models:     arena-cgra | arena-sw | bsp-cpu | bsp-cgra | serial
+layouts:    block | cyclic | zipf | shuffle
+policies:   greedy | locality (with --theta X in [0,1]) | convey
+topologies: ring | biring | torus2d | ideal (--set packet_bytes=P for
+            cut-through packetization; 0 = store-and-forward)
 ";
 
 fn main() {
@@ -79,7 +86,7 @@ fn main() {
         &[
             "app", "model", "nodes", "scale", "seed", "config", "fig",
             "jobs", "layout", "bench-json", "trace", "policy", "theta",
-            "inject-node", "serve",
+            "inject-node", "serve", "topology",
         ],
     ) {
         Ok(a) => a,
@@ -88,6 +95,60 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Per-command strictness: reject flags/options/positionals the
+    // command would silently drop (the CLI→config audit; see
+    // cli::ensure_known). Commands that honor the config knobs derive
+    // that part of their allowlist from cli::CONFIG_OPTS, so a new
+    // knob cannot be accepted by build_config yet rejected here.
+    let known = match args.command.as_deref() {
+        Some("run") => cli::ensure_known(
+            &args,
+            &["engine"],
+            &config_opts(&["app", "model", "scale", "config"]),
+            true,
+            false,
+        ),
+        Some("fig") => cli::ensure_known(
+            &args,
+            &[],
+            &["scale", "seed", "fig"],
+            false,
+            true, // figure numbers are positional
+        ),
+        Some("serve") => cli::ensure_known(
+            &args,
+            &["ab"],
+            &[
+                "trace", "policy", "theta", "model", "nodes", "scale",
+                "seed", "jobs", "topology", "bench-json",
+            ],
+            true, // --set reaches the replay config (serve::ServeSpec)
+            false,
+        ),
+        Some("sweep") => cli::ensure_known(
+            &args,
+            &["all", "all-layouts", "all-topologies"],
+            &[
+                "jobs", "scale", "seed", "layout", "topology", "nodes",
+                "bench-json", "serve", "theta", "model",
+            ],
+            false,
+            true, // figure numbers are positional
+        ),
+        Some("apps") => cli::ensure_known(&args, &[], &[], false, false),
+        Some("config") => cli::ensure_known(
+            &args,
+            &[],
+            &config_opts(&["config"]),
+            true,
+            false,
+        ),
+        _ => Ok(()),
+    };
+    if let Err(e) = known {
+        eprintln!("error: {e}\n{USAGE}");
+        std::process::exit(2);
+    }
     let code = match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("fig") => cmd_fig(&args),
@@ -107,38 +168,13 @@ fn main() {
     std::process::exit(code);
 }
 
-fn build_config(args: &cli::Args) -> Result<ArenaConfig, String> {
-    let mut cfg = match args.opt("config") {
-        Some(path) => ArenaConfig::load(std::path::Path::new(path))
-            .map_err(|e| e.to_string())?,
-        None => ArenaConfig::default(),
-    };
-    if let Some(n) = args.opt("nodes") {
-        // through set(), not a raw field write: re-validates the ring
-        // size against inject_node (a config file can legitimately set
-        // inject_node high; shrinking the ring under it must be the
-        // clean ConfigError, not a runtime assert)
-        cfg.set("nodes", n).map_err(|e| e.to_string())?;
-    }
-    if let Some(s) = args.opt("seed") {
-        cfg.set("seed", s).map_err(|e| e.to_string())?;
-    }
-    if let Some(l) = args.opt("layout") {
-        cfg.set("layout", l).map_err(|e| e.to_string())?;
-    }
-    if let Some(p) = args.opt("policy") {
-        cfg.set("policy", p).map_err(|e| e.to_string())?;
-    }
-    if let Some(t) = args.opt("theta") {
-        cfg.set("theta", t).map_err(|e| e.to_string())?;
-    }
-    if let Some(i) = args.opt("inject-node") {
-        cfg.set("inject_node", i).map_err(|e| e.to_string())?;
-    }
-    for (k, v) in &args.sets {
-        cfg.set(k, v).map_err(|e| e.to_string())?;
-    }
-    Ok(cfg)
+/// `extra` command-specific options plus every config-affecting option
+/// from [`cli::CONFIG_OPTS`] — the allowlist half of the no-drift
+/// design (`build_config` consumes the same table).
+fn config_opts(extra: &[&'static str]) -> Vec<&'static str> {
+    let mut opts = extra.to_vec();
+    opts.extend(cli::CONFIG_OPTS.iter().map(|(o, _)| *o));
+    opts
 }
 
 fn scale_of(args: &cli::Args) -> Result<Scale, String> {
@@ -166,6 +202,7 @@ fn print_report(r: &RunReport, serial: f64) {
     println!("app                {}", r.app);
     println!("model              {}", r.model);
     println!("nodes              {}", r.nodes);
+    println!("topology           {}", r.topology);
     println!("layout             {}", r.layout);
     println!("policy             {}", r.policy);
     println!("makespan           {:.3} ms", r.makespan_ms());
@@ -369,7 +406,27 @@ fn serve_spec_of(
             ))
         }
     };
-    Ok(serve::ServeSpec { trace, scale, seed, nodes, model })
+    let topology = parse_topology(args)?;
+    Ok(serve::ServeSpec {
+        trace,
+        scale,
+        seed,
+        nodes,
+        model,
+        topology,
+        overrides: args.sets.clone(),
+    })
+}
+
+/// `--topology T` (shared by serve and the figure sweep; `run` goes
+/// through the config's own `topology` knob via `build_config`).
+fn parse_topology(args: &cli::Args) -> Result<Topology, String> {
+    match args.opt("topology") {
+        Some(t) => Topology::parse(t).ok_or_else(|| {
+            format!("unknown topology '{t}' (ring|biring|torus2d|ideal)")
+        }),
+        None => Ok(Topology::Ring),
+    }
 }
 
 /// Shared by `arena serve` and `arena sweep --serve TRACE`: replay the
@@ -464,7 +521,31 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
     let run = || -> Result<(), String> {
         if let Some(trace) = args.opt("serve") {
             // serve-table extension: the trace under every policy, on
-            // the same worker-pool + deterministic-assembly contract
+            // the same worker-pool + deterministic-assembly contract.
+            // Figure-sweep knobs do not apply and must not be silently
+            // dropped.
+            if args.opt("layout").is_some() {
+                return Err(
+                    "--layout does not apply to `sweep --serve TRACE` \
+                     (the replay runs on the block layout)"
+                        .into(),
+                );
+            }
+            for flag in ["all", "all-layouts", "all-topologies"] {
+                if args.flag(flag) {
+                    return Err(format!(
+                        "--{flag} does not apply to `sweep --serve TRACE` \
+                         (pick one sweep per invocation)"
+                    ));
+                }
+            }
+            if !args.positional.is_empty() {
+                return Err(format!(
+                    "unexpected argument '{}': `sweep --serve` takes no \
+                     figure numbers",
+                    args.positional[0]
+                ));
+            }
             return run_serve(args, trace, true);
         }
         let scale = scale_of(args)?;
@@ -487,29 +568,65 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                 ));
             }
         }
-        if args.flag("all-layouts") {
+        if args.flag("all-layouts") && args.flag("all-topologies") {
+            return Err(
+                "pick one of --all-layouts / --all-topologies (the sweeps \
+                 are separate tables; run them as two invocations)"
+                    .into(),
+            );
+        }
+        if args.flag("all-layouts") || args.flag("all-topologies") {
+            let (what, axis_err) = if args.flag("all-layouts") {
+                ("skew", "--all-layouts")
+            } else {
+                ("topology", "--all-topologies")
+            };
             if max_nodes.is_some() {
-                return Err(
+                return Err(format!(
                     "--nodes is a figure-sweep axis; it does not apply to \
-                     --all-layouts (the skew sweep is fixed at the Fig. 10 \
+                     {axis_err} (the sweep is fixed at the Fig. 10 \
                      cluster size)"
-                        .into(),
-                );
+                ));
+            }
+            // these sweeps enumerate their own axis at Table-2 defaults
+            // for everything else — rejecting the knobs keeps "it ran"
+            // from meaning "it measured what you asked for"
+            for opt in ["layout", "topology", "theta", "model"] {
+                if args.opt(opt).is_some() {
+                    return Err(format!(
+                        "--{opt} does not apply to {axis_err} (the sweep \
+                         pins every other knob to the Table-2 defaults)"
+                    ));
+                }
             }
             let t0 = std::time::Instant::now();
-            let out = sweep::run_skew(scale, seed, jobs);
+            let out = if args.flag("all-layouts") {
+                sweep::run_skew(scale, seed, jobs)
+            } else {
+                sweep::run_topo(scale, seed, jobs)
+            };
             print!("{}", out.render());
             let wall = t0.elapsed();
             if let Some(path) = args.opt("bench-json") {
                 write_sweep_bench_json(path, &out, wall, scale, seed, None)?;
             }
             eprintln!(
-                "skew sweep: {} unique cells on {} worker(s) in {:.2}s",
+                "{what} sweep: {} unique cells on {} worker(s) in {:.2}s",
                 out.cells,
                 out.workers,
                 wall.as_secs_f64()
             );
             return Ok(());
+        }
+        // the figure sweep consumes --layout/--topology; --theta and
+        // --model only apply to `sweep --serve TRACE`
+        for opt in ["theta", "model"] {
+            if args.opt(opt).is_some() {
+                return Err(format!(
+                    "--{opt} only applies to `sweep --serve TRACE` \
+                     (the figure sweep pins it to the Table-2 default)"
+                ));
+            }
         }
         let layout = match args.opt("layout") {
             Some(l) => Layout::parse(l).ok_or_else(|| {
@@ -517,6 +634,7 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             })?,
             None => Layout::Block,
         };
+        let topology = parse_topology(args)?;
         if let Some(n) = max_nodes {
             let axis = eval::scale_axis(n, scale);
             // largest power of two <= n is where an unconstrained axis
@@ -544,8 +662,9 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                     .collect::<Result<_, _>>()?
             };
         let t0 = std::time::Instant::now();
-        let out =
-            sweep::run_scaled(&figs, scale, seed, jobs, layout, max_nodes);
+        let out = sweep::run_scaled(
+            &figs, scale, seed, jobs, layout, topology, max_nodes,
+        );
         print!("{}", out.render());
         if let Some(h) = out.headline {
             println!("## §5.2 headline (paper: 1.61x / 2.17x / 4.37x / 53.9%)");

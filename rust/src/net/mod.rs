@@ -1,0 +1,1069 @@
+//! Pluggable interconnect layer (the "why a ring?" axis).
+//!
+//! The paper hardwires one fabric — the unidirectional token ring with
+//! a short-way data-transfer network (§4, Table 2) — and its headline
+//! data-movement claim is measured on it. This module lifts that choice
+//! behind the [`Interconnect`] trait so the same cluster, scheduler and
+//! termination protocol can run over richer on-chip fabrics, the
+//! standard comparison axis in the CGRA literature:
+//!
+//! * [`Ring`] — the seed model, bit-identical to [`crate::ring::RingNet`]
+//!   (pinned by the `net_ring_is_bit_identical_to_seed_ringnet`
+//!   property test). The default: every §5 table is produced under it,
+//!   unchanged.
+//! * [`BiRing`] — a bidirectional token plane. Conveyed tokens take the
+//!   short way around toward their *home* (the owner of their leading
+//!   address) instead of being forced clockwise; the DTN is unchanged.
+//! * [`Torus2D`] — an XY-routed 2D torus (rows × cols, rows the largest
+//!   divisor of `n` at most √n) with per-directed-link busy horizons on
+//!   both planes. Tokens advance one link per dispatcher visit, so
+//!   en-route nodes still classify them, exactly like the ring.
+//! * [`Ideal`] — a contention-free crossbar: every message is one hop
+//!   and no link ever serializes behind another. The upper bound any
+//!   physical topology is judged against.
+//!
+//! ## Coverage circulation and termination
+//!
+//! The ring's lap/termination accounting generalizes to topology-
+//! agnostic **coverage visits**: every topology exposes the same
+//! coverage cycle `0 → 1 → … → n-1 → 0` via [`Interconnect::next_hop`],
+//! and the two-pass TERMINATE probe always walks it — each probe step
+//! is delivered to the coverage successor as one routed unit
+//! ([`Interconnect::probe_hop`]), never re-dispatched at intermediate
+//! nodes, so each circulation visits each node exactly once and the
+//! protocol's "two consecutive clean passes" argument holds verbatim on
+//! every topology. Regular tokens are free to route differently (short
+//! way, XY, crossbar); any token in flight lands within one link time,
+//! strictly less than the probe's full circulation, so it always resets
+//! the clean-pass flags before a premature exit. The
+//! [`crate::token::TaskToken::hops`] counter likewise counts *dispatcher
+//! visits*: after `nodes` visits the locality-threshold policy waives
+//! its filter (the progress guarantee), whether or not those visits
+//! were literally one full ring lap.
+//!
+//! ## Packetization
+//!
+//! The shared transfer path models both switching disciplines. With
+//! `packet_bytes = 0` (the default) a message is store-and-forwarded
+//! whole per hop — the seed timing, bit for bit. With `packet_bytes =
+//! P > 0` the message cuts through: each hop forwards after the head
+//! packet (`min(P, bytes)`), the tail streams behind it, and every
+//! traversed link still serializes the *full* message on its busy
+//! horizon (bandwidth is conserved; only latency pipelines). On a
+//! single hop the two disciplines coincide exactly.
+
+use crate::config::{ArenaConfig, Ps};
+use crate::token::WIRE_BYTES;
+
+/// Byte counters by traffic class — the Fig. 10 breakdown.
+///
+/// Control messages (DTN fetch requests and other small round-trip
+/// headers) are booked separately from bulk payloads: lumping the
+/// 21-byte requests into the `data_*` counters inflated the Fig. 10
+/// "data" bars with traffic that is neither task nor payload movement.
+/// Likewise, messages that never cross a link (`from == to` or zero
+/// bytes) are booked as *local* traffic: counting them as data inflated
+/// movement totals with bytes that never touched the wire.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetStats {
+    pub token_msgs: u64,
+    pub token_bytes: u64,
+    /// Directed token-plane links traversed (task-movement proxy).
+    pub token_hops: u64,
+    pub data_msgs: u64,
+    pub data_bytes: u64,
+    /// data bytes x links traversed (movement energy proxy)
+    pub data_byte_hops: u64,
+    /// DTN control messages (fetch requests).
+    pub ctrl_msgs: u64,
+    pub ctrl_bytes: u64,
+    pub ctrl_byte_hops: u64,
+    /// Same-node or empty transfers: satisfied by the scratchpad, never
+    /// on the wire. Kept out of every movement metric by construction.
+    pub local_msgs: u64,
+    pub local_bytes: u64,
+}
+
+/// Config-level topology selector — `Copy`/`Ord`/`Hash` so sweep job
+/// keys can be sorted and memoized, like [`crate::placement::Layout`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Topology {
+    /// The paper's unidirectional token ring + short-way DTN (default).
+    Ring,
+    /// Bidirectional token plane; tokens take the short way home.
+    BiRing,
+    /// XY-routed 2D torus with per-directed-link busy horizons.
+    Torus2D,
+    /// Contention-free crossbar (upper bound).
+    Ideal,
+}
+
+impl Topology {
+    /// Every shipped topology, in A/B table order.
+    pub const ALL: [Topology; 4] = [
+        Topology::Ring,
+        Topology::BiRing,
+        Topology::Torus2D,
+        Topology::Ideal,
+    ];
+
+    pub fn parse(s: &str) -> Option<Topology> {
+        match s {
+            "ring" => Some(Topology::Ring),
+            "biring" => Some(Topology::BiRing),
+            "torus2d" => Some(Topology::Torus2D),
+            "ideal" => Some(Topology::Ideal),
+            _ => None,
+        }
+    }
+
+    /// Config-file / CLI name (round-trips through [`Self::parse`]).
+    pub fn label(self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::BiRing => "biring",
+            Topology::Torus2D => "torus2d",
+            Topology::Ideal => "ideal",
+        }
+    }
+
+    /// Instantiate the interconnect for an `n`-node cluster.
+    pub fn build(self, n: usize) -> Box<dyn Interconnect> {
+        match self {
+            Topology::Ring => Box::new(Ring::new(n)),
+            Topology::BiRing => Box::new(BiRing::new(n)),
+            Topology::Torus2D => Box::new(Torus2D::new(n)),
+            Topology::Ideal => Box::new(Ideal::new(n)),
+        }
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// The cluster's four network call sites, behind one trait.
+///
+/// Contract: [`Self::next_hop`] is the coverage cycle `(i + 1) % n` on
+/// every topology (the TERMINATE probe and the lap accounting depend on
+/// it); [`Self::send_token`] moves a token exactly one link toward
+/// `dest` and returns where it lands, so intermediate dispatchers still
+/// see it; [`Self::probe_hop`] delivers the TERMINATE probe to the
+/// coverage successor as one routed unit. All returned times are
+/// absolute picosecond timestamps.
+pub trait Interconnect: Send {
+    fn nodes(&self) -> usize;
+
+    /// Topology name (reports / tables).
+    fn label(&self) -> &'static str;
+
+    /// Successor on the coverage cycle (probe circulation + the
+    /// fallback direction for tokens already at their home).
+    fn next_hop(&self, from: usize) -> usize {
+        (from + 1) % self.nodes()
+    }
+
+    /// Whether [`Self::send_token`] consumes the `dest` hint. The
+    /// unidirectional ring does not (tokens always advance along the
+    /// coverage cycle), so the cluster skips the per-token home lookup
+    /// entirely on the default topology — the send drain stays as lean
+    /// as the seed hot path.
+    fn routes_by_dest(&self) -> bool {
+        false
+    }
+
+    /// Forward one task token a single link from `from` toward `dest`;
+    /// returns (arrival time, node it lands at). `dest == from` means
+    /// "no better direction" and advances along the coverage cycle.
+    fn send_token(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        dest: usize,
+    ) -> (Ps, usize);
+
+    /// Deliver the TERMINATE probe from `from` to `next_hop(from)` as
+    /// one routed unit (multi-link on topologies where the coverage
+    /// successor is not adjacent); returns the arrival time.
+    fn probe_hop(&mut self, cfg: &ArenaConfig, now: Ps, from: usize) -> Ps;
+
+    /// Move `bytes` of payload from `from` to `to` over the data plane;
+    /// returns delivery completion time.
+    fn send_data(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps;
+
+    /// Send a small control message (a DTN fetch request). Timing is
+    /// identical to a same-size data transfer — the wire does not care
+    /// — but the bytes are booked as control traffic.
+    fn send_ctrl(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps;
+
+    fn stats(&self) -> &NetStats;
+}
+
+/// One token-plane link traversal (the seed ring's timing): serialize
+/// the 21-byte token on the directed link's busy horizon, then pay the
+/// switch hop latency.
+fn token_link_hop(cfg: &ArenaConfig, busy: &mut Ps, now: Ps) -> Ps {
+    let wire = cfg.wire_ps(WIRE_BYTES);
+    let start = now.max(*busy);
+    *busy = start + wire;
+    start + wire + cfg.hop_latency_ps
+}
+
+/// Shared data-plane timing: move `bytes` along `path` (indices into
+/// `busy`, one per directed link). With `cfg.packet_bytes == 0` this is
+/// the seed's store-and-forward loop bit for bit; with a positive
+/// packet size the head packet cuts through while each link still
+/// serializes the full message (see the module docs).
+fn stream(
+    cfg: &ArenaConfig,
+    busy: &mut [Ps],
+    path: &[usize],
+    now: Ps,
+    bytes: u64,
+) -> Ps {
+    let wire_full = cfg.wire_ps(bytes);
+    let head = if cfg.packet_bytes == 0 {
+        wire_full
+    } else {
+        cfg.wire_ps(cfg.packet_bytes.min(bytes))
+    };
+    let tail = wire_full - head;
+    let mut t = now;
+    for &l in path {
+        let start = t.max(busy[l]);
+        busy[l] = start + wire_full;
+        t = start + head + cfg.hop_latency_ps;
+    }
+    t + tail
+}
+
+/// Book one local (never-on-the-wire) transfer; shared by every
+/// topology's data/ctrl entry points.
+fn book_local(stats: &mut NetStats, bytes: u64) {
+    stats.local_msgs += 1;
+    stats.local_bytes += bytes;
+}
+
+/// Traffic class of a DTN message (stats booking).
+#[derive(Clone, Copy)]
+enum Class {
+    Data,
+    Ctrl,
+}
+
+/// The one shared DTN send: book the class counters for a routed
+/// `path` and stream the bytes over it. Every topology's
+/// `send_data`/`send_ctrl` reduces to local-check + route + this call,
+/// so an accounting change lands in exactly one place.
+fn booked_stream(
+    cfg: &ArenaConfig,
+    stats: &mut NetStats,
+    busy: &mut [Ps],
+    path: &[usize],
+    now: Ps,
+    bytes: u64,
+    class: Class,
+) -> Ps {
+    let byte_hops = bytes * path.len() as u64;
+    match class {
+        Class::Data => {
+            stats.data_msgs += 1;
+            stats.data_bytes += bytes;
+            stats.data_byte_hops += byte_hops;
+        }
+        Class::Ctrl => {
+            stats.ctrl_msgs += 1;
+            stats.ctrl_bytes += bytes;
+            stats.ctrl_byte_hops += byte_hops;
+        }
+    }
+    stream(cfg, busy, path, now, bytes)
+}
+
+/// Short-way ring walk shared by [`Ring`] and [`BiRing`]'s data
+/// planes: fill `path` with directed-link ids (`at` clockwise,
+/// `n + at` counter-clockwise; ties clockwise, the seed rule).
+fn ring_route(n: usize, path: &mut Vec<usize>, from: usize, to: usize) {
+    let cw = (to + n - from) % n;
+    let ccw = (from + n - to) % n;
+    path.clear();
+    let mut at = from;
+    if cw <= ccw {
+        for _ in 0..cw {
+            path.push(at);
+            at = (at + 1) % n;
+        }
+    } else {
+        for _ in 0..ccw {
+            path.push(n + at);
+            at = (at + n - 1) % n;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ring — the seed model behind the trait
+// ---------------------------------------------------------------------
+
+/// The paper's interconnect: unidirectional token ring, short-way DTN
+/// (ties clockwise), per-directed-link busy horizons. Data links are a
+/// flat array: `i` is the clockwise link out of node `i`, `n + i` the
+/// counter-clockwise one — the same horizons as the seed
+/// [`crate::ring::RingNet`], which stays in-tree as the golden
+/// reference this implementation is property-tested against.
+pub struct Ring {
+    n: usize,
+    token_link: Vec<Ps>,
+    data: Vec<Ps>,
+    path: Vec<usize>,
+    stats: NetStats,
+}
+
+impl Ring {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        Ring {
+            n,
+            token_link: vec![0; n],
+            data: vec![0; 2 * n],
+            path: Vec::new(),
+            stats: NetStats::default(),
+        }
+    }
+
+    /// Ring distance the DTN uses (short way; ties clockwise).
+    pub fn data_distance(&self, from: usize, to: usize) -> usize {
+        let cw = (to + self.n - from) % self.n;
+        let ccw = (from + self.n - to) % self.n;
+        cw.min(ccw)
+    }
+
+    fn token_hop(&mut self, cfg: &ArenaConfig, now: Ps, from: usize) -> Ps {
+        self.stats.token_msgs += 1;
+        self.stats.token_bytes += WIRE_BYTES;
+        self.stats.token_hops += 1;
+        token_link_hop(cfg, &mut self.token_link[from], now)
+    }
+}
+
+impl Interconnect for Ring {
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    fn label(&self) -> &'static str {
+        "ring"
+    }
+
+    fn send_token(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        _dest: usize,
+    ) -> (Ps, usize) {
+        // unidirectional: the destination hint is irrelevant, tokens
+        // always advance clockwise (the seed semantics, bit-identical)
+        (self.token_hop(cfg, now, from), (from + 1) % self.n)
+    }
+
+    fn probe_hop(&mut self, cfg: &ArenaConfig, now: Ps, from: usize) -> Ps {
+        self.token_hop(cfg, now, from)
+    }
+
+    fn send_data(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps {
+        if from == to || bytes == 0 {
+            book_local(&mut self.stats, bytes);
+            return now;
+        }
+        ring_route(self.n, &mut self.path, from, to);
+        booked_stream(
+            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
+            Class::Data,
+        )
+    }
+
+    fn send_ctrl(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps {
+        if from == to || bytes == 0 {
+            book_local(&mut self.stats, bytes);
+            return now;
+        }
+        ring_route(self.n, &mut self.path, from, to);
+        booked_stream(
+            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
+            Class::Ctrl,
+        )
+    }
+
+    fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+}
+
+// ---------------------------------------------------------------------
+// BiRing — bidirectional token plane
+// ---------------------------------------------------------------------
+
+/// Ring whose token plane also has counter-clockwise links: a conveyed
+/// token takes the short way toward its home (ties, and tokens already
+/// home, go clockwise). The data plane is the seed ring's. This changes
+/// circulation — tokens no longer visit every node between source and
+/// home — so termination rests on the coverage-cycle probe, not on
+/// token order (see the module docs).
+pub struct BiRing {
+    n: usize,
+    token_cw: Vec<Ps>,
+    token_ccw: Vec<Ps>,
+    data: Vec<Ps>,
+    path: Vec<usize>,
+    stats: NetStats,
+}
+
+impl BiRing {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        BiRing {
+            n,
+            token_cw: vec![0; n],
+            token_ccw: vec![0; n],
+            data: vec![0; 2 * n],
+            path: Vec::new(),
+            stats: NetStats::default(),
+        }
+    }
+}
+
+impl Interconnect for BiRing {
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    fn label(&self) -> &'static str {
+        "biring"
+    }
+
+    fn routes_by_dest(&self) -> bool {
+        true
+    }
+
+    fn send_token(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        dest: usize,
+    ) -> (Ps, usize) {
+        let n = self.n;
+        let cw = (dest + n - from) % n;
+        let ccw = (from + n - dest) % n;
+        self.stats.token_msgs += 1;
+        self.stats.token_bytes += WIRE_BYTES;
+        self.stats.token_hops += 1;
+        // cw == 0 is "already home": fall back to the coverage cycle
+        if cw == 0 || cw <= ccw {
+            let at = token_link_hop(cfg, &mut self.token_cw[from], now);
+            (at, (from + 1) % n)
+        } else {
+            let at = token_link_hop(cfg, &mut self.token_ccw[from], now);
+            (at, (from + n - 1) % n)
+        }
+    }
+
+    fn probe_hop(&mut self, cfg: &ArenaConfig, now: Ps, from: usize) -> Ps {
+        // the probe always walks the coverage cycle clockwise, sharing
+        // the clockwise token links (so it still queues behind tokens
+        // headed the same way)
+        self.stats.token_msgs += 1;
+        self.stats.token_bytes += WIRE_BYTES;
+        self.stats.token_hops += 1;
+        token_link_hop(cfg, &mut self.token_cw[from], now)
+    }
+
+    fn send_data(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps {
+        if from == to || bytes == 0 {
+            book_local(&mut self.stats, bytes);
+            return now;
+        }
+        ring_route(self.n, &mut self.path, from, to);
+        booked_stream(
+            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
+            Class::Data,
+        )
+    }
+
+    fn send_ctrl(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps {
+        if from == to || bytes == 0 {
+            book_local(&mut self.stats, bytes);
+            return now;
+        }
+        ring_route(self.n, &mut self.path, from, to);
+        booked_stream(
+            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
+            Class::Ctrl,
+        )
+    }
+
+    fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+}
+
+// ---------------------------------------------------------------------
+// Torus2D — XY-routed 2D torus
+// ---------------------------------------------------------------------
+
+/// 2D torus: `n = rows × cols` with `rows` the largest divisor of `n`
+/// at most √n (a prime node count degenerates to a 1 × n bidirectional
+/// ring). Node `i` sits at `(i / cols, i % cols)`. Both planes have
+/// four directed links per node (E/W along the row, S/N along the
+/// column, all with wraparound), each with its own busy horizon.
+/// Routing is deterministic XY: correct the column first (short way,
+/// ties east/south), then the row.
+pub struct Torus2D {
+    n: usize,
+    rows: usize,
+    cols: usize,
+    token: Vec<Ps>,
+    data: Vec<Ps>,
+    path: Vec<usize>,
+    stats: NetStats,
+}
+
+/// Directed-link planes (index stride into the per-plane arrays).
+const EAST: usize = 0;
+const WEST: usize = 1;
+const SOUTH: usize = 2;
+const NORTH: usize = 3;
+
+impl Torus2D {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let mut rows = 1;
+        let mut r = 1;
+        while r * r <= n {
+            if n % r == 0 {
+                rows = r;
+            }
+            r += 1;
+        }
+        Torus2D {
+            n,
+            rows,
+            cols: n / rows,
+            token: vec![0; 4 * n],
+            data: vec![0; 4 * n],
+            path: Vec::new(),
+            stats: NetStats::default(),
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// One XY step from `at` toward `to` (`at != to`): returns
+    /// (directed-link id, next node).
+    fn step(&self, at: usize, to: usize) -> (usize, usize) {
+        let (r, c) = (at / self.cols, at % self.cols);
+        let (tr, tc) = (to / self.cols, to % self.cols);
+        if c != tc {
+            let east = (tc + self.cols - c) % self.cols;
+            let west = (c + self.cols - tc) % self.cols;
+            if east <= west {
+                (EAST * self.n + at, r * self.cols + (c + 1) % self.cols)
+            } else {
+                (
+                    WEST * self.n + at,
+                    r * self.cols + (c + self.cols - 1) % self.cols,
+                )
+            }
+        } else {
+            let south = (tr + self.rows - r) % self.rows;
+            let north = (r + self.rows - tr) % self.rows;
+            if south <= north {
+                (SOUTH * self.n + at, ((r + 1) % self.rows) * self.cols + c)
+            } else {
+                (
+                    NORTH * self.n + at,
+                    ((r + self.rows - 1) % self.rows) * self.cols + c,
+                )
+            }
+        }
+    }
+
+    /// XY distance (links) between two nodes.
+    pub fn distance(&self, from: usize, to: usize) -> usize {
+        let (r, c) = (from / self.cols, from % self.cols);
+        let (tr, tc) = (to / self.cols, to % self.cols);
+        let east = (tc + self.cols - c) % self.cols;
+        let west = (c + self.cols - tc) % self.cols;
+        let south = (tr + self.rows - r) % self.rows;
+        let north = (r + self.rows - tr) % self.rows;
+        east.min(west) + south.min(north)
+    }
+
+    /// Fill `self.path` with the XY link chain.
+    fn route(&mut self, from: usize, to: usize) {
+        self.path.clear();
+        let mut at = from;
+        while at != to {
+            let (link, next) = self.step(at, to);
+            self.path.push(link);
+            at = next;
+        }
+    }
+}
+
+impl Interconnect for Torus2D {
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    fn label(&self) -> &'static str {
+        "torus2d"
+    }
+
+    fn routes_by_dest(&self) -> bool {
+        true
+    }
+
+    fn send_token(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        dest: usize,
+    ) -> (Ps, usize) {
+        self.stats.token_msgs += 1;
+        self.stats.token_bytes += WIRE_BYTES;
+        self.stats.token_hops += 1;
+        let to = if dest == from { self.next_hop(from) } else { dest };
+        if to == from {
+            // single-node torus: the loopback link exists, as on the
+            // seed's 1-node ring
+            let at = token_link_hop(cfg, &mut self.token[from], now);
+            return (at, from);
+        }
+        let (link, next) = self.step(from, to);
+        let at = token_link_hop(cfg, &mut self.token[link], now);
+        (at, next)
+    }
+
+    fn probe_hop(&mut self, cfg: &ArenaConfig, now: Ps, from: usize) -> Ps {
+        // express delivery to the coverage successor: the probe pays
+        // every link on the XY path but is not re-dispatched at
+        // intermediate nodes (see the module docs on termination)
+        let to = self.next_hop(from);
+        self.stats.token_msgs += 1;
+        self.stats.token_bytes += WIRE_BYTES;
+        if to == from {
+            self.stats.token_hops += 1;
+            return token_link_hop(cfg, &mut self.token[from], now);
+        }
+        let mut t = now;
+        let mut at = from;
+        while at != to {
+            let (link, next) = self.step(at, to);
+            t = token_link_hop(cfg, &mut self.token[link], t);
+            self.stats.token_hops += 1;
+            at = next;
+        }
+        t
+    }
+
+    fn send_data(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps {
+        if from == to || bytes == 0 {
+            book_local(&mut self.stats, bytes);
+            return now;
+        }
+        self.route(from, to);
+        booked_stream(
+            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
+            Class::Data,
+        )
+    }
+
+    fn send_ctrl(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps {
+        if from == to || bytes == 0 {
+            book_local(&mut self.stats, bytes);
+            return now;
+        }
+        self.route(from, to);
+        booked_stream(
+            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
+            Class::Ctrl,
+        )
+    }
+
+    fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ideal — contention-free crossbar
+// ---------------------------------------------------------------------
+
+/// Upper bound: every message traverses exactly one "link" (serialize
+/// once, one switch hop) and nothing ever queues behind anything else.
+/// Byte-hop metrics therefore count each message once — what movement
+/// would cost if distance were free.
+pub struct Ideal {
+    n: usize,
+    stats: NetStats,
+}
+
+impl Ideal {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        Ideal { n, stats: NetStats::default() }
+    }
+}
+
+impl Interconnect for Ideal {
+    fn nodes(&self) -> usize {
+        self.n
+    }
+
+    fn label(&self) -> &'static str {
+        "ideal"
+    }
+
+    fn routes_by_dest(&self) -> bool {
+        true
+    }
+
+    fn send_token(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        dest: usize,
+    ) -> (Ps, usize) {
+        let next = if dest == from { self.next_hop(from) } else { dest };
+        self.stats.token_msgs += 1;
+        self.stats.token_bytes += WIRE_BYTES;
+        self.stats.token_hops += 1;
+        (now + cfg.wire_ps(WIRE_BYTES) + cfg.hop_latency_ps, next)
+    }
+
+    fn probe_hop(&mut self, cfg: &ArenaConfig, now: Ps, from: usize) -> Ps {
+        let _ = from;
+        self.stats.token_msgs += 1;
+        self.stats.token_bytes += WIRE_BYTES;
+        self.stats.token_hops += 1;
+        now + cfg.wire_ps(WIRE_BYTES) + cfg.hop_latency_ps
+    }
+
+    fn send_data(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps {
+        if from == to || bytes == 0 {
+            book_local(&mut self.stats, bytes);
+            return now;
+        }
+        self.stats.data_msgs += 1;
+        self.stats.data_bytes += bytes;
+        self.stats.data_byte_hops += bytes;
+        now + cfg.wire_ps(bytes) + cfg.hop_latency_ps
+    }
+
+    fn send_ctrl(
+        &mut self,
+        cfg: &ArenaConfig,
+        now: Ps,
+        from: usize,
+        to: usize,
+        bytes: u64,
+    ) -> Ps {
+        if from == to || bytes == 0 {
+            book_local(&mut self.stats, bytes);
+            return now;
+        }
+        self.stats.ctrl_msgs += 1;
+        self.stats.ctrl_bytes += bytes;
+        self.stats.ctrl_byte_hops += bytes;
+        now + cfg.wire_ps(bytes) + cfg.hop_latency_ps
+    }
+
+    fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ArenaConfig {
+        ArenaConfig::default()
+    }
+
+    #[test]
+    fn topology_parse_label_round_trip() {
+        for t in Topology::ALL {
+            assert_eq!(Topology::parse(t.label()), Some(t));
+            assert_eq!(t.build(4).label(), t.label());
+            assert_eq!(t.build(4).nodes(), 4);
+        }
+        assert_eq!(Topology::parse("mesh"), None);
+    }
+
+    #[test]
+    fn coverage_cycle_is_index_order_on_every_topology() {
+        for t in Topology::ALL {
+            let net = t.build(6);
+            for i in 0..6 {
+                assert_eq!(net.next_hop(i), (i + 1) % 6, "{}", t.label());
+            }
+        }
+    }
+
+    #[test]
+    fn only_the_seed_ring_ignores_the_dest_hint() {
+        // the cluster skips the per-token home lookup when the fabric
+        // does not consume it — the default ring must advertise that
+        assert!(!Topology::Ring.build(4).routes_by_dest());
+        for t in [Topology::BiRing, Topology::Torus2D, Topology::Ideal] {
+            assert!(t.build(4).routes_by_dest(), "{}", t.label());
+        }
+    }
+
+    #[test]
+    fn ring_token_hop_matches_seed_timing() {
+        let c = cfg();
+        let mut r = Ring::new(4);
+        let (at, next) = r.send_token(&c, 0, 0, 3);
+        // 21 B at 80 Gb/s = 2100 ps, plus 1 us hop — and the dest hint
+        // is ignored: the seed ring is unidirectional
+        assert_eq!(at, 2100 + 1_000_000);
+        assert_eq!(next, 1);
+        assert_eq!(r.probe_hop(&c, 0, 1), 2100 + 1_000_000);
+        assert_eq!(r.stats().token_msgs, 2);
+        assert_eq!(r.stats().token_hops, 2);
+    }
+
+    #[test]
+    fn biring_tokens_take_the_short_way_home() {
+        let c = cfg();
+        let mut b = BiRing::new(4);
+        // 3 -> 2: clockwise needs 3 links, counter-clockwise 1
+        let (_, next) = b.send_token(&c, 0, 3, 2);
+        assert_eq!(next, 2);
+        // 0 -> 2: tie, clockwise wins
+        let (_, next) = b.send_token(&c, 0, 0, 2);
+        assert_eq!(next, 1);
+        // already home: coverage cycle
+        let (_, next) = b.send_token(&c, 0, 1, 1);
+        assert_eq!(next, 2);
+        // the two directions have independent busy horizons
+        let t_cw = b.send_token(&c, 0, 0, 1).0;
+        let t_ccw = b.send_token(&c, 0, 0, 3).0;
+        assert!(t_ccw <= t_cw, "ccw must not queue behind cw");
+    }
+
+    #[test]
+    fn torus_shapes_and_distances() {
+        assert_eq!(Torus2D::new(16).shape(), (4, 4));
+        assert_eq!(Torus2D::new(8).shape(), (2, 4));
+        assert_eq!(Torus2D::new(7).shape(), (1, 7));
+        assert_eq!(Torus2D::new(1).shape(), (1, 1));
+        let t = Torus2D::new(16);
+        // (0,0) to (2,2): 2 + 2 links
+        assert_eq!(t.distance(0, 10), 4);
+        // wraparound: (0,0) to (0,3) is one west link
+        assert_eq!(t.distance(0, 3), 1);
+        assert_eq!(t.distance(0, 12), 1); // (3,0) via north wrap
+        assert_eq!(t.distance(5, 5), 0);
+        // distance symmetry
+        for a in 0..16 {
+            for b in 0..16 {
+                assert_eq!(t.distance(a, b), t.distance(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn torus_token_steps_reach_the_destination() {
+        let c = cfg();
+        let mut t = Torus2D::new(16);
+        let mut at = 0;
+        let mut hops = 0;
+        while at != 10 {
+            let (_, next) = t.send_token(&c, 0, at, 10);
+            at = next;
+            hops += 1;
+            assert!(hops <= 4, "XY route must be minimal");
+        }
+        assert_eq!(hops, t.distance(0, 10));
+    }
+
+    #[test]
+    fn torus_probe_routes_to_the_coverage_successor() {
+        let c = cfg();
+        let mut t = Torus2D::new(16);
+        // node 3 = (0,3); successor 4 = (1,0): one west wrap + one south
+        let before = t.stats().token_hops;
+        let at = t.probe_hop(&c, 0, 3);
+        assert_eq!(t.stats().token_hops - before, 2);
+        let one = c.wire_ps(WIRE_BYTES) + c.hop_latency_ps;
+        assert_eq!(at, 2 * one);
+        // adjacent successor is a single link
+        let before = t.stats().token_hops;
+        t.probe_hop(&c, 0, 0);
+        assert_eq!(t.stats().token_hops - before, 1);
+    }
+
+    #[test]
+    fn ideal_is_contention_free_and_single_hop() {
+        let c = cfg();
+        let mut i = Ideal::new(8);
+        let (a1, n1) = i.send_token(&c, 0, 0, 5);
+        assert_eq!(n1, 5, "crossbar delivers straight to the destination");
+        let (a2, _) = i.send_token(&c, 0, 0, 5);
+        assert_eq!(a1, a2, "no serialization on the crossbar");
+        let d1 = i.send_data(&c, 0, 0, 4, 1 << 20);
+        let d2 = i.send_data(&c, 0, 0, 4, 1 << 20);
+        assert_eq!(d1, d2);
+        assert_eq!(i.stats().data_byte_hops, 2 << 20, "one hop per message");
+    }
+
+    #[test]
+    fn local_and_empty_transfers_book_local_on_every_topology() {
+        let c = cfg();
+        for t in Topology::ALL {
+            let mut net = t.build(4);
+            assert_eq!(net.send_data(&c, 77, 2, 2, 4096), 77, "{}", t.label());
+            assert_eq!(net.send_data(&c, 77, 0, 1, 0), 77, "{}", t.label());
+            assert_eq!(net.send_ctrl(&c, 77, 3, 3, 21), 77, "{}", t.label());
+            let s = net.stats();
+            assert_eq!(s.local_msgs, 3, "{}", t.label());
+            assert_eq!(s.local_bytes, 4096 + 21, "{}", t.label());
+            assert_eq!(s.data_msgs, 0, "{}", t.label());
+            assert_eq!(s.data_bytes, 0, "{}", t.label());
+            assert_eq!(s.data_byte_hops, 0, "{}", t.label());
+            assert_eq!(s.ctrl_msgs, 0, "{}", t.label());
+        }
+    }
+
+    #[test]
+    fn packet_at_least_message_size_equals_store_and_forward() {
+        let mut saf = cfg();
+        saf.packet_bytes = 0;
+        let mut big = cfg();
+        big.packet_bytes = 1 << 30;
+        for t in Topology::ALL {
+            let mut a = t.build(8);
+            let mut b = t.build(8);
+            for (f, to, bytes) in [(0, 3, 4096), (5, 1, 999), (2, 6, 64)] {
+                assert_eq!(
+                    a.send_data(&saf, 0, f, to, bytes),
+                    b.send_data(&big, 0, f, to, bytes),
+                    "{}",
+                    t.label()
+                );
+            }
+            assert_eq!(*a.stats(), *b.stats(), "{}", t.label());
+        }
+    }
+
+    #[test]
+    fn cut_through_pipelines_multi_hop_transfers() {
+        let mut ct = cfg();
+        ct.packet_bytes = 256;
+        let saf = cfg();
+        // 4 hops on an idle 8-ring: the head packet pipelines
+        let mut a = Ring::new(8);
+        let t_saf = a.send_data(&saf, 0, 0, 4, 64 * 1024);
+        let mut b = Ring::new(8);
+        let t_ct = b.send_data(&ct, 0, 0, 4, 64 * 1024);
+        assert!(t_ct < t_saf, "cut-through {t_ct} !< store-and-forward {t_saf}");
+        // one hop: the disciplines coincide exactly
+        let mut a = Ring::new(8);
+        let t_saf = a.send_data(&saf, 0, 0, 1, 64 * 1024);
+        let mut b = Ring::new(8);
+        let t_ct = b.send_data(&ct, 0, 0, 1, 64 * 1024);
+        assert_eq!(t_ct, t_saf);
+        // bandwidth is conserved: a second message on the same path
+        // still queues behind the full serialization
+        let t2 = b.send_data(&ct, 0, 0, 1, 64 * 1024);
+        assert!(t2 > t_ct);
+    }
+
+    #[test]
+    fn torus_links_contend_per_direction() {
+        let c = cfg();
+        let mut t = Torus2D::new(16);
+        // two eastbound messages out of node 0 share the east link
+        let a = t.send_data(&c, 0, 0, 1, 4096);
+        let b = t.send_data(&c, 0, 0, 1, 4096);
+        assert!(b > a);
+        // a westbound message out of node 0 does not
+        let w = t.send_data(&c, 0, 0, 3, 4096);
+        assert_eq!(w, a);
+    }
+}

@@ -148,11 +148,15 @@ impl FilterOutcome {
     }
 }
 
-/// Ring-wide facts a policy may consult beyond the token itself.
+/// Cluster-wide facts a policy may consult beyond the token itself.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedCtx {
-    /// Ring size — `token.hops >= nodes` means one full circulation
-    /// without placement (every dispatcher has seen the token).
+    /// Cluster size — `token.hops >= nodes` means the token has made
+    /// `nodes` dispatcher visits without placement. On the
+    /// unidirectional ring that is literally one full circulation
+    /// (every dispatcher has seen it); on the other [`crate::net`]
+    /// topologies it is the topology-agnostic "coverage visits" bound
+    /// that plays the same role in the progress guarantee.
     pub nodes: usize,
 }
 
@@ -283,10 +287,13 @@ impl DispatchPolicy for Greedy {
 /// degenerates to [`Greedy`]; `theta = 1` accepts only fully-local
 /// (Case II) tokens on the first lap.
 ///
-/// Progress guarantee: once a token has circulated the whole ring
-/// without firing (`hops >= nodes`), the threshold is waived and the
-/// greedy split applies — a token is never conveyed more than one full
-/// lap past its first eligible node.
+/// Progress guarantee: once a token has been conveyed `nodes` times
+/// without firing (`hops >= nodes` — one full circulation on the ring,
+/// the equivalent coverage-visit bound on every other topology), the
+/// threshold is waived and the greedy split applies — a token is never
+/// conveyed more than `nodes` visits past its first eligible node, and
+/// direction-aware topologies route each convey toward the token's
+/// home, so the waived split always lands where data lives.
 #[derive(Clone, Copy, Debug)]
 pub struct LocalityThreshold {
     /// Minimum local fraction in `[0, 1]`.

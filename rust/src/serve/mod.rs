@@ -45,6 +45,7 @@ use crate::apps::{id_span, make_app_based, Scale, ALL};
 use crate::cluster::{Arrival, Cluster, Model, RunReport};
 use crate::config::{ArenaConfig, Ps, PS_PER_US};
 use crate::eval::Table;
+use crate::net::Topology;
 use crate::sched::PolicyKind;
 
 /// One line of a serve trace: inject `app` at `node` at `at_us`.
@@ -106,6 +107,14 @@ pub struct ServeSpec {
     pub seed: u64,
     pub nodes: usize,
     pub model: Model,
+    /// Interconnect the replay runs on (`arena serve --topology T`;
+    /// ring is the paper's fabric and the default).
+    pub topology: Topology,
+    /// `--set key=value` config overrides applied on top of the spec
+    /// (e.g. `packet_bytes=256` for cut-through serving). Keys with a
+    /// dedicated serve flag are rejected so the two paths cannot
+    /// disagree.
+    pub overrides: Vec<(String, String)>,
 }
 
 /// One policy's replay of the trace. The policy display label rides
@@ -190,11 +199,34 @@ pub fn run_one(
             node: job.node,
         });
     }
-    let cfg = ArenaConfig::default()
+    let mut cfg = ArenaConfig::default()
         .with_nodes(spec.nodes)
         .with_seed(spec.seed)
         .with_policy(kind)
-        .with_theta_pm(theta_pm);
+        .with_theta_pm(theta_pm)
+        .with_topology(spec.topology);
+    for (k, v) in &spec.overrides {
+        if matches!(
+            k.as_str(),
+            "nodes" | "seed" | "policy" | "theta" | "topology"
+        ) {
+            return Err(format!(
+                "serve: '{k}' has a dedicated flag — use it instead of \
+                 --set {k}=…"
+            ));
+        }
+        if k == "inject_node" {
+            // would validate and then do nothing: every trace arrival
+            // names its own injection node
+            return Err(
+                "serve: 'inject_node' is ignored on the open-system path \
+                 (the trace names each job's node) — edit the trace \
+                 instead"
+                    .into(),
+            );
+        }
+        cfg.set(k, v).map_err(|e| format!("serve --set {k}: {e}"))?;
+    }
     let mut cl = Cluster::new(cfg, spec.model, apps);
     let report = cl.run_with_arrivals(&arrivals, None);
     cl.check()
@@ -384,6 +416,8 @@ mod tests {
             seed: 7,
             nodes: 2,
             model: Model::SoftwareCpu,
+            topology: Topology::Ring,
+            overrides: Vec::new(),
         };
         let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
         assert!(e.contains("task-id space"), "{e}");
@@ -397,6 +431,8 @@ mod tests {
             seed: 7,
             nodes: 4,
             model: Model::SoftwareCpu,
+            topology: Topology::Ring,
+            overrides: Vec::new(),
         };
         let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
         assert!(e.contains("node 5"), "{e}");
@@ -409,6 +445,8 @@ mod tests {
             seed: 7,
             nodes: 4,
             model: Model::SoftwareCpu,
+            topology: Topology::Ring,
+            overrides: Vec::new(),
         }
     }
 
@@ -441,6 +479,32 @@ mod tests {
     }
 
     #[test]
+    fn overrides_reach_the_replay_config() {
+        // a free knob (packetization) is honored and stays deterministic
+        let mut spec = three_job_spec();
+        spec.overrides = vec![("packet_bytes".into(), "64".into())];
+        let a = run_one(&spec, PolicyKind::Greedy, 500).unwrap();
+        let b = run_one(&spec, PolicyKind::Greedy, 500).unwrap();
+        assert_eq!(a.report.makespan_ps, b.report.makespan_ps);
+        assert_eq!(a.report.ring, b.report.ring);
+        // a key with a dedicated serve flag is rejected, not shadowed
+        let mut spec = three_job_spec();
+        spec.overrides = vec![("nodes".into(), "8".into())];
+        let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
+        assert!(e.contains("dedicated flag"), "{e}");
+        // a bogus key is a clean config error
+        let mut spec = three_job_spec();
+        spec.overrides = vec![("warp_factor".into(), "9".into())];
+        let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
+        assert!(e.contains("warp_factor"), "{e}");
+        // inject_node would be a silent no-op (arrivals carry nodes)
+        let mut spec = three_job_spec();
+        spec.overrides = vec![("inject_node".into(), "3".into())];
+        let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
+        assert!(e.contains("inject_node"), "{e}");
+    }
+
+    #[test]
     fn repeated_apps_get_distinct_workload_seeds() {
         assert_ne!(job_seed(7, 0), job_seed(7, 1));
         let spec = ServeSpec {
@@ -449,6 +513,8 @@ mod tests {
             seed: 7,
             nodes: 2,
             model: Model::SoftwareCpu,
+            topology: Topology::Ring,
+            overrides: Vec::new(),
         };
         let run = run_one(&spec, PolicyKind::Greedy, 500).unwrap();
         assert_eq!(run.report.app_latency.len(), 2);

@@ -39,6 +39,7 @@ use crate::baseline::{run_bsp, serial_ps, BspReport};
 use crate::cluster::{Model, RunReport};
 use crate::config::{ArenaConfig, Ps};
 use crate::eval::{self, Headline, Table, NODE_SWEEP, SKEW_NODES};
+use crate::net::Topology;
 use crate::placement::Layout;
 
 /// Default worker count: every host core (the sweep is embarrassingly
@@ -50,8 +51,9 @@ pub fn default_jobs() -> usize {
 }
 
 /// One unit of sweep work: a single figure cell. ARENA cells are keyed
-/// by their data-placement layout too, so the standard (block) figures
-/// and the skew sweep share the store without collisions.
+/// by their data-placement layout *and* interconnect topology too, so
+/// the standard (block/ring) figures, the skew sweep and the topology
+/// sweep all share the store without collisions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Job {
     /// Serial single-node CPU baseline (figure denominator).
@@ -59,7 +61,13 @@ pub enum Job {
     /// Compute-centric BSP run (`cgra` = Baseline-2 offload model).
     Bsp { app: &'static str, nodes: usize, cgra: bool },
     /// Full ARENA discrete-event simulation.
-    Arena { app: &'static str, nodes: usize, model: Model, layout: Layout },
+    Arena {
+        app: &'static str,
+        nodes: usize,
+        model: Model,
+        layout: Layout,
+        topo: Topology,
+    },
 }
 
 impl Job {
@@ -71,10 +79,11 @@ impl Job {
                 "bsp/{app}/n{nodes}/{}",
                 if cgra { "cgra" } else { "cpu" }
             ),
-            Job::Arena { app, nodes, model, layout } => format!(
-                "arena/{app}/n{nodes}/{}/{}",
+            Job::Arena { app, nodes, model, layout, topo } => format!(
+                "arena/{app}/n{nodes}/{}/{}/{}",
                 model.label(),
-                layout.label()
+                layout.label(),
+                topo.label()
             ),
         }
     }
@@ -96,8 +105,10 @@ fn compute(scale: Scale, seed: u64, job: Job) -> Cell {
             let cfg = ArenaConfig::default().with_nodes(nodes);
             Cell::Bsp(run_bsp(app, scale, seed, &cfg, cgra))
         }
-        Job::Arena { app, nodes, model, layout } => Cell::Arena(
-            eval::run_arena_at(app, scale, seed, nodes, model, layout, None),
+        Job::Arena { app, nodes, model, layout, topo } => Cell::Arena(
+            eval::run_arena_cell(
+                app, scale, seed, nodes, model, layout, topo, None,
+            ),
         ),
     }
 }
@@ -112,9 +123,13 @@ pub struct CellStore {
     /// (`arena sweep --layout …`); the skew sweep addresses layouts
     /// explicitly through [`Self::arena_at`].
     layout: Layout,
+    /// Interconnect the standard figure builders read their ARENA
+    /// cells at (`arena sweep --topology …`); the topology sweep
+    /// addresses topologies explicitly through [`Self::arena_cell`].
+    topology: Topology,
     serial: BTreeMap<&'static str, Ps>,
     bsp: BTreeMap<(&'static str, usize, bool), BspReport>,
-    arena: BTreeMap<(&'static str, usize, Model, Layout), RunReport>,
+    arena: BTreeMap<(&'static str, usize, Model, Layout, Topology), RunReport>,
     /// Per-job wall-clock of every `prefill` compute, in deterministic
     /// job order (instrumentation only — never part of the rendered
     /// tables, which stay bit-identical across runs and `--jobs`).
@@ -123,14 +138,26 @@ pub struct CellStore {
 
 impl CellStore {
     pub fn new(scale: Scale, seed: u64) -> Self {
-        Self::with_layout(scale, seed, Layout::Block)
+        Self::configured(scale, seed, Layout::Block, Topology::Ring)
     }
 
     pub fn with_layout(scale: Scale, seed: u64, layout: Layout) -> Self {
+        Self::configured(scale, seed, layout, Topology::Ring)
+    }
+
+    /// Store with explicit default layout *and* topology for the
+    /// standard figure readers ([`Self::arena`]).
+    pub fn configured(
+        scale: Scale,
+        seed: u64,
+        layout: Layout,
+        topology: Topology,
+    ) -> Self {
         CellStore {
             scale,
             seed,
             layout,
+            topology,
             serial: BTreeMap::new(),
             bsp: BTreeMap::new(),
             arena: BTreeMap::new(),
@@ -148,6 +175,10 @@ impl CellStore {
 
     pub fn layout(&self) -> Layout {
         self.layout
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
     }
 
     /// Wall-clock of every job computed through [`Self::prefill`], in
@@ -171,8 +202,8 @@ impl CellStore {
             Job::Bsp { app, nodes, cgra } => {
                 self.bsp.contains_key(&(app, nodes, cgra))
             }
-            Job::Arena { app, nodes, model, layout } => {
-                self.arena.contains_key(&(app, nodes, model, layout))
+            Job::Arena { app, nodes, model, layout, topo } => {
+                self.arena.contains_key(&(app, nodes, model, layout, topo))
             }
         }
     }
@@ -185,8 +216,11 @@ impl CellStore {
             (Job::Bsp { app, nodes, cgra }, Cell::Bsp(r)) => {
                 self.bsp.insert((app, nodes, cgra), r);
             }
-            (Job::Arena { app, nodes, model, layout }, Cell::Arena(r)) => {
-                self.arena.insert((app, nodes, model, layout), r);
+            (
+                Job::Arena { app, nodes, model, layout, topo },
+                Cell::Arena(r),
+            ) => {
+                self.arena.insert((app, nodes, model, layout, topo), r);
             }
             _ => unreachable!("job/cell kind mismatch"),
         }
@@ -211,19 +245,20 @@ impl CellStore {
         &self.bsp[&key]
     }
 
-    /// ARENA simulation under the store's default layout (memoized).
+    /// ARENA simulation under the store's default layout and topology
+    /// (memoized).
     pub fn arena(
         &mut self,
         app: &'static str,
         nodes: usize,
         model: Model,
     ) -> &RunReport {
-        let layout = self.layout;
-        self.arena_at(app, nodes, model, layout)
+        let (layout, topo) = (self.layout, self.topology);
+        self.arena_cell(app, nodes, model, layout, topo)
     }
 
     /// ARENA simulation under an explicit layout (memoized — the skew
-    /// sweep's read path).
+    /// sweep's read path), on the store's default topology.
     pub fn arena_at(
         &mut self,
         app: &'static str,
@@ -231,9 +266,23 @@ impl CellStore {
         model: Model,
         layout: Layout,
     ) -> &RunReport {
-        let key = (app, nodes, model, layout);
+        let topo = self.topology;
+        self.arena_cell(app, nodes, model, layout, topo)
+    }
+
+    /// ARENA simulation under the fully explicit cell key (memoized —
+    /// the topology sweep's read path).
+    pub fn arena_cell(
+        &mut self,
+        app: &'static str,
+        nodes: usize,
+        model: Model,
+        layout: Layout,
+        topo: Topology,
+    ) -> &RunReport {
+        let key = (app, nodes, model, layout, topo);
         if !self.arena.contains_key(&key) {
-            let job = Job::Arena { app, nodes, model, layout };
+            let job = Job::Arena { app, nodes, model, layout, topo };
             let v = compute(self.scale, self.seed, job);
             self.insert(job, v);
         }
@@ -328,15 +377,16 @@ impl Fig {
         }
     }
 
-    /// Simulation cells this figure consumes, at the block layout.
+    /// Simulation cells this figure consumes, at the block layout on
+    /// the paper's ring.
     pub fn jobs(self) -> Vec<Job> {
-        self.jobs_at(Layout::Block)
+        self.jobs_at(Layout::Block, Topology::Ring)
     }
 
     /// Simulation cells this figure consumes when its ARENA runs use
-    /// `layout`. Overlaps across figures (e.g. the 4-node arena-sw
-    /// runs shared by Figs. 9 and 10) dedupe in the store.
-    pub fn jobs_at(self, layout: Layout) -> Vec<Job> {
+    /// `layout` on `topo`. Overlaps across figures (e.g. the 4-node
+    /// arena-sw runs shared by Figs. 9 and 10) dedupe in the store.
+    pub fn jobs_at(self, layout: Layout, topo: Topology) -> Vec<Job> {
         let mut out = Vec::new();
         match self {
             Fig::F9 => {
@@ -349,6 +399,7 @@ impl Fig {
                             nodes: n,
                             model: Model::SoftwareCpu,
                             layout,
+                            topo,
                         });
                     }
                 }
@@ -361,6 +412,7 @@ impl Fig {
                         nodes: 4,
                         model: Model::SoftwareCpu,
                         layout,
+                        topo,
                     });
                 }
             }
@@ -374,6 +426,7 @@ impl Fig {
                             nodes: n,
                             model: Model::Cgra,
                             layout,
+                            topo,
                         });
                     }
                 }
@@ -386,6 +439,7 @@ impl Fig {
                         nodes: 4,
                         model: Model::Cgra,
                         layout,
+                        topo,
                     });
                 }
             }
@@ -395,8 +449,8 @@ impl Fig {
 }
 
 /// Cells of the skew-sensitivity sweep: every app × execution model ×
-/// layout at the Fig. 10 cluster size. The block column is shared with
-/// the standard figures through the store.
+/// layout at the Fig. 10 cluster size, on the paper's ring. The block
+/// column is shared with the standard figures through the store.
 pub fn skew_jobs() -> Vec<Job> {
     let mut out = Vec::new();
     for app in ALL {
@@ -407,6 +461,29 @@ pub fn skew_jobs() -> Vec<Job> {
                     nodes: SKEW_NODES,
                     model,
                     layout,
+                    topo: Topology::Ring,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Cells of the topology-sensitivity sweep: every app × execution
+/// model × interconnect topology at the Fig. 10 cluster size, block
+/// layout. The ring column is shared with the standard figures through
+/// the store.
+pub fn topo_jobs() -> Vec<Job> {
+    let mut out = Vec::new();
+    for app in ALL {
+        for model in [Model::SoftwareCpu, Model::Cgra] {
+            for topo in Topology::ALL {
+                out.push(Job::Arena {
+                    app,
+                    nodes: SKEW_NODES,
+                    model,
+                    layout: Layout::Block,
+                    topo,
                 });
             }
         }
@@ -453,7 +530,7 @@ impl SweepOutput {
 }
 
 /// Run the sweep for `figs` at `(scale, seed)` on `workers` threads,
-/// under the block layout (the paper's figures).
+/// under the block layout on the paper's ring (the paper's figures).
 pub fn run(figs: &[Fig], scale: Scale, seed: u64, workers: usize) -> SweepOutput {
     run_at(figs, scale, seed, workers, Layout::Block)
 }
@@ -469,7 +546,7 @@ pub fn run_at(
     workers: usize,
     layout: Layout,
 ) -> SweepOutput {
-    run_scaled(figs, scale, seed, workers, layout, None)
+    run_scaled(figs, scale, seed, workers, layout, Topology::Ring, None)
 }
 
 /// Run the figure sweep and, when `max_nodes` is given, extend it with
@@ -484,6 +561,7 @@ pub fn run_scaled(
     seed: u64,
     workers: usize,
     layout: Layout,
+    topo: Topology,
     max_nodes: Option<usize>,
 ) -> SweepOutput {
     let mut figs: Vec<Fig> = figs.to_vec();
@@ -492,7 +570,7 @@ pub fn run_scaled(
 
     let mut jobs = Vec::new();
     for f in &figs {
-        jobs.extend(f.jobs_at(layout));
+        jobs.extend(f.jobs_at(layout, topo));
     }
     let axis: Vec<usize> = match max_nodes {
         Some(max) => eval::scale_axis(max, scale),
@@ -507,13 +585,19 @@ pub fn run_scaled(
         for &n in &axis {
             for app in ALL {
                 for model in [Model::SoftwareCpu, Model::Cgra] {
-                    jobs.push(Job::Arena { app, nodes: n, model, layout });
+                    jobs.push(Job::Arena {
+                        app,
+                        nodes: n,
+                        model,
+                        layout,
+                        topo,
+                    });
                 }
             }
         }
     }
 
-    let mut store = CellStore::with_layout(scale, seed, layout);
+    let mut store = CellStore::configured(scale, seed, layout, topo);
     store.prefill(&jobs, workers);
 
     let mut tables = Vec::new();
@@ -563,6 +647,17 @@ pub fn run_skew(scale: Scale, seed: u64, workers: usize) -> SweepOutput {
     SweepOutput { tables, headline: None, cells: store.len(), workers, timings }
 }
 
+/// Run the topology-sensitivity sweep (`arena sweep --all-topologies`):
+/// every app × model × interconnect cell on the worker pool, assembled
+/// into the Topology A/B tables. Bit-identical for any `workers` value.
+pub fn run_topo(scale: Scale, seed: u64, workers: usize) -> SweepOutput {
+    let mut store = CellStore::new(scale, seed);
+    store.prefill(&topo_jobs(), workers);
+    let tables = eval::topo_with(&mut store);
+    let timings = timing_labels(&store);
+    SweepOutput { tables, headline: None, cells: store.len(), workers, timings }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -604,6 +699,7 @@ mod tests {
                 nodes: 2,
                 model: Model::SoftwareCpu,
                 layout: Layout::Block,
+                topo: Topology::Ring,
             },
         ];
         let mut par = CellStore::new(Scale::Small, 7);
@@ -631,8 +727,24 @@ mod tests {
 
     #[test]
     fn scaled_sweep_appends_scale_tables_deterministically() {
-        let a = run_scaled(&[Fig::F12], Scale::Small, 7, 1, Layout::Block, Some(8));
-        let b = run_scaled(&[Fig::F12], Scale::Small, 7, 4, Layout::Block, Some(8));
+        let a = run_scaled(
+            &[Fig::F12],
+            Scale::Small,
+            7,
+            1,
+            Layout::Block,
+            Topology::Ring,
+            Some(8),
+        );
+        let b = run_scaled(
+            &[Fig::F12],
+            Scale::Small,
+            7,
+            4,
+            Layout::Block,
+            Topology::Ring,
+            Some(8),
+        );
         assert_eq!(a.render(), b.render(), "scale axis must stay bit-identical");
         // fig12 is analytic; the two Scale tables carry the axis
         assert_eq!(a.tables.len(), 3);
@@ -642,7 +754,10 @@ mod tests {
         assert_eq!(a.cells, 6 + 48);
         assert_eq!(a.timings.len(), a.cells, "every computed job is timed");
         assert!(a.timings.iter().all(|(_, ms)| *ms >= 0.0));
-        assert!(a.timings.iter().any(|(l, _)| l == "arena/gemm/n8/arena-sw/block"));
+        assert!(a
+            .timings
+            .iter()
+            .any(|(l, _)| l == "arena/gemm/n8/arena-sw/block/ring"));
     }
 
     #[test]
@@ -670,5 +785,48 @@ mod tests {
             .makespan_ps;
         assert_eq!(store.len(), 2, "two layouts, two cells");
         assert_ne!(a, b, "interleaving must change the schedule");
+    }
+
+    #[test]
+    fn topology_keys_do_not_collide_in_the_store() {
+        let mut store = CellStore::new(Scale::Small, 7);
+        let ring = store
+            .arena_cell(
+                "nbody",
+                4,
+                Model::SoftwareCpu,
+                Layout::Block,
+                Topology::Ring,
+            )
+            .topology;
+        let ideal = store
+            .arena_cell(
+                "nbody",
+                4,
+                Model::SoftwareCpu,
+                Layout::Block,
+                Topology::Ideal,
+            )
+            .topology;
+        assert_eq!(store.len(), 2, "two topologies, two cells");
+        assert_eq!(ring, "ring");
+        assert_eq!(ideal, "ideal");
+        // the default-keyed reader resolves to the ring cell
+        let d = store.arena("nbody", 4, Model::SoftwareCpu).topology;
+        assert_eq!(d, "ring");
+        assert_eq!(store.len(), 2, "default read served from cache");
+    }
+
+    #[test]
+    fn topo_jobs_share_ring_cells_with_the_skew_sweep() {
+        // the ring/block column of the topology sweep is exactly the
+        // block/ring column of the skew sweep — one cell in the store
+        let mut jobs: Vec<Job> =
+            topo_jobs().into_iter().chain(skew_jobs()).collect();
+        let total = jobs.len();
+        jobs.sort();
+        jobs.dedup();
+        // 12 shared cells: 6 apps x 2 models at (block, ring)
+        assert_eq!(jobs.len(), total - 12);
     }
 }

@@ -70,11 +70,14 @@ pub struct TaskToken {
     pub remote: Range,
     /// Node that spawned this token.
     pub from_node: NodeId,
-    /// Ring hops this token has traveled — simulator-side routing
-    /// metadata (not one of the paper's wire fields and not counted in
-    /// [`WIRE_BYTES`]). Scheduling policies use it to detect a full
-    /// circulation without placement (the `LocalityThreshold` fallback
-    /// that guarantees progress); the paper's greedy filter ignores it.
+    /// Network hops (dispatcher visits) this token has traveled —
+    /// simulator-side routing metadata (not one of the paper's wire
+    /// fields and not counted in [`WIRE_BYTES`]). Scheduling policies
+    /// use `hops >= nodes` as the topology-agnostic "coverage visits"
+    /// bound — a full circulation on the ring, the equivalent convey
+    /// budget on richer [`crate::net`] topologies — for the
+    /// `LocalityThreshold` fallback that guarantees progress; the
+    /// paper's greedy filter ignores it.
     pub hops: u16,
 }
 

@@ -7,6 +7,7 @@
 use arena::cgra::{alloc_policy, CoalesceUnit};
 use arena::config::ArenaConfig;
 use arena::dispatcher::{filter, FilterCase};
+use arena::net::{Interconnect, Topology};
 use arena::placement::{Directory, Layout};
 use arena::prop_assert;
 use arena::proptest_lite::forall;
@@ -375,6 +376,97 @@ fn coalesced_tokens_never_cross_owner_boundaries_at_execution() {
             executed_words >= pushed,
             "words lost in the carve: {executed_words} < {pushed}"
         );
+        Ok(())
+    });
+}
+
+/// Extraction guard for the interconnect layer: the trait-mediated
+/// `net::Ring` (what the cluster actually drives) must be bit-identical
+/// to the seed `RingNet` — same timing and same stats block — under
+/// randomized interleavings of token sends, probe hops, data transfers
+/// and control messages, including local/empty ones. This is the §5
+/// golden property: with `--topology ring` (the default) every figure
+/// rides on exactly these call sites.
+#[test]
+fn net_ring_is_bit_identical_to_seed_ringnet() {
+    let cfg = ArenaConfig::default(); // packet_bytes = 0, the seed discipline
+    forall("net-ring-golden", 400, 0x4176, |rng| {
+        let n = 1 + rng.below(32) as usize;
+        let mut seed_net = RingNet::new(n);
+        let mut ring = Topology::Ring.build(n);
+        for _ in 0..96 {
+            let now = rng.below(1_000_000_000);
+            let from = rng.below(n as u64) as usize;
+            let to = rng.below(n as u64) as usize;
+            match rng.below(4) {
+                0 => {
+                    let a = seed_net.send_token(&cfg, now, from);
+                    let (b, next) = ring.send_token(&cfg, now, from, to);
+                    prop_assert!(a == b, "token timing diverged: {a} != {b}");
+                    prop_assert!(
+                        next == (from + 1) % n,
+                        "the ring must ignore the dest hint"
+                    );
+                }
+                1 => {
+                    // the probe shares the token plane on the ring
+                    let a = seed_net.send_token(&cfg, now, from);
+                    let b = ring.probe_hop(&cfg, now, from);
+                    prop_assert!(a == b, "probe timing diverged: {a} != {b}");
+                }
+                2 => {
+                    let bytes = rng.below(1 << 18);
+                    let a = seed_net.send_data(&cfg, now, from, to, bytes);
+                    let b = ring.send_data(&cfg, now, from, to, bytes);
+                    prop_assert!(a == b, "data timing diverged: {a} != {b}");
+                }
+                _ => {
+                    let bytes = rng.below(64);
+                    let a = seed_net.send_ctrl(&cfg, now, from, to, bytes);
+                    let b = ring.send_ctrl(&cfg, now, from, to, bytes);
+                    prop_assert!(a == b, "ctrl timing diverged: {a} != {b}");
+                }
+            }
+        }
+        prop_assert!(
+            *ring.stats() == seed_net.stats,
+            "stats diverged: {:?} != {:?}",
+            ring.stats(),
+            seed_net.stats
+        );
+        Ok(())
+    });
+}
+
+/// Packetization bound: on idle links, cutting through after a head
+/// packet never delivers later than store-and-forward, on any topology
+/// (and a packet at least the message size coincides with it exactly).
+#[test]
+fn cut_through_never_slower_on_idle_paths() {
+    forall("net-packet", 300, 0xBEEF, |rng| {
+        let n = 2 + rng.below(15) as usize;
+        let from = rng.below(n as u64) as usize;
+        let to = rng.below(n as u64) as usize;
+        let bytes = 1 + rng.below(1 << 20);
+        let saf_cfg = ArenaConfig::default();
+        let mut ct_cfg = ArenaConfig::default();
+        ct_cfg.packet_bytes = 1 + rng.below(4096);
+        for topo in Topology::ALL {
+            let mut a = topo.build(n);
+            let t_saf = a.send_data(&saf_cfg, 0, from, to, bytes);
+            let mut b = topo.build(n);
+            let t_ct = b.send_data(&ct_cfg, 0, from, to, bytes);
+            prop_assert!(
+                t_ct <= t_saf,
+                "{}: cut-through slower ({t_ct} > {t_saf})",
+                topo.label()
+            );
+            prop_assert!(
+                *a.stats() == *b.stats(),
+                "{}: packetization must not change the byte accounting",
+                topo.label()
+            );
+        }
         Ok(())
     });
 }

@@ -1,0 +1,97 @@
+//! Guard + regenerator for `tables/SERVE_mixed.txt`.
+//!
+//! The checked-in Serve table is a derived artifact of a fully
+//! deterministic in-tree simulation, so the test *is* the regeneration
+//! command: it replays `traces/mixed.trace` under every scheduling
+//! policy with the exact parameters in the snapshot's header and
+//! compares byte-for-byte.
+//!
+//! * Snapshot current → pass.
+//! * Snapshot is the no-data placeholder (bootstrap) → the regenerated
+//!   file is written and the test passes; commit the result.
+//! * Snapshot has data rows but drifts from regeneration → the
+//!   regenerated file is written and the test FAILS, so stale numbers
+//!   can never ride along silently.
+//!
+//! CI backs this with a post-`cargo test` guard: a grep for data rows
+//! and `git diff --exit-code tables/SERVE_mixed.txt`, which fails on
+//! both the zero-data-rows and the drift case until the regenerated
+//! snapshot is committed.
+
+use std::path::PathBuf;
+
+use arena::apps::Scale;
+use arena::cluster::Model;
+use arena::net::Topology;
+use arena::sched::PolicyKind;
+use arena::serve;
+
+const HEADER: &str = "\
+# Serve policy A/B snapshot for traces/mixed.trace — regenerated
+# WHOLESALE (this header included) by the tier-1 snapshot test:
+#
+#   cargo test --test serve_snapshot
+#
+# which replays the trace in-process at small scale, arena-sw, 4
+# nodes, seed 0xA2EA, theta 0.5, every policy. The CLI equivalent is
+#
+#   arena serve --trace traces/mixed.trace --ab --scale small \\
+#     --model arena-sw --jobs 4
+#
+# (the tables below are its exact stdout). The test bootstraps the
+# file from the no-data placeholder and FAILS on any drift between
+# these numbers and regeneration; CI additionally greps for data rows
+# and `git diff`s this file after `cargo test`. Do not hand-edit.
+
+";
+
+fn repo_file(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// The canonical snapshot content: header + rendered Serve tables.
+fn regenerate() -> String {
+    let trace =
+        serve::load_trace(&repo_file("traces/mixed.trace")).expect("trace");
+    let spec = serve::ServeSpec {
+        trace,
+        scale: Scale::Small,
+        seed: 0xA2EA,
+        nodes: 4,
+        model: Model::SoftwareCpu,
+        topology: Topology::Ring,
+        overrides: Vec::new(),
+    };
+    let policies: Vec<(PolicyKind, u32)> =
+        PolicyKind::ALL.iter().map(|&k| (k, 500)).collect();
+    let out = serve::run_ab(&spec, &policies, 4).expect("replay");
+    format!("{HEADER}{}", out.render())
+}
+
+#[test]
+fn serve_mixed_snapshot_is_fresh() {
+    let path = repo_file("tables/SERVE_mixed.txt");
+    let fresh = regenerate();
+    assert!(
+        fresh.lines().any(|l| l.starts_with("j0:")),
+        "regenerated snapshot has no per-job rows — the replay is broken"
+    );
+    let on_disk = std::fs::read_to_string(&path).unwrap_or_default();
+    if on_disk == fresh {
+        return; // snapshot is current
+    }
+    let had_data_rows = on_disk.lines().any(|l| l.starts_with("j0:"));
+    // write the regenerated truth either way, so the working tree (and
+    // CI's git diff) always shows what the snapshot should be
+    std::fs::write(&path, &fresh)
+        .unwrap_or_else(|e| panic!("cannot write {}: {e}", path.display()));
+    assert!(
+        !had_data_rows,
+        "tables/SERVE_mixed.txt drifted from regeneration; the fresh \
+         snapshot has been written in place — review and commit it"
+    );
+    eprintln!(
+        "serve_snapshot: bootstrapped tables/SERVE_mixed.txt from the \
+         no-data placeholder — commit the regenerated file"
+    );
+}

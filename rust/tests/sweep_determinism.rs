@@ -6,6 +6,7 @@
 use arena::apps::{self, Scale};
 use arena::cluster::Model;
 use arena::eval;
+use arena::net::Topology;
 use arena::placement::Layout;
 use arena::sched::PolicyKind;
 use arena::serve;
@@ -63,6 +64,56 @@ fn layout_sweep_block_matches_default_run() {
     assert_eq!(plain.render(), blocked.render());
 }
 
+/// §5 golden (acceptance criterion): an explicit `--topology ring`
+/// sweep renders byte-identically to the default sweep — the topology
+/// layer costs the paper's figures nothing.
+#[test]
+fn topology_ring_sweep_matches_default_figures() {
+    let plain = sweep::run(&[Fig::F10, Fig::F13], Scale::Small, 5, 2);
+    let ringed = sweep::run_scaled(
+        &[Fig::F10, Fig::F13],
+        Scale::Small,
+        5,
+        2,
+        Layout::Block,
+        Topology::Ring,
+        None,
+    );
+    assert_eq!(plain.render(), ringed.render());
+}
+
+/// The `--all-topologies` sweep holds the same determinism contract as
+/// the figure and skew sweeps, and its axis must not be flat: at least
+/// one non-ring cell deviates from the ring-normalized 1.0 on
+/// wall-clock or byte-hops (the acceptance criterion).
+#[test]
+fn topology_sweep_bit_identical_across_jobs_and_not_flat() {
+    let a = sweep::run_topo(Scale::Small, 7, 1);
+    let b = sweep::run_topo(Scale::Small, 7, 8);
+    assert_eq!(a.cells, b.cells, "same unique cell set");
+    assert_eq!(
+        a.render(),
+        b.render(),
+        "topology tables must be bit-identical across --jobs"
+    );
+    // 6 apps x 2 models x 4 topologies
+    assert_eq!(a.cells, 48);
+    assert_eq!(a.tables.len(), 4, "Topology A/B per model");
+    let flat = a.tables.iter().all(|t| {
+        t.rows
+            .iter()
+            .all(|(_, vs)| vs.iter().all(|v| (v - 1.0).abs() < 1e-9))
+    });
+    assert!(!flat, "topology axis is flat: every cell equals ring");
+    // the ring column itself is exactly 1.0 by construction
+    for t in &a.tables {
+        assert_eq!(t.headers[0], "ring");
+        for (app, vs) in &t.rows {
+            assert_eq!(vs[0], 1.0, "{app}: ring column not normalized");
+        }
+    }
+}
+
 /// DES determinism at the large-scale axis top: two same-seed runs on
 /// a 128-node ring must be byte-identical in every observable counter
 /// (the `arena sweep --all --nodes 128` acceptance gate, at the Small
@@ -110,6 +161,8 @@ fn serve_spec() -> serve::ServeSpec {
         seed: 0xA2EA,
         nodes: 4,
         model: Model::SoftwareCpu,
+        topology: Topology::Ring,
+        overrides: Vec::new(),
     }
 }
 
@@ -187,12 +240,14 @@ fn oversubscribed_pool_is_still_deterministic() {
             nodes: 2,
             model: Model::SoftwareCpu,
             layout: Layout::Block,
+            topo: Topology::Ring,
         },
         Job::Arena {
             app: "spmv",
             nodes: 2,
             model: Model::SoftwareCpu,
             layout: Layout::Shuffle,
+            topo: Topology::Ring,
         },
     ];
     let mut a = CellStore::new(Scale::Small, 3);
