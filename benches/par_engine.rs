@@ -1,0 +1,100 @@
+//! Serial vs sharded DES: one simulation, N conservative-lookahead
+//! shards — the `--shards` acceptance benchmark. Measures the same
+//! gcn run end-to-end on the serial engine and on 4 shards, asserts
+//! the two reports byte-identical first (a fast parallel engine that
+//! drifts is worthless), then reports events/sec and the speedup.
+//! All measured results are written to `BENCH_par.json`.
+//!
+//!     cargo bench --bench par_engine [-- --smoke]
+//!
+//! `--smoke` runs a fast CI-friendly pass (32 nodes, short budgets);
+//! the full pass runs the 128-node configuration the acceptance
+//! criterion (>1.5x events/sec at 4 shards) is stated against.
+
+use std::time::Duration;
+
+use arena::apps::Scale;
+use arena::benchkit::{self, black_box, throughput, Bench};
+use arena::cluster::{Model, RunReport};
+use arena::eval;
+use arena::net::Topology;
+use arena::placement::Layout;
+
+const APP: &str = "gcn";
+const SHARDS: usize = 4;
+
+fn run(nodes: usize, shards: usize) -> RunReport {
+    eval::run_arena_cell_sharded(
+        APP,
+        Scale::Small,
+        7,
+        nodes,
+        Model::SoftwareCpu,
+        Layout::Block,
+        Topology::Ring,
+        shards,
+        None,
+    )
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let nodes = if smoke { 32 } else { 128 };
+    let b = if smoke {
+        Bench::quick().with_budget(Duration::from_millis(400))
+    } else {
+        Bench::new().with_budget(Duration::from_secs(4))
+    };
+
+    // correctness gate before any timing: byte-identical reports
+    let serial_report = run(nodes, 1);
+    let sharded_report = run(nodes, SHARDS);
+    assert_eq!(
+        format!("{serial_report:?}"),
+        format!("{sharded_report:?}"),
+        "--shards {SHARDS} diverged from the serial oracle"
+    );
+    let events = serial_report.events;
+    println!("## par_engine: {APP}@{nodes}n small, {events} events/run\n");
+
+    let rs = b.run(&format!("par_engine/serial {APP}@{nodes}n"), || {
+        black_box(run(nodes, 1)).makespan_ps
+    });
+    let rp = b.run(
+        &format!("par_engine/{SHARDS}-shard {APP}@{nodes}n"),
+        || black_box(run(nodes, SHARDS)).makespan_ps,
+    );
+
+    let ser_eps = throughput(&rs, events);
+    let par_eps = throughput(&rp, events);
+    let speedup = rs.mean.as_secs_f64() / rp.mean.as_secs_f64();
+    println!(
+        "\nserial    {ser_eps:>12.0} events/s\n\
+         {SHARDS}-shard   {par_eps:>12.0} events/s\n\
+         speedup   {speedup:>12.2}x"
+    );
+    if !smoke && speedup < 1.5 {
+        eprintln!(
+            "WARNING: {speedup:.2}x is below the 1.5x acceptance bar \
+             at {nodes} nodes — check shard balance and window size \
+             before shipping an engine change"
+        );
+    }
+
+    let results = benchkit::results_json(&[rs, rp]);
+    let fields = [
+        ("smoke", smoke.to_string()),
+        ("app", format!("\"{APP}\"")),
+        ("nodes", nodes.to_string()),
+        ("shards", SHARDS.to_string()),
+        ("events_per_run", events.to_string()),
+        ("serial_events_per_sec", format!("{ser_eps:.1}")),
+        ("sharded_events_per_sec", format!("{par_eps:.1}")),
+        ("speedup", format!("{speedup:.4}")),
+        ("results", results),
+    ];
+    match benchkit::write_bench_json("BENCH_par.json", "par_engine", &fields) {
+        Ok(()) => println!("record: BENCH_par.json"),
+        Err(e) => eprintln!("record: BENCH_par.json not written: {e}"),
+    }
+}

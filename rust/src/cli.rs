@@ -79,7 +79,7 @@ pub fn parse(
 /// effective [`ArenaConfig`]. One table so `build_config` and the
 /// round-trip test cannot drift apart: a new config-affecting option
 /// is added here (and sampled in the test) or it does not exist.
-pub const CONFIG_OPTS: [(&str, &str); 7] = [
+pub const CONFIG_OPTS: [(&str, &str); 8] = [
     ("nodes", "nodes"),
     ("seed", "seed"),
     ("layout", "layout"),
@@ -87,6 +87,7 @@ pub const CONFIG_OPTS: [(&str, &str); 7] = [
     ("theta", "theta"),
     ("inject-node", "inject_node"),
     ("topology", "topology"),
+    ("shards", "shards"),
 ];
 
 /// Build the effective config: `--config FILE` base (Table-2 defaults
@@ -232,6 +233,13 @@ mod tests {
         let a = parse(&sv(&["fig", "--set", "nodes=8"]), &[]).unwrap();
         let e = ensure_known(&a, &[], &[], false, true).unwrap_err();
         assert!(e.to_string().contains("--set"), "{e}");
+        // --shards is a config opt, so commands that never run the DES
+        // under it (fig replays the checked-in figure pipeline) reject
+        // it through the same allowlist instead of silently dropping it
+        let a = parse(&sv(&["fig", "10", "--shards", "4"]), &["shards"]).unwrap();
+        let e = ensure_known(&a, &[], &["scale", "seed", "fig"], false, true)
+            .unwrap_err();
+        assert!(e.to_string().contains("--shards"), "{e}");
         // stray positionals are rejected on commands that take none
         // (`arena run gemm` — the user forgot --app)
         let a = parse(&sv(&["run", "gemm"]), &[]).unwrap();
@@ -263,6 +271,7 @@ mod tests {
                 "theta" => "0.9",
                 "inject-node" => "2",
                 "topology" => "ideal",
+                "shards" => "2",
                 other => panic!(
                     "CONFIG_OPTS gained '{other}' without a round-trip \
                      sample — extend this test"

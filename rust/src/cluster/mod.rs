@@ -22,10 +22,12 @@
 //! the multi-tenant serving metrics.
 //!
 //! The module is split by concern: `events` (DES events + arrival
-//! schedule), `runloop` (the Fig. 5 loop), `terminate` (the two-pass
-//! protocol), `report` (stats assembly / [`RunReport`]).
+//! schedule), `runloop` (the Fig. 5 loop), `par` (the sharded
+//! conservative-lookahead variant behind `--shards`), `terminate` (the
+//! two-pass protocol), `report` (stats assembly / [`RunReport`]).
 
 mod events;
+mod par;
 mod report;
 mod runloop;
 mod terminate;
@@ -103,6 +105,10 @@ pub struct Cluster {
     /// node) — lap accounting counts circulations back to it, so the
     /// count stays exact for non-zero inject nodes and serve traces.
     pub(in crate::cluster) probe_origin: usize,
+    /// Per-node "probe visited" scoreboard for the debug-build coverage
+    /// assert: each completed coverage circulation must visit every
+    /// node exactly once, on every topology (see `terminate`).
+    pub(in crate::cluster) probe_visited: Vec<bool>,
     /// Per-app accounting (multi-user fairness + open-system latency).
     pub(in crate::cluster) app_stats: Vec<AppStat>,
     /// Spawn lists in flight between task launch and its Complete
@@ -191,6 +197,7 @@ impl Cluster {
             max_events: 2_000_000_000,
             terminate_laps: 0,
             probe_origin: 0,
+            probe_visited: vec![false; n],
             app_stats: vec![AppStat::default(); n_apps],
             spawn_slab: Vec::new(),
             spawn_free: Vec::new(),

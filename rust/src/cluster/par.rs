@@ -1,0 +1,901 @@
+//! Sharded conservative-lookahead execution of the Fig. 5 runtime loop.
+//!
+//! `--shards N` partitions the ring into N contiguous node groups, each
+//! owning its nodes' dispatcher queues, fetch slabs, spawn slabs and a
+//! private [`ShardEngine`]. Shards advance in lockstep windows `[W, W +
+//! L)` where `W` is the earliest pending event anywhere and `L` is the
+//! fabric's [`crate::net::Interconnect::lookahead_ps`]: every cross-node
+//! delivery pays at least `L`, so a shard can process its own window
+//! without hearing from the others mid-window.
+//!
+//! ## Byte-identical to the serial oracle
+//!
+//! The serial engine orders same-timestamp events by a global schedule
+//! sequence number. A shard cannot know that number for events it
+//! creates mid-window, so ordering is reconstructed in two halves:
+//!
+//! * **In-window** every locally scheduled event is keyed
+//!   `(at, CLASS_LOCAL, emitter's local pop index, k)` where `k` counts
+//!   schedule-like actions inside one handler body (local schedules
+//!   *and* deferred network calls, in body order — exactly the actions
+//!   that consume a serial seq). Within one shard this reproduces the
+//!   serial tie-break, and cross-shard same-window ties cannot exist:
+//!   any cross-node event lands at least `L` later, i.e. in a later
+//!   window.
+//! * **At the barrier** the per-shard pop logs are k-way merged into
+//!   the exact serial pop order, assigning each pop its global rank;
+//!   provisional `CLASS_LOCAL` keys still pending in any shard heap
+//!   are rewritten to `(at, CLASS_RANKED, global rank, k)`. Deferred
+//!   network operations (token forwards, TERMINATE probe steps, DTN
+//!   fetches) are then replayed against the *single* interconnect in
+//!   global rank order — the same call sequence, with the same `now`
+//!   arguments, the serial loop would have made — and their deliveries
+//!   are inserted into the destination shards as ranked events.
+//!
+//! Node and dispatcher state is exercised by the identical handler
+//! sequence per node, so every counter in the report matches the
+//! serial run bit for bit; `tests/shard_invariance.rs` pins this
+//! across apps, models, topologies and shard counts.
+//!
+//! ## App state
+//!
+//! Apps execute under a per-app mutex. Two same-window executions of
+//! one app on different shards may run in either wall-clock order, but
+//! they commute: a task mutates only addresses its own node owns (the
+//! filter's construction), and a cross-node producer/consumer pair is
+//! separated by at least one network delivery, hence at least `L`,
+//! hence a window barrier. Apps whose `execute` result depended on
+//! cross-node same-instant mutation order would diverge — the shard
+//! invariance property test is the tripwire.
+//!
+//! The PJRT numerics engine is not shipped across threads: with a
+//! borrowed engine the cluster falls back to the serial loop (timing
+//! is identical either way — the cycle model is authoritative).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use crate::api::{App, ExecCtx, WORD_BYTES};
+use crate::config::Ps;
+use crate::node::{Compute, Node, SW_TOKEN_OVERHEAD_CYCLES};
+use crate::sim::par::{
+    key, key_at, key_class, key_k, key_x, Mailbox, ShardEngine, CLASS_LOCAL,
+    CLASS_RANKED, CLASS_ROOT,
+};
+use crate::token::{TaskId, TaskToken, WIRE_BYTES};
+
+use super::events::{Arrival, Ev};
+use super::report::{AppStat, RunReport};
+use super::terminate::note_probe_visit;
+use super::{Cluster, KernelInfo, Model};
+
+/// A deferred network call: everything the barrier needs to replay it
+/// against the shared interconnect in global schedule order.
+struct NetOp {
+    /// Simulated time the serial loop would have made the call.
+    at: Ps,
+    /// Node the call originates from.
+    node: usize,
+    /// Intra-handler schedule position (the serial seq offset).
+    k: u32,
+    /// Emitting handler's shard-local pop index (rank lookup key).
+    emitter: u64,
+    kind: OpKind,
+}
+
+enum OpKind {
+    /// Forward a token one link toward its home (`record_hop` already
+    /// applied — the serial loop stamps it before routing).
+    Token(TaskToken),
+    /// Forward the TERMINATE probe along the coverage cycle.
+    Probe,
+    /// Acquire `tok.remote` over the DTN; the token is parked in the
+    /// emitting node's fetch slab at `slot`. Stats were booked
+    /// in-window; the replay re-walks the extents for timing only.
+    Fetch { slot: u32, tok: TaskToken },
+}
+
+/// Read-only state every shard shares (plus the app mutexes and the
+/// cross-shard `done` mirror the TERMINATE swallow check reads).
+struct SharedCtx<'a> {
+    cfg: &'a crate::config::ArenaConfig,
+    model: Model,
+    dirs: &'a [crate::placement::Directory],
+    kernels: &'a [Option<KernelInfo>],
+    apps: &'a [Mutex<Box<dyn App>>],
+    /// Per-node done flags. Written only by the single TERMINATE probe
+    /// handler (one probe step per window — the probe's hop delay is at
+    /// least `L`), read by the same handler's all-done swallow check;
+    /// the barrier's channel hand-off orders everything else.
+    done: &'a [AtomicBool],
+    n_nodes: usize,
+    max_events: u64,
+}
+
+impl SharedCtx<'_> {
+    fn kernel_info(&self, id: TaskId) -> &KernelInfo {
+        self.kernels
+            .get(id as usize)
+            .unwrap_or_else(|| {
+                panic!(
+                    "token carries task id {id}, outside the 4-bit wire \
+                     range (1..=15)"
+                )
+            })
+            .as_ref()
+            .unwrap_or_else(|| panic!("unregistered task id {id}"))
+    }
+
+    fn disp_cycle_ps(&self) -> Ps {
+        match self.model {
+            Model::SoftwareCpu => self.cfg.cpu_cycle_ps(),
+            Model::Cgra => self.cfg.cgra_cycle_ps(),
+        }
+    }
+}
+
+/// One node group: its nodes, event queue, and the shard-local slabs
+/// the serial loop kept on the cluster.
+struct Shard {
+    /// First global node index this shard owns (nodes are contiguous).
+    base: usize,
+    nodes: Vec<Node>,
+    eng: ShardEngine<Ev>,
+    pump_pending: Vec<bool>,
+    policy: Box<dyn crate::sched::DispatchPolicy>,
+    app_stats: Vec<AppStat>,
+    spawn_slab: Vec<Vec<TaskToken>>,
+    spawn_free: Vec<u32>,
+    vec_pool: Vec<Vec<TaskToken>>,
+    /// Cumulative pops (the next pop's shard-local index).
+    pops: u64,
+    /// Keys popped this window, in pop order (merged at the barrier).
+    log: Vec<u128>,
+    outbox: Mailbox<NetOp>,
+    /// Current handler's pop index / schedule counter (key fields for
+    /// everything the handler schedules or defers).
+    cur_x: u64,
+    k: u32,
+}
+
+impl Shard {
+    /// Process every owned event strictly before `horizon`.
+    fn run_window(&mut self, cx: &SharedCtx<'_>, horizon: Ps) {
+        while let Some((pkey, ev)) = self.eng.pop_if_before(horizon) {
+            let now = key_at(pkey);
+            if self.pops >= cx.max_events {
+                panic!(
+                    "cluster exceeded {} events at t={now}ps — livelock? \
+                     pending={}",
+                    cx.max_events,
+                    self.eng.pending()
+                );
+            }
+            self.cur_x = self.pops;
+            self.pops += 1;
+            self.k = 0;
+            self.log.push(pkey);
+            match ev {
+                Ev::Arrive(n, tok) => self.on_arrive(cx, now, n, tok),
+                Ev::Pump(n) => {
+                    self.pump_pending[n - self.base] = false;
+                    self.on_pump(cx, now, n);
+                }
+                Ev::Complete(n, slot) => {
+                    let lx = n - self.base;
+                    self.nodes[lx].running -= 1;
+                    let mut spawns =
+                        std::mem::take(&mut self.spawn_slab[slot as usize]);
+                    self.spawn_free.push(slot);
+                    for s in spawns.drain(..) {
+                        self.nodes[lx].coalescer.push(s);
+                    }
+                    self.vec_pool.push(spawns);
+                    self.schedule_pump(cx, now, n);
+                }
+                Ev::DataReady(n, slot) => {
+                    let t = self.nodes[n - self.base].fetching.take(slot);
+                    self.exec_or_requeue(cx, now, n, t);
+                    self.schedule_pump(cx, now, n);
+                }
+            }
+        }
+    }
+
+    /// Schedule a shard-local event; consumes one `k` (a serial seq).
+    fn sched(&mut self, at: Ps, ev: Ev) {
+        let kk = key(at, CLASS_LOCAL, self.cur_x, self.k);
+        self.k += 1;
+        self.eng.insert(kk, ev);
+    }
+
+    /// Defer a network call to the barrier; consumes one `k` exactly
+    /// where the serial loop would have scheduled the delivery.
+    fn defer(&mut self, at: Ps, node: usize, kind: OpKind) {
+        self.outbox.push(NetOp { at, node, k: self.k, emitter: self.cur_x, kind });
+        self.k += 1;
+    }
+
+    fn schedule_pump(&mut self, cx: &SharedCtx<'_>, now: Ps, n: usize) {
+        let lx = n - self.base;
+        if !self.pump_pending[lx] && !self.nodes[lx].done {
+            self.pump_pending[lx] = true;
+            self.sched(now.saturating_add(cx.disp_cycle_ps()), Ev::Pump(n));
+        }
+    }
+
+    fn on_arrive(&mut self, cx: &SharedCtx<'_>, now: Ps, n: usize, tok: TaskToken) {
+        let lx = n - self.base;
+        if self.nodes[lx].done {
+            debug_assert!(tok.is_terminate(), "live token at a dead node");
+            return;
+        }
+        if let Err(t) = self.nodes[lx].disp.recv.push(tok) {
+            self.nodes[lx].stats.recv_stalls += 1;
+            self.nodes[lx].inbound.push_back(t);
+        }
+        self.schedule_pump(cx, now, n);
+    }
+
+    /// One dispatcher step — the serial `on_pump` body with network
+    /// calls deferred (the shared fabric is replayed at the barrier).
+    fn on_pump(&mut self, cx: &SharedCtx<'_>, now: Ps, n: usize) {
+        let lx = n - self.base;
+        if self.nodes[lx].done {
+            return;
+        }
+        let mut progress = false;
+
+        while !self.nodes[lx].disp.recv.is_full() {
+            match self.nodes[lx].inbound.pop_front() {
+                Some(t) => {
+                    self.nodes[lx].disp.recv.push(t).expect("checked space");
+                    progress = true;
+                }
+                None => break,
+            }
+        }
+        while !self.nodes[lx].disp.recv.is_full() {
+            match self.nodes[lx].coalescer.pop() {
+                Some(t) => {
+                    self.nodes[lx].disp.recv.push(t).expect("checked space");
+                    progress = true;
+                }
+                None => break,
+            }
+        }
+
+        if let Some(&tok) = self.nodes[lx].disp.recv.peek() {
+            if tok.is_terminate() {
+                self.nodes[lx].disp.recv.pop();
+                progress = true;
+                if self.nodes[lx].quiescent(now) {
+                    self.finish_terminate(cx, now, n);
+                } else {
+                    self.nodes[lx].parked_terminate = true;
+                    self.nodes[lx].touch();
+                }
+            } else {
+                let ai = cx.kernel_info(tok.task_id).app_idx;
+                let local = cx.dirs[ai].filter_extent(n, tok.task);
+                let sctx = crate::sched::SchedCtx { nodes: cx.n_nodes };
+                let out = self.policy.classify(&tok, local, &sctx);
+                if self.nodes[lx].disp.process_outcome(tok, out).is_ok() {
+                    self.nodes[lx].disp.recv.pop();
+                    self.nodes[lx].touch();
+                    progress = true;
+                }
+            }
+        }
+
+        progress |= self.try_launch(cx, now, n);
+
+        while let Some(mut t) = self.nodes[lx].disp.send.pop() {
+            debug_assert!(!t.is_terminate(), "TERMINATE in the send queue");
+            t.record_hop();
+            self.defer(now, n, OpKind::Token(t));
+            progress = true;
+        }
+
+        if self.nodes[lx].parked_terminate && self.nodes[lx].quiescent(now) {
+            self.finish_terminate(cx, now, n);
+            progress = true;
+        }
+
+        let work_queued = !self.nodes[lx].disp.recv.is_empty()
+            || !self.nodes[lx].inbound.is_empty()
+            || !self.nodes[lx].coalescer.is_empty()
+            || !self.nodes[lx].disp.send.is_empty();
+        if progress && work_queued {
+            self.schedule_pump(cx, now, n);
+        }
+    }
+
+    fn try_launch(&mut self, cx: &SharedCtx<'_>, now: Ps, n: usize) -> bool {
+        let mut progress = false;
+        loop {
+            let lx = n - self.base;
+            let Some(&tok) = self.nodes[lx].disp.wait.peek() else {
+                return progress;
+            };
+            if tok.needs_remote_data() {
+                self.nodes[lx].disp.wait.pop();
+                let all_local = self.book_fetch(cx, now, n, &tok);
+                let slot = self.nodes[lx].fetching.park(tok);
+                self.nodes[lx].stats.fetches += 1;
+                self.nodes[lx].stats.fetched_bytes +=
+                    tok.remote.len() as u64 * WORD_BYTES;
+                match all_local {
+                    // every extent is homed here: ready immediately, a
+                    // purely local event (the serial loop schedules the
+                    // DataReady either way, so event counts match)
+                    Some(ready_at) => self.sched(ready_at, Ev::DataReady(n, slot)),
+                    None => self.defer(now, n, OpKind::Fetch { slot, tok }),
+                }
+                progress = true;
+                continue;
+            }
+            if !self.nodes[lx].compute.ready(now) {
+                return progress;
+            }
+            self.nodes[lx].disp.wait.pop();
+            self.exec_or_requeue(cx, now, n, tok);
+            progress = true;
+        }
+    }
+
+    /// The stat-booking half of the serial `fetch_remote`: locality
+    /// counters are per-extent state owned by this shard, so they are
+    /// booked in-window; the wire timing is deferred. Returns
+    /// `Some(ready_at)` when no extent needs the wire.
+    fn book_fetch(
+        &mut self,
+        cx: &SharedCtx<'_>,
+        now: Ps,
+        n: usize,
+        tok: &TaskToken,
+    ) -> Option<Ps> {
+        let info = cx.kernel_info(tok.task_id);
+        let ai = info.app_idx;
+        let lx = n - self.base;
+        if info.fetch_from_parent {
+            let src = tok.from_node as usize;
+            let words = tok.remote.len() as u64;
+            self.nodes[lx].stats.touched_words += words;
+            self.app_stats[ai].touched_words += words;
+            if src == n {
+                self.nodes[lx].stats.local_hit_words += words;
+                self.app_stats[ai].local_hit_words += words;
+                return Some(now);
+            }
+            return None;
+        }
+        let dir = &cx.dirs[ai];
+        let mut any_remote = false;
+        let mut at = tok.remote.start;
+        while at < tok.remote.end {
+            let (owner, ext) = dir.owner_extent(at);
+            let end = tok.remote.end.min(ext.end);
+            let words = (end - at) as u64;
+            self.nodes[lx].stats.touched_words += words;
+            self.app_stats[ai].touched_words += words;
+            if owner == n {
+                self.nodes[lx].stats.local_hit_words += words;
+                self.app_stats[ai].local_hit_words += words;
+            } else {
+                any_remote = true;
+            }
+            at = end;
+        }
+        if any_remote {
+            None
+        } else {
+            Some(now)
+        }
+    }
+
+    fn exec_or_requeue(
+        &mut self,
+        cx: &SharedCtx<'_>,
+        now: Ps,
+        n: usize,
+        tok: TaskToken,
+    ) {
+        let info = cx.kernel_info(tok.task_id);
+        let app_idx = info.app_idx;
+
+        let spawn_buf = self.vec_pool.pop().unwrap_or_default();
+        let fwd_buf = self.vec_pool.pop().unwrap_or_default();
+        let mut ctx = ExecCtx::with_buffers(
+            n as crate::token::NodeId,
+            None,
+            spawn_buf,
+            fwd_buf,
+        );
+        let exec = cx.apps[app_idx]
+            .lock()
+            .expect("app state poisoned by another shard")
+            .execute(n, &tok, &mut ctx);
+        let (spawns, mut forwards) = ctx.into_buffers();
+        let lx = n - self.base;
+        for f in forwards.drain(..) {
+            self.nodes[lx].coalescer.push(f);
+        }
+        self.vec_pool.push(forwards);
+        let slot = match self.spawn_free.pop() {
+            Some(s) => {
+                debug_assert!(self.spawn_slab[s as usize].is_empty());
+                self.spawn_slab[s as usize] = spawns;
+                s
+            }
+            None => {
+                self.spawn_slab.push(spawns);
+                (self.spawn_slab.len() - 1) as u32
+            }
+        };
+
+        let done = match &mut self.nodes[lx].compute {
+            Compute::Cpu { busy_until } => {
+                let cycles =
+                    info.spec.cpu_cycles(exec.units) + SW_TOKEN_OVERHEAD_CYCLES;
+                let start = now.max(*busy_until);
+                let done = start + cycles * cx.cfg.cpu_cycle_ps();
+                *busy_until = done;
+                done
+            }
+            Compute::Cgra(cgra) => {
+                let local_len = cx.dirs[app_idx].local_words(n);
+                match cgra.launch(now, &tok, local_len, exec.units, &info.mappings)
+                {
+                    Some(l) => l.done,
+                    None => {
+                        let at = cgra.next_free_at();
+                        let l = cgra
+                            .launch(at, &tok, local_len, exec.units, &info.mappings)
+                            .expect("a group is free at next_free_at");
+                        l.done
+                    }
+                }
+            }
+        };
+        self.nodes[lx].running += 1;
+        self.nodes[lx].stats.tasks += 1;
+        self.nodes[lx].stats.units += exec.units;
+        self.nodes[lx].stats.local_bytes += exec.local_bytes;
+        if !tok.needs_remote_data() {
+            self.nodes[lx].stats.touched_words += tok.task.len() as u64;
+            self.nodes[lx].stats.local_hit_words += tok.task.len() as u64;
+            self.app_stats[app_idx].touched_words += tok.task.len() as u64;
+            self.app_stats[app_idx].local_hit_words += tok.task.len() as u64;
+        }
+        let stat = &mut self.app_stats[app_idx];
+        stat.tasks += 1;
+        stat.units += exec.units;
+        stat.first_dispatch = Some(stat.first_dispatch.unwrap_or(now).min(now));
+        stat.last_done = stat.last_done.max(done);
+        self.nodes[lx].touch();
+        self.sched(done, Ev::Complete(n, slot));
+    }
+
+    /// TERMINATE at a quiescent node. The exit is mirrored into the
+    /// shared `done` array so the last node's swallow check sees the
+    /// whole cluster; the probe forward itself (hop timing, lap and
+    /// coverage accounting) is the barrier's job.
+    fn finish_terminate(&mut self, cx: &SharedCtx<'_>, now: Ps, n: usize) {
+        let exits = self.nodes[n - self.base].terminate_step();
+        if exits {
+            cx.done[n].store(true, Ordering::Relaxed);
+            if cx.done.iter().all(|d| d.load(Ordering::Relaxed)) {
+                return; // the last node swallows the probe
+            }
+        }
+        self.defer(now, n, OpKind::Probe);
+    }
+}
+
+impl Cluster {
+    /// The sharded equivalent of the serial `run_with_arrivals` body
+    /// (arrivals already validated by the caller). Byte-identical
+    /// output for every shard count — see the module docs.
+    pub(super) fn run_with_arrivals_sharded(
+        &mut self,
+        arrivals: &[Arrival],
+    ) -> RunReport {
+        let n_nodes = self.nodes.len();
+        let n_shards = self.cfg.shards.min(n_nodes);
+        debug_assert!(n_shards > 1, "serial path handles --shards 1");
+        let lookahead = self.net.lookahead_ps(&self.cfg);
+
+        // contiguous near-even node groups: the first `r` shards own
+        // one extra node
+        let q = n_nodes / n_shards;
+        let r = n_nodes % n_shards;
+        let mut base_of = Vec::with_capacity(n_shards + 1);
+        let mut b = 0;
+        for s in 0..n_shards {
+            base_of.push(b);
+            b += q + usize::from(s < r);
+        }
+        base_of.push(n_nodes);
+        let shard_of = move |node: usize| -> usize {
+            let cut = r * (q + 1);
+            if node < cut {
+                node / (q + 1)
+            } else {
+                r + (node - cut) / q
+            }
+        };
+
+        // root tokens are collected before the apps go behind mutexes
+        let roots: Vec<Vec<TaskToken>> =
+            self.apps.iter().map(|a| a.root_tokens()).collect();
+        let apps: Vec<Mutex<Box<dyn App>>> = std::mem::take(&mut self.apps)
+            .into_iter()
+            .map(Mutex::new)
+            .collect();
+        let done: Vec<AtomicBool> =
+            (0..n_nodes).map(|_| AtomicBool::new(false)).collect();
+
+        let mut all_nodes = std::mem::take(&mut self.nodes);
+        let mut carved: Vec<Shard> = Vec::with_capacity(n_shards);
+        for s in (0..n_shards).rev() {
+            let chunk = all_nodes.split_off(base_of[s]);
+            let len = chunk.len();
+            carved.push(Shard {
+                base: base_of[s],
+                nodes: chunk,
+                eng: ShardEngine::with_capacity(64 * len),
+                pump_pending: vec![false; len],
+                policy: self.cfg.dispatch_policy(),
+                app_stats: vec![AppStat::default(); apps.len()],
+                spawn_slab: Vec::new(),
+                spawn_free: Vec::new(),
+                vec_pool: Vec::new(),
+                pops: 0,
+                log: Vec::new(),
+                outbox: Mailbox::with_capacity(64 * len),
+                cur_x: 0,
+                k: 0,
+            });
+        }
+        carved.reverse();
+        let mut shards: Vec<Option<Shard>> =
+            carved.into_iter().map(Some).collect();
+
+        // Leader start-up, exactly the serial order: each injection is
+        // a root-class key whose ordinal reproduces the serial seq.
+        let mut ord = 0u64;
+        let mut last = (0, self.cfg.inject_node);
+        for a in arrivals {
+            self.app_stats[a.app].arrival = a.at;
+            for t in &roots[a.app] {
+                shards[shard_of(a.node)]
+                    .as_mut()
+                    .expect("shard at home")
+                    .eng
+                    .insert(key(a.at, CLASS_ROOT, ord, 0), Ev::Arrive(a.node, *t));
+                ord += 1;
+            }
+            if a.at >= last.0 {
+                last = (a.at, a.node);
+            }
+        }
+        self.probe_origin = last.1;
+        let probe_origin = last.1;
+        shards[shard_of(last.1)].as_mut().expect("shard at home").eng.insert(
+            key(last.0, CLASS_ROOT, ord, 0),
+            Ev::Arrive(last.1, TaskToken::terminate()),
+        );
+
+        let cx = SharedCtx {
+            cfg: &self.cfg,
+            model: self.model,
+            dirs: &self.dirs,
+            kernels: &self.kernels,
+            apps: &apps,
+            done: &done,
+            n_nodes,
+            max_events: self.max_events,
+        };
+
+        let mut makespan: Ps = 0;
+        let mut total_events: u64 = 0;
+        let mut global_rank: u64 = 0;
+
+        std::thread::scope(|scope| {
+            // one persistent worker per shard; Shard ownership
+            // round-trips through the channels, so no locking on any
+            // node state
+            let mut req_tx = Vec::with_capacity(n_shards);
+            let mut res_rx = Vec::with_capacity(n_shards);
+            for _ in 0..n_shards {
+                let (tx, rx) = mpsc::channel::<(Shard, Ps)>();
+                let (rtx, rrx) = mpsc::channel::<Shard>();
+                req_tx.push(tx);
+                res_rx.push(rrx);
+                let cxr = &cx;
+                scope.spawn(move || {
+                    while let Ok((mut sh, horizon)) = rx.recv() {
+                        sh.run_window(cxr, horizon);
+                        if rtx.send(sh).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+
+            let mut active: Vec<usize> = Vec::new();
+            let mut ranks: Vec<Vec<u64>> = vec![Vec::new(); n_shards];
+            let mut starts = vec![0u64; n_shards];
+            let mut ptr = vec![0usize; n_shards];
+            let mut ops: Vec<(usize, NetOp)> = Vec::new();
+            let mut scratch: Vec<NetOp> = Vec::new();
+
+            loop {
+                let w = shards
+                    .iter()
+                    .filter_map(|s| s.as_ref().expect("shard at home").eng.peek_at())
+                    .min();
+                let Some(w) = w else { break };
+                let horizon = w.saturating_add(lookahead);
+                active.clear();
+                for (i, s) in shards.iter().enumerate() {
+                    if let Some(at) = s.as_ref().expect("shard at home").eng.peek_at()
+                    {
+                        if at < horizon {
+                            active.push(i);
+                        }
+                    }
+                }
+                if active.len() == 1 {
+                    // serial phase: run inline, skip the channel hop
+                    shards[active[0]]
+                        .as_mut()
+                        .expect("shard at home")
+                        .run_window(&cx, horizon);
+                } else {
+                    for &i in &active {
+                        let sh = shards[i].take().expect("shard at home");
+                        req_tx[i].send((sh, horizon)).expect("worker alive");
+                    }
+                    for &i in &active {
+                        let sh = res_rx[i].recv().unwrap_or_else(|_| {
+                            panic!("shard {i} worker panicked")
+                        });
+                        shards[i] = Some(sh);
+                    }
+                }
+
+                // --- barrier 1: k-way merge of the pop logs into the
+                // serial pop order, assigning global ranks ---
+                for (i, s) in shards.iter().enumerate() {
+                    let s = s.as_ref().expect("shard at home");
+                    starts[i] = s.pops - s.log.len() as u64;
+                    ranks[i].clear();
+                    ptr[i] = 0;
+                }
+                loop {
+                    let mut best: Option<(u128, usize)> = None;
+                    for (i, s) in shards.iter().enumerate() {
+                        let s = s.as_ref().expect("shard at home");
+                        if ptr[i] >= s.log.len() {
+                            continue;
+                        }
+                        let raw = s.log[ptr[i]];
+                        // a provisional key's emitter popped earlier in
+                        // this same shard log, so its rank is resolved
+                        let resolved = if key_class(raw) == CLASS_LOCAL {
+                            let x = (key_x(raw) - starts[i]) as usize;
+                            key(key_at(raw), CLASS_RANKED, ranks[i][x], key_k(raw))
+                        } else {
+                            raw
+                        };
+                        match best {
+                            Some((bk, _)) if bk <= resolved => {}
+                            _ => best = Some((resolved, i)),
+                        }
+                    }
+                    let Some((bk, i)) = best else { break };
+                    ranks[i].push(global_rank);
+                    global_rank += 1;
+                    total_events += 1;
+                    makespan = makespan.max(key_at(bk));
+                    ptr[i] += 1;
+                }
+
+                // --- barrier 2: runaway guard (the serial loop's) ---
+                if total_events > cx.max_events {
+                    let pending: usize = shards
+                        .iter()
+                        .map(|s| s.as_ref().expect("shard at home").eng.pending())
+                        .sum();
+                    panic!(
+                        "cluster exceeded {} events at t={w}ps — livelock? \
+                         pending={pending}",
+                        cx.max_events
+                    );
+                }
+
+                // --- barrier 3: promote provisional keys still
+                // pending to their merged global ranks ---
+                for (i, s) in shards.iter_mut().enumerate() {
+                    let sh = s.as_mut().expect("shard at home");
+                    if sh.log.is_empty() {
+                        continue;
+                    }
+                    let rk = &ranks[i];
+                    let start = starts[i];
+                    sh.eng.remap_keys(|kk| {
+                        if key_class(kk) == CLASS_LOCAL {
+                            let x = (key_x(kk) - start) as usize;
+                            key(key_at(kk), CLASS_RANKED, rk[x], key_k(kk))
+                        } else {
+                            kk
+                        }
+                    });
+                    sh.log.clear();
+                }
+
+                // --- barrier 4: replay deferred network calls against
+                // the single fabric in global schedule order — the
+                // exact call sequence the serial loop makes ---
+                ops.clear();
+                for (i, s) in shards.iter_mut().enumerate() {
+                    let sh = s.as_mut().expect("shard at home");
+                    if sh.outbox.is_empty() {
+                        continue;
+                    }
+                    scratch.clear();
+                    sh.outbox.drain_into(&mut scratch);
+                    for op in scratch.drain(..) {
+                        ops.push((i, op));
+                    }
+                }
+                ops.sort_unstable_by_key(|(i, op)| {
+                    let rank = ranks[*i][(op.emitter - starts[*i]) as usize];
+                    ((rank as u128) << 20) | op.k as u128
+                });
+                for (i, op) in ops.drain(..) {
+                    let rank = ranks[i][(op.emitter - starts[i]) as usize];
+                    match op.kind {
+                        OpKind::Token(t) => {
+                            let dest = if self.net.routes_by_dest() {
+                                let ai = cx.kernel_info(t.task_id).app_idx;
+                                cx.dirs[ai].try_owner(t.task.start).unwrap_or_else(
+                                    |_| self.net.next_hop(op.node),
+                                )
+                            } else {
+                                op.node // advance the coverage cycle
+                            };
+                            let (at2, next) = self
+                                .net
+                                .send_token(cx.cfg, op.at, op.node, dest);
+                            debug_assert!(
+                                at2 >= horizon,
+                                "token delivery inside the lookahead window"
+                            );
+                            shards[shard_of(next)]
+                                .as_mut()
+                                .expect("shard at home")
+                                .eng
+                                .insert(
+                                    key(at2, CLASS_RANKED, rank, op.k),
+                                    Ev::Arrive(next, t),
+                                );
+                        }
+                        OpKind::Probe => {
+                            let at2 = self.net.probe_hop(cx.cfg, op.at, op.node);
+                            let next = self.net.next_hop(op.node);
+                            note_probe_visit(
+                                &mut self.probe_visited,
+                                probe_origin,
+                                op.node,
+                                next,
+                            );
+                            if next == probe_origin {
+                                self.terminate_laps += 1;
+                            }
+                            debug_assert!(
+                                at2 >= horizon,
+                                "probe delivery inside the lookahead window"
+                            );
+                            shards[shard_of(next)]
+                                .as_mut()
+                                .expect("shard at home")
+                                .eng
+                                .insert(
+                                    key(at2, CLASS_RANKED, rank, op.k),
+                                    Ev::Arrive(next, TaskToken::terminate()),
+                                );
+                        }
+                        OpKind::Fetch { slot, tok } => {
+                            let t_done =
+                                replay_fetch(&cx, self.net.as_mut(), op.at, op.node, &tok);
+                            debug_assert!(
+                                t_done >= horizon,
+                                "fetch completion inside the lookahead window"
+                            );
+                            shards[shard_of(op.node)]
+                                .as_mut()
+                                .expect("shard at home")
+                                .eng
+                                .insert(
+                                    key(t_done, CLASS_RANKED, rank, op.k),
+                                    Ev::DataReady(op.node, slot),
+                                );
+                        }
+                    }
+                }
+            }
+
+            drop(req_tx); // close the channels; workers exit and join
+        });
+
+        // reassemble the cluster: nodes in ring order, app stats merged
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for s in shards {
+            let sh = s.expect("shard at home");
+            nodes.extend(sh.nodes);
+            for (ai, st) in sh.app_stats.iter().enumerate() {
+                let dst = &mut self.app_stats[ai];
+                dst.tasks += st.tasks;
+                dst.units += st.units;
+                dst.touched_words += st.touched_words;
+                dst.local_hit_words += st.local_hit_words;
+                dst.first_dispatch = match (dst.first_dispatch, st.first_dispatch)
+                {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+                dst.last_done = dst.last_done.max(st.last_done);
+            }
+        }
+        self.nodes = nodes;
+        self.apps = apps
+            .into_iter()
+            .map(|m| m.into_inner().expect("app state poisoned"))
+            .collect();
+
+        debug_assert!(
+            self.nodes.iter().all(|nd| nd.done),
+            "DES drained but nodes not terminated"
+        );
+
+        self.report(makespan, total_events)
+    }
+}
+
+/// Timing half of the serial `fetch_remote`: the same wire calls, with
+/// the same `now` arguments, in the same order — stats were already
+/// booked in-window by [`Shard::book_fetch`].
+fn replay_fetch(
+    cx: &SharedCtx<'_>,
+    net: &mut dyn crate::net::Interconnect,
+    now: Ps,
+    n: usize,
+    tok: &TaskToken,
+) -> Ps {
+    let info = cx.kernel_info(tok.task_id);
+    if info.fetch_from_parent {
+        let src = tok.from_node as usize;
+        debug_assert_ne!(src, n, "all-local fetch deferred to the barrier");
+        let words = tok.remote.len() as u64;
+        let req_at = net.send_ctrl(cx.cfg, now, n, src, WIRE_BYTES);
+        return net.send_data(cx.cfg, req_at, src, n, words * WORD_BYTES);
+    }
+    let dir = &cx.dirs[info.app_idx];
+    let mut t_done = now;
+    let mut at = tok.remote.start;
+    while at < tok.remote.end {
+        let (owner, ext) = dir.owner_extent(at);
+        let end = tok.remote.end.min(ext.end);
+        let words = (end - at) as u64;
+        if owner != n {
+            let req_at = net.send_ctrl(cx.cfg, now, n, owner, WIRE_BYTES);
+            let got = net.send_data(cx.cfg, req_at, owner, n, words * WORD_BYTES);
+            t_done = t_done.max(got);
+        }
+        at = end;
+    }
+    t_done
+}

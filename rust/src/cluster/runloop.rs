@@ -66,6 +66,17 @@ impl Cluster {
             arrivals.len()
         );
 
+        self.probe_visited.clear();
+        self.probe_visited.resize(n_nodes, false);
+
+        // The sharded engine produces byte-identical output (see
+        // `par`), but a borrowed PJRT engine is a single `&mut` that
+        // cannot be shared across shard workers — numeric runs stay on
+        // the serial loop.
+        if self.cfg.shards > 1 && engine.is_none() {
+            return self.run_with_arrivals_sharded(arrivals);
+        }
+
         // slab sized for the common peak (a few events per node); grows
         // transparently for token floods
         let mut des: Des<Ev> = Des::with_capacity(64 * n_nodes);
@@ -343,8 +354,12 @@ impl Cluster {
         // recycled buffers (no allocation once the pool is warm).
         let spawn_buf = self.vec_pool.pop().unwrap_or_default();
         let fwd_buf = self.vec_pool.pop().unwrap_or_default();
-        let mut ctx =
-            ExecCtx::with_buffers(n as u8, engine.as_deref_mut(), spawn_buf, fwd_buf);
+        let mut ctx = ExecCtx::with_buffers(
+            n as crate::token::NodeId,
+            engine.as_deref_mut(),
+            spawn_buf,
+            fwd_buf,
+        );
         let exec = self.apps[app_idx].execute(n, &tok, &mut ctx);
         let (spawns, mut forwards) = ctx.into_buffers();
         // forwarding tokens (spawn FU mid-execution) leave immediately

@@ -46,9 +46,119 @@ impl Cluster {
         }
         let at = self.net.probe_hop(&self.cfg, now, n);
         let next = self.net.next_hop(n);
+        note_probe_visit(&mut self.probe_visited, self.probe_origin, n, next);
         if next == self.probe_origin {
             self.terminate_laps += 1;
         }
         des.schedule_at(at, Ev::Arrive(next, TaskToken::terminate()));
+    }
+}
+
+/// Debug-build coverage scoreboard: record that the probe was handled
+/// at `n` and is being forwarded to `next`. Each coverage circulation
+/// must visit every node exactly once — a `next_hop` implementation
+/// whose successor walk skips or repeats a node would silently break
+/// the two-consecutive-clean-passes argument, so the walk is asserted
+/// here on every forwarded step. A swallowed probe never reaches this
+/// point, so the partial final lap is (deliberately) unchecked.
+pub(super) fn note_probe_visit(
+    visited: &mut [bool],
+    probe_origin: usize,
+    n: usize,
+    next: usize,
+) {
+    debug_assert!(
+        !visited[n],
+        "TERMINATE probe visited node {n} twice in one coverage lap"
+    );
+    visited[n] = true;
+    if next == probe_origin {
+        debug_assert!(
+            visited.iter().all(|&v| v),
+            "TERMINATE probe wrapped to its origin without covering \
+             every node"
+        );
+        for v in visited.iter_mut() {
+            *v = false;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::note_probe_visit;
+    use crate::apps::{make_app, Scale};
+    use crate::cluster::{Cluster, Model};
+    use crate::config::ArenaConfig;
+    use crate::net::Topology;
+
+    #[test]
+    fn well_formed_lap_resets_the_scoreboard() {
+        let mut v = vec![false; 3];
+        for lap in 0..2 {
+            note_probe_visit(&mut v, 0, 0, 1);
+            note_probe_visit(&mut v, 0, 1, 2);
+            note_probe_visit(&mut v, 0, 2, 0);
+            assert!(
+                v.iter().all(|&x| !x),
+                "lap {lap} did not re-arm the scoreboard"
+            );
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn double_visit_in_one_lap_asserts() {
+        let mut v = vec![false; 3];
+        note_probe_visit(&mut v, 0, 1, 2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || note_probe_visit(&mut v, 0, 1, 2),
+        ));
+        assert!(r.is_err(), "repeated visit must trip the scoreboard");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn incomplete_lap_asserts_on_wrap() {
+        let mut v = vec![false; 3];
+        note_probe_visit(&mut v, 0, 0, 1);
+        // skip node 1 and wrap straight back to the origin
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || note_probe_visit(&mut v, 0, 2, 0),
+        ));
+        assert!(r.is_err(), "wrap without full coverage must assert");
+    }
+
+    /// Regression for the coverage-cycle contract: every topology's
+    /// successor walk must be one n-cycle, including node counts whose
+    /// torus factorization is uneven. The scoreboard asserts fire
+    /// inside these runs (debug builds) if a `next_hop` skips or
+    /// repeats a node, so completing the run *is* the check; the lap
+    /// counter is additionally sanity-bounded (two clean passes need
+    /// at least one completed circulation on n >= 2).
+    #[test]
+    fn every_topology_walks_one_coverage_cycle_per_lap() {
+        for topo in Topology::ALL {
+            for nodes in [2, 3, 4, 6, 8] {
+                let cfg = ArenaConfig::default()
+                    .with_nodes(nodes)
+                    .with_seed(9)
+                    .with_topology(topo);
+                let mut cl = Cluster::new(
+                    cfg,
+                    Model::SoftwareCpu,
+                    vec![make_app("sssp", Scale::Small, 9)],
+                );
+                let r = cl.run(None);
+                cl.check().unwrap_or_else(|e| {
+                    panic!("sssp oracle failed on {topo:?}@{nodes}n: {e}")
+                });
+                assert!(
+                    r.terminate_laps >= 1,
+                    "{topo:?}@{nodes}n: {} coverage laps",
+                    r.terminate_laps
+                );
+            }
+        }
     }
 }

@@ -74,6 +74,13 @@ pub struct ArenaConfig {
     /// through after a `P`-byte head packet (latency pipelines across
     /// hops, bandwidth is unchanged).
     pub packet_bytes: u64,
+    /// DES shards for one run (`arena run --shards N`): the nodes are
+    /// partitioned into `shards` contiguous groups, each simulated by
+    /// its own event engine under a conservative lookahead window (see
+    /// `cluster::par`). `1` = the serial seed engine. Output is
+    /// byte-identical for every value — like `--jobs`, this is purely
+    /// a speed knob.
+    pub shards: usize,
     /// Workload RNG seed (also feeds the `shuffle` placement).
     pub seed: u64,
 }
@@ -136,6 +143,7 @@ impl Default for ArenaConfig {
             inject_node: 0,
             topology: Topology::Ring,
             packet_bytes: 0,
+            shards: 1,
             seed: 0xA2EA,
         }
     }
@@ -195,6 +203,11 @@ impl ArenaConfig {
 
     pub fn with_packet_bytes(mut self, packet_bytes: u64) -> Self {
         self.packet_bytes = packet_bytes;
+        self
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
         self
     }
 
@@ -288,6 +301,7 @@ impl ArenaConfig {
                 })?
             }
             "packet_bytes" => next.packet_bytes = parse!(val),
+            "shards" => next.shards = parse!(val),
             "seed" => next.seed = parse_seed(val).map_err(bad!())?,
             _ => return Err(ConfigError::UnknownKey(key.into())),
         }
@@ -315,6 +329,16 @@ impl ArenaConfig {
                 self.inject_node,
                 self.nodes,
                 self.nodes - 1
+            )));
+        }
+        if self.shards == 0 {
+            return Err(ConfigError::Invalid("shards must be >= 1".into()));
+        }
+        if self.shards > self.nodes {
+            return Err(ConfigError::Invalid(format!(
+                "shards {} out of range: a shard needs at least one node \
+                 and the ring has {} node(s) (valid: 1..={})",
+                self.shards, self.nodes, self.nodes
             )));
         }
         if self.theta_pm > 1000 {
@@ -377,6 +401,7 @@ impl ArenaConfig {
         m.insert("inject_node", self.inject_node.to_string());
         m.insert("topology", self.topology.label().to_string());
         m.insert("packet_bytes", self.packet_bytes.to_string());
+        m.insert("shards", self.shards.to_string());
         m.insert("seed", self.seed.to_string());
         m.iter()
             .map(|(k, v)| format!("{k} = {v}\n"))
@@ -507,6 +532,28 @@ mod tests {
         assert!(c.set("packet_bytes", "nope").is_err());
         // both round-trip through dump/load
         let dir = std::env::temp_dir().join("arena_cfg_topo_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.txt");
+        std::fs::write(&path, c.dump()).unwrap();
+        assert_eq!(ArenaConfig::load(&path).unwrap(), c);
+    }
+
+    #[test]
+    fn shards_knob_is_validated_against_the_ring() {
+        let mut c = ArenaConfig::default();
+        assert_eq!(c.shards, 1, "serial seed engine is the default");
+        c.set("shards", "4").unwrap();
+        assert_eq!(c.shards, 4);
+        // >= 1, <= nodes
+        assert!(c.set("shards", "0").is_err());
+        let err = c.set("shards", "5").unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // shrinking the ring under the shard count is rejected too
+        assert!(c.set("nodes", "2").is_err());
+        c.set("nodes", "8").unwrap();
+        c.set("shards", "8").unwrap();
+        // round-trips through dump/load
+        let dir = std::env::temp_dir().join("arena_cfg_shards_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("cfg.txt");
         std::fs::write(&path, c.dump()).unwrap();

@@ -22,20 +22,35 @@ pub const NODE_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
 pub const SKEW_NODES: usize = 4;
 
 /// Node counts of the large-scale axis (`arena sweep --nodes N`):
-/// powers of two from 1 up to `max`, restricted to counts every app
-/// can be block-partitioned over at `scale` (each dropped count is the
-/// caller's to report — nothing is silently truncated here beyond the
-/// support filter).
+/// powers of two from 1 up to `max`, restricted to counts at least one
+/// app can be block-partitioned over at `scale`. Apps whose stripe
+/// alignment stops dividing at a count simply sit that column out
+/// ([`scale_with`] renders their cell as `-`), so e.g. the 1024-node
+/// column exists even though GEMM's 512 rows cannot split that far.
+/// (The axis used to require *every* app to support a count, which
+/// silently capped the paper-scale axis at 256 nodes.)
 pub fn scale_axis(max: usize, scale: Scale) -> Vec<usize> {
     let mut out = Vec::new();
     let mut n = 1usize;
     while n <= max {
-        if crate::apps::ALL.iter().all(|app| crate::apps::supports(app, scale, n)) {
+        if crate::apps::ALL.iter().any(|app| crate::apps::supports(app, scale, n)) {
             out.push(n);
         }
         n *= 2;
     }
     out
+}
+
+/// One rendered table cell. NaN marks "this app sits this column out"
+/// (a scale-axis count its stripe alignment cannot divide) and prints
+/// as `-`; everything else keeps the fixed-width numeric format, so
+/// tables without NaN cells render byte-identically to the seed.
+fn fmt_cell(v: f64) -> String {
+    if v.is_finite() {
+        format!(" {v:>9.2}")
+    } else {
+        format!(" {:>9}", "-")
+    }
 }
 
 /// A printable result table (one paper artifact).
@@ -60,6 +75,8 @@ impl Table {
     }
 
     /// Column-wise arithmetic mean over the rows (the paper's "avg").
+    /// NaN cells — apps sitting out an unsupported scale-axis count —
+    /// are excluded from that column's mean rather than poisoning it.
     pub fn mean_row(&self) -> Vec<f64> {
         if self.rows.is_empty() {
             return vec![];
@@ -67,8 +84,18 @@ impl Table {
         let cols = self.rows[0].1.len();
         (0..cols)
             .map(|c| {
-                self.rows.iter().map(|(_, v)| v[c]).sum::<f64>()
-                    / self.rows.len() as f64
+                let (mut sum, mut n) = (0.0, 0u32);
+                for (_, v) in &self.rows {
+                    if v[c].is_finite() {
+                        sum += v[c];
+                        n += 1;
+                    }
+                }
+                if n == 0 {
+                    f64::NAN
+                } else {
+                    sum / n as f64
+                }
             })
             .collect()
     }
@@ -90,15 +117,15 @@ impl Table {
         out.push('\n');
         for (label, vals) in &self.rows {
             out.push_str(&format!("{label:label_w$}"));
-            for v in vals {
-                out.push_str(&format!(" {v:>9.2}"));
+            for &v in vals {
+                out.push_str(&fmt_cell(v));
             }
             out.push('\n');
         }
         if self.rows.len() > 1 {
             out.push_str(&format!("{:label_w$}", "avg"));
             for v in self.mean_row() {
-                out.push_str(&format!(" {v:>9.2}"));
+                out.push_str(&fmt_cell(v));
             }
             out.push('\n');
         }
@@ -146,7 +173,8 @@ pub fn run_arena_at(
 }
 
 /// Run one ARENA simulation under an explicit layout *and* interconnect
-/// topology — the fully keyed sweep cell (skew and topology axes).
+/// topology — the fully keyed sweep cell (skew and topology axes), on
+/// the serial engine.
 pub fn run_arena_cell(
     app: &str,
     scale: Scale,
@@ -157,11 +185,32 @@ pub fn run_arena_cell(
     topo: Topology,
     engine: Option<&mut Engine>,
 ) -> RunReport {
+    run_arena_cell_sharded(
+        app, scale, seed, nodes, model, layout, topo, 1, engine,
+    )
+}
+
+/// [`run_arena_cell`] with an explicit shard count for the
+/// conservative-lookahead parallel DES (`arena sweep --shards N`).
+/// Output is byte-identical for every `shards` value — the sweep's
+/// memoized cells stay comparable across engine configurations.
+pub fn run_arena_cell_sharded(
+    app: &str,
+    scale: Scale,
+    seed: u64,
+    nodes: usize,
+    model: Model,
+    layout: Layout,
+    topo: Topology,
+    shards: usize,
+    engine: Option<&mut Engine>,
+) -> RunReport {
     let cfg = ArenaConfig::default()
         .with_nodes(nodes)
         .with_seed(seed)
         .with_layout(layout)
-        .with_topology(topo);
+        .with_topology(topo)
+        .with_shards(shards);
     run_arena_with(app, scale, cfg, model, engine)
 }
 
@@ -517,6 +566,14 @@ pub fn scale_with(store: &mut CellStore, counts: &[usize]) -> (Table, Table) {
         let mut swv = Vec::new();
         let mut hwv = Vec::new();
         for &n in counts {
+            // an app sits out the counts its stripe alignment cannot
+            // divide (rendered `-`, excluded from the column mean) —
+            // simulating it would trip the app's init assert
+            if !crate::apps::supports(app, store.scale(), n) {
+                swv.push(f64::NAN);
+                hwv.push(f64::NAN);
+                continue;
+            }
             let mk = store.arena(app, n, Model::SoftwareCpu).makespan_ps;
             swv.push(serial / mk as f64);
             let mk = store.arena(app, n, Model::Cgra).makespan_ps;
@@ -602,15 +659,31 @@ mod tests {
     }
 
     #[test]
-    fn scale_axis_respects_app_support() {
+    fn scale_axis_reaches_past_every_apps_alignment_cap() {
         assert_eq!(
             scale_axis(128, Scale::Paper),
             vec![1, 2, 4, 8, 16, 32, 64, 128]
         );
-        // Small-scale DNA blocks stop aligning past 16 nodes, so the
-        // axis self-caps instead of tripping an init assert
-        assert_eq!(scale_axis(128, Scale::Small), vec![1, 2, 4, 8, 16]);
+        // sssp/spmv are word-granular, so every power of two stays on
+        // the axis; apps whose stripes stop dividing (gemm's 512 rows
+        // at 1024 nodes) sit those columns out instead of capping the
+        // whole axis (the old all-apps filter stopped Paper at 256)
+        assert_eq!(scale_axis(1024, Scale::Paper).last().copied(), Some(1024));
+        assert_eq!(scale_axis(128, Scale::Small).last().copied(), Some(128));
         assert_eq!(scale_axis(1, Scale::Paper), vec![1]);
+        assert!(!crate::apps::supports("gemm", Scale::Paper, 1024));
+        assert!(crate::apps::supports("sssp", Scale::Paper, 1024));
+    }
+
+    #[test]
+    fn nan_cells_render_as_dashes_and_skip_the_mean() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row("x", vec![1.0, f64::NAN]);
+        t.row("y", vec![3.0, 4.0]);
+        assert_eq!(t.mean_row(), vec![2.0, 4.0]);
+        let s = t.render();
+        assert!(s.contains("         -"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
     }
 
     #[test]

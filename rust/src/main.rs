@@ -42,21 +42,22 @@ usage: arena <command> [options]
 commands:
   run     --app <name> --model <model> [--nodes N] [--scale small|paper]
           [--seed S] [--layout L] [--policy P] [--theta X]
-          [--inject-node N] [--topology T] [--engine] [--config FILE]
-          [--set k=v ...]
+          [--inject-node N] [--topology T] [--shards N] [--engine]
+          [--config FILE] [--set k=v ...]
   fig     <9|10|11|12|13|all> [--scale small|paper] [--seed S]
   serve   --trace FILE [--policy P] [--theta X] [--ab] [--model M]
           [--nodes N] [--scale small|paper] [--seed S] [--jobs N]
-          [--topology T] [--set k=v ...] [--bench-json FILE]
+          [--topology T] [--shards N] [--set k=v ...]
+          [--bench-json FILE]
           replay an open-system job trace (arrival-timed mixed apps)
           and report throughput + p50/p95/p99 latency; --ab replays
           the trace under every policy on a worker pool
   sweep   [--all | 9 10 11 12 13] [--jobs N] [--scale small|paper]
           [--seed S] [--layout L] [--topology T] [--nodes N]
-          [--bench-json FILE]
+          [--shards N] [--bench-json FILE]
           regenerate figures on a worker pool; output is bit-identical
           for every --jobs value. --nodes extends the sweep with a
-          large-scale axis (powers of two up to N, max 128);
+          large-scale axis (powers of two up to N, max 4096);
           --bench-json records per-job wall-clock + allocator stats
   sweep   --all-layouts [--jobs N] [--scale small|paper] [--seed S]
           skew-sensitivity sweep: every app x model x layout
@@ -72,6 +73,9 @@ layouts:    block | cyclic | zipf | shuffle
 policies:   greedy | locality (with --theta X in [0,1]) | convey
 topologies: ring | biring | torus2d | ideal (--set packet_bytes=P for
             cut-through packetization; 0 = store-and-forward)
+engine:     --shards N runs one simulation on N parallel DES shards
+            (conservative lookahead; output byte-identical to --shards
+            1, like --jobs it only buys wall-clock)
 ";
 
 fn main() {
@@ -86,7 +90,7 @@ fn main() {
         &[
             "app", "model", "nodes", "scale", "seed", "config", "fig",
             "jobs", "layout", "bench-json", "trace", "policy", "theta",
-            "inject-node", "serve", "topology",
+            "inject-node", "serve", "topology", "shards",
         ],
     ) {
         Ok(a) => a,
@@ -120,7 +124,7 @@ fn main() {
             &["ab"],
             &[
                 "trace", "policy", "theta", "model", "nodes", "scale",
-                "seed", "jobs", "topology", "bench-json",
+                "seed", "jobs", "topology", "shards", "bench-json",
             ],
             true, // --set reaches the replay config (serve::ServeSpec)
             false,
@@ -130,7 +134,7 @@ fn main() {
             &["all", "all-layouts", "all-topologies"],
             &[
                 "jobs", "scale", "seed", "layout", "topology", "nodes",
-                "bench-json", "serve", "theta", "model",
+                "bench-json", "serve", "theta", "model", "shards",
             ],
             false,
             true, // figure numbers are positional
@@ -340,6 +344,7 @@ fn write_sweep_bench_json(
     scale: Scale,
     seed: u64,
     max_nodes: Option<usize>,
+    shards: usize,
 ) -> Result<(), String> {
     let a = benchkit::alloc::stats();
     let jobs_json = benchkit::per_job_json(&out.timings);
@@ -353,6 +358,7 @@ fn write_sweep_bench_json(
         ),
         ("seed", seed.to_string()),
         ("jobs", out.workers.to_string()),
+        ("shards", shards.to_string()),
         ("cells", out.cells.to_string()),
         (
             "nodes_axis",
@@ -407,6 +413,13 @@ fn serve_spec_of(
         }
     };
     let topology = parse_topology(args)?;
+    let shards = shards_of(args)?;
+    if shards > nodes {
+        return Err(format!(
+            "--shards {shards} out of range: a shard needs at least one \
+             node and the ring has {nodes} node(s) (valid: 1..={nodes})"
+        ));
+    }
     Ok(serve::ServeSpec {
         trace,
         scale,
@@ -414,8 +427,19 @@ fn serve_spec_of(
         nodes,
         model,
         topology,
+        shards,
         overrides: args.sets.clone(),
     })
+}
+
+/// `--shards N` (serve and the sweeps; `run` goes through the config's
+/// own `shards` knob via `build_config`). 1 = the serial seed engine.
+fn shards_of(args: &cli::Args) -> Result<usize, String> {
+    match args.parse_opt::<usize>("shards").map_err(|e| e.to_string())? {
+        Some(0) => Err("--shards must be >= 1".into()),
+        Some(n) => Ok(n),
+        None => Ok(1),
+    }
 }
 
 /// `--topology T` (shared by serve and the figure sweep; `run` goes
@@ -478,6 +502,7 @@ fn run_serve(
             ),
             ("seed", spec.seed.to_string()),
             ("nodes", spec.nodes.to_string()),
+            ("shards", spec.shards.to_string()),
             ("trace_jobs", spec.trace.len().to_string()),
             ("jobs", out.workers.to_string()),
             ("policies", out.cells.to_string()),
@@ -558,13 +583,14 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             Some(n) => n,
             None => sweep::default_jobs(),
         };
+        let shards = shards_of(args)?;
         let max_nodes = args
             .parse_opt::<usize>("nodes")
             .map_err(|e| e.to_string())?;
         if let Some(n) = max_nodes {
-            if n == 0 || n > 128 {
+            if n == 0 || n > 4096 {
                 return Err(format!(
-                    "--nodes {n}: the scale axis covers 1..=128 nodes"
+                    "--nodes {n}: the scale axis covers 1..=4096 nodes"
                 ));
             }
         }
@@ -601,14 +627,16 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             }
             let t0 = std::time::Instant::now();
             let out = if args.flag("all-layouts") {
-                sweep::run_skew(scale, seed, jobs)
+                sweep::run_skew(scale, seed, jobs, shards)
             } else {
-                sweep::run_topo(scale, seed, jobs)
+                sweep::run_topo(scale, seed, jobs, shards)
             };
             print!("{}", out.render());
             let wall = t0.elapsed();
             if let Some(path) = args.opt("bench-json") {
-                write_sweep_bench_json(path, &out, wall, scale, seed, None)?;
+                write_sweep_bench_json(
+                    path, &out, wall, scale, seed, None, shards,
+                )?;
             }
             eprintln!(
                 "{what} sweep: {} unique cells on {} worker(s) in {:.2}s",
@@ -635,19 +663,6 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             None => Layout::Block,
         };
         let topology = parse_topology(args)?;
-        if let Some(n) = max_nodes {
-            let axis = eval::scale_axis(n, scale);
-            // largest power of two <= n is where an unconstrained axis
-            // would end; announce any app-constraint cap (no silent
-            // truncation)
-            let top = 1usize << (usize::BITS - 1 - n.leading_zeros());
-            if axis.last().copied() != Some(top) {
-                eprintln!(
-                    "note: scale axis self-capped to {axis:?} (app \
-                     partition constraints at this scale)"
-                );
-            }
-        }
         let figs: Vec<sweep::Fig> =
             if args.flag("all") || args.positional.is_empty() {
                 sweep::Fig::ALL.to_vec()
@@ -662,8 +677,12 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                     .collect::<Result<_, _>>()?
             };
         let t0 = std::time::Instant::now();
-        let out = sweep::run_scaled(
-            &figs, scale, seed, jobs, layout, topology, max_nodes,
+        let out = sweep::run_cfg(
+            &figs,
+            scale,
+            seed,
+            jobs,
+            sweep::SweepCfg { layout, topo: topology, max_nodes, shards },
         );
         print!("{}", out.render());
         if let Some(h) = out.headline {
@@ -686,7 +705,9 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             }
         }
         if let Some(path) = args.opt("bench-json") {
-            write_sweep_bench_json(path, &out, wall, scale, seed, max_nodes)?;
+            write_sweep_bench_json(
+                path, &out, wall, scale, seed, max_nodes, shards,
+            )?;
             eprintln!("bench record written to {path}");
         }
         eprintln!(

@@ -165,6 +165,20 @@ pub trait Interconnect: Send {
         (from + 1) % self.nodes()
     }
 
+    /// Conservative lookahead for the sharded parallel engine: a lower
+    /// bound on the delay of *every* cross-node delivery this fabric
+    /// can produce. Each of the three wire paths ([`Self::send_token`],
+    /// [`Self::probe_hop`], [`Self::send_data`]/[`Self::send_ctrl`])
+    /// pays at least one switch hop latency on top of `now`, so events
+    /// a node emits at time `t` for another node land no earlier than
+    /// `t + lookahead_ps`. Shards may therefore run `[W, W +
+    /// lookahead_ps)` without hearing from each other mid-window. The
+    /// `max(1)` keeps the window open even under a degenerate
+    /// zero-latency config.
+    fn lookahead_ps(&self, cfg: &ArenaConfig) -> Ps {
+        cfg.hop_latency_ps.max(1)
+    }
+
     /// Whether [`Self::send_token`] consumes the `dest` hint. The
     /// unidirectional ring does not (tokens always advance along the
     /// coverage cycle), so the cluster skips the per-token home lookup
@@ -881,6 +895,27 @@ mod tests {
                 assert_eq!(net.next_hop(i), (i + 1) % 6, "{}", t.label());
             }
         }
+    }
+
+    #[test]
+    fn lookahead_is_positive_and_bounds_every_delivery() {
+        let c = cfg();
+        for t in Topology::ALL {
+            let mut net = t.build(4);
+            let l = net.lookahead_ps(&c);
+            assert!(l >= 1, "{}: lookahead must keep the window open", t.label());
+            assert_eq!(l, c.hop_latency_ps, "{}", t.label());
+            // every cross-node wire path lands at or after now + lookahead
+            let (at, _) = net.send_token(&c, 0, 0, 2);
+            assert!(at >= l, "{}: send_token under lookahead", t.label());
+            assert!(net.probe_hop(&c, 0, 1) >= l, "{}", t.label());
+            assert!(net.send_data(&c, 0, 0, 2, 64) >= l, "{}", t.label());
+            assert!(net.send_ctrl(&c, 0, 2, 0, 21) >= l, "{}", t.label());
+        }
+        // degenerate zero-latency config still yields a non-empty window
+        let mut z = cfg();
+        z.hop_latency_ps = 0;
+        assert_eq!(Topology::Ring.build(4).lookahead_ps(&z), 1);
     }
 
     #[test]

@@ -110,6 +110,10 @@ pub struct ServeSpec {
     /// Interconnect the replay runs on (`arena serve --topology T`;
     /// ring is the paper's fabric and the default).
     pub topology: Topology,
+    /// Shard count for the conservative-lookahead parallel DES
+    /// (`arena serve --shards N`; 1 = the serial engine, the default).
+    /// Output is byte-identical for every value.
+    pub shards: usize,
     /// `--set key=value` config overrides applied on top of the spec
     /// (e.g. `packet_bytes=256` for cut-through serving). Keys with a
     /// dedicated serve flag are rejected so the two paths cannot
@@ -204,11 +208,12 @@ pub fn run_one(
         .with_seed(spec.seed)
         .with_policy(kind)
         .with_theta_pm(theta_pm)
-        .with_topology(spec.topology);
+        .with_topology(spec.topology)
+        .with_shards(spec.shards);
     for (k, v) in &spec.overrides {
         if matches!(
             k.as_str(),
-            "nodes" | "seed" | "policy" | "theta" | "topology"
+            "nodes" | "seed" | "policy" | "theta" | "topology" | "shards"
         ) {
             return Err(format!(
                 "serve: '{k}' has a dedicated flag — use it instead of \
@@ -417,6 +422,7 @@ mod tests {
             nodes: 2,
             model: Model::SoftwareCpu,
             topology: Topology::Ring,
+            shards: 1,
             overrides: Vec::new(),
         };
         let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
@@ -432,6 +438,7 @@ mod tests {
             nodes: 4,
             model: Model::SoftwareCpu,
             topology: Topology::Ring,
+            shards: 1,
             overrides: Vec::new(),
         };
         let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
@@ -446,6 +453,7 @@ mod tests {
             nodes: 4,
             model: Model::SoftwareCpu,
             topology: Topology::Ring,
+            shards: 1,
             overrides: Vec::new(),
         }
     }
@@ -504,6 +512,20 @@ mod tests {
         assert!(e.contains("inject_node"), "{e}");
     }
 
+    /// Open-system replays go through the same sharded dispatch as
+    /// closed runs: `--shards 2` must render byte-identically to the
+    /// serial engine, per-job latencies included.
+    #[test]
+    fn sharded_replay_is_byte_identical() {
+        let serial =
+            run_ab(&three_job_spec(), &[(PolicyKind::Greedy, 500)], 1)
+                .unwrap();
+        let mut spec = three_job_spec();
+        spec.shards = 2;
+        let par = run_ab(&spec, &[(PolicyKind::Greedy, 500)], 1).unwrap();
+        assert_eq!(serial.render(), par.render());
+    }
+
     #[test]
     fn repeated_apps_get_distinct_workload_seeds() {
         assert_ne!(job_seed(7, 0), job_seed(7, 1));
@@ -514,6 +536,7 @@ mod tests {
             nodes: 2,
             model: Model::SoftwareCpu,
             topology: Topology::Ring,
+            shards: 1,
             overrides: Vec::new(),
         };
         let run = run_one(&spec, PolicyKind::Greedy, 500).unwrap();

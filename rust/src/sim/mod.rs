@@ -27,6 +27,8 @@
 
 use crate::config::Ps;
 
+pub mod par;
+
 /// Heap arity. 4 keeps sibling keys within one or two cache lines and
 /// halves the depth of the equivalent binary heap.
 const ARITY: usize = 4;

@@ -1,0 +1,358 @@
+//! Shard-local event queue + mailbox for the parallel engine.
+//!
+//! The sharded cluster loop (`cluster::par`) splits the ring into node
+//! groups and runs one windowed event loop per group. Two primitives
+//! live here:
+//!
+//! * [`ShardEngine`] — the per-shard priority queue. Same slab +
+//!   4-ary index-heap layout as the serial [`super::Engine`], but keys
+//!   carry an explicit *ordering class* instead of a globally issued
+//!   `seq`: a shard cannot know the global schedule order of an event
+//!   it creates mid-window, so keys scheduled locally are provisional
+//!   ([`CLASS_LOCAL`]) and are rewritten to their merged global rank
+//!   ([`CLASS_RANKED`]) at the window barrier via
+//!   [`ShardEngine::remap_keys`].
+//! * [`Mailbox`] — a fixed-capacity ring buffer (SNIPPETS-style
+//!   shard-local arena) for deferred cross-shard network operations.
+//!   Pushes never reorder; capacity overflow spills to a plain `Vec`
+//!   so determinism survives pathological windows at the cost of an
+//!   allocation.
+//!
+//! ## Key layout
+//!
+//! ```text
+//! bits 127..64  absolute timestamp (ps)
+//! bits  63..62  class: 0 root, 1 globally ranked, 2 shard-local
+//! bits  61..20  x: injection ordinal / global rank / local pop index
+//! bits  19..0   k: intra-handler schedule counter
+//! ```
+//!
+//! At equal timestamps, root injections order before ranked events,
+//! which order before provisional local events — and the barrier's
+//! rank merge (see `cluster::par`) guarantees a provisional key is
+//! never compared against a *different shard's* provisional key: the
+//! lookahead window is shorter than the minimum cross-shard delivery
+//! delay, so same-window cross-shard ties are impossible.
+
+use crate::config::Ps;
+
+/// Heap arity — same shape (and rationale) as the serial engine.
+const ARITY: usize = 4;
+
+/// Root injections (app arrivals + the TERMINATE probe seed); `x` is
+/// the global injection ordinal assigned by the coordinator.
+pub const CLASS_ROOT: u8 = 0;
+/// Events whose global schedule order is known; `x` is the merged
+/// global pop rank of the emitting handler.
+pub const CLASS_RANKED: u8 = 1;
+/// Events scheduled mid-window whose emitter has not been globally
+/// ranked yet; `x` is the emitter's shard-local cumulative pop index.
+pub const CLASS_LOCAL: u8 = 2;
+
+const X_BITS: u32 = 42;
+const K_BITS: u32 = 20;
+
+/// Pack an ordering key. `x` carries the emitter identity (42 bits —
+/// comfortably above the cluster's 2e9 event cap) and `k` the
+/// schedule position within one handler body (20 bits).
+#[inline]
+pub fn key(at: Ps, class: u8, x: u64, k: u32) -> u128 {
+    debug_assert!(class <= CLASS_LOCAL, "unknown ordering class {class}");
+    debug_assert!(x < 1 << X_BITS, "emitter ordinal {x} overflows the key");
+    debug_assert!(k < 1 << K_BITS, "handler scheduled {k} events in one body");
+    ((at as u128) << 64)
+        | ((class as u128) << (X_BITS + K_BITS))
+        | ((x as u128) << K_BITS)
+        | k as u128
+}
+
+#[inline]
+pub fn key_at(key: u128) -> Ps {
+    (key >> 64) as Ps
+}
+
+#[inline]
+pub fn key_class(key: u128) -> u8 {
+    ((key >> (X_BITS + K_BITS)) & 0b11) as u8
+}
+
+#[inline]
+pub fn key_x(key: u128) -> u64 {
+    ((key >> K_BITS) as u64) & ((1 << X_BITS) - 1)
+}
+
+#[inline]
+pub fn key_k(key: u128) -> u32 {
+    (key as u32) & ((1 << K_BITS) - 1)
+}
+
+/// Per-shard event queue: slab-backed payloads under a 4-ary index
+/// heap of packed ordering keys (see the module docs for the layout).
+pub struct ShardEngine<E> {
+    keys: Vec<u128>,
+    slots: Vec<u32>,
+    slab: Vec<Option<E>>,
+    free: Vec<u32>,
+}
+
+impl<E> ShardEngine<E> {
+    pub fn with_capacity(cap: usize) -> Self {
+        ShardEngine {
+            keys: Vec::with_capacity(cap),
+            slots: Vec::with_capacity(cap),
+            slab: Vec::with_capacity(cap),
+            free: Vec::new(),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Timestamp of the earliest pending event (the shard's vote for
+    /// the next window start).
+    pub fn peek_at(&self) -> Option<Ps> {
+        self.keys.first().map(|&k| key_at(k))
+    }
+
+    pub fn insert(&mut self, key: u128, ev: E) {
+        let slot = match self.free.pop() {
+            Some(s) => {
+                debug_assert!(self.slab[s as usize].is_none());
+                self.slab[s as usize] = Some(ev);
+                s
+            }
+            None => {
+                self.slab.push(Some(ev));
+                (self.slab.len() - 1) as u32
+            }
+        };
+        self.keys.push(key);
+        self.slots.push(slot);
+        self.sift_up(self.keys.len() - 1);
+    }
+
+    /// Pop the minimum event if it falls strictly before `horizon`.
+    pub fn pop_if_before(&mut self, horizon: Ps) -> Option<(u128, E)> {
+        let &key = self.keys.first()?;
+        if key_at(key) >= horizon {
+            return None;
+        }
+        let slot = self.slots[0];
+        let last_key = self.keys.pop().expect("checked non-empty");
+        let last_slot = self.slots.pop().expect("checked non-empty");
+        if !self.keys.is_empty() {
+            self.keys[0] = last_key;
+            self.slots[0] = last_slot;
+            self.sift_down(0);
+        }
+        let ev = self.slab[slot as usize].take().expect("occupied slot");
+        self.free.push(slot);
+        Some((key, ev))
+    }
+
+    /// Rewrite every pending key through `f` (the barrier's
+    /// provisional-rank -> global-rank promotion), then restore heap
+    /// order with a bottom-up Floyd heapify — O(n), cheaper than n
+    /// re-inserts and independent of how many keys actually changed.
+    pub fn remap_keys(&mut self, f: impl Fn(u128) -> u128) {
+        for k in &mut self.keys {
+            *k = f(*k);
+        }
+        let n = self.keys.len();
+        if n > 1 {
+            for i in (0..=(n - 2) / ARITY).rev() {
+                self.sift_down(i);
+            }
+        }
+    }
+
+    #[inline]
+    fn sift_up(&mut self, mut i: usize) {
+        let key = self.keys[i];
+        let slot = self.slots[i];
+        while i > 0 {
+            let p = (i - 1) / ARITY;
+            if self.keys[p] <= key {
+                break;
+            }
+            self.keys[i] = self.keys[p];
+            self.slots[i] = self.slots[p];
+            i = p;
+        }
+        self.keys[i] = key;
+        self.slots[i] = slot;
+    }
+
+    #[inline]
+    fn sift_down(&mut self, mut i: usize) {
+        let key = self.keys[i];
+        let slot = self.slots[i];
+        let n = self.keys.len();
+        loop {
+            let c0 = ARITY * i + 1;
+            if c0 >= n {
+                break;
+            }
+            let cend = (c0 + ARITY).min(n);
+            let mut m = c0;
+            let mut mk = self.keys[c0];
+            for c in c0 + 1..cend {
+                if self.keys[c] < mk {
+                    m = c;
+                    mk = self.keys[c];
+                }
+            }
+            if mk >= key {
+                break;
+            }
+            self.keys[i] = mk;
+            self.slots[i] = self.slots[m];
+            i = m;
+        }
+        self.keys[i] = key;
+        self.slots[i] = slot;
+    }
+}
+
+/// Fixed-capacity ring for deferred cross-shard operations. The ring
+/// portion never allocates after construction; overflow spills into a
+/// growable `Vec` (drained after the ring, preserving push order) so
+/// a burst-heavy window degrades in speed, never in correctness.
+pub struct Mailbox<T> {
+    ring: Vec<Option<T>>,
+    head: usize,
+    len: usize,
+    spill: Vec<T>,
+}
+
+impl<T> Mailbox<T> {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        let mut ring = Vec::with_capacity(cap);
+        ring.resize_with(cap, || None);
+        Mailbox { ring, head: 0, len: 0, spill: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len + self.spill.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0 && self.spill.is_empty()
+    }
+
+    pub fn push(&mut self, v: T) {
+        if self.len < self.ring.len() && self.spill.is_empty() {
+            let tail = (self.head + self.len) % self.ring.len();
+            debug_assert!(self.ring[tail].is_none());
+            self.ring[tail] = Some(v);
+            self.len += 1;
+        } else {
+            self.spill.push(v);
+        }
+    }
+
+    /// Drain everything into `out` in push order; the ring is left
+    /// empty and ready for the next window.
+    pub fn drain_into(&mut self, out: &mut Vec<T>) {
+        let cap = self.ring.len();
+        for i in 0..self.len {
+            let idx = (self.head + i) % cap;
+            out.push(self.ring[idx].take().expect("occupied ring slot"));
+        }
+        self.head = 0;
+        self.len = 0;
+        out.append(&mut self.spill);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_fields_round_trip() {
+        let k = key(123_456_789, CLASS_LOCAL, 0x3_0000_0001, 7);
+        assert_eq!(key_at(k), 123_456_789);
+        assert_eq!(key_class(k), CLASS_LOCAL);
+        assert_eq!(key_x(k), 0x3_0000_0001);
+        assert_eq!(key_k(k), 7);
+    }
+
+    #[test]
+    fn key_order_is_time_then_class_then_emitter_then_k() {
+        // time dominates everything
+        assert!(key(1, CLASS_LOCAL, 9, 9) < key(2, CLASS_ROOT, 0, 0));
+        // at equal time: root < ranked < local
+        assert!(key(5, CLASS_ROOT, 0, 1) < key(5, CLASS_RANKED, 0, 0));
+        assert!(key(5, CLASS_RANKED, 9, 9) < key(5, CLASS_LOCAL, 0, 0));
+        // within a class: emitter rank, then schedule counter
+        assert!(key(5, CLASS_RANKED, 1, 9) < key(5, CLASS_RANKED, 2, 0));
+        assert!(key(5, CLASS_RANKED, 2, 0) < key(5, CLASS_RANKED, 2, 1));
+    }
+
+    #[test]
+    fn shard_engine_pops_in_key_order_up_to_horizon() {
+        let mut e: ShardEngine<u32> = ShardEngine::with_capacity(8);
+        e.insert(key(30, CLASS_RANKED, 0, 0), 3);
+        e.insert(key(10, CLASS_RANKED, 0, 0), 1);
+        e.insert(key(20, CLASS_RANKED, 0, 0), 2);
+        assert_eq!(e.peek_at(), Some(10));
+        assert_eq!(e.pop_if_before(25).unwrap().1, 1);
+        assert_eq!(e.pop_if_before(25).unwrap().1, 2);
+        // 30 is at/after the horizon: stays queued
+        assert!(e.pop_if_before(25).is_none());
+        assert_eq!(e.pending(), 1);
+        assert_eq!(e.pop_if_before(31).unwrap().1, 3);
+        assert!(e.pop_if_before(u64::MAX).is_none());
+    }
+
+    #[test]
+    fn remap_restores_heap_order() {
+        let mut e: ShardEngine<u64> = ShardEngine::with_capacity(32);
+        for x in 0..20u64 {
+            e.insert(key(100, CLASS_LOCAL, x, 0), x);
+        }
+        // promote local ordinals to ranks that reverse the order
+        e.remap_keys(|k| {
+            key(key_at(k), CLASS_RANKED, 19 - key_x(k), key_k(k))
+        });
+        let mut got = Vec::new();
+        while let Some((_, v)) = e.pop_if_before(u64::MAX) {
+            got.push(v);
+        }
+        assert_eq!(got, (0..20u64).rev().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mailbox_preserves_push_order_across_spill() {
+        let mut m: Mailbox<u32> = Mailbox::with_capacity(4);
+        assert!(m.is_empty());
+        for v in 0..10 {
+            m.push(v);
+        }
+        assert_eq!(m.len(), 10);
+        let mut out = Vec::new();
+        m.drain_into(&mut out);
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+        assert!(m.is_empty());
+        // ring is reusable after a drain
+        m.push(42);
+        let mut out = Vec::new();
+        m.drain_into(&mut out);
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn slab_slots_are_reused_across_windows() {
+        let mut e: ShardEngine<u64> = ShardEngine::with_capacity(4);
+        for round in 0..4u64 {
+            for i in 0..16u64 {
+                e.insert(key(round * 100 + i, CLASS_RANKED, i, 0), i);
+            }
+            while e.pop_if_before(u64::MAX).is_some() {}
+        }
+        assert_eq!(e.pending(), 0);
+    }
+}

@@ -96,7 +96,12 @@ enum Cell {
     Arena(RunReport),
 }
 
-fn compute(scale: Scale, seed: u64, job: Job) -> Cell {
+/// Compute one cell. `shards` selects the DES engine the ARENA cells
+/// run on (1 = serial, N = the conservative-lookahead parallel engine);
+/// it is NOT part of the cell key because the result is byte-identical
+/// for every value — only the wall-clock changes. A shard count that
+/// exceeds a small cell's node count is clamped inside the cluster.
+fn compute(scale: Scale, seed: u64, shards: usize, job: Job) -> Cell {
     match job {
         Job::Serial { app } => {
             Cell::Serial(serial_ps(app, scale, seed, &ArenaConfig::default()))
@@ -106,8 +111,16 @@ fn compute(scale: Scale, seed: u64, job: Job) -> Cell {
             Cell::Bsp(run_bsp(app, scale, seed, &cfg, cgra))
         }
         Job::Arena { app, nodes, model, layout, topo } => Cell::Arena(
-            eval::run_arena_cell(
-                app, scale, seed, nodes, model, layout, topo, None,
+            eval::run_arena_cell_sharded(
+                app,
+                scale,
+                seed,
+                nodes,
+                model,
+                layout,
+                topo,
+                shards.min(nodes),
+                None,
             ),
         ),
     }
@@ -127,6 +140,10 @@ pub struct CellStore {
     /// cells at (`arena sweep --topology …`); the topology sweep
     /// addresses topologies explicitly through [`Self::arena_cell`].
     topology: Topology,
+    /// Shard count of the parallel DES every ARENA cell runs on
+    /// (`arena sweep --shards N`; 1 = serial). Not part of any cell
+    /// key — results are byte-identical for every value.
+    shards: usize,
     serial: BTreeMap<&'static str, Ps>,
     bsp: BTreeMap<(&'static str, usize, bool), BspReport>,
     arena: BTreeMap<(&'static str, usize, Model, Layout, Topology), RunReport>,
@@ -158,11 +175,21 @@ impl CellStore {
             seed,
             layout,
             topology,
+            shards: 1,
             serial: BTreeMap::new(),
             bsp: BTreeMap::new(),
             arena: BTreeMap::new(),
             timings: Vec::new(),
         }
+    }
+
+    /// Same store, with every ARENA cell executed on the `shards`-way
+    /// parallel engine. The engine configuration must never change a
+    /// result — only how fast it is computed — so the cell keys do not
+    /// carry it.
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
     }
 
     pub fn scale(&self) -> Scale {
@@ -179,6 +206,10 @@ impl CellStore {
 
     pub fn topology(&self) -> Topology {
         self.topology
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// Wall-clock of every job computed through [`Self::prefill`], in
@@ -229,7 +260,8 @@ impl CellStore {
     /// Serial baseline time (memoized).
     pub fn serial_ps(&mut self, app: &'static str) -> Ps {
         if !self.serial.contains_key(app) {
-            let v = compute(self.scale, self.seed, Job::Serial { app });
+            let v =
+                compute(self.scale, self.seed, self.shards, Job::Serial { app });
             self.insert(Job::Serial { app }, v);
         }
         self.serial[app]
@@ -239,7 +271,12 @@ impl CellStore {
     pub fn bsp(&mut self, app: &'static str, nodes: usize, cgra: bool) -> &BspReport {
         let key = (app, nodes, cgra);
         if !self.bsp.contains_key(&key) {
-            let v = compute(self.scale, self.seed, Job::Bsp { app, nodes, cgra });
+            let v = compute(
+                self.scale,
+                self.seed,
+                self.shards,
+                Job::Bsp { app, nodes, cgra },
+            );
             self.insert(Job::Bsp { app, nodes, cgra }, v);
         }
         &self.bsp[&key]
@@ -283,7 +320,7 @@ impl CellStore {
         let key = (app, nodes, model, layout, topo);
         if !self.arena.contains_key(&key) {
             let job = Job::Arena { app, nodes, model, layout, topo };
-            let v = compute(self.scale, self.seed, job);
+            let v = compute(self.scale, self.seed, self.shards, job);
             self.insert(job, v);
         }
         &self.arena[&key]
@@ -306,13 +343,13 @@ impl CellStore {
         if workers == 1 {
             for &job in &todo {
                 let t0 = Instant::now();
-                let v = compute(self.scale, self.seed, job);
+                let v = compute(self.scale, self.seed, self.shards, job);
                 self.timings.push((job, t0.elapsed()));
                 self.insert(job, v);
             }
             return;
         }
-        let (scale, seed) = (self.scale, self.seed);
+        let (scale, seed, shards) = (self.scale, self.seed, self.shards);
         let next = AtomicUsize::new(0);
         let done: Mutex<Vec<(usize, Cell, Duration)>> =
             Mutex::new(Vec::with_capacity(todo.len()));
@@ -324,7 +361,7 @@ impl CellStore {
                         break;
                     }
                     let t0 = Instant::now();
-                    let cell = compute(scale, seed, todo[i]);
+                    let cell = compute(scale, seed, shards, todo[i]);
                     let dt = t0.elapsed();
                     done.lock()
                         .expect("worker poisoned the store")
@@ -549,12 +586,38 @@ pub fn run_at(
     run_scaled(figs, scale, seed, workers, layout, Topology::Ring, None)
 }
 
+/// Knobs of the extended sweep (`arena sweep` beyond the paper's
+/// defaults), bundled so the entry-point signatures stop growing.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepCfg {
+    /// Data-placement layout of every ARENA cell.
+    pub layout: Layout,
+    /// Interconnect topology of every ARENA cell.
+    pub topo: Topology,
+    /// Append the large-scale axis (Scale tables) up to this count.
+    pub max_nodes: Option<usize>,
+    /// Shard count of the parallel DES each cell runs on (1 = serial).
+    pub shards: usize,
+}
+
+impl Default for SweepCfg {
+    fn default() -> Self {
+        SweepCfg {
+            layout: Layout::Block,
+            topo: Topology::Ring,
+            max_nodes: None,
+            shards: 1,
+        }
+    }
+}
+
 /// Run the figure sweep and, when `max_nodes` is given, extend it with
 /// the large-scale axis: serial + ARENA (both models) cells at every
 /// [`eval::scale_axis`] node count up to `max_nodes`, assembled into
 /// two extra "Scale" tables after the figures. All cells — figures and
 /// scale axis — go through one prefill pass on the shared pool, and
-/// the 1..16 columns reuse the figure cells via the store.
+/// the 1..16 columns reuse the figure cells via the store. Always the
+/// serial engine; [`run_cfg`] adds the `--shards` knob.
 pub fn run_scaled(
     figs: &[Fig],
     scale: Scale,
@@ -564,6 +627,27 @@ pub fn run_scaled(
     topo: Topology,
     max_nodes: Option<usize>,
 ) -> SweepOutput {
+    run_cfg(
+        figs,
+        scale,
+        seed,
+        workers,
+        SweepCfg { layout, topo, max_nodes, shards: 1 },
+    )
+}
+
+/// Fully configured sweep entry point: [`run_scaled`] plus the engine
+/// shard count. The render is byte-identical for every `(workers,
+/// shards)` pair — `--shards` buys wall-clock inside each cell the way
+/// `--jobs` buys it across cells.
+pub fn run_cfg(
+    figs: &[Fig],
+    scale: Scale,
+    seed: u64,
+    workers: usize,
+    cfg: SweepCfg,
+) -> SweepOutput {
+    let SweepCfg { layout, topo, max_nodes, shards } = cfg;
     let mut figs: Vec<Fig> = figs.to_vec();
     figs.sort();
     figs.dedup();
@@ -578,12 +662,17 @@ pub fn run_scaled(
     };
     if !axis.is_empty() {
         // one serial denominator per app, plus both ARENA models at
-        // every axis count
+        // every axis count the app's stripe alignment divides (the
+        // unsupported (app, count) cells render as `-`; enqueuing them
+        // would trip the app's init assert)
         for app in ALL {
             jobs.push(Job::Serial { app });
         }
         for &n in &axis {
             for app in ALL {
+                if !crate::apps::supports(app, scale, n) {
+                    continue;
+                }
                 for model in [Model::SoftwareCpu, Model::Cgra] {
                     jobs.push(Job::Arena {
                         app,
@@ -597,7 +686,8 @@ pub fn run_scaled(
         }
     }
 
-    let mut store = CellStore::configured(scale, seed, layout, topo);
+    let mut store =
+        CellStore::configured(scale, seed, layout, topo).with_shards(shards);
     store.prefill(&jobs, workers);
 
     let mut tables = Vec::new();
@@ -638,9 +728,15 @@ pub fn run_scaled(
 
 /// Run the skew-sensitivity sweep (`arena sweep --all-layouts`): every
 /// app × model × layout cell on the worker pool, assembled into the
-/// Skew A/B/C tables. Bit-identical for any `workers` value.
-pub fn run_skew(scale: Scale, seed: u64, workers: usize) -> SweepOutput {
-    let mut store = CellStore::new(scale, seed);
+/// Skew A/B/C tables. Bit-identical for any `workers` (and `shards`)
+/// value.
+pub fn run_skew(
+    scale: Scale,
+    seed: u64,
+    workers: usize,
+    shards: usize,
+) -> SweepOutput {
+    let mut store = CellStore::new(scale, seed).with_shards(shards);
     store.prefill(&skew_jobs(), workers);
     let tables = eval::skew_with(&mut store);
     let timings = timing_labels(&store);
@@ -649,9 +745,15 @@ pub fn run_skew(scale: Scale, seed: u64, workers: usize) -> SweepOutput {
 
 /// Run the topology-sensitivity sweep (`arena sweep --all-topologies`):
 /// every app × model × interconnect cell on the worker pool, assembled
-/// into the Topology A/B tables. Bit-identical for any `workers` value.
-pub fn run_topo(scale: Scale, seed: u64, workers: usize) -> SweepOutput {
-    let mut store = CellStore::new(scale, seed);
+/// into the Topology A/B tables. Bit-identical for any `workers` (and
+/// `shards`) value.
+pub fn run_topo(
+    scale: Scale,
+    seed: u64,
+    workers: usize,
+    shards: usize,
+) -> SweepOutput {
+    let mut store = CellStore::new(scale, seed).with_shards(shards);
     store.prefill(&topo_jobs(), workers);
     let tables = eval::topo_with(&mut store);
     let timings = timing_labels(&store);

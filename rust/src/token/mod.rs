@@ -9,8 +9,11 @@ use std::collections::VecDeque;
 
 /// Registered kernel id (4 bits on the wire; <= 15 user tasks).
 pub type TaskId = u8;
-/// Ring node index (4 bits on the wire; <= 16 nodes, as evaluated).
-pub type NodeId = u8;
+/// Ring node index. On the wire this is the paper's 4-bit FROMnode
+/// field (<= 16 nodes, as evaluated); the simulator widens it to u16 so
+/// the large-scale sweeps (1024/4096-node Scale tables) can address
+/// every node. [`WIRE_BYTES`] still accounts the packed 4-bit field.
+pub type NodeId = u16;
 /// Global data address (word-granular 1-D space, paper §3.1).
 pub type Addr = u32;
 
@@ -70,14 +73,20 @@ pub struct TaskToken {
     pub remote: Range,
     /// Node that spawned this token.
     pub from_node: NodeId,
-    /// Network hops (dispatcher visits) this token has traveled —
-    /// simulator-side routing metadata (not one of the paper's wire
-    /// fields and not counted in [`WIRE_BYTES`]). Scheduling policies
-    /// use `hops >= nodes` as the topology-agnostic "coverage visits"
-    /// bound — a full circulation on the ring, the equivalent convey
-    /// budget on richer [`crate::net`] topologies — for the
-    /// `LocalityThreshold` fallback that guarantees progress; the
-    /// paper's greedy filter ignores it.
+    /// Dispatcher forwards (send-queue departures) this token has made
+    /// — simulator-side routing metadata (not one of the paper's wire
+    /// fields and not counted in [`WIRE_BYTES`]). This counts *visits
+    /// to dispatchers*, not physical link traversals: one forward on a
+    /// multi-link fabric (e.g. [`crate::net::Torus2D`], `Ideal`) is
+    /// still one increment even though the token crosses several
+    /// links. Scheduling policies use `hops >= nodes` as the
+    /// topology-agnostic "coverage visits" bound — a full circulation
+    /// on the ring, the equivalent convey budget on richer topologies
+    /// — for the `LocalityThreshold` fallback that guarantees
+    /// progress; the paper's greedy filter ignores it. (The TERMINATE
+    /// probe's coverage cycle is the related, stricter invariant:
+    /// each lap visits every node exactly once — asserted in debug
+    /// builds by the cluster's termination layer.)
     pub hops: u16,
 }
 

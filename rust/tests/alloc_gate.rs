@@ -1,0 +1,70 @@
+//! CI allocation gate: the DES hot path must stay ~allocation-free in
+//! steady state — the zero-copy-engine PR's invariant, enforced here
+//! instead of merely claimed.
+//!
+//! The test registers the benchkit counting allocator (library code
+//! never does) and measures the counter delta across `Cluster::run`
+//! alone: a throwaway run first warms the shared workload memos, then
+//! a fresh cluster is built *before* the snapshot so construction,
+//! workload generation and directory setup are all excluded. What
+//! remains is the event loop plus app firings, whose allocations are
+//! O(partitions × layers), not O(events). The budget is deliberately
+//! loose — events/8 + 4096 — so it only trips on a reintroduced
+//! per-event allocation (≥ 1 alloc/event, e.g. a `Vec` back on
+//! `Ev::Complete` or a non-recycled spawn buffer), and the failure
+//! message prints the whole counter delta to point at the regression.
+//! `arena serve` replays jobs through this same `Cluster::run` inner
+//! loop, so the gate covers the serving hot path too.
+
+use arena::apps::{self, Scale};
+use arena::benchkit::alloc;
+use arena::cluster::{Cluster, Model};
+use arena::config::ArenaConfig;
+
+#[global_allocator]
+static ALLOC: alloc::Counting = alloc::Counting;
+
+fn cluster(app: &str, nodes: usize) -> Cluster {
+    let cfg = ArenaConfig::default().with_nodes(nodes).with_seed(7);
+    Cluster::new(
+        cfg,
+        Model::SoftwareCpu,
+        vec![apps::make_app(app, Scale::Small, 7)],
+    )
+}
+
+#[test]
+fn steady_state_run_is_allocation_free_per_event() {
+    alloc::enable();
+    // warm-up: shared workload memos + serial oracles generate once
+    let _ = cluster("gcn", 16).run(None);
+
+    let mut cl = cluster("gcn", 16);
+    alloc::reset();
+    let before = alloc::stats();
+    let report = cl.run(None);
+    let after = alloc::stats();
+
+    assert!(
+        report.events > 1_000,
+        "gcn@16n too small to gate the hot path: {} events",
+        report.events
+    );
+    let allocs = after.allocs - before.allocs;
+    let budget = report.events / 8 + 4096;
+    assert!(
+        allocs <= budget,
+        "DES hot-path allocation regression: {allocs} heap allocations \
+         across one steady-state run of gcn@16n ({} events, {:.4} \
+         allocs/event; budget {budget}). Counter delta: total_bytes={} \
+         peak_bytes={} live_bytes={}. Before: {before:?}; after: \
+         {after:?}. The run loop is supposed to recycle every per-event \
+         buffer — find the new allocation site before raising this \
+         budget.",
+        report.events,
+        allocs as f64 / report.events as f64,
+        after.total_bytes - before.total_bytes,
+        after.peak_bytes,
+        after.live_bytes,
+    );
+}

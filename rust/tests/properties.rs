@@ -87,7 +87,7 @@ fn greedy_bitwise_equals_seed_filter() {
             random_range(rng, 1200),
             rng.f32_range(-10.0, 10.0),
         )
-        .from_node(rng.below(16) as u8);
+        .from_node(rng.below(16) as u16);
         // hops and REMOTE must ride along untouched
         for _ in 0..rng.below(6) {
             t.record_hop();

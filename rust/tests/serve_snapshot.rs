@@ -60,6 +60,7 @@ fn regenerate() -> String {
         nodes: 4,
         model: Model::SoftwareCpu,
         topology: Topology::Ring,
+        shards: 1,
         overrides: Vec::new(),
     };
     let policies: Vec<(PolicyKind, u32)> =

@@ -1,0 +1,69 @@
+//! Shard invariance: `--shards N` is a wall-clock knob, never a
+//! results knob. The conservative-lookahead parallel engine must
+//! produce a byte-identical `RunReport` — every counter, every
+//! per-node stat — for every shard count, on every app, both
+//! execution models, and a non-ring fabric (Torus2D exercises the
+//! multi-hop cross-shard paths hardest). The serial engine is the
+//! golden oracle; shards = 1 routes through it.
+
+use arena::apps::{Scale, ALL};
+use arena::cluster::Model;
+use arena::eval;
+use arena::net::Topology;
+use arena::placement::Layout;
+use arena::sweep::{self, Fig, SweepCfg};
+
+#[test]
+fn every_app_and_model_is_byte_identical_across_shards() {
+    for app in ALL {
+        for model in [Model::SoftwareCpu, Model::Cgra] {
+            let run = |shards: usize| {
+                format!(
+                    "{:?}",
+                    eval::run_arena_cell_sharded(
+                        app,
+                        Scale::Small,
+                        7,
+                        4,
+                        model,
+                        Layout::Block,
+                        Topology::Torus2D,
+                        shards,
+                        None,
+                    )
+                )
+            };
+            let serial = run(1);
+            // 2 and 4 divide the ring evenly; 3 forces uneven
+            // partitions (2+1+1 nodes) and a straggling shard
+            for shards in [2, 3, 4] {
+                assert_eq!(
+                    run(shards),
+                    serial,
+                    "{app}/{model:?} diverged at --shards {shards}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn figure_sweep_render_is_shard_invariant() {
+    let a = sweep::run_cfg(&[Fig::F10], Scale::Small, 5, 2, SweepCfg::default());
+    let b = sweep::run_cfg(
+        &[Fig::F10],
+        Scale::Small,
+        5,
+        2,
+        SweepCfg {
+            shards: 3,
+            ..SweepCfg::default()
+        },
+    );
+    assert_eq!(a.cells, b.cells, "same unique cell set");
+    assert_eq!(
+        a.render(),
+        b.render(),
+        "figure tables must be byte-identical across --shards"
+    );
+}
