@@ -16,18 +16,27 @@
 use std::time::Duration;
 
 use arena::api;
+use arena::apps::Scale;
 use arena::benchkit::{
-    self, black_box, throughput, Bench, BenchResult,
+    self, alloc, black_box, throughput, Bench, BenchResult,
 };
 use arena::cgra::{CgraNode, CoalesceUnit, GroupMappings};
+use arena::cluster::Model;
 use arena::config::ArenaConfig;
 use arena::dispatcher::filter;
+use arena::eval;
 use arena::mapper::kernels::gemm_kernel;
+use arena::obs::{Recorder, TraceEv};
 use arena::placement::{Directory, Layout};
 use arena::ring::RingNet;
 use arena::runtime::{reference, Engine, Tensor};
 use arena::sim::Engine as Des;
 use arena::token::{Range, TaskToken};
+
+/// Peak-alloc instrumentation for the recorder-off no-alloc assertion
+/// (the library never registers an allocator; the bench opts in).
+#[global_allocator]
+static ALLOC: alloc::Counting = alloc::Counting;
 
 /// The pre-overhaul DES: a `BinaryHeap` of whole `(at, seq, ev)`
 /// structs. Kept verbatim as the measurement baseline for the
@@ -274,6 +283,94 @@ fn main() {
         }
         now
     }));
+
+    // --- observability: the disabled recorder must cost nothing ------
+    // (a) API-level: a disabled Recorder makes zero allocations under a
+    // hot-path-shaped event storm; (b) end-to-end: recorder-on vs
+    // recorder-off on the same run, overhead ratio to BENCH_obs.json.
+    alloc::enable();
+    let mut rec = Recorder::off();
+    alloc::reset();
+    let before = alloc::stats();
+    for i in 0..100_000u64 {
+        rec.trace(
+            i,
+            (i % 8) as usize,
+            TraceEv::Probe { exits: i % 2 == 0 },
+        );
+    }
+    let after = alloc::stats();
+    let off_allocs = after.allocs - before.allocs;
+    assert_eq!(
+        off_allocs, 0,
+        "disabled recorder allocated on the hot path"
+    );
+
+    let tmp = std::env::temp_dir();
+    let trace_path =
+        tmp.join(format!("arena_obs_bench_{}_trace.json", std::process::id()));
+    let metrics_path =
+        tmp.join(format!("arena_obs_bench_{}_metrics.csv", std::process::id()));
+    let cfg_off = ArenaConfig::default().with_nodes(8).with_seed(7);
+    let cfg_on = cfg_off
+        .clone()
+        .with_trace_out(trace_path.to_str().unwrap())
+        .with_metrics_out(metrics_path.to_str().unwrap());
+    let run_obs = |cfg: &ArenaConfig| {
+        eval::run_arena_with(
+            "gcn",
+            Scale::Small,
+            cfg.clone(),
+            Model::SoftwareCpu,
+            None,
+        )
+    };
+    let off_report = run_obs(&cfg_off);
+    let on_report = run_obs(&cfg_on);
+    assert_eq!(
+        format!("{off_report:?}"),
+        format!("{on_report:?}"),
+        "recording changed the run report"
+    );
+    let r_off = b.run("obs/gcn@8n recorder off", || {
+        black_box(run_obs(&cfg_off)).events
+    });
+    let r_on = b.run("obs/gcn@8n trace+metrics on", || {
+        black_box(run_obs(&cfg_on)).events
+    });
+    let overhead = r_on.mean.as_secs_f64() / r_off.mean.as_secs_f64();
+    let trace_bytes = std::fs::metadata(&trace_path).map_or(0, |m| m.len());
+    let metrics_bytes =
+        std::fs::metadata(&metrics_path).map_or(0, |m| m.len());
+    println!(
+        "  -> recorder-on overhead {overhead:.2}x ({} KB trace, {} KB \
+         metrics, 0 allocs when off)",
+        trace_bytes / 1024,
+        metrics_bytes / 1024
+    );
+    let obs_fields = [
+        ("smoke", smoke.to_string()),
+        ("app", format!("\"{}\"", benchkit::json_escape("gcn"))),
+        ("nodes", 8.to_string()),
+        ("events", off_report.events.to_string()),
+        ("recv_stalls", off_report.recv_stalls.to_string()),
+        ("terminate_seen", off_report.terminate_seen.to_string()),
+        ("recorder_off_allocs", off_allocs.to_string()),
+        ("off_mean_ns", r_off.mean.as_nanos().to_string()),
+        ("on_mean_ns", r_on.mean.as_nanos().to_string()),
+        ("overhead_ratio", format!("{overhead:.4}")),
+        ("trace_bytes", trace_bytes.to_string()),
+        ("metrics_bytes", metrics_bytes.to_string()),
+    ];
+    match benchkit::write_bench_json("BENCH_obs.json", "obs_overhead", &obs_fields)
+    {
+        Ok(()) => println!("record: BENCH_obs.json"),
+        Err(e) => eprintln!("record: BENCH_obs.json not written: {e}"),
+    }
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(&metrics_path);
+    all.push(r_off);
+    all.push(r_on);
 
     if smoke {
         println!("(--smoke: engine section skipped)");

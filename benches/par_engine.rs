@@ -81,16 +81,55 @@ fn main() {
         );
     }
 
+    // engine profile of the most recent sharded run (the last timed
+    // iteration): windows, per-shard load and barrier time share
+    let profile = match arena::obs::take_par_profile() {
+        Some(p) => {
+            let busy = (p.window_ns + p.merge_ns + p.replay_ns).max(1) as f64;
+            println!(
+                "profile   {} windows, {:.1}% window / {:.1}% merge / \
+                 {:.1}% replay, {} mailbox spills",
+                p.windows,
+                100.0 * p.window_ns as f64 / busy,
+                100.0 * p.merge_ns as f64 / busy,
+                100.0 * p.replay_ns as f64 / busy,
+                p.mailbox_spills
+            );
+            let per_shard: Vec<String> =
+                p.events_per_shard.iter().map(u64::to_string).collect();
+            format!(
+                "{{\"shards\":{},\"windows\":{},\"events\":{},\
+                 \"events_per_shard\":[{}],\"window_ns\":{},\
+                 \"merge_ns\":{},\"replay_ns\":{},\"window_share\":{:.4},\
+                 \"merge_share\":{:.4},\"replay_share\":{:.4},\
+                 \"mailbox_spills\":{}}}",
+                p.shards,
+                p.windows,
+                p.events,
+                per_shard.join(","),
+                p.window_ns,
+                p.merge_ns,
+                p.replay_ns,
+                p.window_ns as f64 / busy,
+                p.merge_ns as f64 / busy,
+                p.replay_ns as f64 / busy,
+                p.mailbox_spills
+            )
+        }
+        None => "null".into(),
+    };
+
     let results = benchkit::results_json(&[rs, rp]);
     let fields = [
         ("smoke", smoke.to_string()),
-        ("app", format!("\"{APP}\"")),
+        ("app", format!("\"{}\"", benchkit::json_escape(APP))),
         ("nodes", nodes.to_string()),
         ("shards", SHARDS.to_string()),
         ("events_per_run", events.to_string()),
         ("serial_events_per_sec", format!("{ser_eps:.1}")),
         ("sharded_events_per_sec", format!("{par_eps:.1}")),
         ("speedup", format!("{speedup:.4}")),
+        ("profile", profile),
         ("results", results),
     ];
     match benchkit::write_bench_json("BENCH_par.json", "par_engine", &fields) {

@@ -82,7 +82,10 @@ fn main() {
     let fields = [
         (
             "scale",
-            format!("\"{}\"", if paper { "paper" } else { "small" }),
+            format!(
+                "\"{}\"",
+                benchkit::json_escape(if paper { "paper" } else { "small" })
+            ),
         ),
         ("smoke", smoke.to_string()),
         ("cells", out_par.cells.to_string()),

@@ -376,6 +376,26 @@ mod tests {
     }
 
     #[test]
+    fn per_job_json_escapes_labels() {
+        // a quote/backslash-bearing label (e.g. a windows-style path
+        // fed to --trace-out and echoed into a per-job record) must
+        // not corrupt the emitted JSON
+        let s = per_job_json(&[
+            ("arena/gemm/n8".into(), 1.25),
+            ("odd \"label\" with \\ and \n".into(), 0.5),
+        ]);
+        assert!(s.contains("\\\"label\\\""));
+        let parsed = crate::util::json::Json::parse(&s).expect("valid json");
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(
+            arr[1].get("job").unwrap().as_str(),
+            Some("odd \"label\" with \\ and \n")
+        );
+        assert_eq!(arr[0].get("ms").unwrap().as_f64(), Some(1.25));
+    }
+
+    #[test]
     fn alloc_stats_are_monotone_snapshots() {
         // without the allocator registered the counters stay zero; the
         // API must still be callable

@@ -79,7 +79,7 @@ pub fn parse(
 /// effective [`ArenaConfig`]. One table so `build_config` and the
 /// round-trip test cannot drift apart: a new config-affecting option
 /// is added here (and sampled in the test) or it does not exist.
-pub const CONFIG_OPTS: [(&str, &str); 8] = [
+pub const CONFIG_OPTS: [(&str, &str); 11] = [
     ("nodes", "nodes"),
     ("seed", "seed"),
     ("layout", "layout"),
@@ -88,6 +88,9 @@ pub const CONFIG_OPTS: [(&str, &str); 8] = [
     ("inject-node", "inject_node"),
     ("topology", "topology"),
     ("shards", "shards"),
+    ("trace-out", "trace_out"),
+    ("metrics-out", "metrics_out"),
+    ("metrics-interval-ps", "metrics_interval_ps"),
 ];
 
 /// Build the effective config: `--config FILE` base (Table-2 defaults
@@ -272,6 +275,9 @@ mod tests {
                 "inject-node" => "2",
                 "topology" => "ideal",
                 "shards" => "2",
+                "trace-out" => "trace.json",
+                "metrics-out" => "metrics.csv",
+                "metrics-interval-ps" => "250000",
                 other => panic!(
                     "CONFIG_OPTS gained '{other}' without a round-trip \
                      sample — extend this test"

@@ -119,6 +119,52 @@ pub struct Cluster {
     /// forward buffers) — the hot path allocates only until the pool
     /// warms up.
     pub(in crate::cluster) vec_pool: Vec<Vec<TaskToken>>,
+    /// Observability sinks (simulated-time trace + interval metrics).
+    /// Disabled by default — every hot-path record call is a branch on
+    /// `None` and nothing allocates (see [`crate::obs`]).
+    pub(in crate::cluster) obs: crate::obs::Recorder,
+}
+
+/// Roman label of the paper's dispatch-filter case, as traced (the
+/// Fig. 5 Case I–IV vocabulary readers of the trace already know).
+pub(in crate::cluster) fn case_name(
+    c: crate::sched::FilterCase,
+) -> &'static str {
+    match c {
+        crate::sched::FilterCase::Convey => "I",
+        crate::sched::FilterCase::Local => "II",
+        crate::sched::FilterCase::SplitSuperset => "III",
+        crate::sched::FilterCase::SplitPartial => "IV",
+    }
+}
+
+/// Snapshot one node's occupancy counters at simulated instant `t`
+/// (one interval-metrics row). Shared by the serial loop and the
+/// sharded workers so both engines sample identical state.
+pub(in crate::cluster) fn node_row(
+    t: Ps,
+    i: usize,
+    nd: &Node,
+) -> crate::obs::NodeRow {
+    let busy = match &nd.compute {
+        crate::node::Compute::Cpu { busy_until } => (*busy_until > t) as u32,
+        crate::node::Compute::Cgra(c) => {
+            (c.n_groups() - c.free_groups(t)) as u32
+        }
+    };
+    crate::obs::NodeRow {
+        t,
+        node: i as u32,
+        recv: nd.disp.recv.len() as u32,
+        wait: nd.disp.wait.len() as u32,
+        inbound: nd.inbound.len() as u32,
+        fetching: nd.fetching.len() as u32,
+        running: nd.running as u32,
+        busy,
+        tasks: nd.stats.tasks,
+        touched_words: nd.stats.touched_words,
+        local_hit_words: nd.stats.local_hit_words,
+    }
 }
 
 impl Cluster {
@@ -184,6 +230,7 @@ impl Cluster {
             .map(|i| Node::new(i, &cfg, model == Model::Cgra))
             .collect();
         let policy = cfg.dispatch_policy();
+        let obs = crate::obs::Recorder::from_cfg(&cfg);
         Cluster {
             net: cfg.topology.build(n),
             nodes,
@@ -202,6 +249,7 @@ impl Cluster {
             spawn_slab: Vec::new(),
             spawn_free: Vec::new(),
             vec_pool: Vec::new(),
+            obs,
         }
     }
 

@@ -58,6 +58,7 @@ use std::sync::{mpsc, Mutex};
 use crate::api::{App, ExecCtx, WORD_BYTES};
 use crate::config::Ps;
 use crate::node::{Compute, Node, SW_TOKEN_OVERHEAD_CYCLES};
+use crate::obs::{ShardTrace, TraceEv};
 use crate::sim::par::{
     key, key_at, key_class, key_k, key_x, Mailbox, ShardEngine, CLASS_LOCAL,
     CLASS_RANKED, CLASS_ROOT,
@@ -80,6 +81,10 @@ struct NetOp {
     k: u32,
     /// Emitting handler's shard-local pop index (rank lookup key).
     emitter: u64,
+    /// Reserved trace-sequence slot for records written at replay time
+    /// (token hops: link and arrival exist only once the shared fabric
+    /// routes the op). 0 when tracing is off.
+    ts: u32,
     kind: OpKind,
 }
 
@@ -156,6 +161,15 @@ struct Shard {
     /// everything the handler schedules or defers).
     cur_x: u64,
     k: u32,
+    /// Staged trace events, tagged `(pop index, seq)` and resolved to
+    /// global ranks at the barrier — the merged stream is byte-equal to
+    /// the serial recorder's.
+    trace: ShardTrace,
+    /// Buffered interval-metric rows over this shard's own nodes.
+    mrows: Vec<crate::obs::NodeRow>,
+    /// Metrics cursor (mirrors the serial loop's; `Ps::MAX` when off).
+    minterval: Ps,
+    next_sample: Ps,
 }
 
 impl Shard {
@@ -175,6 +189,12 @@ impl Shard {
             self.pops += 1;
             self.k = 0;
             self.log.push(pkey);
+            self.trace.begin_pop(self.cur_x);
+            while now >= self.next_sample {
+                self.sample_metrics(self.next_sample);
+                self.next_sample =
+                    self.next_sample.saturating_add(self.minterval);
+            }
             match ev {
                 Ev::Arrive(n, tok) => self.on_arrive(cx, now, n, tok),
                 Ev::Pump(n) => {
@@ -187,6 +207,11 @@ impl Shard {
                     let mut spawns =
                         std::mem::take(&mut self.spawn_slab[slot as usize]);
                     self.spawn_free.push(slot);
+                    self.trace.push(
+                        now,
+                        n,
+                        TraceEv::Complete { spawns: spawns.len() as u32 },
+                    );
                     for s in spawns.drain(..) {
                         self.nodes[lx].coalescer.push(s);
                     }
@@ -211,9 +236,27 @@ impl Shard {
 
     /// Defer a network call to the barrier; consumes one `k` exactly
     /// where the serial loop would have scheduled the delivery.
-    fn defer(&mut self, at: Ps, node: usize, kind: OpKind) {
-        self.outbox.push(NetOp { at, node, k: self.k, emitter: self.cur_x, kind });
+    fn defer(&mut self, at: Ps, node: usize, ts: u32, kind: OpKind) {
+        self.outbox.push(NetOp {
+            at,
+            node,
+            k: self.k,
+            emitter: self.cur_x,
+            ts,
+            kind,
+        });
         self.k += 1;
+    }
+
+    /// One interval-metrics row per owned node — the serial
+    /// `Cluster::sample_metrics`, restricted to this shard's stripe
+    /// (link rows are the main thread's: only the replay sees the
+    /// shared fabric).
+    fn sample_metrics(&mut self, t: Ps) {
+        let Shard { base, nodes, mrows, .. } = self;
+        for (j, nd) in nodes.iter().enumerate() {
+            mrows.push(super::node_row(t, *base + j, nd));
+        }
     }
 
     fn schedule_pump(&mut self, cx: &SharedCtx<'_>, now: Ps, n: usize) {
@@ -258,6 +301,15 @@ impl Shard {
         while !self.nodes[lx].disp.recv.is_full() {
             match self.nodes[lx].coalescer.pop() {
                 Some(t) => {
+                    self.trace.push(
+                        now,
+                        n,
+                        TraceEv::Coalesce {
+                            task: t.task_id,
+                            start: t.task.start,
+                            end: t.task.end,
+                        },
+                    );
                     self.nodes[lx].disp.recv.push(t).expect("checked space");
                     progress = true;
                 }
@@ -280,10 +332,41 @@ impl Shard {
                 let local = cx.dirs[ai].filter_extent(n, tok.task);
                 let sctx = crate::sched::SchedCtx { nodes: cx.n_nodes };
                 let out = self.policy.classify(&tok, local, &sctx);
+                let case = out.case;
+                let kept = if out.wait.len() == 1 {
+                    Some(out.wait[0].task)
+                } else {
+                    None
+                };
                 if self.nodes[lx].disp.process_outcome(tok, out).is_ok() {
                     self.nodes[lx].disp.recv.pop();
                     self.nodes[lx].touch();
                     progress = true;
+                    if self.trace.on() {
+                        self.trace.push(
+                            now,
+                            n,
+                            TraceEv::Filter {
+                                task: tok.task_id,
+                                start: tok.task.start,
+                                end: tok.task.end,
+                                case: super::case_name(case),
+                            },
+                        );
+                        if let (true, Some(kept)) = (case.is_split(), kept) {
+                            self.trace.push(
+                                now,
+                                n,
+                                TraceEv::Split {
+                                    task: tok.task_id,
+                                    start: tok.task.start,
+                                    end: tok.task.end,
+                                    local_start: kept.start,
+                                    local_end: kept.end,
+                                },
+                            );
+                        }
+                    }
                 }
             }
         }
@@ -293,7 +376,8 @@ impl Shard {
         while let Some(mut t) = self.nodes[lx].disp.send.pop() {
             debug_assert!(!t.is_terminate(), "TERMINATE in the send queue");
             t.record_hop();
-            self.defer(now, n, OpKind::Token(t));
+            let ts = self.trace.reserve();
+            self.defer(now, n, ts, OpKind::Token(t));
             progress = true;
         }
 
@@ -320,6 +404,14 @@ impl Shard {
             };
             if tok.needs_remote_data() {
                 self.nodes[lx].disp.wait.pop();
+                self.trace.push(
+                    now,
+                    n,
+                    TraceEv::Fetch {
+                        task: tok.task_id,
+                        words: tok.remote.len(),
+                    },
+                );
                 let all_local = self.book_fetch(cx, now, n, &tok);
                 let slot = self.nodes[lx].fetching.park(tok);
                 self.nodes[lx].stats.fetches += 1;
@@ -330,7 +422,7 @@ impl Shard {
                     // purely local event (the serial loop schedules the
                     // DataReady either way, so event counts match)
                     Some(ready_at) => self.sched(ready_at, Ev::DataReady(n, slot)),
-                    None => self.defer(now, n, OpKind::Fetch { slot, tok }),
+                    None => self.defer(now, n, 0, OpKind::Fetch { slot, tok }),
                 }
                 progress = true;
                 continue;
@@ -434,28 +526,28 @@ impl Shard {
             }
         };
 
-        let done = match &mut self.nodes[lx].compute {
+        let (done, groups) = match &mut self.nodes[lx].compute {
             Compute::Cpu { busy_until } => {
                 let cycles =
                     info.spec.cpu_cycles(exec.units) + SW_TOKEN_OVERHEAD_CYCLES;
                 let start = now.max(*busy_until);
                 let done = start + cycles * cx.cfg.cpu_cycle_ps();
                 *busy_until = done;
-                done
+                (done, 0u32)
             }
             Compute::Cgra(cgra) => {
                 let local_len = cx.dirs[app_idx].local_words(n);
-                match cgra.launch(now, &tok, local_len, exec.units, &info.mappings)
+                let l = match cgra
+                    .launch(now, &tok, local_len, exec.units, &info.mappings)
                 {
-                    Some(l) => l.done,
+                    Some(l) => l,
                     None => {
                         let at = cgra.next_free_at();
-                        let l = cgra
-                            .launch(at, &tok, local_len, exec.units, &info.mappings)
-                            .expect("a group is free at next_free_at");
-                        l.done
+                        cgra.launch(at, &tok, local_len, exec.units, &info.mappings)
+                            .expect("a group is free at next_free_at")
                     }
-                }
+                };
+                (l.done, l.groups as u32)
             }
         };
         self.nodes[lx].running += 1;
@@ -474,6 +566,18 @@ impl Shard {
         stat.first_dispatch = Some(stat.first_dispatch.unwrap_or(now).min(now));
         stat.last_done = stat.last_done.max(done);
         self.nodes[lx].touch();
+        self.trace.push(
+            now,
+            n,
+            TraceEv::Fire {
+                task: tok.task_id,
+                start: tok.task.start,
+                end: tok.task.end,
+                units: exec.units,
+                groups,
+                done,
+            },
+        );
         self.sched(done, Ev::Complete(n, slot));
     }
 
@@ -483,13 +587,14 @@ impl Shard {
     /// coverage accounting) is the barrier's job.
     fn finish_terminate(&mut self, cx: &SharedCtx<'_>, now: Ps, n: usize) {
         let exits = self.nodes[n - self.base].terminate_step();
+        self.trace.push(now, n, TraceEv::Probe { exits });
         if exits {
             cx.done[n].store(true, Ordering::Relaxed);
             if cx.done.iter().all(|d| d.load(Ordering::Relaxed)) {
                 return; // the last node swallows the probe
             }
         }
-        self.defer(now, n, OpKind::Probe);
+        self.defer(now, n, 0, OpKind::Probe);
     }
 }
 
@@ -536,6 +641,9 @@ impl Cluster {
         let done: Vec<AtomicBool> =
             (0..n_nodes).map(|_| AtomicBool::new(false)).collect();
 
+        let trace_on = self.obs.trace_on();
+        let minterval = self.obs.interval();
+
         let mut all_nodes = std::mem::take(&mut self.nodes);
         let mut carved: Vec<Shard> = Vec::with_capacity(n_shards);
         for s in (0..n_shards).rev() {
@@ -556,6 +664,10 @@ impl Cluster {
                 outbox: Mailbox::with_capacity(64 * len),
                 cur_x: 0,
                 k: 0,
+                trace: ShardTrace::new(trace_on),
+                mrows: Vec::new(),
+                minterval,
+                next_sample: minterval,
             });
         }
         carved.reverse();
@@ -569,6 +681,15 @@ impl Cluster {
         for a in arrivals {
             self.app_stats[a.app].arrival = a.at;
             for t in &roots[a.app] {
+                self.obs.trace(
+                    a.at,
+                    a.node,
+                    TraceEv::Inject {
+                        task: t.task_id,
+                        start: t.task.start,
+                        end: t.task.end,
+                    },
+                );
                 shards[shard_of(a.node)]
                     .as_mut()
                     .expect("shard at home")
@@ -601,6 +722,17 @@ impl Cluster {
         let mut makespan: Ps = 0;
         let mut total_events: u64 = 0;
         let mut global_rank: u64 = 0;
+
+        // Parallel-engine profile accumulators (wall clock — published
+        // via `obs::set_par_profile`, never part of any deterministic
+        // output) and the link-metrics replay cursor: replayed ops hit
+        // the shared fabric in nondecreasing `at` order, so one cursor
+        // reproduces the serial per-boundary link samples.
+        let mut windows = 0u64;
+        let mut window_ns = 0u64;
+        let mut merge_ns = 0u64;
+        let mut replay_ns = 0u64;
+        let mut link_next: Ps = minterval;
 
         std::thread::scope(|scope| {
             // one persistent worker per shard; Shard ownership
@@ -638,6 +770,8 @@ impl Cluster {
                     .min();
                 let Some(w) = w else { break };
                 let horizon = w.saturating_add(lookahead);
+                windows += 1;
+                let t_win = std::time::Instant::now();
                 active.clear();
                 for (i, s) in shards.iter().enumerate() {
                     if let Some(at) = s.as_ref().expect("shard at home").eng.peek_at()
@@ -665,6 +799,8 @@ impl Cluster {
                         shards[i] = Some(sh);
                     }
                 }
+                window_ns += t_win.elapsed().as_nanos() as u64;
+                let t_merge = std::time::Instant::now();
 
                 // --- barrier 1: k-way merge of the pop logs into the
                 // serial pop order, assigning global ranks ---
@@ -733,8 +869,11 @@ impl Cluster {
                             kk
                         }
                     });
+                    sh.trace.resolve(rk, start);
                     sh.log.clear();
                 }
+                merge_ns += t_merge.elapsed().as_nanos() as u64;
+                let t_replay = std::time::Instant::now();
 
                 // --- barrier 4: replay deferred network calls against
                 // the single fabric in global schedule order — the
@@ -757,6 +896,15 @@ impl Cluster {
                 });
                 for (i, op) in ops.drain(..) {
                     let rank = ranks[i][(op.emitter - starts[i]) as usize];
+                    // sample the shared links at every interval
+                    // boundary the replay is about to cross (op times
+                    // are nondecreasing, so state at the boundary is
+                    // exactly what the serial loop sampled there)
+                    while op.at >= link_next {
+                        let busy = self.net.link_busy_ps();
+                        self.obs.sample_links(link_next, &busy);
+                        link_next = link_next.saturating_add(minterval);
+                    }
                     match op.kind {
                         OpKind::Token(t) => {
                             let dest = if self.net.routes_by_dest() {
@@ -770,6 +918,19 @@ impl Cluster {
                             let (at2, next) = self
                                 .net
                                 .send_token(cx.cfg, op.at, op.node, dest);
+                            self.obs.trace_ranked(
+                                crate::obs::rank_key(rank, op.ts),
+                                op.at,
+                                op.node,
+                                TraceEv::Hop {
+                                    task: t.task_id,
+                                    start: t.task.start,
+                                    end: t.task.end,
+                                    hops: t.hops,
+                                    to: next as u32,
+                                    arrive: at2,
+                                },
+                            );
                             debug_assert!(
                                 at2 >= horizon,
                                 "token delivery inside the lookahead window"
@@ -826,15 +987,37 @@ impl Cluster {
                         }
                     }
                 }
+                replay_ns += t_replay.elapsed().as_nanos() as u64;
             }
 
             drop(req_tx); // close the channels; workers exit and join
         });
 
+        // Boundaries past the last replayed op, up to the makespan —
+        // the link half of the serial loop's end-of-run metrics flush.
+        while link_next <= makespan {
+            let busy = self.net.link_busy_ps();
+            self.obs.sample_links(link_next, &busy);
+            link_next = link_next.saturating_add(minterval);
+        }
+
         // reassemble the cluster: nodes in ring order, app stats merged
         let mut nodes = Vec::with_capacity(n_nodes);
+        let mut events_per_shard = Vec::with_capacity(n_shards);
+        let mut mailbox_spills = 0u64;
         for s in shards {
-            let sh = s.expect("shard at home");
+            let mut sh = s.expect("shard at home");
+            // node-row half of the serial end-of-run metrics flush:
+            // boundaries between the stripe's last sample and the
+            // global makespan (node state is final — the DES drained)
+            while sh.next_sample <= makespan {
+                sh.sample_metrics(sh.next_sample);
+                sh.next_sample = sh.next_sample.saturating_add(sh.minterval);
+            }
+            events_per_shard.push(sh.pops);
+            mailbox_spills += sh.outbox.spills();
+            self.obs.absorb_node_rows(std::mem::take(&mut sh.mrows));
+            self.obs.absorb_ranked(sh.trace.into_resolved());
             nodes.extend(sh.nodes);
             for (ai, st) in sh.app_stats.iter().enumerate() {
                 let dst = &mut self.app_stats[ai];
@@ -861,7 +1044,26 @@ impl Cluster {
             "DES drained but nodes not terminated"
         );
 
-        self.report(makespan, total_events)
+        crate::obs::set_par_profile(crate::obs::ParProfile {
+            shards: n_shards,
+            windows,
+            events: total_events,
+            events_per_shard,
+            window_ns,
+            merge_ns,
+            replay_ns,
+            mailbox_spills,
+        });
+
+        // `RunReport.engine` stays default: the sharded path requires a
+        // non-borrowed numerics engine to already have fallen back to
+        // the serial loop, which reports the same zeros.
+        let r = self.report(makespan, total_events);
+        if self.obs.on() {
+            let labels = self.net.link_labels();
+            self.obs.finish(makespan, &labels);
+        }
+        r
     }
 }
 

@@ -104,6 +104,14 @@ pub struct RunReport {
     pub locality: Vec<f64>,
     pub events: u64,
     pub terminate_laps: u64,
+    /// Tokens that arrived at a full recv queue (ring backpressure
+    /// events), summed over the nodes.
+    pub recv_stalls: u64,
+    /// TERMINATE probe visits handled, summed over the nodes.
+    pub terminate_seen: u64,
+    /// Numerics-engine activity attributable to this run (zeros when
+    /// the run used the cycle model only, or a borrowed engine).
+    pub engine: crate::runtime::EngineStats,
 }
 
 impl RunReport {
@@ -172,6 +180,8 @@ impl Cluster {
         let mut fetches = 0;
         let mut fetched = 0;
         let mut local_bytes = 0;
+        let mut recv_stalls = 0;
+        let mut terminate_seen = 0;
         for nd in &self.nodes {
             let d = &nd.disp.stats;
             dispatcher.filtered += d.filtered;
@@ -208,6 +218,8 @@ impl Cluster {
             fetches += nd.stats.fetches;
             fetched += nd.stats.fetched_bytes;
             local_bytes += nd.stats.local_bytes;
+            recv_stalls += nd.stats.recv_stalls;
+            terminate_seen += nd.stats.terminate_seen;
         }
         let app_latency = self
             .apps
@@ -259,6 +271,9 @@ impl Cluster {
             locality,
             events,
             terminate_laps: self.terminate_laps,
+            recv_stalls,
+            terminate_seen,
+            engine: Default::default(),
         }
     }
 }

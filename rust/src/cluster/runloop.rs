@@ -4,6 +4,7 @@
 use crate::api::{ExecCtx, WORD_BYTES};
 use crate::config::Ps;
 use crate::node::{Compute, SW_TOKEN_OVERHEAD_CYCLES};
+use crate::obs::TraceEv;
 use crate::runtime::Engine;
 use crate::sim::Engine as Des;
 use crate::token::{TaskToken, WIRE_BYTES};
@@ -77,6 +78,11 @@ impl Cluster {
             return self.run_with_arrivals_sharded(arrivals);
         }
 
+        // Engine-counter snapshot so the report carries this run's
+        // compile/execute/cache-hit deltas, not the borrowed engine's
+        // lifetime totals.
+        let engine_before = engine.as_deref().map(|e| e.stats());
+
         // slab sized for the common peak (a few events per node); grows
         // transparently for token floods
         let mut des: Des<Ev> = Des::with_capacity(64 * n_nodes);
@@ -90,6 +96,15 @@ impl Cluster {
         for a in arrivals {
             self.app_stats[a.app].arrival = a.at;
             for t in self.apps[a.app].root_tokens() {
+                self.obs.trace(
+                    a.at,
+                    a.node,
+                    TraceEv::Inject {
+                        task: t.task_id,
+                        start: t.task.start,
+                        end: t.task.end,
+                    },
+                );
                 des.schedule_at(a.at, Ev::Arrive(a.node, t));
             }
             if a.at >= last.0 {
@@ -100,6 +115,13 @@ impl Cluster {
         des.schedule_at(last.0, Ev::Arrive(last.1, TaskToken::terminate()));
 
         let max_events = self.max_events;
+        // Interval-metrics cursor: sample each boundary `k * interval`
+        // before processing the first event at or past it, so a row at
+        // boundary B is the state after all events with `t < B`. With
+        // metrics off the interval is `Ps::MAX` and the comparison
+        // below never fires (the only hot-path cost of the feature).
+        let interval = self.obs.interval();
+        let mut next_sample = interval;
         let mut makespan: Ps = 0;
         let mut guard = 0u64;
         while let Some((now, ev)) = des.next() {
@@ -112,6 +134,10 @@ impl Cluster {
                 );
             }
             makespan = makespan.max(now);
+            while now >= next_sample {
+                self.sample_metrics(next_sample);
+                next_sample = next_sample.saturating_add(interval);
+            }
             match ev {
                 Ev::Arrive(n, tok) => {
                     self.on_arrive(&mut des, now, n, tok, &mut pump_pending)
@@ -125,6 +151,11 @@ impl Cluster {
                     let mut spawns =
                         std::mem::take(&mut self.spawn_slab[slot as usize]);
                     self.spawn_free.push(slot);
+                    self.obs.trace(
+                        now,
+                        n,
+                        TraceEv::Complete { spawns: spawns.len() as u32 },
+                    );
                     for s in spawns.drain(..) {
                         self.nodes[n].coalescer.push(s);
                     }
@@ -148,7 +179,39 @@ impl Cluster {
             "DES drained but nodes not terminated"
         );
 
-        self.report(makespan, des.processed())
+        // flush the remaining metric boundaries so the time-series
+        // covers the whole run (no-op with metrics off: the cursor
+        // saturates past any makespan)
+        while next_sample <= makespan {
+            self.sample_metrics(next_sample);
+            next_sample = next_sample.saturating_add(interval);
+        }
+
+        let mut r = self.report(makespan, des.processed());
+        if let (Some(before), Some(e)) = (engine_before, engine.as_deref()) {
+            let after = e.stats();
+            r.engine = crate::runtime::EngineStats {
+                compiles: after.compiles - before.compiles,
+                executions: after.executions - before.executions,
+                cache_hits: after.cache_hits - before.cache_hits,
+            };
+        }
+        if self.obs.on() {
+            let labels = self.net.link_labels();
+            self.obs.finish(makespan, &labels);
+        }
+        r
+    }
+
+    /// One interval-metrics boundary: a row per node plus the
+    /// cumulative per-link busy snapshot (see [`crate::obs`]).
+    fn sample_metrics(&mut self, t: Ps) {
+        let Cluster { nodes, net, obs, .. } = self;
+        for (i, nd) in nodes.iter().enumerate() {
+            obs.push_node_row(super::node_row(t, i, nd));
+        }
+        let busy = net.link_busy_ps();
+        obs.sample_links(t, &busy);
     }
 
     fn schedule_pump(
@@ -218,6 +281,15 @@ impl Cluster {
         while !self.nodes[n].disp.recv.is_full() {
             match self.nodes[n].coalescer.pop() {
                 Some(t) => {
+                    self.obs.trace(
+                        now,
+                        n,
+                        TraceEv::Coalesce {
+                            task: t.task_id,
+                            start: t.task.start,
+                            end: t.task.end,
+                        },
+                    );
                     self.nodes[n].disp.recv.push(t).expect("checked space");
                     progress = true;
                 }
@@ -244,10 +316,38 @@ impl Cluster {
                 let local = self.filter_range(n, &tok);
                 let ctx = crate::sched::SchedCtx { nodes: self.nodes.len() };
                 let out = self.policy.classify(&tok, local, &ctx);
+                let case = out.case;
+                let kept =
+                    if out.wait.len() == 1 { Some(out.wait[0].task) } else { None };
                 if self.nodes[n].disp.process_outcome(tok, out).is_ok() {
                     self.nodes[n].disp.recv.pop();
                     self.nodes[n].touch();
                     progress = true;
+                    if self.obs.trace_on() {
+                        self.obs.trace(
+                            now,
+                            n,
+                            TraceEv::Filter {
+                                task: tok.task_id,
+                                start: tok.task.start,
+                                end: tok.task.end,
+                                case: super::case_name(case),
+                            },
+                        );
+                        if let (true, Some(k)) = (case.is_split(), kept) {
+                            self.obs.trace(
+                                now,
+                                n,
+                                TraceEv::Split {
+                                    task: tok.task_id,
+                                    start: tok.task.start,
+                                    end: tok.task.end,
+                                    local_start: k.start,
+                                    local_end: k.end,
+                                },
+                            );
+                        }
+                    }
                 }
                 // on Err the wait/send queues are full — the token
                 // stays in recv until a launch/forward frees space.
@@ -278,6 +378,18 @@ impl Cluster {
                 n // "no better direction": advance the coverage cycle
             };
             let (at, next) = self.net.send_token(&self.cfg, now, n, dest);
+            self.obs.trace(
+                now,
+                n,
+                TraceEv::Hop {
+                    task: t.task_id,
+                    start: t.task.start,
+                    end: t.task.end,
+                    hops: t.hops,
+                    to: next as u32,
+                    arrive: at,
+                },
+            );
             des.schedule_at(at, Ev::Arrive(next, t));
             progress = true;
         }
@@ -320,6 +432,14 @@ impl Cluster {
             // park the token until DataReady.
             if tok.needs_remote_data() {
                 self.nodes[n].disp.wait.pop();
+                self.obs.trace(
+                    now,
+                    n,
+                    TraceEv::Fetch {
+                        task: tok.task_id,
+                        words: tok.remote.len(),
+                    },
+                );
                 let ready_at = self.fetch_remote(now, n, &tok);
                 let slot = self.nodes[n].fetching.park(tok);
                 self.nodes[n].stats.fetches += 1;
@@ -386,30 +506,30 @@ impl Cluster {
         let info = kernels[tok.task_id as usize]
             .as_ref()
             .expect("unregistered task id");
-        let done = match &mut nodes[n].compute {
+        let (done, groups) = match &mut nodes[n].compute {
             Compute::Cpu { busy_until } => {
                 let cycles =
                     info.spec.cpu_cycles(exec.units) + SW_TOKEN_OVERHEAD_CYCLES;
                 let start = now.max(*busy_until);
                 let done = start + cycles * cfg.cpu_cycle_ps();
                 *busy_until = done;
-                done
+                (done, 0u32)
             }
             Compute::Cgra(cgra) => {
                 let local_len = dirs[app_idx].local_words(n);
-                match cgra.launch(now, &tok, local_len, exec.units, &info.mappings)
+                let l = match cgra
+                    .launch(now, &tok, local_len, exec.units, &info.mappings)
                 {
-                    Some(l) => l.done,
+                    Some(l) => l,
                     None => {
                         // raced with another launch: retry at the next
                         // instant a group frees (launch backpressure).
                         let at = cgra.next_free_at();
-                        let l = cgra
-                            .launch(at, &tok, local_len, exec.units, &info.mappings)
-                            .expect("a group is free at next_free_at");
-                        l.done
+                        cgra.launch(at, &tok, local_len, exec.units, &info.mappings)
+                            .expect("a group is free at next_free_at")
                     }
-                }
+                };
+                (l.done, l.groups as u32)
             }
         };
         self.nodes[n].running += 1;
@@ -437,6 +557,18 @@ impl Cluster {
         stat.first_dispatch = Some(stat.first_dispatch.unwrap_or(now).min(now));
         stat.last_done = stat.last_done.max(done);
         self.nodes[n].touch();
+        self.obs.trace(
+            now,
+            n,
+            TraceEv::Fire {
+                task: tok.task_id,
+                start: tok.task.start,
+                end: tok.task.end,
+                units: exec.units,
+                groups,
+                done,
+            },
+        );
         des.schedule_at(done, Ev::Complete(n, slot));
     }
 

@@ -40,6 +40,8 @@ impl Cluster {
         n: usize,
     ) {
         let exits = self.nodes[n].terminate_step();
+        self.obs
+            .trace(now, n, crate::obs::TraceEv::Probe { exits });
         if exits && self.nodes.iter().all(|nd| nd.done) {
             // the last node swallows the probe so the DES can drain
             return;

@@ -81,6 +81,14 @@ pub struct ArenaConfig {
     /// byte-identical for every value — like `--jobs`, this is purely
     /// a speed knob.
     pub shards: usize,
+    /// Chrome trace-event JSON destination (`arena run --trace-out F`;
+    /// "" = tracing off, the default — see [`crate::obs`]).
+    pub trace_out: String,
+    /// Interval-metrics destination (`--metrics-out F`; "" = off).
+    pub metrics_out: String,
+    /// Metrics sampling interval in simulated picoseconds
+    /// (`--metrics-interval-ps N`; default 1 µs).
+    pub metrics_interval_ps: Ps,
     /// Workload RNG seed (also feeds the `shuffle` placement).
     pub seed: u64,
 }
@@ -144,6 +152,9 @@ impl Default for ArenaConfig {
             topology: Topology::Ring,
             packet_bytes: 0,
             shards: 1,
+            trace_out: String::new(),
+            metrics_out: String::new(),
+            metrics_interval_ps: PS_PER_US,
             seed: 0xA2EA,
         }
     }
@@ -208,6 +219,21 @@ impl ArenaConfig {
 
     pub fn with_shards(mut self, shards: usize) -> Self {
         self.shards = shards;
+        self
+    }
+
+    pub fn with_trace_out(mut self, trace_out: &str) -> Self {
+        self.trace_out = trace_out.to_string();
+        self
+    }
+
+    pub fn with_metrics_out(mut self, metrics_out: &str) -> Self {
+        self.metrics_out = metrics_out.to_string();
+        self
+    }
+
+    pub fn with_metrics_interval_ps(mut self, interval: Ps) -> Self {
+        self.metrics_interval_ps = interval;
         self
     }
 
@@ -302,6 +328,11 @@ impl ArenaConfig {
             }
             "packet_bytes" => next.packet_bytes = parse!(val),
             "shards" => next.shards = parse!(val),
+            "trace_out" => next.trace_out = val.to_string(),
+            "metrics_out" => next.metrics_out = val.to_string(),
+            "metrics_interval_ps" => {
+                next.metrics_interval_ps = parse!(val)
+            }
             "seed" => next.seed = parse_seed(val).map_err(bad!())?,
             _ => return Err(ConfigError::UnknownKey(key.into())),
         }
@@ -340,6 +371,11 @@ impl ArenaConfig {
                  and the ring has {} node(s) (valid: 1..={})",
                 self.shards, self.nodes, self.nodes
             )));
+        }
+        if self.metrics_interval_ps == 0 {
+            return Err(ConfigError::Invalid(
+                "metrics_interval_ps must be >= 1".into(),
+            ));
         }
         if self.theta_pm > 1000 {
             return Err(ConfigError::Invalid(format!(
@@ -402,6 +438,12 @@ impl ArenaConfig {
         m.insert("topology", self.topology.label().to_string());
         m.insert("packet_bytes", self.packet_bytes.to_string());
         m.insert("shards", self.shards.to_string());
+        m.insert("trace_out", self.trace_out.clone());
+        m.insert("metrics_out", self.metrics_out.clone());
+        m.insert(
+            "metrics_interval_ps",
+            self.metrics_interval_ps.to_string(),
+        );
         m.insert("seed", self.seed.to_string());
         m.iter()
             .map(|(k, v)| format!("{k} = {v}\n"))
@@ -558,6 +600,33 @@ mod tests {
         let path = dir.join("cfg.txt");
         std::fs::write(&path, c.dump()).unwrap();
         assert_eq!(ArenaConfig::load(&path).unwrap(), c);
+    }
+
+    #[test]
+    fn observability_knobs_round_trip() {
+        let mut c = ArenaConfig::default();
+        assert!(c.trace_out.is_empty(), "tracing is off by default");
+        assert!(c.metrics_out.is_empty(), "metrics are off by default");
+        assert_eq!(c.metrics_interval_ps, PS_PER_US);
+        c.set("trace_out", "out/trace.json").unwrap();
+        c.set("metrics_out", "out/metrics.csv").unwrap();
+        c.set("metrics_interval_ps", "250000").unwrap();
+        assert_eq!(c.trace_out, "out/trace.json");
+        assert_eq!(c.metrics_out, "out/metrics.csv");
+        assert_eq!(c.metrics_interval_ps, 250_000);
+        assert!(c.set("metrics_interval_ps", "0").is_err());
+        assert!(c.set("metrics_interval_ps", "soon").is_err());
+        // round-trips through dump/load (incl. the empty-path default)
+        let dir = std::env::temp_dir().join("arena_cfg_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.txt");
+        std::fs::write(&path, c.dump()).unwrap();
+        assert_eq!(ArenaConfig::load(&path).unwrap(), c);
+        std::fs::write(&path, ArenaConfig::default().dump()).unwrap();
+        assert_eq!(
+            ArenaConfig::load(&path).unwrap(),
+            ArenaConfig::default()
+        );
     }
 
     #[test]

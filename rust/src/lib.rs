@@ -45,6 +45,7 @@ pub mod dispatcher;
 pub mod mapper;
 pub mod net;
 pub mod node;
+pub mod obs;
 pub mod placement;
 pub mod power;
 pub mod proptest_lite;

@@ -43,18 +43,21 @@ commands:
   run     --app <name> --model <model> [--nodes N] [--scale small|paper]
           [--seed S] [--layout L] [--policy P] [--theta X]
           [--inject-node N] [--topology T] [--shards N] [--engine]
-          [--config FILE] [--set k=v ...]
+          [--trace-out FILE] [--metrics-out FILE]
+          [--metrics-interval-ps N] [--config FILE] [--set k=v ...]
   fig     <9|10|11|12|13|all> [--scale small|paper] [--seed S]
   serve   --trace FILE [--policy P] [--theta X] [--ab] [--model M]
           [--nodes N] [--scale small|paper] [--seed S] [--jobs N]
-          [--topology T] [--shards N] [--set k=v ...]
-          [--bench-json FILE]
+          [--topology T] [--shards N] [--trace-out FILE]
+          [--metrics-out FILE] [--metrics-interval-ps N]
+          [--set k=v ...] [--bench-json FILE]
           replay an open-system job trace (arrival-timed mixed apps)
           and report throughput + p50/p95/p99 latency; --ab replays
           the trace under every policy on a worker pool
   sweep   [--all | 9 10 11 12 13] [--jobs N] [--scale small|paper]
           [--seed S] [--layout L] [--topology T] [--nodes N]
-          [--shards N] [--bench-json FILE]
+          [--shards N] [--trace-out FILE] [--metrics-out FILE]
+          [--metrics-interval-ps N] [--bench-json FILE]
           regenerate figures on a worker pool; output is bit-identical
           for every --jobs value. --nodes extends the sweep with a
           large-scale axis (powers of two up to N, max 4096);
@@ -76,6 +79,14 @@ topologies: ring | biring | torus2d | ideal (--set packet_bytes=P for
 engine:     --shards N runs one simulation on N parallel DES shards
             (conservative lookahead; output byte-identical to --shards
             1, like --jobs it only buys wall-clock)
+observe:    --trace-out FILE records the token/task lifecycle as
+            Chrome trace-event JSON (simulated time; open in Perfetto
+            or chrome://tracing); --metrics-out FILE samples per-node
+            and per-link time-series every --metrics-interval-ps N
+            (default 1us of simulated time). Deterministic: same seed
+            (and any --shards value) writes byte-identical files. In
+            sweep/serve the paths are suffixed per cell/policy. Off by
+            default, at zero hot-path cost.
 ";
 
 fn main() {
@@ -90,7 +101,8 @@ fn main() {
         &[
             "app", "model", "nodes", "scale", "seed", "config", "fig",
             "jobs", "layout", "bench-json", "trace", "policy", "theta",
-            "inject-node", "serve", "topology", "shards",
+            "inject-node", "serve", "topology", "shards", "trace-out",
+            "metrics-out", "metrics-interval-ps",
         ],
     ) {
         Ok(a) => a,
@@ -125,6 +137,7 @@ fn main() {
             &[
                 "trace", "policy", "theta", "model", "nodes", "scale",
                 "seed", "jobs", "topology", "shards", "bench-json",
+                "trace-out", "metrics-out", "metrics-interval-ps",
             ],
             true, // --set reaches the replay config (serve::ServeSpec)
             false,
@@ -135,6 +148,7 @@ fn main() {
             &[
                 "jobs", "scale", "seed", "layout", "topology", "nodes",
                 "bench-json", "serve", "theta", "model", "shards",
+                "trace-out", "metrics-out", "metrics-interval-ps",
             ],
             false,
             true, // figure numbers are positional
@@ -254,7 +268,17 @@ fn print_report(r: &RunReport, serial: f64) {
         );
     }
     println!("terminate laps     {}", r.terminate_laps);
+    println!(
+        "ring control       {} recv stalls, {} probe visits",
+        r.recv_stalls, r.terminate_seen
+    );
     println!("sim events         {}", r.events);
+    if r.engine.compiles + r.engine.executions > 0 {
+        println!(
+            "pjrt               {} compiles, {} executions, {} cache hits",
+            r.engine.compiles, r.engine.executions, r.engine.cache_hits
+        );
+    }
 }
 
 fn cmd_run(args: &cli::Args) -> i32 {
@@ -314,13 +338,6 @@ fn cmd_run(args: &cli::Args) -> i32 {
                     engine.as_mut(),
                 );
                 print_report(&r, serial);
-                if let Some(e) = &engine {
-                    let s = e.stats();
-                    println!(
-                        "pjrt               {} compiles, {} executions",
-                        s.compiles, s.executions
-                    );
-                }
             }
             other => return Err(format!("unknown model '{other}'")),
         }
@@ -429,6 +446,29 @@ fn serve_spec_of(
         topology,
         shards,
         overrides: args.sets.clone(),
+        obs: obs_of(args)?,
+    })
+}
+
+/// `--trace-out` / `--metrics-out` / `--metrics-interval-ps` for the
+/// multi-run commands (serve and the sweeps; `run` goes through the
+/// config's own knobs via `build_config`). Parsing funnels through
+/// [`ArenaConfig::set`] so the option and `--set` forms cannot drift.
+fn obs_of(args: &cli::Args) -> Result<arena::obs::ObsCfg, String> {
+    let mut cfg = ArenaConfig::default();
+    if let Some(v) = args.opt("trace-out") {
+        cfg.set("trace_out", v).map_err(|e| e.to_string())?;
+    }
+    if let Some(v) = args.opt("metrics-out") {
+        cfg.set("metrics_out", v).map_err(|e| e.to_string())?;
+    }
+    if let Some(v) = args.opt("metrics-interval-ps") {
+        cfg.set("metrics_interval_ps", v).map_err(|e| e.to_string())?;
+    }
+    Ok(arena::obs::ObsCfg {
+        trace_out: cfg.trace_out,
+        metrics_out: cfg.metrics_out,
+        metrics_interval_ps: cfg.metrics_interval_ps,
     })
 }
 
@@ -492,7 +532,7 @@ fn run_serve(
     if let Some(path) = args.opt("bench-json") {
         let a = benchkit::alloc::stats();
         let fields = [
-            ("trace", format!("\"{trace_path}\"")),
+            ("trace", format!("\"{}\"", benchkit::json_escape(trace_path))),
             (
                 "scale",
                 format!(
@@ -626,10 +666,11 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                 }
             }
             let t0 = std::time::Instant::now();
+            let obs = obs_of(args)?;
             let out = if args.flag("all-layouts") {
-                sweep::run_skew(scale, seed, jobs, shards)
+                sweep::run_skew(scale, seed, jobs, shards, obs)
             } else {
-                sweep::run_topo(scale, seed, jobs, shards)
+                sweep::run_topo(scale, seed, jobs, shards, obs)
             };
             print!("{}", out.render());
             let wall = t0.elapsed();
@@ -682,7 +723,13 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             scale,
             seed,
             jobs,
-            sweep::SweepCfg { layout, topo: topology, max_nodes, shards },
+            sweep::SweepCfg {
+                layout,
+                topo: topology,
+                max_nodes,
+                shards,
+                obs: obs_of(args)?,
+            },
         );
         print!("{}", out.render());
         if let Some(h) = out.headline {

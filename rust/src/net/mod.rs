@@ -228,15 +228,32 @@ pub trait Interconnect: Send {
     ) -> Ps;
 
     fn stats(&self) -> &NetStats;
+
+    /// Cumulative serialization picoseconds per directed link, indexed
+    /// like [`Self::link_labels`] — the interval-metrics layer
+    /// ([`crate::obs`]) differences consecutive samples into per-link
+    /// busy fractions. Empty on fabrics with no contended links to
+    /// observe (the crossbar).
+    fn link_busy_ps(&self) -> Vec<Ps> {
+        Vec::new()
+    }
+
+    /// Display labels for the directed links, parallel to
+    /// [`Self::link_busy_ps`].
+    fn link_labels(&self) -> Vec<String> {
+        Vec::new()
+    }
 }
 
 /// One token-plane link traversal (the seed ring's timing): serialize
 /// the 21-byte token on the directed link's busy horizon, then pay the
-/// switch hop latency.
-fn token_link_hop(cfg: &ArenaConfig, busy: &mut Ps, now: Ps) -> Ps {
+/// switch hop latency. `util` accumulates the link's total
+/// serialization time for the metrics layer.
+fn token_link_hop(cfg: &ArenaConfig, busy: &mut Ps, util: &mut Ps, now: Ps) -> Ps {
     let wire = cfg.wire_ps(WIRE_BYTES);
     let start = now.max(*busy);
     *busy = start + wire;
+    *util += wire;
     start + wire + cfg.hop_latency_ps
 }
 
@@ -248,6 +265,7 @@ fn token_link_hop(cfg: &ArenaConfig, busy: &mut Ps, now: Ps) -> Ps {
 fn stream(
     cfg: &ArenaConfig,
     busy: &mut [Ps],
+    util: &mut [Ps],
     path: &[usize],
     now: Ps,
     bytes: u64,
@@ -263,6 +281,7 @@ fn stream(
     for &l in path {
         let start = t.max(busy[l]);
         busy[l] = start + wire_full;
+        util[l] += wire_full;
         t = start + head + cfg.hop_latency_ps;
     }
     t + tail
@@ -290,6 +309,7 @@ fn booked_stream(
     cfg: &ArenaConfig,
     stats: &mut NetStats,
     busy: &mut [Ps],
+    util: &mut [Ps],
     path: &[usize],
     now: Ps,
     bytes: u64,
@@ -308,7 +328,7 @@ fn booked_stream(
             stats.ctrl_byte_hops += byte_hops;
         }
     }
-    stream(cfg, busy, path, now, bytes)
+    stream(cfg, busy, util, path, now, bytes)
 }
 
 /// Short-way ring walk shared by [`Ring`] and [`BiRing`]'s data
@@ -345,7 +365,9 @@ fn ring_route(n: usize, path: &mut Vec<usize>, from: usize, to: usize) {
 pub struct Ring {
     n: usize,
     token_link: Vec<Ps>,
+    token_util: Vec<Ps>,
     data: Vec<Ps>,
+    data_util: Vec<Ps>,
     path: Vec<usize>,
     stats: NetStats,
 }
@@ -356,7 +378,9 @@ impl Ring {
         Ring {
             n,
             token_link: vec![0; n],
+            token_util: vec![0; n],
             data: vec![0; 2 * n],
+            data_util: vec![0; 2 * n],
             path: Vec::new(),
             stats: NetStats::default(),
         }
@@ -373,7 +397,12 @@ impl Ring {
         self.stats.token_msgs += 1;
         self.stats.token_bytes += WIRE_BYTES;
         self.stats.token_hops += 1;
-        token_link_hop(cfg, &mut self.token_link[from], now)
+        token_link_hop(
+            cfg,
+            &mut self.token_link[from],
+            &mut self.token_util[from],
+            now,
+        )
     }
 }
 
@@ -416,8 +445,8 @@ impl Interconnect for Ring {
         }
         ring_route(self.n, &mut self.path, from, to);
         booked_stream(
-            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
-            Class::Data,
+            cfg, &mut self.stats, &mut self.data, &mut self.data_util,
+            &self.path, now, bytes, Class::Data,
         )
     }
 
@@ -435,13 +464,34 @@ impl Interconnect for Ring {
         }
         ring_route(self.n, &mut self.path, from, to);
         booked_stream(
-            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
-            Class::Ctrl,
+            cfg, &mut self.stats, &mut self.data, &mut self.data_util,
+            &self.path, now, bytes, Class::Ctrl,
         )
     }
 
     fn stats(&self) -> &NetStats {
         &self.stats
+    }
+
+    fn link_busy_ps(&self) -> Vec<Ps> {
+        let mut v = self.token_util.clone();
+        v.extend_from_slice(&self.data_util);
+        v
+    }
+
+    fn link_labels(&self) -> Vec<String> {
+        let n = self.n;
+        let mut v = Vec::with_capacity(3 * n);
+        for i in 0..n {
+            v.push(format!("tok:{i}->{}", (i + 1) % n));
+        }
+        for i in 0..n {
+            v.push(format!("data:{i}->{}:cw", (i + 1) % n));
+        }
+        for i in 0..n {
+            v.push(format!("data:{i}->{}:ccw", (i + n - 1) % n));
+        }
+        v
     }
 }
 
@@ -458,8 +508,11 @@ impl Interconnect for Ring {
 pub struct BiRing {
     n: usize,
     token_cw: Vec<Ps>,
+    token_cw_util: Vec<Ps>,
     token_ccw: Vec<Ps>,
+    token_ccw_util: Vec<Ps>,
     data: Vec<Ps>,
+    data_util: Vec<Ps>,
     path: Vec<usize>,
     stats: NetStats,
 }
@@ -470,8 +523,11 @@ impl BiRing {
         BiRing {
             n,
             token_cw: vec![0; n],
+            token_cw_util: vec![0; n],
             token_ccw: vec![0; n],
+            token_ccw_util: vec![0; n],
             data: vec![0; 2 * n],
+            data_util: vec![0; 2 * n],
             path: Vec::new(),
             stats: NetStats::default(),
         }
@@ -506,10 +562,20 @@ impl Interconnect for BiRing {
         self.stats.token_hops += 1;
         // cw == 0 is "already home": fall back to the coverage cycle
         if cw == 0 || cw <= ccw {
-            let at = token_link_hop(cfg, &mut self.token_cw[from], now);
+            let at = token_link_hop(
+                cfg,
+                &mut self.token_cw[from],
+                &mut self.token_cw_util[from],
+                now,
+            );
             (at, (from + 1) % n)
         } else {
-            let at = token_link_hop(cfg, &mut self.token_ccw[from], now);
+            let at = token_link_hop(
+                cfg,
+                &mut self.token_ccw[from],
+                &mut self.token_ccw_util[from],
+                now,
+            );
             (at, (from + n - 1) % n)
         }
     }
@@ -521,7 +587,12 @@ impl Interconnect for BiRing {
         self.stats.token_msgs += 1;
         self.stats.token_bytes += WIRE_BYTES;
         self.stats.token_hops += 1;
-        token_link_hop(cfg, &mut self.token_cw[from], now)
+        token_link_hop(
+            cfg,
+            &mut self.token_cw[from],
+            &mut self.token_cw_util[from],
+            now,
+        )
     }
 
     fn send_data(
@@ -538,8 +609,8 @@ impl Interconnect for BiRing {
         }
         ring_route(self.n, &mut self.path, from, to);
         booked_stream(
-            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
-            Class::Data,
+            cfg, &mut self.stats, &mut self.data, &mut self.data_util,
+            &self.path, now, bytes, Class::Data,
         )
     }
 
@@ -557,13 +628,38 @@ impl Interconnect for BiRing {
         }
         ring_route(self.n, &mut self.path, from, to);
         booked_stream(
-            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
-            Class::Ctrl,
+            cfg, &mut self.stats, &mut self.data, &mut self.data_util,
+            &self.path, now, bytes, Class::Ctrl,
         )
     }
 
     fn stats(&self) -> &NetStats {
         &self.stats
+    }
+
+    fn link_busy_ps(&self) -> Vec<Ps> {
+        let mut v = self.token_cw_util.clone();
+        v.extend_from_slice(&self.token_ccw_util);
+        v.extend_from_slice(&self.data_util);
+        v
+    }
+
+    fn link_labels(&self) -> Vec<String> {
+        let n = self.n;
+        let mut v = Vec::with_capacity(4 * n);
+        for i in 0..n {
+            v.push(format!("tok:{i}->{}:cw", (i + 1) % n));
+        }
+        for i in 0..n {
+            v.push(format!("tok:{i}->{}:ccw", (i + n - 1) % n));
+        }
+        for i in 0..n {
+            v.push(format!("data:{i}->{}:cw", (i + 1) % n));
+        }
+        for i in 0..n {
+            v.push(format!("data:{i}->{}:ccw", (i + n - 1) % n));
+        }
+        v
     }
 }
 
@@ -583,7 +679,9 @@ pub struct Torus2D {
     rows: usize,
     cols: usize,
     token: Vec<Ps>,
+    token_util: Vec<Ps>,
     data: Vec<Ps>,
+    data_util: Vec<Ps>,
     path: Vec<usize>,
     stats: NetStats,
 }
@@ -610,9 +708,22 @@ impl Torus2D {
             rows,
             cols: n / rows,
             token: vec![0; 4 * n],
+            token_util: vec![0; 4 * n],
             data: vec![0; 4 * n],
+            data_util: vec![0; 4 * n],
             path: Vec::new(),
             stats: NetStats::default(),
+        }
+    }
+
+    /// Destination of directed link `plane * n + i` (metrics labels).
+    fn link_dest(&self, plane: usize, i: usize) -> usize {
+        let (r, c) = (i / self.cols, i % self.cols);
+        match plane {
+            EAST => r * self.cols + (c + 1) % self.cols,
+            WEST => r * self.cols + (c + self.cols - 1) % self.cols,
+            SOUTH => ((r + 1) % self.rows) * self.cols + c,
+            _ => ((r + self.rows - 1) % self.rows) * self.cols + c,
         }
     }
 
@@ -700,11 +811,21 @@ impl Interconnect for Torus2D {
         if to == from {
             // single-node torus: the loopback link exists, as on the
             // seed's 1-node ring
-            let at = token_link_hop(cfg, &mut self.token[from], now);
+            let at = token_link_hop(
+                cfg,
+                &mut self.token[from],
+                &mut self.token_util[from],
+                now,
+            );
             return (at, from);
         }
         let (link, next) = self.step(from, to);
-        let at = token_link_hop(cfg, &mut self.token[link], now);
+        let at = token_link_hop(
+            cfg,
+            &mut self.token[link],
+            &mut self.token_util[link],
+            now,
+        );
         (at, next)
     }
 
@@ -717,13 +838,23 @@ impl Interconnect for Torus2D {
         self.stats.token_bytes += WIRE_BYTES;
         if to == from {
             self.stats.token_hops += 1;
-            return token_link_hop(cfg, &mut self.token[from], now);
+            return token_link_hop(
+                cfg,
+                &mut self.token[from],
+                &mut self.token_util[from],
+                now,
+            );
         }
         let mut t = now;
         let mut at = from;
         while at != to {
             let (link, next) = self.step(at, to);
-            t = token_link_hop(cfg, &mut self.token[link], t);
+            t = token_link_hop(
+                cfg,
+                &mut self.token[link],
+                &mut self.token_util[link],
+                t,
+            );
             self.stats.token_hops += 1;
             at = next;
         }
@@ -744,8 +875,8 @@ impl Interconnect for Torus2D {
         }
         self.route(from, to);
         booked_stream(
-            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
-            Class::Data,
+            cfg, &mut self.stats, &mut self.data, &mut self.data_util,
+            &self.path, now, bytes, Class::Data,
         )
     }
 
@@ -763,13 +894,44 @@ impl Interconnect for Torus2D {
         }
         self.route(from, to);
         booked_stream(
-            cfg, &mut self.stats, &mut self.data, &self.path, now, bytes,
-            Class::Ctrl,
+            cfg, &mut self.stats, &mut self.data, &mut self.data_util,
+            &self.path, now, bytes, Class::Ctrl,
         )
     }
 
     fn stats(&self) -> &NetStats {
         &self.stats
+    }
+
+    fn link_busy_ps(&self) -> Vec<Ps> {
+        let mut v = self.token_util.clone();
+        v.extend_from_slice(&self.data_util);
+        v
+    }
+
+    fn link_labels(&self) -> Vec<String> {
+        const DIR: [char; 4] = ['E', 'W', 'S', 'N'];
+        let n = self.n;
+        let mut v = Vec::with_capacity(8 * n);
+        for plane in [EAST, WEST, SOUTH, NORTH] {
+            for i in 0..n {
+                v.push(format!(
+                    "tok:{i}->{}:{}",
+                    self.link_dest(plane, i),
+                    DIR[plane]
+                ));
+            }
+        }
+        for plane in [EAST, WEST, SOUTH, NORTH] {
+            for i in 0..n {
+                v.push(format!(
+                    "data:{i}->{}:{}",
+                    self.link_dest(plane, i),
+                    DIR[plane]
+                ));
+            }
+        }
+        v
     }
 }
 
@@ -1087,6 +1249,49 @@ mod tests {
         // still queues behind the full serialization
         let t2 = b.send_data(&ct, 0, 0, 1, 64 * 1024);
         assert!(t2 > t_ct);
+    }
+
+    #[test]
+    fn link_accounting_is_labelled_and_cumulative() {
+        let c = cfg();
+        for t in [Topology::Ring, Topology::BiRing, Topology::Torus2D] {
+            let mut net = t.build(4);
+            let labels = net.link_labels();
+            assert_eq!(
+                labels.len(),
+                net.link_busy_ps().len(),
+                "{}: labels must parallel the busy counters",
+                t.label()
+            );
+            // directed links need distinct labels even on tiny shapes
+            // (a 2x2 torus has E == W destinations; suffixes disambiguate)
+            let mut uniq = labels.clone();
+            uniq.sort();
+            uniq.dedup();
+            assert_eq!(uniq.len(), labels.len(), "{}", t.label());
+            assert!(
+                net.link_busy_ps().iter().all(|&b| b == 0),
+                "{}: links start idle",
+                t.label()
+            );
+            net.send_token(&c, 0, 0, 2);
+            net.send_data(&c, 0, 0, 2, 4096);
+            let busy = net.link_busy_ps();
+            assert!(
+                busy.iter().any(|&b| b > 0),
+                "{}: traffic must accumulate busy time",
+                t.label()
+            );
+            // cumulative: the same traffic again only grows the counters
+            net.send_token(&c, 0, 0, 2);
+            let busy2 = net.link_busy_ps();
+            assert!(busy2.iter().zip(&busy).all(|(a, b)| a >= b));
+            assert!(busy2.iter().sum::<Ps>() > busy.iter().sum::<Ps>());
+        }
+        // the crossbar has no contended links to observe
+        let i = Topology::Ideal.build(4);
+        assert!(i.link_labels().is_empty());
+        assert!(i.link_busy_ps().is_empty());
     }
 
     #[test]

@@ -1,0 +1,872 @@
+//! Deterministic observability: simulated-time token tracing, interval
+//! metrics, and parallel-engine profiling — three sinks behind one
+//! [`Recorder`] handle.
+//!
+//! Everything in the first two sinks is keyed by **simulated**
+//! picoseconds; wall clock never reaches a trace or metrics file, so an
+//! enabled recorder is exactly as deterministic as the simulation
+//! itself: same seed ⇒ byte-identical files, and `--shards N` produces
+//! the identical trace for every `N` because the sharded engine stages
+//! events per shard and resolves them to the global replay rank (the
+//! serial pop order — see [`crate::cluster`]'s parallel engine) before
+//! they are written, never in shard-local order.
+//!
+//! - **Token tracing** (`--trace-out FILE`): every lifecycle step of
+//!   every token — inject, hop, dispatch-filter outcome (Case I–IV),
+//!   split, fire, coalesce, remote fetch, complete, TERMINATE probe
+//!   visit — rendered as Chrome trace-event JSON. Load the file in
+//!   Perfetto or `chrome://tracing`: one track (`tid`) per ring node,
+//!   instant events at the simulated microsecond.
+//! - **Interval metrics** (`--metrics-out FILE`, sampled every
+//!   `--metrics-interval-ps`): per-node queue depths, compute
+//!   occupancy, outstanding fetches and cumulative locality, plus
+//!   per-directed-link busy fractions — CSV by default, JSON when the
+//!   filename ends in `.json`. A sample at boundary `t` reflects the
+//!   state after every event strictly before `t`, which is exactly the
+//!   property the sharded engine can reproduce without synchronizing.
+//! - **Parallel-engine profile**: wall-clock shares of the sharded
+//!   engine's window/merge/replay phases plus mailbox spill counts,
+//!   published through a process-wide side channel
+//!   ([`take_par_profile`]) for `benches/par_engine.rs` — never part
+//!   of any deterministic output.
+//!
+//! A disabled recorder (the default) is a `None` behind one pointer:
+//! every hot-path call is an inlined null check, no allocation — the
+//! alloc-gate test and the golden byte-identity suites run unchanged.
+
+use std::fmt::Write as _;
+use std::sync::Mutex;
+
+use crate::config::{ArenaConfig, Ps};
+
+/// Observability knobs bundled for the layers (serve specs, sweep
+/// configs) that thread them through to per-run [`ArenaConfig`]s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsCfg {
+    /// Chrome trace-event JSON destination ("" = tracing off).
+    pub trace_out: String,
+    /// Interval-metrics destination ("" = metrics off).
+    pub metrics_out: String,
+    /// Metrics sampling interval in simulated picoseconds.
+    pub metrics_interval_ps: Ps,
+}
+
+impl Default for ObsCfg {
+    fn default() -> Self {
+        ObsCfg {
+            trace_out: String::new(),
+            metrics_out: String::new(),
+            metrics_interval_ps: crate::config::PS_PER_US,
+        }
+    }
+}
+
+impl ObsCfg {
+    /// Both sinks off (the default)?
+    pub fn is_off(&self) -> bool {
+        self.trace_out.is_empty() && self.metrics_out.is_empty()
+    }
+
+    /// Copy the knobs onto a run config, suffixing the output paths
+    /// with `label` (multi-run layers: one file per sweep cell / serve
+    /// policy, so concurrent replays never race on one path).
+    pub fn apply(&self, mut cfg: ArenaConfig, label: &str) -> ArenaConfig {
+        if !self.trace_out.is_empty() {
+            cfg.trace_out = suffixed(&self.trace_out, label);
+        }
+        if !self.metrics_out.is_empty() {
+            cfg.metrics_out = suffixed(&self.metrics_out, label);
+        }
+        cfg.metrics_interval_ps = self.metrics_interval_ps;
+        cfg
+    }
+}
+
+/// Insert `-label` before the path's extension (`trace.json` + `f10`
+/// -> `trace-f10.json`); append when there is no extension. Slashes
+/// and spaces in the label become `_` so sweep-cell labels stay one
+/// path component.
+pub fn suffixed(path: &str, label: &str) -> String {
+    let label: String = label
+        .chars()
+        .map(|c| if c == '/' || c == ' ' { '_' } else { c })
+        .collect();
+    let stem_start = path.rfind('/').map_or(0, |s| s + 1);
+    match path.rfind('.') {
+        Some(i) if i > stem_start => {
+            format!("{}-{}{}", &path[..i], label, &path[i..])
+        }
+        _ => format!("{path}-{label}"),
+    }
+}
+
+/// One traced lifecycle step. All payloads are `Copy` — recording
+/// never allocates per event beyond the buffer push.
+#[derive(Clone, Copy, Debug)]
+pub enum TraceEv {
+    /// Root token entered the ring (an arrival, not the TERMINATE seed).
+    Inject { task: u8, start: u32, end: u32 },
+    /// Dispatcher forwarded the token one topology step.
+    Hop { task: u8, start: u32, end: u32, hops: u16, to: u32, arrive: Ps },
+    /// Dispatch-filter decision (paper Case I-IV) for a classified token.
+    Filter { task: u8, start: u32, end: u32, case: &'static str },
+    /// The local piece kept by a splitting filter decision.
+    Split { task: u8, start: u32, end: u32, local_start: u32, local_end: u32 },
+    /// Task launched on the node's compute (CPU or CGRA groups).
+    Fire { task: u8, start: u32, end: u32, units: u64, groups: u32, done: Ps },
+    /// Coalescing unit merged spawns into this token.
+    Coalesce { task: u8, start: u32, end: u32 },
+    /// Remote fetch issued for the token's unavoidable remote range.
+    Fetch { task: u8, words: u32 },
+    /// A launched task finished (with how many spawns it produced).
+    Complete { spawns: u32 },
+    /// TERMINATE probe handled at this node (`exits` = node went quiet).
+    Probe { exits: bool },
+}
+
+impl TraceEv {
+    fn name(&self) -> &'static str {
+        match self {
+            TraceEv::Inject { .. } => "inject",
+            TraceEv::Hop { .. } => "hop",
+            TraceEv::Filter { .. } => "filter",
+            TraceEv::Split { .. } => "split",
+            TraceEv::Fire { .. } => "fire",
+            TraceEv::Coalesce { .. } => "coalesce",
+            TraceEv::Fetch { .. } => "fetch",
+            TraceEv::Complete { .. } => "complete",
+            TraceEv::Probe { .. } => "probe",
+        }
+    }
+
+    fn args_json(&self, out: &mut String) {
+        match *self {
+            TraceEv::Inject { task, start, end } => {
+                let _ = write!(
+                    out,
+                    "{{\"task\":{task},\"start\":{start},\"end\":{end}}}"
+                );
+            }
+            TraceEv::Hop { task, start, end, hops, to, arrive } => {
+                let _ = write!(
+                    out,
+                    "{{\"task\":{task},\"start\":{start},\"end\":{end},\
+                     \"hops\":{hops},\"to\":{to},\"arrive_ps\":{arrive}}}"
+                );
+            }
+            TraceEv::Filter { task, start, end, case } => {
+                let _ = write!(
+                    out,
+                    "{{\"task\":{task},\"start\":{start},\"end\":{end},\
+                     \"case\":\"{case}\"}}"
+                );
+            }
+            TraceEv::Split { task, start, end, local_start, local_end } => {
+                let _ = write!(
+                    out,
+                    "{{\"task\":{task},\"start\":{start},\"end\":{end},\
+                     \"local_start\":{local_start},\
+                     \"local_end\":{local_end}}}"
+                );
+            }
+            TraceEv::Fire { task, start, end, units, groups, done } => {
+                let _ = write!(
+                    out,
+                    "{{\"task\":{task},\"start\":{start},\"end\":{end},\
+                     \"units\":{units},\"groups\":{groups},\
+                     \"done_ps\":{done}}}"
+                );
+            }
+            TraceEv::Coalesce { task, start, end } => {
+                let _ = write!(
+                    out,
+                    "{{\"task\":{task},\"start\":{start},\"end\":{end}}}"
+                );
+            }
+            TraceEv::Fetch { task, words } => {
+                let _ = write!(out, "{{\"task\":{task},\"words\":{words}}}");
+            }
+            TraceEv::Complete { spawns } => {
+                let _ = write!(out, "{{\"spawns\":{spawns}}}");
+            }
+            TraceEv::Probe { exits } => {
+                let _ = write!(out, "{{\"exits\":{exits}}}");
+            }
+        }
+    }
+}
+
+/// One trace record: what happened, where, at which simulated instant.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub at: Ps,
+    pub node: u32,
+    pub ev: TraceEv,
+}
+
+/// One per-node metrics sample at interval boundary `t` (state after
+/// every event strictly before `t`).
+#[derive(Clone, Copy, Debug)]
+pub struct NodeRow {
+    pub t: Ps,
+    pub node: u32,
+    /// Dispatcher recv-queue depth.
+    pub recv: u32,
+    /// Dispatcher wait-queue depth.
+    pub wait: u32,
+    /// Inbound (pre-dispatcher backpressure) queue depth.
+    pub inbound: u32,
+    /// Outstanding remote fetches.
+    pub fetching: u32,
+    /// Tasks currently executing.
+    pub running: u32,
+    /// Busy compute units: 0/1 for a CPU node, busy tile groups for a
+    /// CGRA node.
+    pub busy: u32,
+    /// Cumulative tasks executed at this node.
+    pub tasks: u64,
+    /// Cumulative data words touched.
+    pub touched_words: u64,
+    /// Cumulative words served from the local partition.
+    pub local_hit_words: u64,
+}
+
+/// One per-directed-link sample: cumulative busy picoseconds at `t`
+/// (the writer differences consecutive samples into a busy fraction).
+#[derive(Clone, Copy, Debug)]
+struct LinkRow {
+    t: Ps,
+    link: u32,
+    busy_ps: Ps,
+}
+
+/// Key for the sharded engine's trace merge: global pop rank (the
+/// serial event order) then the per-pop record sequence.
+#[inline]
+pub fn rank_key(rank: u64, seq: u32) -> u128 {
+    ((rank as u128) << 32) | seq as u128
+}
+
+struct Inner {
+    trace_out: String,
+    metrics_out: String,
+    interval: Ps,
+    nodes: usize,
+    /// Events already in final order (serial engine; sharded injects).
+    events: Vec<TraceEvent>,
+    /// Events keyed by [`rank_key`], sorted and appended at `finish`.
+    ranked: Vec<(u128, TraceEvent)>,
+    node_rows: Vec<NodeRow>,
+    link_rows: Vec<LinkRow>,
+}
+
+/// The one observability handle a cluster owns. Disabled (the
+/// default) it is a null pointer and every recording call is an
+/// inlined no-op.
+pub struct Recorder {
+    inner: Option<Box<Inner>>,
+}
+
+impl Recorder {
+    /// Disabled recorder: every call below is a no-op.
+    pub fn off() -> Recorder {
+        Recorder { inner: None }
+    }
+
+    /// Recorder as configured (disabled when both sinks are "").
+    pub fn from_cfg(cfg: &ArenaConfig) -> Recorder {
+        if cfg.trace_out.is_empty() && cfg.metrics_out.is_empty() {
+            return Recorder::off();
+        }
+        Recorder {
+            inner: Some(Box::new(Inner {
+                trace_out: cfg.trace_out.clone(),
+                metrics_out: cfg.metrics_out.clone(),
+                interval: cfg.metrics_interval_ps.max(1),
+                nodes: cfg.nodes,
+                events: Vec::new(),
+                ranked: Vec::new(),
+                node_rows: Vec::new(),
+                link_rows: Vec::new(),
+            })),
+        }
+    }
+
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    #[inline]
+    pub fn trace_on(&self) -> bool {
+        matches!(&self.inner, Some(i) if !i.trace_out.is_empty())
+    }
+
+    #[inline]
+    pub fn metrics_on(&self) -> bool {
+        matches!(&self.inner, Some(i) if !i.metrics_out.is_empty())
+    }
+
+    /// Sampling interval; `Ps::MAX` when metrics are off, so a
+    /// `now >= cursor` hot-path check never fires on a disabled
+    /// recorder.
+    #[inline]
+    pub fn interval(&self) -> Ps {
+        match &self.inner {
+            Some(i) if !i.metrics_out.is_empty() => i.interval,
+            _ => Ps::MAX,
+        }
+    }
+
+    /// Record one event in final (serial) order.
+    #[inline]
+    pub fn trace(&mut self, at: Ps, node: usize, ev: TraceEv) {
+        if let Some(i) = &mut self.inner {
+            if !i.trace_out.is_empty() {
+                i.events.push(TraceEvent { at, node: node as u32, ev });
+            }
+        }
+    }
+
+    /// Record one event at an explicit merge rank (the sharded
+    /// engine's replay-time records: token hops).
+    #[inline]
+    pub fn trace_ranked(&mut self, key: u128, at: Ps, node: usize, ev: TraceEv) {
+        if let Some(i) = &mut self.inner {
+            if !i.trace_out.is_empty() {
+                i.ranked.push((key, TraceEvent { at, node: node as u32, ev }));
+            }
+        }
+    }
+
+    /// Absorb a shard's already rank-resolved events.
+    pub fn absorb_ranked(&mut self, events: Vec<(u128, TraceEvent)>) {
+        if let Some(i) = &mut self.inner {
+            i.ranked.extend(events);
+        }
+    }
+
+    /// Record one per-node sample.
+    #[inline]
+    pub fn push_node_row(&mut self, row: NodeRow) {
+        if let Some(i) = &mut self.inner {
+            i.node_rows.push(row);
+        }
+    }
+
+    /// Absorb a shard's buffered per-node samples.
+    pub fn absorb_node_rows(&mut self, rows: Vec<NodeRow>) {
+        if let Some(i) = &mut self.inner {
+            i.node_rows.extend(rows);
+        }
+    }
+
+    /// Record the cumulative per-link busy counters at boundary `t`.
+    pub fn sample_links(&mut self, t: Ps, busy: &[Ps]) {
+        if let Some(i) = &mut self.inner {
+            for (l, &b) in busy.iter().enumerate() {
+                i.link_rows.push(LinkRow { t, link: l as u32, busy_ps: b });
+            }
+        }
+    }
+
+    /// Sort, render and write both files, then disable the recorder.
+    /// Write errors are reported, never fatal — a broken disk must not
+    /// fail a simulation that already completed.
+    pub fn finish(&mut self, makespan: Ps, link_labels: &[String]) {
+        let Some(mut i) = self.inner.take() else { return };
+        i.ranked.sort_unstable_by_key(|(k, _)| *k);
+        let ranked = std::mem::take(&mut i.ranked);
+        i.events.extend(ranked.into_iter().map(|(_, e)| e));
+        if !i.trace_out.is_empty() {
+            let body = render_trace(i.nodes, &i.events);
+            if let Err(e) = std::fs::write(&i.trace_out, body) {
+                eprintln!("obs: trace not written to {}: {e}", i.trace_out);
+            }
+        }
+        if !i.metrics_out.is_empty() {
+            i.node_rows.sort_unstable_by_key(|r| (r.t, r.node));
+            i.link_rows.sort_unstable_by_key(|r| (r.t, r.link));
+            let body = if i.metrics_out.ends_with(".json") {
+                render_metrics_json(&i, makespan, link_labels)
+            } else {
+                render_metrics_csv(&i, makespan, link_labels)
+            };
+            if let Err(e) = std::fs::write(&i.metrics_out, body) {
+                eprintln!(
+                    "obs: metrics not written to {}: {e}",
+                    i.metrics_out
+                );
+            }
+        }
+    }
+}
+
+fn ts_us(ps: Ps) -> String {
+    format!("{}.{:06}", ps / 1_000_000, ps % 1_000_000)
+}
+
+/// Chrome trace-event JSON: a `thread_name` metadata record per node,
+/// then one instant event per trace record, one per line.
+fn render_trace(nodes: usize, events: &[TraceEvent]) -> String {
+    let mut lines: Vec<String> = Vec::with_capacity(nodes + events.len());
+    for n in 0..nodes {
+        lines.push(format!(
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{n},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"node{n}\"}}}}"
+        ));
+    }
+    for e in events {
+        let mut line = format!(
+            "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{},\"ts\":{},\
+             \"name\":\"{}\",\"args\":",
+            e.node,
+            ts_us(e.at),
+            e.ev.name()
+        );
+        e.ev.args_json(&mut line);
+        line.push('}');
+        lines.push(line);
+    }
+    let mut out = String::from("{\"traceEvents\":[\n");
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+fn locality(hit: u64, touched: u64) -> f64 {
+    if touched == 0 { 0.0 } else { hit as f64 / touched as f64 }
+}
+
+/// Per-link busy fraction of each interval, differenced from the
+/// cumulative rows (which arrive sorted by `(t, link)`).
+fn link_fractions(i: &Inner, n_links: usize) -> Vec<(Ps, u32, f64)> {
+    let mut prev = vec![0u64; n_links];
+    let mut out = Vec::with_capacity(i.link_rows.len());
+    for r in &i.link_rows {
+        let l = r.link as usize;
+        let d = r.busy_ps.saturating_sub(prev[l]);
+        prev[l] = r.busy_ps;
+        let frac = (d as f64 / i.interval as f64).min(1.0);
+        out.push((r.t, r.link, frac));
+    }
+    out
+}
+
+fn render_metrics_csv(
+    i: &Inner,
+    makespan: Ps,
+    link_labels: &[String],
+) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# arena metrics: interval_ps={} makespan_ps={makespan} nodes={}",
+        i.interval, i.nodes
+    );
+    let _ = writeln!(
+        out,
+        "# node rows: kind,t_ps,node,recv,wait,inbound,fetching,running,\
+         busy,tasks,touched_words,local_hit_words,locality"
+    );
+    for r in &i.node_rows {
+        let _ = writeln!(
+            out,
+            "node,{},{},{},{},{},{},{},{},{},{},{},{:.6}",
+            r.t,
+            r.node,
+            r.recv,
+            r.wait,
+            r.inbound,
+            r.fetching,
+            r.running,
+            r.busy,
+            r.tasks,
+            r.touched_words,
+            r.local_hit_words,
+            locality(r.local_hit_words, r.touched_words),
+        );
+    }
+    let _ = writeln!(out, "# link rows: kind,t_ps,link,label,busy_frac");
+    for (t, l, frac) in link_fractions(i, link_labels.len()) {
+        let label = link_labels
+            .get(l as usize)
+            .map(String::as_str)
+            .unwrap_or("?");
+        let _ = writeln!(out, "link,{t},{l},{label},{frac:.6}");
+    }
+    out
+}
+
+fn render_metrics_json(
+    i: &Inner,
+    makespan: Ps,
+    link_labels: &[String],
+) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\"interval_ps\":{},\"makespan_ps\":{makespan},\"nodes\":[",
+        i.interval
+    );
+    for (k, r) in i.node_rows.iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "\n{{\"t_ps\":{},\"node\":{},\"recv\":{},\"wait\":{},\
+             \"inbound\":{},\"fetching\":{},\"running\":{},\"busy\":{},\
+             \"tasks\":{},\"touched_words\":{},\"local_hit_words\":{},\
+             \"locality\":{:.6}}}",
+            r.t,
+            r.node,
+            r.recv,
+            r.wait,
+            r.inbound,
+            r.fetching,
+            r.running,
+            r.busy,
+            r.tasks,
+            r.touched_words,
+            r.local_hit_words,
+            locality(r.local_hit_words, r.touched_words),
+        );
+    }
+    out.push_str("\n],\"links\":[");
+    for (k, (t, l, frac)) in
+        link_fractions(i, link_labels.len()).iter().enumerate()
+    {
+        if k > 0 {
+            out.push(',');
+        }
+        let label = link_labels
+            .get(*l as usize)
+            .map(String::as_str)
+            .unwrap_or("?");
+        let _ = write!(
+            out,
+            "\n{{\"t_ps\":{t},\"link\":{l},\"label\":\"{label}\",\
+             \"busy_frac\":{frac:.6}}}"
+        );
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Per-shard trace staging for the parallel engine. Events recorded
+/// while a window runs are tagged `(global pop index, per-pop seq)`;
+/// at each barrier the shard resolves the tags to global replay ranks
+/// (the serial pop order), so the merged trace is byte-identical to
+/// the serial engine's for every shard count.
+pub struct ShardTrace {
+    on: bool,
+    buf: Vec<(u64, u32, TraceEvent)>,
+    resolved: Vec<(u128, TraceEvent)>,
+    cur_x: u64,
+    seq: u32,
+}
+
+impl ShardTrace {
+    pub fn new(on: bool) -> ShardTrace {
+        ShardTrace {
+            on,
+            buf: Vec::new(),
+            resolved: Vec::new(),
+            cur_x: 0,
+            seq: 0,
+        }
+    }
+
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.on
+    }
+
+    /// Arm the tags for the pop with global pop index `x` (the shard's
+    /// running pop counter, offset to be process-global).
+    #[inline]
+    pub fn begin_pop(&mut self, x: u64) {
+        if self.on {
+            self.cur_x = x;
+            self.seq = 0;
+        }
+    }
+
+    /// Record one event of the current pop.
+    #[inline]
+    pub fn push(&mut self, at: Ps, node: usize, ev: TraceEv) {
+        if self.on {
+            let s = self.seq;
+            self.seq += 1;
+            self.buf
+                .push((self.cur_x, s, TraceEvent { at, node: node as u32, ev }));
+        }
+    }
+
+    /// Claim the next per-pop sequence slot for an event whose payload
+    /// is only known at replay time (token hops: destination and
+    /// arrival come from the shared interconnect). The slot keeps the
+    /// record at its serial handler-body position after the merge.
+    #[inline]
+    pub fn reserve(&mut self) -> u32 {
+        if self.on {
+            let s = self.seq;
+            self.seq += 1;
+            s
+        } else {
+            0
+        }
+    }
+
+    /// Resolve the window's buffered tags through the barrier's rank
+    /// table (`ranks[x - start_x]` = global rank of local pop `x`).
+    pub fn resolve(&mut self, ranks: &[u64], start_x: u64) {
+        for (x, s, ev) in self.buf.drain(..) {
+            let rank = ranks[(x - start_x) as usize];
+            self.resolved.push((rank_key(rank, s), ev));
+        }
+    }
+
+    /// Hand the fully resolved events over for the final merge.
+    pub fn into_resolved(self) -> Vec<(u128, TraceEvent)> {
+        debug_assert!(
+            self.buf.is_empty(),
+            "shard trace dropped {} unresolved events",
+            self.buf.len()
+        );
+        self.resolved
+    }
+}
+
+/// Parallel-engine profile (sink 3): wall-clock phase shares and spill
+/// counters of one `--shards N` run. Wall clock never reaches the
+/// deterministic outputs — this struct exists for `BENCH_par.json`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParProfile {
+    /// Shards the run executed on.
+    pub shards: usize,
+    /// Lookahead windows executed.
+    pub windows: u64,
+    /// Events processed across all shards.
+    pub events: u64,
+    /// Events per shard (load-balance view).
+    pub events_per_shard: Vec<u64>,
+    /// Wall-clock spent running windows (workers active).
+    pub window_ns: u64,
+    /// Wall-clock spent merging pop logs and remapping keys.
+    pub merge_ns: u64,
+    /// Wall-clock spent replaying deferred ops on the interconnect.
+    pub replay_ns: u64,
+    /// Outbox mailbox pushes that overflowed the ring into the spill
+    /// vector.
+    pub mailbox_spills: u64,
+}
+
+static PAR_PROFILE: Mutex<Option<ParProfile>> = Mutex::new(None);
+
+/// Publish the profile of the most recent sharded run.
+pub fn set_par_profile(p: ParProfile) {
+    *PAR_PROFILE.lock().expect("par profile poisoned") = Some(p);
+}
+
+/// Take the profile of the most recent sharded run, if any.
+pub fn take_par_profile() -> Option<ParProfile> {
+    PAR_PROFILE.lock().expect("par profile poisoned").take()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let mut r = Recorder::off();
+        assert!(!r.on());
+        assert!(!r.trace_on());
+        assert!(!r.metrics_on());
+        assert_eq!(r.interval(), Ps::MAX);
+        r.trace(0, 0, TraceEv::Probe { exits: true });
+        r.push_node_row(NodeRow {
+            t: 0,
+            node: 0,
+            recv: 0,
+            wait: 0,
+            inbound: 0,
+            fetching: 0,
+            running: 0,
+            busy: 0,
+            tasks: 0,
+            touched_words: 0,
+            local_hit_words: 0,
+        });
+        r.sample_links(0, &[1, 2]);
+        r.finish(0, &[]); // no files, no panic
+    }
+
+    #[test]
+    fn from_cfg_respects_the_off_default() {
+        let cfg = ArenaConfig::default();
+        assert!(!Recorder::from_cfg(&cfg).on());
+        let mut cfg = ArenaConfig::default();
+        cfg.trace_out = "t.json".into();
+        let r = Recorder::from_cfg(&cfg);
+        assert!(r.on() && r.trace_on() && !r.metrics_on());
+        assert_eq!(r.interval(), Ps::MAX, "metrics cursor must never fire");
+        let mut cfg = ArenaConfig::default();
+        cfg.metrics_out = "m.csv".into();
+        cfg.metrics_interval_ps = 500;
+        let r = Recorder::from_cfg(&cfg);
+        assert!(r.on() && !r.trace_on() && r.metrics_on());
+        assert_eq!(r.interval(), 500);
+    }
+
+    #[test]
+    fn trace_render_is_valid_json_in_merge_order() {
+        let events = vec![
+            TraceEvent {
+                at: 1_234_567,
+                node: 0,
+                ev: TraceEv::Inject { task: 1, start: 0, end: 8 },
+            },
+            TraceEvent {
+                at: 2_000_000,
+                node: 1,
+                ev: TraceEv::Filter {
+                    task: 1,
+                    start: 0,
+                    end: 8,
+                    case: "Convey",
+                },
+            },
+        ];
+        let s = render_trace(2, &events);
+        let j = Json::parse(&s).expect("chrome trace parses");
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 thread_name metadata records + 2 instants
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs[0].get("name").unwrap().as_str(), Some("thread_name"));
+        assert_eq!(evs[2].get("name").unwrap().as_str(), Some("inject"));
+        assert_eq!(evs[2].get("ts").unwrap().as_f64(), Some(1.234567));
+        assert_eq!(
+            evs[3].get("args").unwrap().get("case").unwrap().as_str(),
+            Some("Convey")
+        );
+    }
+
+    #[test]
+    fn ranked_events_merge_into_rank_order() {
+        let mut cfg = ArenaConfig::default();
+        cfg.trace_out = "unused".into();
+        let mut r = Recorder::from_cfg(&cfg);
+        let ev = |task| TraceEv::Fetch { task, words: 1 };
+        r.trace_ranked(rank_key(2, 0), 30, 0, ev(3));
+        r.trace_ranked(rank_key(1, 1), 20, 0, ev(2));
+        r.trace_ranked(rank_key(1, 0), 20, 0, ev(1));
+        let i = r.inner.as_mut().unwrap();
+        i.ranked.sort_unstable_by_key(|(k, _)| *k);
+        let order: Vec<u8> = i
+            .ranked
+            .iter()
+            .map(|(_, e)| match e.ev {
+                TraceEv::Fetch { task, .. } => task,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 3], "(rank, seq) is the merge order");
+    }
+
+    #[test]
+    fn metrics_json_renders_fractions_from_cumulative_rows() {
+        let mut cfg = ArenaConfig::default();
+        cfg.metrics_out = "m.json".into();
+        cfg.metrics_interval_ps = 1000;
+        let mut r = Recorder::from_cfg(&cfg);
+        r.sample_links(1000, &[250, 0]);
+        r.sample_links(2000, &[1250, 0]);
+        r.push_node_row(NodeRow {
+            t: 1000,
+            node: 0,
+            recv: 1,
+            wait: 2,
+            inbound: 3,
+            fetching: 0,
+            running: 1,
+            busy: 1,
+            tasks: 4,
+            touched_words: 100,
+            local_hit_words: 75,
+        });
+        let i = r.inner.as_ref().unwrap();
+        let labels = vec!["tok:0->1".to_string(), "tok:1->0".to_string()];
+        let s = render_metrics_json(i, 2000, &labels);
+        let j = Json::parse(&s).expect("metrics json parses");
+        let nodes = j.get("nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].get("locality").unwrap().as_f64(), Some(0.75));
+        let links = j.get("links").unwrap().as_arr().unwrap();
+        assert_eq!(links.len(), 4);
+        // link 0: 250/1000 then (1250-250)/1000, capped rendering
+        assert_eq!(links[0].get("busy_frac").unwrap().as_f64(), Some(0.25));
+        assert_eq!(links[2].get("busy_frac").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            links[0].get("label").unwrap().as_str(),
+            Some("tok:0->1")
+        );
+        // CSV flavor stays consistent with the same rows
+        let csv = render_metrics_csv(i, 2000, &labels);
+        assert!(csv.contains("node,1000,0,1,2,3,0,1,1,4,100,75,0.750000"));
+        assert!(csv.contains("link,1000,0,tok:0->1,0.250000"));
+        assert!(csv.contains("link,2000,0,tok:0->1,1.000000"));
+    }
+
+    #[test]
+    fn shard_trace_resolves_pops_to_ranks() {
+        let mut st = ShardTrace::new(true);
+        st.begin_pop(10);
+        st.push(5, 0, TraceEv::Probe { exits: false });
+        let slot = st.reserve();
+        assert_eq!(slot, 1, "reserve consumes the same sequence space");
+        st.begin_pop(11);
+        st.push(6, 1, TraceEv::Probe { exits: true });
+        // pops 10/11 (local offsets 0/1) ranked 7 and 3: merge inverts
+        st.resolve(&[7, 3], 10);
+        let resolved = st.into_resolved();
+        assert_eq!(resolved.len(), 2);
+        assert_eq!(resolved[0].0, rank_key(7, 0));
+        assert_eq!(resolved[1].0, rank_key(3, 0));
+        let off = ShardTrace::new(false);
+        assert!(!off.on());
+        assert!(off.into_resolved().is_empty());
+    }
+
+    #[test]
+    fn suffixed_inserts_before_the_extension() {
+        assert_eq!(suffixed("trace.json", "greedy"), "trace-greedy.json");
+        assert_eq!(
+            suffixed("out/m.csv", "arena/gcn/n4"),
+            "out/m-arena_gcn_n4.csv"
+        );
+        assert_eq!(suffixed("trace", "x"), "trace-x");
+        assert_eq!(suffixed("a.b/trace", "x"), "a.b/trace-x");
+        assert_eq!(suffixed(".hidden", "x"), ".hidden-x");
+    }
+
+    #[test]
+    fn par_profile_side_channel_round_trips() {
+        let p = ParProfile {
+            shards: 4,
+            windows: 10,
+            events: 1000,
+            events_per_shard: vec![250; 4],
+            window_ns: 1,
+            merge_ns: 2,
+            replay_ns: 3,
+            mailbox_spills: 0,
+        };
+        set_par_profile(p.clone());
+        assert_eq!(take_par_profile(), Some(p));
+        assert_eq!(take_par_profile(), None, "take drains the channel");
+    }
+}

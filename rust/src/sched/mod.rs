@@ -49,6 +49,13 @@ pub enum FilterCase {
     SplitPartial,
 }
 
+impl FilterCase {
+    /// True for the two splitting cases (III and IV).
+    pub fn is_split(self) -> bool {
+        matches!(self, FilterCase::SplitSuperset | FilterCase::SplitPartial)
+    }
+}
+
 /// Fixed-capacity token list — a policy emits at most 1 local piece
 /// and at most 2 forwarded pieces, so the whole outcome lives on the
 /// stack (this is the per-token hot path; see EXPERIMENTS.md §Perf).

@@ -119,6 +119,11 @@ pub struct ServeSpec {
     /// dedicated serve flag are rejected so the two paths cannot
     /// disagree.
     pub overrides: Vec<(String, String)>,
+    /// Observability sinks (`--trace-out` / `--metrics-out` /
+    /// `--metrics-interval-ps`). Output paths are suffixed with the
+    /// policy name, so an `--ab` replay writes one trace/timeline per
+    /// policy instead of racing the workers on a single file.
+    pub obs: crate::obs::ObsCfg,
 }
 
 /// One policy's replay of the trace. The policy display label rides
@@ -213,7 +218,15 @@ pub fn run_one(
     for (k, v) in &spec.overrides {
         if matches!(
             k.as_str(),
-            "nodes" | "seed" | "policy" | "theta" | "topology" | "shards"
+            "nodes"
+                | "seed"
+                | "policy"
+                | "theta"
+                | "topology"
+                | "shards"
+                | "trace_out"
+                | "metrics_out"
+                | "metrics_interval_ps"
         ) {
             return Err(format!(
                 "serve: '{k}' has a dedicated flag — use it instead of \
@@ -232,6 +245,7 @@ pub fn run_one(
         }
         cfg.set(k, v).map_err(|e| format!("serve --set {k}: {e}"))?;
     }
+    let cfg = spec.obs.apply(cfg, kind.name());
     let mut cl = Cluster::new(cfg, spec.model, apps);
     let report = cl.run_with_arrivals(&arrivals, None);
     cl.check()
@@ -424,6 +438,7 @@ mod tests {
             topology: Topology::Ring,
             shards: 1,
             overrides: Vec::new(),
+            obs: Default::default(),
         };
         let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
         assert!(e.contains("task-id space"), "{e}");
@@ -440,6 +455,7 @@ mod tests {
             topology: Topology::Ring,
             shards: 1,
             overrides: Vec::new(),
+            obs: Default::default(),
         };
         let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
         assert!(e.contains("node 5"), "{e}");
@@ -455,6 +471,7 @@ mod tests {
             topology: Topology::Ring,
             shards: 1,
             overrides: Vec::new(),
+            obs: Default::default(),
         }
     }
 
@@ -538,6 +555,7 @@ mod tests {
             topology: Topology::Ring,
             shards: 1,
             overrides: Vec::new(),
+            obs: Default::default(),
         };
         let run = run_one(&spec, PolicyKind::Greedy, 500).unwrap();
         assert_eq!(run.report.app_latency.len(), 2);

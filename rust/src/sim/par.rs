@@ -224,6 +224,7 @@ pub struct Mailbox<T> {
     head: usize,
     len: usize,
     spill: Vec<T>,
+    spills: u64,
 }
 
 impl<T> Mailbox<T> {
@@ -231,7 +232,7 @@ impl<T> Mailbox<T> {
         let cap = cap.max(1);
         let mut ring = Vec::with_capacity(cap);
         ring.resize_with(cap, || None);
-        Mailbox { ring, head: 0, len: 0, spill: Vec::new() }
+        Mailbox { ring, head: 0, len: 0, spill: Vec::new(), spills: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -249,8 +250,15 @@ impl<T> Mailbox<T> {
             self.ring[tail] = Some(v);
             self.len += 1;
         } else {
+            self.spills += 1;
             self.spill.push(v);
         }
+    }
+
+    /// Lifetime count of pushes that overflowed the ring into the
+    /// spill vector (the parallel-engine profile's capacity signal).
+    pub fn spills(&self) -> u64 {
+        self.spills
     }
 
     /// Drain everything into `out` in push order; the ring is left
@@ -333,6 +341,7 @@ mod tests {
             m.push(v);
         }
         assert_eq!(m.len(), 10);
+        assert_eq!(m.spills(), 6, "pushes past the ring capacity spill");
         let mut out = Vec::new();
         m.drain_into(&mut out);
         assert_eq!(out, (0..10).collect::<Vec<_>>());

@@ -101,7 +101,17 @@ enum Cell {
 /// it is NOT part of the cell key because the result is byte-identical
 /// for every value — only the wall-clock changes. A shard count that
 /// exceeds a small cell's node count is clamped inside the cluster.
-fn compute(scale: Scale, seed: u64, shards: usize, job: Job) -> Cell {
+/// `obs` carries the sweep's observability knobs: when enabled, each
+/// ARENA cell records to its own [`Job::label`]-suffixed output paths,
+/// so concurrent workers never race on one file. Like `shards`, it is
+/// not part of the key — recording never changes a report.
+fn compute(
+    scale: Scale,
+    seed: u64,
+    shards: usize,
+    obs: &crate::obs::ObsCfg,
+    job: Job,
+) -> Cell {
     match job {
         Job::Serial { app } => {
             Cell::Serial(serial_ps(app, scale, seed, &ArenaConfig::default()))
@@ -110,19 +120,18 @@ fn compute(scale: Scale, seed: u64, shards: usize, job: Job) -> Cell {
             let cfg = ArenaConfig::default().with_nodes(nodes);
             Cell::Bsp(run_bsp(app, scale, seed, &cfg, cgra))
         }
-        Job::Arena { app, nodes, model, layout, topo } => Cell::Arena(
-            eval::run_arena_cell_sharded(
-                app,
-                scale,
-                seed,
-                nodes,
-                model,
-                layout,
-                topo,
-                shards.min(nodes),
-                None,
-            ),
-        ),
+        Job::Arena { app, nodes, model, layout, topo } => {
+            let mut cfg = ArenaConfig::default()
+                .with_nodes(nodes)
+                .with_seed(seed)
+                .with_layout(layout)
+                .with_topology(topo)
+                .with_shards(shards.min(nodes));
+            if !obs.is_off() {
+                cfg = obs.apply(cfg, &job.label());
+            }
+            Cell::Arena(eval::run_arena_with(app, scale, cfg, model, None))
+        }
     }
 }
 
@@ -144,6 +153,11 @@ pub struct CellStore {
     /// (`arena sweep --shards N`; 1 = serial). Not part of any cell
     /// key — results are byte-identical for every value.
     shards: usize,
+    /// Observability knobs every ARENA cell runs with (`arena sweep
+    /// --trace-out …`); output paths are suffixed per cell label. Off
+    /// by default, and never part of a cell key — recording does not
+    /// change a result.
+    obs: crate::obs::ObsCfg,
     serial: BTreeMap<&'static str, Ps>,
     bsp: BTreeMap<(&'static str, usize, bool), BspReport>,
     arena: BTreeMap<(&'static str, usize, Model, Layout, Topology), RunReport>,
@@ -176,6 +190,7 @@ impl CellStore {
             layout,
             topology,
             shards: 1,
+            obs: Default::default(),
             serial: BTreeMap::new(),
             bsp: BTreeMap::new(),
             arena: BTreeMap::new(),
@@ -189,6 +204,15 @@ impl CellStore {
     /// carry it.
     pub fn with_shards(mut self, shards: usize) -> Self {
         self.shards = shards.max(1);
+        self
+    }
+
+    /// Same store, with every ARENA cell tracing/sampling to per-cell
+    /// suffixed output paths (`arena sweep --trace-out …`). Like
+    /// `shards`, the knobs are not part of any cell key: recording
+    /// must never change a result.
+    pub fn with_obs(mut self, obs: crate::obs::ObsCfg) -> Self {
+        self.obs = obs;
         self
     }
 
@@ -260,8 +284,13 @@ impl CellStore {
     /// Serial baseline time (memoized).
     pub fn serial_ps(&mut self, app: &'static str) -> Ps {
         if !self.serial.contains_key(app) {
-            let v =
-                compute(self.scale, self.seed, self.shards, Job::Serial { app });
+            let v = compute(
+                self.scale,
+                self.seed,
+                self.shards,
+                &self.obs,
+                Job::Serial { app },
+            );
             self.insert(Job::Serial { app }, v);
         }
         self.serial[app]
@@ -275,6 +304,7 @@ impl CellStore {
                 self.scale,
                 self.seed,
                 self.shards,
+                &self.obs,
                 Job::Bsp { app, nodes, cgra },
             );
             self.insert(Job::Bsp { app, nodes, cgra }, v);
@@ -320,7 +350,7 @@ impl CellStore {
         let key = (app, nodes, model, layout, topo);
         if !self.arena.contains_key(&key) {
             let job = Job::Arena { app, nodes, model, layout, topo };
-            let v = compute(self.scale, self.seed, self.shards, job);
+            let v = compute(self.scale, self.seed, self.shards, &self.obs, job);
             self.insert(job, v);
         }
         &self.arena[&key]
@@ -343,13 +373,15 @@ impl CellStore {
         if workers == 1 {
             for &job in &todo {
                 let t0 = Instant::now();
-                let v = compute(self.scale, self.seed, self.shards, job);
+                let v =
+                    compute(self.scale, self.seed, self.shards, &self.obs, job);
                 self.timings.push((job, t0.elapsed()));
                 self.insert(job, v);
             }
             return;
         }
         let (scale, seed, shards) = (self.scale, self.seed, self.shards);
+        let obs = self.obs.clone();
         let next = AtomicUsize::new(0);
         let done: Mutex<Vec<(usize, Cell, Duration)>> =
             Mutex::new(Vec::with_capacity(todo.len()));
@@ -361,7 +393,7 @@ impl CellStore {
                         break;
                     }
                     let t0 = Instant::now();
-                    let cell = compute(scale, seed, shards, todo[i]);
+                    let cell = compute(scale, seed, shards, &obs, todo[i]);
                     let dt = t0.elapsed();
                     done.lock()
                         .expect("worker poisoned the store")
@@ -588,7 +620,7 @@ pub fn run_at(
 
 /// Knobs of the extended sweep (`arena sweep` beyond the paper's
 /// defaults), bundled so the entry-point signatures stop growing.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SweepCfg {
     /// Data-placement layout of every ARENA cell.
     pub layout: Layout,
@@ -598,6 +630,9 @@ pub struct SweepCfg {
     pub max_nodes: Option<usize>,
     /// Shard count of the parallel DES each cell runs on (1 = serial).
     pub shards: usize,
+    /// Observability knobs of every ARENA cell (`--trace-out` /
+    /// `--metrics-out`, per-cell suffixed paths; off by default).
+    pub obs: crate::obs::ObsCfg,
 }
 
 impl Default for SweepCfg {
@@ -607,6 +642,7 @@ impl Default for SweepCfg {
             topo: Topology::Ring,
             max_nodes: None,
             shards: 1,
+            obs: Default::default(),
         }
     }
 }
@@ -632,7 +668,7 @@ pub fn run_scaled(
         scale,
         seed,
         workers,
-        SweepCfg { layout, topo, max_nodes, shards: 1 },
+        SweepCfg { layout, topo, max_nodes, shards: 1, obs: Default::default() },
     )
 }
 
@@ -647,7 +683,7 @@ pub fn run_cfg(
     workers: usize,
     cfg: SweepCfg,
 ) -> SweepOutput {
-    let SweepCfg { layout, topo, max_nodes, shards } = cfg;
+    let SweepCfg { layout, topo, max_nodes, shards, obs } = cfg;
     let mut figs: Vec<Fig> = figs.to_vec();
     figs.sort();
     figs.dedup();
@@ -686,8 +722,9 @@ pub fn run_cfg(
         }
     }
 
-    let mut store =
-        CellStore::configured(scale, seed, layout, topo).with_shards(shards);
+    let mut store = CellStore::configured(scale, seed, layout, topo)
+        .with_shards(shards)
+        .with_obs(obs);
     store.prefill(&jobs, workers);
 
     let mut tables = Vec::new();
@@ -735,8 +772,10 @@ pub fn run_skew(
     seed: u64,
     workers: usize,
     shards: usize,
+    obs: crate::obs::ObsCfg,
 ) -> SweepOutput {
-    let mut store = CellStore::new(scale, seed).with_shards(shards);
+    let mut store =
+        CellStore::new(scale, seed).with_shards(shards).with_obs(obs);
     store.prefill(&skew_jobs(), workers);
     let tables = eval::skew_with(&mut store);
     let timings = timing_labels(&store);
@@ -752,8 +791,10 @@ pub fn run_topo(
     seed: u64,
     workers: usize,
     shards: usize,
+    obs: crate::obs::ObsCfg,
 ) -> SweepOutput {
-    let mut store = CellStore::new(scale, seed).with_shards(shards);
+    let mut store =
+        CellStore::new(scale, seed).with_shards(shards).with_obs(obs);
     store.prefill(&topo_jobs(), workers);
     let tables = eval::topo_with(&mut store);
     let timings = timing_labels(&store);

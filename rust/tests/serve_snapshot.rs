@@ -62,6 +62,7 @@ fn regenerate() -> String {
         topology: Topology::Ring,
         shards: 1,
         overrides: Vec::new(),
+        obs: Default::default(),
     };
     let policies: Vec<(PolicyKind, u32)> =
         PolicyKind::ALL.iter().map(|&k| (k, 500)).collect();

@@ -46,8 +46,8 @@ fn sweep_matches_legacy_figure_builders() {
 #[test]
 fn skew_sweep_bit_identical_across_jobs() {
     // the --all-layouts sweep holds to the same determinism contract
-    let a = sweep::run_skew(Scale::Small, 7, 1, 1);
-    let b = sweep::run_skew(Scale::Small, 7, 8, 2);
+    let a = sweep::run_skew(Scale::Small, 7, 1, 1, Default::default());
+    let b = sweep::run_skew(Scale::Small, 7, 8, 2, Default::default());
     assert_eq!(a.cells, b.cells, "same unique cell set");
     assert_eq!(a.render(), b.render(), "skew tables must be bit-identical");
     // 6 apps x 2 models x 4 layouts
@@ -88,8 +88,8 @@ fn topology_ring_sweep_matches_default_figures() {
 /// wall-clock or byte-hops (the acceptance criterion).
 #[test]
 fn topology_sweep_bit_identical_across_jobs_and_not_flat() {
-    let a = sweep::run_topo(Scale::Small, 7, 1, 1);
-    let b = sweep::run_topo(Scale::Small, 7, 8, 2);
+    let a = sweep::run_topo(Scale::Small, 7, 1, 1, Default::default());
+    let b = sweep::run_topo(Scale::Small, 7, 8, 2, Default::default());
     assert_eq!(a.cells, b.cells, "same unique cell set");
     assert_eq!(
         a.render(),
@@ -164,6 +164,7 @@ fn serve_spec() -> serve::ServeSpec {
         topology: Topology::Ring,
         shards: 1,
         overrides: Vec::new(),
+        obs: Default::default(),
     }
 }
 

@@ -1,0 +1,153 @@
+//! Observability determinism: the recorder is simulated-time-only, so
+//! the trace and metrics files are part of the run's deterministic
+//! output — same seed means byte-identical files, and the sharded
+//! engine must reproduce the serial engine's files exactly for every
+//! `--shards` value (events are emitted in global replay-rank order).
+//! Recording must also never change the run report itself.
+
+use arena::apps::Scale;
+use arena::cluster::Model;
+use arena::config::ArenaConfig;
+use arena::eval;
+use arena::net::Topology;
+use arena::util::json::Json;
+
+const APP: &str = "gcn";
+const NODES: usize = 4;
+const SEED: u64 = 7;
+
+/// Unique scratch path (parallel test binaries must not collide).
+fn scratch(tag: &str, ext: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "arena_trace_det_{}_{tag}.{ext}",
+        std::process::id()
+    ))
+}
+
+/// Run the canonical cell (gcn@4n on a 2x2 torus — the shard-invariance
+/// configuration) with tracing + metrics into `tag`-suffixed files,
+/// returning (trace body, metrics body).
+fn run_recorded(tag: &str, shards: usize, metrics_ext: &str) -> (String, String) {
+    let trace = scratch(tag, "trace.json");
+    let metrics = scratch(tag, metrics_ext);
+    let cfg = ArenaConfig::default()
+        .with_nodes(NODES)
+        .with_seed(SEED)
+        .with_topology(Topology::Torus2D)
+        .with_shards(shards)
+        .with_trace_out(trace.to_str().unwrap())
+        .with_metrics_out(metrics.to_str().unwrap())
+        .with_metrics_interval_ps(250_000);
+    let r = eval::run_arena_with(APP, Scale::Small, cfg, Model::SoftwareCpu, None);
+    assert!(r.events > 0);
+    let t = std::fs::read_to_string(&trace).expect("trace file written");
+    let m = std::fs::read_to_string(&metrics).expect("metrics file written");
+    let _ = std::fs::remove_file(&trace);
+    let _ = std::fs::remove_file(&metrics);
+    (t, m)
+}
+
+#[test]
+fn same_seed_runs_write_byte_identical_files() {
+    let (t1, m1) = run_recorded("seed_a", 1, "csv");
+    let (t2, m2) = run_recorded("seed_b", 1, "csv");
+    assert_eq!(t1, t2, "same-seed traces diverged");
+    assert_eq!(m1, m2, "same-seed metrics diverged");
+    assert!(!t1.is_empty() && !m1.is_empty());
+}
+
+#[test]
+fn sharded_engine_reproduces_the_serial_trace() {
+    let (t1, m1) = run_recorded("shards1", 1, "csv");
+    for shards in [2usize, 4] {
+        let (tn, mn) = run_recorded(&format!("shards{shards}"), shards, "csv");
+        assert_eq!(
+            t1, tn,
+            "--shards {shards} trace diverged from the serial engine"
+        );
+        assert_eq!(
+            m1, mn,
+            "--shards {shards} metrics diverged from the serial engine"
+        );
+    }
+}
+
+#[test]
+fn recording_does_not_change_the_report() {
+    for shards in [1usize, 4] {
+        let plain_cfg = ArenaConfig::default()
+            .with_nodes(NODES)
+            .with_seed(SEED)
+            .with_topology(Topology::Torus2D)
+            .with_shards(shards);
+        let plain =
+            eval::run_arena_with(APP, Scale::Small, plain_cfg, Model::SoftwareCpu, None);
+        let trace = scratch(&format!("inert{shards}"), "trace.json");
+        let recorded_cfg = ArenaConfig::default()
+            .with_nodes(NODES)
+            .with_seed(SEED)
+            .with_topology(Topology::Torus2D)
+            .with_shards(shards)
+            .with_trace_out(trace.to_str().unwrap());
+        let recorded = eval::run_arena_with(
+            APP,
+            Scale::Small,
+            recorded_cfg,
+            Model::SoftwareCpu,
+            None,
+        );
+        let _ = std::fs::remove_file(&trace);
+        assert_eq!(
+            format!("{plain:?}"),
+            format!("{recorded:?}"),
+            "recording changed the {shards}-shard run report"
+        );
+    }
+}
+
+#[test]
+fn trace_and_metrics_parse_through_the_in_tree_reader() {
+    let (t, m) = run_recorded("parse", 1, "json");
+    let trace = Json::parse(&t).expect("trace is valid JSON");
+    let events = trace
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    // one thread_name metadata record per node, then the lifecycle
+    assert!(events.len() > NODES, "trace has no lifecycle events");
+    for (name, expect_some) in
+        [("inject", true), ("hop", true), ("fire", true), ("probe", true)]
+    {
+        let n = events
+            .iter()
+            .filter(|e| {
+                e.get("name").and_then(Json::as_str) == Some(name)
+            })
+            .count();
+        assert_eq!(n > 0, expect_some, "{name}: {n} events");
+    }
+    // every instant event carries a node-track tid and a simulated ts
+    for e in events.iter().skip(NODES) {
+        assert!(e.get("tid").and_then(Json::as_f64).is_some());
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+    }
+    let metrics = Json::parse(&m).expect("metrics is valid JSON");
+    let nodes = metrics
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .expect("node samples");
+    assert!(!nodes.is_empty(), "no node samples");
+    assert!(
+        nodes.len() % NODES == 0,
+        "each boundary samples every node exactly once ({} rows)",
+        nodes.len()
+    );
+    let links = metrics
+        .get("links")
+        .and_then(Json::as_arr)
+        .expect("link samples");
+    for l in links {
+        let f = l.get("busy_frac").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&f), "busy fraction {f} out of range");
+    }
+}
