@@ -79,7 +79,7 @@ pub fn parse(
 /// effective [`ArenaConfig`]. One table so `build_config` and the
 /// round-trip test cannot drift apart: a new config-affecting option
 /// is added here (and sampled in the test) or it does not exist.
-pub const CONFIG_OPTS: [(&str, &str); 11] = [
+pub const CONFIG_OPTS: [(&str, &str); 12] = [
     ("nodes", "nodes"),
     ("seed", "seed"),
     ("layout", "layout"),
@@ -91,6 +91,7 @@ pub const CONFIG_OPTS: [(&str, &str); 11] = [
     ("trace-out", "trace_out"),
     ("metrics-out", "metrics_out"),
     ("metrics-interval-ps", "metrics_interval_ps"),
+    ("faults", "faults"),
 ];
 
 /// Build the effective config: `--config FILE` base (Table-2 defaults
@@ -109,7 +110,20 @@ pub fn build_config(args: &Args) -> Result<ArenaConfig, String> {
         }
     }
     for (k, v) in &args.sets {
-        cfg.set(k, v).map_err(|e| e.to_string())?;
+        cfg.set(k, v).map_err(|e| match e {
+            // a typo'd key should not send the user to the source: the
+            // flat dump enumerates exactly the keys `set` accepts, so
+            // the message can never drift from the accepted set
+            crate::config::ConfigError::UnknownKey(_) => {
+                let dump = ArenaConfig::default().dump();
+                let keys: Vec<&str> = dump
+                    .lines()
+                    .filter_map(|l| l.split(" = ").next())
+                    .collect();
+                format!("{e} (known keys: {})", keys.join(", "))
+            }
+            e => e.to_string(),
+        })?;
     }
     Ok(cfg)
 }
@@ -278,6 +292,7 @@ mod tests {
                 "trace-out" => "trace.json",
                 "metrics-out" => "metrics.csv",
                 "metrics-interval-ps" => "250000",
+                "faults" => "loss:0.01",
                 other => panic!(
                     "CONFIG_OPTS gained '{other}' without a round-trip \
                      sample — extend this test"
@@ -315,5 +330,22 @@ mod tests {
         // and a bad value is a clean error, not a silent default
         let a = parse(&sv(&["run", "--topology", "mesh"]), &valued).unwrap();
         assert!(build_config(&a).is_err());
+    }
+
+    /// A typo'd `--set` key must list every accepted key (derived from
+    /// the flat dump, so the list cannot drift from what `set` takes).
+    #[test]
+    fn unknown_set_key_lists_the_known_keys() {
+        let a = parse(&sv(&["run", "--set", "nodez=8"]), &[]).unwrap();
+        let err = build_config(&a).unwrap_err();
+        assert!(err.contains("unknown config key 'nodez'"), "{err}");
+        assert!(err.contains("known keys:"), "{err}");
+        for key in ["nodes", "seed", "faults", "topology", "shards"] {
+            assert!(err.contains(key), "'{err}' does not list '{key}'");
+        }
+        // a bad *value* for a known key keeps the focused message
+        let a = parse(&sv(&["run", "--set", "nodes=many"]), &[]).unwrap();
+        let err = build_config(&a).unwrap_err();
+        assert!(!err.contains("known keys:"), "{err}");
     }
 }

@@ -19,6 +19,10 @@ pub(super) enum Ev {
     /// Remote data landed at `node` for the token parked in fetch-slab
     /// slot `slot`.
     DataReady(usize, u32),
+    /// A lost token's home-node lease fired: re-inject it at `node`
+    /// (which has carried it in `pending_leases` since the loss, so the
+    /// TERMINATE protocol could not retire the ring in the meantime).
+    Relaunch(usize, TaskToken),
 }
 
 /// One application's injection into the open system: the app's root

@@ -123,6 +123,14 @@ pub struct Cluster {
     /// Disabled by default — every hot-path record call is a branch on
     /// `None` and nothing allocates (see [`crate::obs`]).
     pub(in crate::cluster) obs: crate::obs::Recorder,
+    /// The compiled `--faults` schedule, `None` on fault-free runs so
+    /// every injection site is a branch on `None` and the hot path
+    /// stays byte-identical to the seed (see [`crate::faults`]).
+    pub(in crate::cluster) faults: Option<crate::faults::FaultSchedule>,
+    /// Cluster-wide fault/recovery counters (per-node ones — stalls,
+    /// rehomed claims — live on [`crate::node::NodeStats`] and are
+    /// merged into the report's copy of this).
+    pub(in crate::cluster) fault_stats: crate::faults::FaultStats,
 }
 
 /// Roman label of the paper's dispatch-filter case, as traced (the
@@ -165,6 +173,165 @@ pub(in crate::cluster) fn node_row(
         touched_words: nd.stats.touched_words,
         local_hit_words: nd.stats.local_hit_words,
     }
+}
+
+/// The filter range under faults: what `node` may claim of `task` at
+/// `now`, plus whether the claim is an **adoption** (work re-homed from
+/// a dropped owner). Shared by the serial loop and the shard workers so
+/// both classify identically.
+///
+/// * A dropped node's compute is dead — it claims nothing and conveys
+///   everything (its storage stays alive: it still serves DTN fetches).
+/// * When nothing is local but the range's owner is dropped, the
+///   owner's clockwise redirect target adopts the owner's extent, so
+///   orphaned work completes instead of circulating forever.
+/// * Fault-free (`faults == None`) this is exactly
+///   [`Directory::filter_extent`].
+pub(in crate::cluster) fn fault_local(
+    faults: Option<&crate::faults::FaultSchedule>,
+    dir: &Directory,
+    node: usize,
+    now: Ps,
+    task: Range,
+) -> (Range, bool) {
+    let base = dir.filter_extent(node, task);
+    let Some(f) = faults else { return (base, false) };
+    if f.dropped(node, now) {
+        return (Range::empty(), false);
+    }
+    if base.is_empty() {
+        if let Ok(owner) = dir.try_owner(task.start) {
+            if f.dropped(owner, now) && f.redirect(owner, now) == node {
+                return (dir.filter_extent(owner, task), true);
+            }
+        }
+    }
+    (base, false)
+}
+
+/// Apply the degraded-link multiplier to a transfer `from → to` issued
+/// at `now` landing at `at` (identity without a schedule).
+fn stretch(
+    faults: Option<&crate::faults::FaultSchedule>,
+    stats: &mut crate::faults::FaultStats,
+    now: Ps,
+    at: Ps,
+    from: usize,
+    to: usize,
+) -> Ps {
+    match faults {
+        Some(f) => f.stretch(stats, now, at, from, to),
+        None => at,
+    }
+}
+
+/// One DTN acquisition attempt starting at `t0`: the wire-call half of
+/// the serial `fetch_remote` (stats are booked by the caller /
+/// in-window), with each leg stretched by any degraded-link clause. A
+/// re-homed token additionally pulls its adopted task range from the
+/// dropped owner's (still live) storage.
+fn wire_walk(
+    net: &mut dyn Interconnect,
+    cfg: &ArenaConfig,
+    faults: Option<&crate::faults::FaultSchedule>,
+    stats: &mut crate::faults::FaultStats,
+    dir: &Directory,
+    fetch_from_parent: bool,
+    t0: Ps,
+    n: usize,
+    tok: &TaskToken,
+) -> Ps {
+    use crate::api::WORD_BYTES;
+    use crate::token::WIRE_BYTES;
+    let mut t_done = t0;
+    // request message out (control), payload back (data) — per source.
+    let mut pull = |net: &mut dyn Interconnect,
+                    stats: &mut crate::faults::FaultStats,
+                    src: usize,
+                    words: u64|
+     -> Ps {
+        let req_at = net.send_ctrl(cfg, t0, n, src, WIRE_BYTES);
+        let req_at = stretch(faults, stats, t0, req_at, n, src);
+        let got = net.send_data(cfg, req_at, src, n, words * WORD_BYTES);
+        stretch(faults, stats, req_at, got, src, n)
+    };
+    if fetch_from_parent {
+        let src = tok.from_node as usize;
+        if !tok.remote.is_empty() && src != n {
+            t_done = t_done.max(pull(net, stats, src, tok.remote.len() as u64));
+        }
+    } else {
+        let mut at = tok.remote.start;
+        while at < tok.remote.end {
+            let (owner, ext) = dir.owner_extent(at);
+            let end = tok.remote.end.min(ext.end);
+            if owner != n {
+                t_done =
+                    t_done.max(pull(net, stats, owner, (end - at) as u64));
+            }
+            at = end;
+        }
+    }
+    if tok.rehomed {
+        // adopted range: homed on the dropped owner, always remote
+        let mut at = tok.task.start;
+        while at < tok.task.end {
+            let (owner, ext) = dir.owner_extent(at);
+            let end = tok.task.end.min(ext.end);
+            if owner != n {
+                t_done =
+                    t_done.max(pull(net, stats, owner, (end - at) as u64));
+            }
+            at = end;
+        }
+    }
+    t_done
+}
+
+/// Acquire `tok`'s wire-visible data for node `n` starting at `now`,
+/// retrying failed attempts per the fault schedule (each failed attempt
+/// still walks the wire — the request went out and timed out). Shared
+/// by the serial `fetch_remote` and the shard barrier's fetch replay,
+/// so both engines make the identical call sequence. Fault-free this
+/// is exactly one [`wire_walk`].
+#[allow(clippy::too_many_arguments)]
+pub(in crate::cluster) fn wire_fetch(
+    net: &mut dyn Interconnect,
+    cfg: &ArenaConfig,
+    faults: Option<&crate::faults::FaultSchedule>,
+    stats: &mut crate::faults::FaultStats,
+    dir: &Directory,
+    fetch_from_parent: bool,
+    now: Ps,
+    n: usize,
+    tok: &TaskToken,
+) -> Ps {
+    let fails = faults.map_or(0, |f| f.fetch_fail_count(n, now, tok));
+    let first =
+        wire_walk(net, cfg, faults, stats, dir, fetch_from_parent, now, n, tok);
+    let mut ready = first;
+    if fails > 0 {
+        let f = faults.expect("a failed fetch implies a schedule");
+        for _ in 0..fails {
+            let t2 = f.fetch_retry_at(ready);
+            ready = wire_walk(
+                net,
+                cfg,
+                faults,
+                stats,
+                dir,
+                fetch_from_parent,
+                t2,
+                n,
+                tok,
+            )
+            .max(ready);
+        }
+        stats.fetches_failed += fails as u64;
+        stats.fetches_retried += 1;
+        stats.recovery_ps += ready - first;
+    }
+    ready
 }
 
 impl Cluster {
@@ -231,8 +398,24 @@ impl Cluster {
             .collect();
         let policy = cfg.dispatch_policy();
         let obs = crate::obs::Recorder::from_cfg(&cfg);
+        let net = cfg.topology.build(n);
+        // Validated at config time; builders that bypass `validate()`
+        // (tests constructing ArenaConfig directly) fail loudly here.
+        let faults = if cfg.faults.is_empty() {
+            None
+        } else {
+            Some(
+                crate::faults::FaultSchedule::compile(
+                    &cfg.faults,
+                    cfg.seed,
+                    n,
+                    net.lookahead_ps(&cfg),
+                )
+                .unwrap_or_else(|e| panic!("invalid --faults spec: {e}")),
+            )
+        };
         Cluster {
-            net: cfg.topology.build(n),
+            net,
             nodes,
             cfg,
             model,
@@ -250,6 +433,8 @@ impl Cluster {
             spawn_free: Vec::new(),
             vec_pool: Vec::new(),
             obs,
+            faults,
+            fault_stats: Default::default(),
         }
     }
 
@@ -274,20 +459,6 @@ impl Cluster {
             })
             .as_ref()
             .unwrap_or_else(|| panic!("unregistered task id {id}"))
-    }
-
-    /// Range the scheduling policy cuts `tok` against on `node`: the
-    /// first local extent (of the owning app's directory) overlapping
-    /// the token's range. An empty range (nothing local overlaps)
-    /// makes every policy convey the token unchanged — byte-identical
-    /// to the old single-stripe behaviour when the layout is `block`.
-    pub(in crate::cluster) fn filter_range(
-        &self,
-        node: usize,
-        tok: &TaskToken,
-    ) -> Range {
-        let ai = self.kernel(tok.task_id).app_idx;
-        self.dirs[ai].filter_extent(node, tok.task)
     }
 
     /// Directory of the app owning `task_id` (test observability).

@@ -63,7 +63,7 @@ use crate::sim::par::{
     key, key_at, key_class, key_k, key_x, Mailbox, ShardEngine, CLASS_LOCAL,
     CLASS_RANKED, CLASS_ROOT,
 };
-use crate::token::{TaskId, TaskToken, WIRE_BYTES};
+use crate::token::{TaskId, TaskToken};
 
 use super::events::{Arrival, Ev};
 use super::report::{AppStat, RunReport};
@@ -113,6 +113,10 @@ struct SharedCtx<'a> {
     /// least `L`), read by the same handler's all-done swallow check;
     /// the barrier's channel hand-off orders everything else.
     done: &'a [AtomicBool],
+    /// The compiled fault schedule (pure data — every draw is a hash of
+    /// its coordinates, so shards and the barrier replay agree without
+    /// shared mutable state). `None` on fault-free runs.
+    faults: Option<&'a crate::faults::FaultSchedule>,
     n_nodes: usize,
     max_events: u64,
 }
@@ -223,6 +227,12 @@ impl Shard {
                     self.exec_or_requeue(cx, now, n, t);
                     self.schedule_pump(cx, now, n);
                 }
+                Ev::Relaunch(n, tok) => {
+                    // a lost token's home-node lease fired: release the
+                    // quiescence hold and deliver the retry locally
+                    self.nodes[n - self.base].pending_leases -= 1;
+                    self.on_arrive(cx, now, n, tok);
+                }
             }
         }
     }
@@ -287,6 +297,16 @@ impl Shard {
         if self.nodes[lx].done {
             return;
         }
+        // Fault stall window — the serial loop's deferral, shard-local
+        // (the deferred Pump is a purely local event).
+        if let Some(f) = cx.faults {
+            if let Some(resume) = f.stall_until(n, now) {
+                self.nodes[lx].stats.fault_stalls += 1;
+                self.pump_pending[lx] = true;
+                self.sched(resume, Ev::Pump(n));
+                return;
+            }
+        }
         let mut progress = false;
 
         while !self.nodes[lx].disp.recv.is_full() {
@@ -329,18 +349,33 @@ impl Shard {
                 }
             } else {
                 let ai = cx.kernel_info(tok.task_id).app_idx;
-                let local = cx.dirs[ai].filter_extent(n, tok.task);
+                let (local, rehomed) = super::fault_local(
+                    cx.faults,
+                    &cx.dirs[ai],
+                    n,
+                    now,
+                    tok.task,
+                );
                 let sctx = crate::sched::SchedCtx { nodes: cx.n_nodes };
-                let out = self.policy.classify(&tok, local, &sctx);
+                let mut out = self.policy.classify(&tok, local, &sctx);
+                if rehomed {
+                    for p in out.wait.iter_mut() {
+                        p.rehomed = true;
+                    }
+                }
                 let case = out.case;
                 let kept = if out.wait.len() == 1 {
                     Some(out.wait[0].task)
                 } else {
                     None
                 };
+                let claimed = out.wait.len() as u64;
                 if self.nodes[lx].disp.process_outcome(tok, out).is_ok() {
                     self.nodes[lx].disp.recv.pop();
                     self.nodes[lx].touch();
+                    if rehomed {
+                        self.nodes[lx].stats.rehomed_claims += claimed;
+                    }
                     progress = true;
                     if self.trace.on() {
                         self.trace.push(
@@ -377,6 +412,29 @@ impl Shard {
             debug_assert!(!t.is_terminate(), "TERMINATE in the send queue");
             t.record_hop();
             let ts = self.trace.reserve();
+            // Loss draw in-window (a pure hash of its coordinates — the
+            // barrier replay recomputes the identical draw for stats
+            // and timing): the lease hold must be visible to every
+            // same-window quiescence check on this node, e.g. a probe
+            // processed later this window, so `pending_leases` is
+            // incremented here, not at the barrier. The TokenLost row
+            // follows the reserved Hop slot, the serial trace order.
+            if let Some(f) = cx.faults {
+                if f.token_lost(n, now, &t) {
+                    self.nodes[lx].pending_leases += 1;
+                    self.trace.push(
+                        now,
+                        n,
+                        TraceEv::TokenLost {
+                            task: t.task_id,
+                            start: t.task.start,
+                            end: t.task.end,
+                            retries: t.retries,
+                            resume: f.lease_at(now, t.retries),
+                        },
+                    );
+                }
+            }
             self.defer(now, n, ts, OpKind::Token(t));
             progress = true;
         }
@@ -402,27 +460,45 @@ impl Shard {
             let Some(&tok) = self.nodes[lx].disp.wait.peek() else {
                 return progress;
             };
-            if tok.needs_remote_data() {
+            if tok.needs_remote_data() || tok.rehomed {
                 self.nodes[lx].disp.wait.pop();
+                let words = tok.remote.len()
+                    + if tok.rehomed { tok.task.len() } else { 0 };
                 self.trace.push(
                     now,
                     n,
-                    TraceEv::Fetch {
-                        task: tok.task_id,
-                        words: tok.remote.len(),
-                    },
+                    TraceEv::Fetch { task: tok.task_id, words },
                 );
                 let all_local = self.book_fetch(cx, now, n, &tok);
                 let slot = self.nodes[lx].fetching.park(tok);
                 self.nodes[lx].stats.fetches += 1;
                 self.nodes[lx].stats.fetched_bytes +=
-                    tok.remote.len() as u64 * WORD_BYTES;
+                    words as u64 * WORD_BYTES;
                 match all_local {
                     // every extent is homed here: ready immediately, a
                     // purely local event (the serial loop schedules the
                     // DataReady either way, so event counts match)
                     Some(ready_at) => self.sched(ready_at, Ev::DataReady(n, slot)),
-                    None => self.defer(now, n, 0, OpKind::Fetch { slot, tok }),
+                    None => {
+                        // failed-attempt rows precede the wire walk —
+                        // the serial `fetch_remote` trace order (the
+                        // draw is recomputed at replay for the stats)
+                        if self.trace.on() {
+                            if let Some(f) = cx.faults {
+                                for a in 0..f.fetch_fail_count(n, now, &tok) {
+                                    self.trace.push(
+                                        now,
+                                        n,
+                                        TraceEv::FetchFail {
+                                            task: tok.task_id,
+                                            attempt: a,
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                        self.defer(now, n, 0, OpKind::Fetch { slot, tok })
+                    }
                 }
                 progress = true;
                 continue;
@@ -450,6 +526,7 @@ impl Shard {
         let info = cx.kernel_info(tok.task_id);
         let ai = info.app_idx;
         let lx = n - self.base;
+        let mut any_remote = false;
         if info.fetch_from_parent {
             let src = tok.from_node as usize;
             let words = tok.remote.len() as u64;
@@ -458,26 +535,46 @@ impl Shard {
             if src == n {
                 self.nodes[lx].stats.local_hit_words += words;
                 self.app_stats[ai].local_hit_words += words;
-                return Some(now);
-            }
-            return None;
-        }
-        let dir = &cx.dirs[ai];
-        let mut any_remote = false;
-        let mut at = tok.remote.start;
-        while at < tok.remote.end {
-            let (owner, ext) = dir.owner_extent(at);
-            let end = tok.remote.end.min(ext.end);
-            let words = (end - at) as u64;
-            self.nodes[lx].stats.touched_words += words;
-            self.app_stats[ai].touched_words += words;
-            if owner == n {
-                self.nodes[lx].stats.local_hit_words += words;
-                self.app_stats[ai].local_hit_words += words;
-            } else {
+            } else if !tok.remote.is_empty() {
                 any_remote = true;
             }
-            at = end;
+        } else {
+            let dir = &cx.dirs[ai];
+            let mut at = tok.remote.start;
+            while at < tok.remote.end {
+                let (owner, ext) = dir.owner_extent(at);
+                let end = tok.remote.end.min(ext.end);
+                let words = (end - at) as u64;
+                self.nodes[lx].stats.touched_words += words;
+                self.app_stats[ai].touched_words += words;
+                if owner == n {
+                    self.nodes[lx].stats.local_hit_words += words;
+                    self.app_stats[ai].local_hit_words += words;
+                } else {
+                    any_remote = true;
+                }
+                at = end;
+            }
+        }
+        if tok.rehomed {
+            // the adopted range is homed on the dropped owner: every
+            // word is a remote touch (never a local hit at the adopter)
+            let dir = &cx.dirs[ai];
+            let mut at = tok.task.start;
+            while at < tok.task.end {
+                let (owner, ext) = dir.owner_extent(at);
+                let end = tok.task.end.min(ext.end);
+                let words = (end - at) as u64;
+                self.nodes[lx].stats.touched_words += words;
+                self.app_stats[ai].touched_words += words;
+                if owner == n {
+                    self.nodes[lx].stats.local_hit_words += words;
+                    self.app_stats[ai].local_hit_words += words;
+                } else {
+                    any_remote = true;
+                }
+                at = end;
+            }
         }
         if any_remote {
             None
@@ -554,7 +651,7 @@ impl Shard {
         self.nodes[lx].stats.tasks += 1;
         self.nodes[lx].stats.units += exec.units;
         self.nodes[lx].stats.local_bytes += exec.local_bytes;
-        if !tok.needs_remote_data() {
+        if !tok.needs_remote_data() && !tok.rehomed {
             self.nodes[lx].stats.touched_words += tok.task.len() as u64;
             self.nodes[lx].stats.local_hit_words += tok.task.len() as u64;
             self.app_stats[app_idx].touched_words += tok.task.len() as u64;
@@ -592,6 +689,15 @@ impl Shard {
             cx.done[n].store(true, Ordering::Relaxed);
             if cx.done.iter().all(|d| d.load(Ordering::Relaxed)) {
                 return; // the last node swallows the probe
+            }
+        }
+        // loss draw for the trace row only — the barrier recomputes the
+        // identical draw for the stats and the regeneration delay
+        if self.trace.on() {
+            if let Some(f) = cx.faults {
+                if f.probe_lost(n, now) {
+                    self.trace.push(now, n, TraceEv::ProbeLost);
+                }
             }
         }
         self.defer(now, n, 0, OpKind::Probe);
@@ -715,6 +821,7 @@ impl Cluster {
             kernels: &self.kernels,
             apps: &apps,
             done: &done,
+            faults: self.faults.as_ref(),
             n_nodes,
             max_events: self.max_events,
         };
@@ -906,18 +1013,38 @@ impl Cluster {
                         link_next = link_next.saturating_add(minterval);
                     }
                     match op.kind {
-                        OpKind::Token(t) => {
+                        OpKind::Token(mut t) => {
                             let dest = if self.net.routes_by_dest() {
                                 let ai = cx.kernel_info(t.task_id).app_idx;
-                                cx.dirs[ai].try_owner(t.task.start).unwrap_or_else(
-                                    |_| self.net.next_hop(op.node),
-                                )
+                                let d = cx.dirs[ai]
+                                    .try_owner(t.task.start)
+                                    .unwrap_or_else(|_| {
+                                        self.net.next_hop(op.node)
+                                    });
+                                // detour around a dropped home — the
+                                // serial send drain's routing, in rank
+                                // order against the shared fabric
+                                match cx.faults {
+                                    Some(f) if f.dropped(d, op.at) => {
+                                        self.fault_stats.detours += 1;
+                                        f.redirect(d, op.at)
+                                    }
+                                    _ => d,
+                                }
                             } else {
                                 op.node // advance the coverage cycle
                             };
                             let (at2, next) = self
                                 .net
                                 .send_token(cx.cfg, op.at, op.node, dest);
+                            let at2 = super::stretch(
+                                cx.faults,
+                                &mut self.fault_stats,
+                                op.at,
+                                at2,
+                                op.node,
+                                next,
+                            );
                             self.obs.trace_ranked(
                                 crate::obs::rank_key(rank, op.ts),
                                 op.at,
@@ -931,22 +1058,69 @@ impl Cluster {
                                     arrive: at2,
                                 },
                             );
-                            debug_assert!(
-                                at2 >= horizon,
-                                "token delivery inside the lookahead window"
-                            );
-                            shards[shard_of(next)]
-                                .as_mut()
-                                .expect("shard at home")
-                                .eng
-                                .insert(
-                                    key(at2, CLASS_RANKED, rank, op.k),
-                                    Ev::Arrive(next, t),
+                            // the shard's in-window draw, recomputed on
+                            // the identical coordinates (pre-increment
+                            // retries): stats and the lease event are
+                            // the barrier's half of the loss
+                            let lost = match cx.faults {
+                                Some(f) => f.token_lost(op.node, op.at, &t),
+                                None => false,
+                            };
+                            if lost {
+                                let f = cx
+                                    .faults
+                                    .expect("loss implies a schedule");
+                                let lease = f.lease_at(op.at, t.retries);
+                                self.fault_stats.tokens_lost += 1;
+                                self.fault_stats.tokens_reinjected += 1;
+                                self.fault_stats.recovery_ps +=
+                                    lease.saturating_sub(at2);
+                                t.retries = t.retries.saturating_add(1);
+                                debug_assert!(
+                                    lease >= horizon,
+                                    "lease fired inside the lookahead window"
                                 );
+                                shards[shard_of(op.node)]
+                                    .as_mut()
+                                    .expect("shard at home")
+                                    .eng
+                                    .insert(
+                                        key(lease, CLASS_RANKED, rank, op.k),
+                                        Ev::Relaunch(op.node, t),
+                                    );
+                            } else {
+                                debug_assert!(
+                                    at2 >= horizon,
+                                    "token delivery inside the lookahead window"
+                                );
+                                shards[shard_of(next)]
+                                    .as_mut()
+                                    .expect("shard at home")
+                                    .eng
+                                    .insert(
+                                        key(at2, CLASS_RANKED, rank, op.k),
+                                        Ev::Arrive(next, t),
+                                    );
+                            }
                         }
                         OpKind::Probe => {
+                            let lost = match cx.faults {
+                                Some(f) => f.probe_lost(op.node, op.at),
+                                None => false,
+                            };
                             let at2 = self.net.probe_hop(cx.cfg, op.at, op.node);
                             let next = self.net.next_hop(op.node);
+                            let mut at2 = super::stretch(
+                                cx.faults,
+                                &mut self.fault_stats,
+                                op.at,
+                                at2,
+                                op.node,
+                                next,
+                            );
+                            // visits and laps count at forward time —
+                            // regeneration below only delays delivery,
+                            // so lap accounting stays exact under loss
                             note_probe_visit(
                                 &mut self.probe_visited,
                                 probe_origin,
@@ -955,6 +1129,16 @@ impl Cluster {
                             );
                             if next == probe_origin {
                                 self.terminate_laps += 1;
+                            }
+                            if lost {
+                                let f = cx
+                                    .faults
+                                    .expect("loss implies a schedule");
+                                let re = f.regen_at(at2);
+                                self.fault_stats.probes_lost += 1;
+                                self.fault_stats.probes_regenerated += 1;
+                                self.fault_stats.recovery_ps += re - at2;
+                                at2 = re;
                             }
                             debug_assert!(
                                 at2 >= horizon,
@@ -970,8 +1154,18 @@ impl Cluster {
                                 );
                         }
                         OpKind::Fetch { slot, tok } => {
-                            let t_done =
-                                replay_fetch(&cx, self.net.as_mut(), op.at, op.node, &tok);
+                            let info = cx.kernel_info(tok.task_id);
+                            let t_done = super::wire_fetch(
+                                self.net.as_mut(),
+                                cx.cfg,
+                                cx.faults,
+                                &mut self.fault_stats,
+                                &cx.dirs[info.app_idx],
+                                info.fetch_from_parent,
+                                op.at,
+                                op.node,
+                                &tok,
+                            );
                             debug_assert!(
                                 t_done >= horizon,
                                 "fetch completion inside the lookahead window"
@@ -1065,39 +1259,4 @@ impl Cluster {
         }
         r
     }
-}
-
-/// Timing half of the serial `fetch_remote`: the same wire calls, with
-/// the same `now` arguments, in the same order — stats were already
-/// booked in-window by [`Shard::book_fetch`].
-fn replay_fetch(
-    cx: &SharedCtx<'_>,
-    net: &mut dyn crate::net::Interconnect,
-    now: Ps,
-    n: usize,
-    tok: &TaskToken,
-) -> Ps {
-    let info = cx.kernel_info(tok.task_id);
-    if info.fetch_from_parent {
-        let src = tok.from_node as usize;
-        debug_assert_ne!(src, n, "all-local fetch deferred to the barrier");
-        let words = tok.remote.len() as u64;
-        let req_at = net.send_ctrl(cx.cfg, now, n, src, WIRE_BYTES);
-        return net.send_data(cx.cfg, req_at, src, n, words * WORD_BYTES);
-    }
-    let dir = &cx.dirs[info.app_idx];
-    let mut t_done = now;
-    let mut at = tok.remote.start;
-    while at < tok.remote.end {
-        let (owner, ext) = dir.owner_extent(at);
-        let end = tok.remote.end.min(ext.end);
-        let words = (end - at) as u64;
-        if owner != n {
-            let req_at = net.send_ctrl(cx.cfg, now, n, owner, WIRE_BYTES);
-            let got = net.send_data(cx.cfg, req_at, owner, n, words * WORD_BYTES);
-            t_done = t_done.max(got);
-        }
-        at = end;
-    }
-    t_done
 }

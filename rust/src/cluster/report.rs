@@ -112,6 +112,9 @@ pub struct RunReport {
     /// Numerics-engine activity attributable to this run (zeros when
     /// the run used the cycle model only, or a borrowed engine).
     pub engine: crate::runtime::EngineStats,
+    /// What the `--faults` schedule injected and what recovery cost
+    /// (all-zero — `faults.any()` false — on fault-free runs).
+    pub faults: crate::faults::FaultStats,
 }
 
 impl RunReport {
@@ -182,6 +185,8 @@ impl Cluster {
         let mut local_bytes = 0;
         let mut recv_stalls = 0;
         let mut terminate_seen = 0;
+        // cluster-wide fault counters plus the per-node ones
+        let mut faults = self.fault_stats;
         for nd in &self.nodes {
             let d = &nd.disp.stats;
             dispatcher.filtered += d.filtered;
@@ -220,6 +225,8 @@ impl Cluster {
             local_bytes += nd.stats.local_bytes;
             recv_stalls += nd.stats.recv_stalls;
             terminate_seen += nd.stats.terminate_seen;
+            faults.rehomed += nd.stats.rehomed_claims;
+            faults.stalls += nd.stats.fault_stalls;
         }
         let app_latency = self
             .apps
@@ -274,6 +281,7 @@ impl Cluster {
             recv_stalls,
             terminate_seen,
             engine: Default::default(),
+            faults,
         }
     }
 }

@@ -7,7 +7,7 @@ use crate::node::{Compute, SW_TOKEN_OVERHEAD_CYCLES};
 use crate::obs::TraceEv;
 use crate::runtime::Engine;
 use crate::sim::Engine as Des;
-use crate::token::{TaskToken, WIRE_BYTES};
+use crate::token::TaskToken;
 
 use super::events::{Arrival, Ev};
 use super::report::RunReport;
@@ -170,6 +170,12 @@ impl Cluster {
                     self.exec_or_requeue(&mut des, now, n, t, &mut engine);
                     self.schedule_pump(&mut des, now, n, &mut pump_pending);
                 }
+                Ev::Relaunch(n, tok) => {
+                    // a lost token's home-node lease fired: release the
+                    // quiescence hold and deliver the retry locally
+                    self.nodes[n].pending_leases -= 1;
+                    self.on_arrive(&mut des, now, n, tok, &mut pump_pending);
+                }
             }
         }
 
@@ -263,6 +269,18 @@ impl Cluster {
         if self.nodes[n].done {
             return;
         }
+        // Fault stall window: the dispatcher is frozen, so this pump is
+        // deferred to the window's end. Arrive/Complete/DataReady still
+        // process (queues fill, compute drains) — only dispatch stops,
+        // and `pump_pending` stays set so nothing re-pumps early.
+        if let Some(f) = self.faults.as_ref() {
+            if let Some(resume) = f.stall_until(n, now) {
+                self.nodes[n].stats.fault_stalls += 1;
+                pending[n] = true;
+                des.schedule_at(resume, Ev::Pump(n));
+                return;
+            }
+        }
         let mut progress = false;
 
         // drain upstream link buffers into recv as space frees
@@ -313,15 +331,34 @@ impl Cluster {
                     self.nodes[n].touch();
                 }
             } else {
-                let local = self.filter_range(n, &tok);
+                let ai = self.kernel(tok.task_id).app_idx;
+                let (local, rehomed) = super::fault_local(
+                    self.faults.as_ref(),
+                    &self.dirs[ai],
+                    n,
+                    now,
+                    tok.task,
+                );
                 let ctx = crate::sched::SchedCtx { nodes: self.nodes.len() };
-                let out = self.policy.classify(&tok, local, &ctx);
+                let mut out = self.policy.classify(&tok, local, &ctx);
+                if rehomed {
+                    // adopted work: the kept pieces must fetch their
+                    // range from the dropped owner's storage (wire
+                    // tokens re-classify at their own stop, unmarked)
+                    for p in out.wait.iter_mut() {
+                        p.rehomed = true;
+                    }
+                }
                 let case = out.case;
                 let kept =
                     if out.wait.len() == 1 { Some(out.wait[0].task) } else { None };
+                let claimed = out.wait.len() as u64;
                 if self.nodes[n].disp.process_outcome(tok, out).is_ok() {
                     self.nodes[n].disp.recv.pop();
                     self.nodes[n].touch();
+                    if rehomed {
+                        self.nodes[n].stats.rehomed_claims += claimed;
+                    }
                     progress = true;
                     if self.obs.trace_on() {
                         self.obs.trace(
@@ -373,11 +410,29 @@ impl Cluster {
             // fabrics that ignore the hint — the default ring's send
             // drain stays exactly the seed hot path
             let dest = if self.net.routes_by_dest() {
-                self.token_home(n, &t)
+                let d = self.token_home(n, &t);
+                // detour: steer toward the dropped home's adopter
+                // instead (pure Ring routing ignores the hint, so no
+                // detour exists — or is counted — there)
+                match self.faults.as_ref() {
+                    Some(f) if f.dropped(d, now) => {
+                        self.fault_stats.detours += 1;
+                        f.redirect(d, now)
+                    }
+                    _ => d,
+                }
             } else {
                 n // "no better direction": advance the coverage cycle
             };
             let (at, next) = self.net.send_token(&self.cfg, now, n, dest);
+            let at = super::stretch(
+                self.faults.as_ref(),
+                &mut self.fault_stats,
+                now,
+                at,
+                n,
+                next,
+            );
             self.obs.trace(
                 now,
                 n,
@@ -390,7 +445,36 @@ impl Cluster {
                     arrive: at,
                 },
             );
-            des.schedule_at(at, Ev::Arrive(next, t));
+            // Loss draw (send_token already ran, so the wire counters
+            // match a faultless hop — the token vanished en route): the
+            // home node holds a lease and re-injects after a backoff.
+            let lost = match self.faults.as_ref() {
+                Some(f) => f.token_lost(n, now, &t),
+                None => false,
+            };
+            if lost {
+                let f = self.faults.as_ref().expect("loss implies a schedule");
+                let lease = f.lease_at(now, t.retries);
+                self.obs.trace(
+                    now,
+                    n,
+                    TraceEv::TokenLost {
+                        task: t.task_id,
+                        start: t.task.start,
+                        end: t.task.end,
+                        retries: t.retries,
+                        resume: lease,
+                    },
+                );
+                self.fault_stats.tokens_lost += 1;
+                self.fault_stats.tokens_reinjected += 1;
+                self.fault_stats.recovery_ps += lease.saturating_sub(at);
+                self.nodes[n].pending_leases += 1;
+                t.retries = t.retries.saturating_add(1);
+                des.schedule_at(lease, Ev::Relaunch(n, t));
+            } else {
+                des.schedule_at(at, Ev::Arrive(next, t));
+            }
             progress = true;
         }
 
@@ -429,22 +513,22 @@ impl Cluster {
                 return progress;
             };
             // (4) unavoidable remote data: acquire through the DTN and
-            // park the token until DataReady.
-            if tok.needs_remote_data() {
+            // park the token until DataReady. A re-homed token's
+            // adopted task range lives on its dropped owner's storage,
+            // so it always takes this path too.
+            if tok.needs_remote_data() || tok.rehomed {
                 self.nodes[n].disp.wait.pop();
+                let words = tok.remote.len()
+                    + if tok.rehomed { tok.task.len() } else { 0 };
                 self.obs.trace(
                     now,
                     n,
-                    TraceEv::Fetch {
-                        task: tok.task_id,
-                        words: tok.remote.len(),
-                    },
+                    TraceEv::Fetch { task: tok.task_id, words },
                 );
                 let ready_at = self.fetch_remote(now, n, &tok);
                 let slot = self.nodes[n].fetching.park(tok);
                 self.nodes[n].stats.fetches += 1;
-                self.nodes[n].stats.fetched_bytes +=
-                    tok.remote.len() as u64 * WORD_BYTES;
+                self.nodes[n].stats.fetched_bytes += words as u64 * WORD_BYTES;
                 des.schedule_at(ready_at, Ev::DataReady(n, slot));
                 progress = true;
                 continue; // head-of-line cleared; consider the next
@@ -542,8 +626,9 @@ impl Cluster {
         // (a streaming anchor, or rows re-read once per acquired
         // segment), so booking it would skew the metric by layout;
         // their data reads were booked segment-by-segment at fetch
-        // time instead.
-        if !tok.needs_remote_data() {
+        // time instead. Re-homed tokens' adopted ranges were likewise
+        // booked (as remote touches) at fetch time.
+        if !tok.needs_remote_data() && !tok.rehomed {
             self.nodes[n].stats.touched_words += tok.task.len() as u64;
             self.nodes[n].stats.local_hit_words += tok.task.len() as u64;
             self.app_stats[app_idx].touched_words += tok.task.len() as u64;
@@ -572,15 +657,22 @@ impl Cluster {
         des.schedule_at(done, Ev::Complete(n, slot));
     }
 
-    /// `ARENA_data_acquire`: pull `tok.remote` over the data-transfer
-    /// network — from the range's home node(s) per the directory, or
-    /// from the token's parent for streaming kernels. Returns the
-    /// completion time and books the locality counters (per node and
-    /// per app).
+    /// `ARENA_data_acquire`: pull `tok.remote` (and, for a re-homed
+    /// token, its adopted task range) over the data-transfer network —
+    /// from the range's home node(s) per the directory, or from the
+    /// token's parent for streaming kernels. Returns the completion
+    /// time and books the locality counters (per node and per app); the
+    /// wire walk itself — including fault-schedule fetch retries and
+    /// degraded-link stretching — is the shared [`super::wire_fetch`],
+    /// so the sharded engine's barrier replay makes the identical call
+    /// sequence.
     fn fetch_remote(&mut self, now: Ps, n: usize, tok: &TaskToken) -> Ps {
         let info = self.kernel(tok.task_id);
         let app_idx = info.app_idx;
-        if info.fetch_from_parent {
+        let fetch_from_parent = info.fetch_from_parent;
+        // stat walk — byte-for-byte the shard's `book_fetch`
+        let mut any_remote = false;
+        if fetch_from_parent {
             // the spawning node's scratchpad holds a live copy
             let src = tok.from_node as usize;
             let words = tok.remote.len() as u64;
@@ -589,36 +681,76 @@ impl Cluster {
             if src == n {
                 self.nodes[n].stats.local_hit_words += words;
                 self.app_stats[app_idx].local_hit_words += words;
-                return now;
+            } else if !tok.remote.is_empty() {
+                any_remote = true;
             }
-            // request header is control traffic, the payload is data
-            let req_at = self.net.send_ctrl(&self.cfg, now, n, src, WIRE_BYTES);
-            return self.net.send_data(&self.cfg, req_at, src, n, words * WORD_BYTES);
-        }
-        // walk the remote range extent by extent (owner lookup is the
-        // directory's O(1)/O(log n) hot path, not a linear scan)
-        let Cluster { dirs, net, cfg, nodes, app_stats, .. } = self;
-        let dir = &dirs[app_idx];
-        let mut t_done = now;
-        let mut at = tok.remote.start;
-        while at < tok.remote.end {
-            let (owner, ext) = dir.owner_extent(at);
-            let end = tok.remote.end.min(ext.end);
-            let words = (end - at) as u64;
-            nodes[n].stats.touched_words += words;
-            app_stats[app_idx].touched_words += words;
-            if owner != n {
-                // request message out (control), payload back (data).
-                let req_at = net.send_ctrl(cfg, now, n, owner, WIRE_BYTES);
-                let got =
-                    net.send_data(cfg, req_at, owner, n, words * WORD_BYTES);
-                t_done = t_done.max(got);
-            } else {
-                nodes[n].stats.local_hit_words += words;
-                app_stats[app_idx].local_hit_words += words;
+        } else {
+            // walk the remote range extent by extent (owner lookup is
+            // the directory's O(1)/O(log n) hot path, not a scan)
+            let dir = &self.dirs[app_idx];
+            let mut at = tok.remote.start;
+            while at < tok.remote.end {
+                let (owner, ext) = dir.owner_extent(at);
+                let end = tok.remote.end.min(ext.end);
+                let words = (end - at) as u64;
+                self.nodes[n].stats.touched_words += words;
+                self.app_stats[app_idx].touched_words += words;
+                if owner == n {
+                    self.nodes[n].stats.local_hit_words += words;
+                    self.app_stats[app_idx].local_hit_words += words;
+                } else {
+                    any_remote = true;
+                }
+                at = end;
             }
-            at = end;
         }
-        t_done
+        if tok.rehomed {
+            // the adopted range is homed on the dropped owner: every
+            // word is a remote touch (never a local hit at the adopter)
+            let dir = &self.dirs[app_idx];
+            let mut at = tok.task.start;
+            while at < tok.task.end {
+                let (owner, ext) = dir.owner_extent(at);
+                let end = tok.task.end.min(ext.end);
+                let words = (end - at) as u64;
+                self.nodes[n].stats.touched_words += words;
+                self.app_stats[app_idx].touched_words += words;
+                if owner == n {
+                    self.nodes[n].stats.local_hit_words += words;
+                    self.app_stats[app_idx].local_hit_words += words;
+                } else {
+                    any_remote = true;
+                }
+                at = end;
+            }
+        }
+        if !any_remote {
+            return now;
+        }
+        // failed-attempt trace rows precede the wire walk (each is a
+        // request that went out and timed out)
+        if self.obs.trace_on() {
+            if let Some(f) = self.faults.as_ref() {
+                for a in 0..f.fetch_fail_count(n, now, tok) {
+                    self.obs.trace(
+                        now,
+                        n,
+                        TraceEv::FetchFail { task: tok.task_id, attempt: a },
+                    );
+                }
+            }
+        }
+        let Cluster { dirs, net, cfg, faults, fault_stats, .. } = self;
+        super::wire_fetch(
+            net.as_mut(),
+            cfg,
+            faults.as_ref(),
+            fault_stats,
+            &dirs[app_idx],
+            fetch_from_parent,
+            now,
+            n,
+            tok,
+        )
     }
 }

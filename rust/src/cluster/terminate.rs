@@ -46,11 +46,38 @@ impl Cluster {
             // the last node swallows the probe so the DES can drain
             return;
         }
+        // Probe loss only delays delivery: the visit/lap accounting
+        // below happens at forward time either way, so a regenerated
+        // probe still counts exact coverage laps (the loss cost shows
+        // up purely as recovery time before the next node sees it).
+        let lost = match self.faults.as_ref() {
+            Some(f) => f.probe_lost(n, now),
+            None => false,
+        };
+        if lost {
+            self.obs.trace(now, n, crate::obs::TraceEv::ProbeLost);
+        }
         let at = self.net.probe_hop(&self.cfg, now, n);
         let next = self.net.next_hop(n);
+        let mut at = super::stretch(
+            self.faults.as_ref(),
+            &mut self.fault_stats,
+            now,
+            at,
+            n,
+            next,
+        );
         note_probe_visit(&mut self.probe_visited, self.probe_origin, n, next);
         if next == self.probe_origin {
             self.terminate_laps += 1;
+        }
+        if lost {
+            let f = self.faults.as_ref().expect("loss implies a schedule");
+            let re = f.regen_at(at);
+            self.fault_stats.probes_lost += 1;
+            self.fault_stats.probes_regenerated += 1;
+            self.fault_stats.recovery_ps += re - at;
+            at = re;
         }
         des.schedule_at(at, Ev::Arrive(next, TaskToken::terminate()));
     }
@@ -129,6 +156,59 @@ mod tests {
             || note_probe_visit(&mut v, 0, 2, 0),
         ));
         assert!(r.is_err(), "wrap without full coverage must assert");
+    }
+
+    #[test]
+    fn nonzero_origin_lap_resets_on_wrap_to_origin() {
+        let mut v = vec![false; 4];
+        // probe injected at node 2: coverage order 2 → 3 → 0 → 1 → (2)
+        note_probe_visit(&mut v, 2, 2, 3);
+        note_probe_visit(&mut v, 2, 3, 0);
+        note_probe_visit(&mut v, 2, 0, 1);
+        note_probe_visit(&mut v, 2, 1, 2);
+        assert!(v.iter().all(|&x| !x), "wrap to origin must re-arm");
+    }
+
+    /// A heavily lossy probe (`ploss:0.9` swallows ~9 of 10 hops) still
+    /// terminates every topology with exact coverage-lap accounting:
+    /// loss only delays delivery, the visit/lap bookkeeping happens at
+    /// forward time, and the debug-build scoreboard asserts inside the
+    /// run if a regenerated probe ever skips or repeats a node.
+    #[test]
+    fn lost_probes_regenerate_with_exact_lap_accounting() {
+        for topo in Topology::ALL {
+            let cfg = ArenaConfig::default()
+                .with_nodes(4)
+                .with_seed(11)
+                .with_topology(topo)
+                .with_faults("ploss:0.9");
+            let mut cl = Cluster::new(
+                cfg,
+                Model::SoftwareCpu,
+                vec![make_app("sssp", Scale::Small, 11)],
+            );
+            let r = cl.run(None);
+            cl.check().unwrap_or_else(|e| {
+                panic!("sssp oracle failed on {topo:?}: {e}")
+            });
+            assert!(
+                r.terminate_laps >= 1,
+                "{topo:?}: {} coverage laps under probe loss",
+                r.terminate_laps
+            );
+            assert!(
+                r.faults.probes_lost > 0,
+                "{topo:?}: ploss 0.9 never fired"
+            );
+            assert_eq!(
+                r.faults.probes_lost, r.faults.probes_regenerated,
+                "{topo:?}: every lost probe must be regenerated"
+            );
+            assert!(
+                r.faults.recovery_ps > 0,
+                "{topo:?}: regeneration must cost simulated time"
+            );
+        }
     }
 
     /// Regression for the coverage-cycle contract: every topology's

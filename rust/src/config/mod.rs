@@ -89,6 +89,11 @@ pub struct ArenaConfig {
     /// Metrics sampling interval in simulated picoseconds
     /// (`--metrics-interval-ps N`; default 1 µs).
     pub metrics_interval_ps: Ps,
+    /// Fault-injection spec (`arena run --faults SPEC`; "" = fault-free,
+    /// the default — grammar and recovery semantics in
+    /// [`crate::faults`]). Validated by [`ArenaConfig::validate`] so a
+    /// bad spec fails at the CLI, not mid-run.
+    pub faults: String,
     /// Workload RNG seed (also feeds the `shuffle` placement).
     pub seed: u64,
 }
@@ -155,6 +160,7 @@ impl Default for ArenaConfig {
             trace_out: String::new(),
             metrics_out: String::new(),
             metrics_interval_ps: PS_PER_US,
+            faults: String::new(),
             seed: 0xA2EA,
         }
     }
@@ -234,6 +240,11 @@ impl ArenaConfig {
 
     pub fn with_metrics_interval_ps(mut self, interval: Ps) -> Self {
         self.metrics_interval_ps = interval;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: &str) -> Self {
+        self.faults = faults.to_string();
         self
     }
 
@@ -333,6 +344,7 @@ impl ArenaConfig {
             "metrics_interval_ps" => {
                 next.metrics_interval_ps = parse!(val)
             }
+            "faults" => next.faults = val.to_string(),
             "seed" => next.seed = parse_seed(val).map_err(bad!())?,
             _ => return Err(ConfigError::UnknownKey(key.into())),
         }
@@ -383,6 +395,15 @@ impl ArenaConfig {
                  fraction in [0, 1]",
                 self.theta_pm as f64 / 1000.0
             )));
+        }
+        if !self.faults.is_empty() {
+            // grammar first, then node indices against the ring size —
+            // here (not in `assign`) so a config file stays key-order
+            // independent
+            let spec = crate::faults::FaultSpec::parse(&self.faults)
+                .map_err(|e| ConfigError::Invalid(format!("faults: {e}")))?;
+            spec.check(self.nodes)
+                .map_err(|e| ConfigError::Invalid(format!("faults: {e}")))?;
         }
         Ok(())
     }
@@ -444,6 +465,7 @@ impl ArenaConfig {
             "metrics_interval_ps",
             self.metrics_interval_ps.to_string(),
         );
+        m.insert("faults", self.faults.clone());
         m.insert("seed", self.seed.to_string());
         m.iter()
             .map(|(k, v)| format!("{k} = {v}\n"))
@@ -627,6 +649,35 @@ mod tests {
             ArenaConfig::load(&path).unwrap(),
             ArenaConfig::default()
         );
+    }
+
+    #[test]
+    fn faults_knob_is_validated_and_round_trips() {
+        let mut c = ArenaConfig::default();
+        assert!(c.faults.is_empty(), "fault-free is the default");
+        c.set("faults", "loss:0.05,stall@1:2us-6us,drop@2:1ms").unwrap();
+        assert_eq!(c.faults, "loss:0.05,stall@1:2us-6us,drop@2:1ms");
+        // the grammar and the node indices are both validated
+        let err = c.set("faults", "loss:2.0").unwrap_err();
+        assert!(err.to_string().contains("faults:"), "{err}");
+        assert!(c.set("faults", "drop@9:1us").is_err());
+        // shrinking the ring under a fault clause is rejected too
+        assert!(c.set("nodes", "2").is_err());
+        // round-trips through dump/load (incl. the empty default)
+        let dir = std::env::temp_dir().join("arena_cfg_faults_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.txt");
+        std::fs::write(&path, c.dump()).unwrap();
+        assert_eq!(ArenaConfig::load(&path).unwrap(), c);
+        std::fs::write(&path, ArenaConfig::default().dump()).unwrap();
+        assert!(ArenaConfig::load(&path).unwrap().faults.is_empty());
+        // a file that drops a node the default ring lacks fails at the
+        // end of the load, not mid-parse ("faults" < "nodes" in the
+        // alphabetical dump)
+        std::fs::write(&path, "faults = drop@5:1us\nnodes = 8\n").unwrap();
+        assert_eq!(ArenaConfig::load(&path).unwrap().nodes, 8);
+        std::fs::write(&path, "faults = drop@5:1us\n").unwrap();
+        assert!(ArenaConfig::load(&path).is_err());
     }
 
     #[test]

@@ -1,0 +1,689 @@
+//! Deterministic fault injection: a seeded, simulated-time fault
+//! schedule compiled from a `--faults SPEC` string, plus the counters
+//! the recovery machinery books while keeping a faulted run completing.
+//!
+//! The schedule is **stateless**: every draw (was this hop's token
+//! lost? did this DTN attempt fail?) is a pure hash of the run seed and
+//! the draw's simulated coordinates (node, picosecond, token identity,
+//! attempt number). That is what makes fault runs shard-invariant — the
+//! serial engine draws at dispatch time while the sharded engine draws
+//! once in-window (for the trace record) and again at replay (for the
+//! stats and the re-injection event), and both see the same answer
+//! because nothing about the draw depends on engine-private state.
+//!
+//! Spec grammar (comma-separated clauses, no spaces):
+//!
+//! - `loss:P`       — each token forward is lost with probability `P`
+//! - `ploss:P`      — each TERMINATE probe hop is lost with prob. `P`
+//! - `fetchfail:P`  — each DTN fetch attempt fails with probability `P`
+//! - `stall@N:S-E`  — node `N`'s dispatcher stalls over `[S, E)`
+//! - `drop@N:T`     — node `N`'s compute is permanently dead from `T`
+//! - `delay@A-B:M`  — forwards departing `A` for `B` take `M`× as long
+//! - `retries:K`    — per-token loss budget (default 8)
+//! - `lease:T`      — base token-lease timeout before re-injection
+//! - `regen:T`      — extra delay a regenerated probe pays
+//! - `fetchwait:T`  — backoff between DTN fetch attempts
+//!
+//! Times are integers with a `ps`, `ns`, `us` or `ms` suffix (bare
+//! integers are picoseconds). A dropped node is compute-dead but
+//! storage-alive: it still conveys tokens, forwards probes and serves
+//! DTN fetches, so in-flight work drains instead of vanishing.
+
+use std::fmt;
+
+use crate::config::Ps;
+use crate::token::TaskToken;
+
+/// SplitMix64 finalizer — the same mixer the placement layer uses, kept
+/// local so the fault stream never aliases another consumer's stream.
+#[inline]
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Chain one coordinate into a draw hash.
+#[inline]
+fn absorb(h: u64, x: u64) -> u64 {
+    mix64(h.wrapping_add(GOLDEN).wrapping_add(x))
+}
+
+/// Bernoulli(p) from a finished hash: compare the top 53 bits against
+/// `p` scaled to the same lattice, so `p = 0.0` never hits and any
+/// `p < 1.0` misses infinitely often.
+#[inline]
+fn hit(h: u64, p: f64) -> bool {
+    (h >> 11) < (p * (1u64 << 53) as f64) as u64
+}
+
+/// Draw-stream tags, absorbed first so the token/probe/fetch streams
+/// never collide even when the remaining coordinates match.
+const TAG_TOKEN: u64 = 1;
+const TAG_PROBE: u64 = 2;
+const TAG_FETCH: u64 = 3;
+
+/// A parsed `--faults` spec: the pure description, before it is bound
+/// to a seed and a topology lookahead by [`FaultSchedule::compile`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Per-forward token loss probability.
+    pub loss: f64,
+    /// Per-hop TERMINATE probe loss probability.
+    pub ploss: f64,
+    /// Per-attempt DTN fetch failure probability.
+    pub fetchfail: f64,
+    /// Dispatcher stall windows: `(node, start, end)` over `[start, end)`.
+    pub stalls: Vec<(usize, Ps, Ps)>,
+    /// Permanent compute drops: `(node, at)`.
+    pub drops: Vec<(usize, Ps)>,
+    /// Directed-link delay multipliers: `(from, to, mult)`.
+    pub delays: Vec<(usize, usize, u64)>,
+    /// Loss budget per token before the schedule stops losing it.
+    pub max_retries: u8,
+    /// Base lease timeout (doubles per retry) before re-injection.
+    pub lease_ps: Ps,
+    /// Extra latency a regenerated probe pays.
+    pub regen_ps: Ps,
+    /// Backoff between DTN fetch attempts.
+    pub fetchwait_ps: Ps,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            loss: 0.0,
+            ploss: 0.0,
+            fetchfail: 0.0,
+            stalls: Vec::new(),
+            drops: Vec::new(),
+            delays: Vec::new(),
+            max_retries: 8,
+            lease_ps: 2_000_000,
+            regen_ps: 2_000_000,
+            fetchwait_ps: 1_000_000,
+        }
+    }
+}
+
+/// Parse `123`, `123ps`, `5ns`, `2us`, `1ms` into picoseconds.
+fn parse_ps(s: &str) -> Result<Ps, String> {
+    let (digits, scale) = if let Some(d) = s.strip_suffix("ps") {
+        (d, 1u64)
+    } else if let Some(d) = s.strip_suffix("ns") {
+        (d, 1_000)
+    } else if let Some(d) = s.strip_suffix("us") {
+        (d, 1_000_000)
+    } else if let Some(d) = s.strip_suffix("ms") {
+        (d, 1_000_000_000)
+    } else {
+        (s, 1)
+    };
+    let v: u64 = digits
+        .parse()
+        .map_err(|_| format!("bad time '{s}' (integer + ps|ns|us|ms)"))?;
+    v.checked_mul(scale).ok_or_else(|| format!("time '{s}' overflows"))
+}
+
+/// Render picoseconds with the largest suffix that divides evenly, so
+/// `Display` round-trips through `parse_ps` canonically.
+fn fmt_ps(ps: Ps) -> String {
+    for (scale, suffix) in
+        [(1_000_000_000u64, "ms"), (1_000_000, "us"), (1_000, "ns")]
+    {
+        if ps >= scale && ps % scale == 0 {
+            return format!("{}{suffix}", ps / scale);
+        }
+    }
+    format!("{ps}ps")
+}
+
+fn parse_prob(s: &str, what: &str) -> Result<f64, String> {
+    let p: f64 =
+        s.parse().map_err(|_| format!("bad {what} probability '{s}'"))?;
+    if !(0.0..1.0).contains(&p) {
+        return Err(format!("{what} probability {p} outside [0, 1)"));
+    }
+    Ok(p)
+}
+
+impl FaultSpec {
+    /// Parse a comma-separated spec string. An empty string is the
+    /// default (fault-free) spec; unknown clauses are errors.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for clause in s.split(',').filter(|c| !c.is_empty()) {
+            let (head, val) = clause
+                .split_once(':')
+                .ok_or_else(|| format!("clause '{clause}' has no ':'"))?;
+            match head.split_once('@') {
+                None => match head {
+                    "loss" => spec.loss = parse_prob(val, "loss")?,
+                    "ploss" => spec.ploss = parse_prob(val, "ploss")?,
+                    "fetchfail" => {
+                        spec.fetchfail = parse_prob(val, "fetchfail")?;
+                    }
+                    "retries" => {
+                        let k: u8 = val.parse().map_err(|_| {
+                            format!("bad retries '{val}' (1-255)")
+                        })?;
+                        if k == 0 {
+                            return Err("retries must be >= 1".into());
+                        }
+                        spec.max_retries = k;
+                    }
+                    "lease" => spec.lease_ps = parse_ps(val)?,
+                    "regen" => spec.regen_ps = parse_ps(val)?,
+                    "fetchwait" => spec.fetchwait_ps = parse_ps(val)?,
+                    _ => return Err(format!("unknown clause '{clause}'")),
+                },
+                Some(("stall", node)) => {
+                    let n = parse_node(node)?;
+                    let (s0, s1) = val.split_once('-').ok_or_else(|| {
+                        format!("stall window '{val}' is not START-END")
+                    })?;
+                    let (start, end) = (parse_ps(s0)?, parse_ps(s1)?);
+                    if start >= end {
+                        return Err(format!(
+                            "stall window '{val}' is empty"
+                        ));
+                    }
+                    spec.stalls.push((n, start, end));
+                }
+                Some(("drop", node)) => {
+                    spec.drops.push((parse_node(node)?, parse_ps(val)?));
+                }
+                Some(("delay", link)) => {
+                    let (a, b) = link.split_once('-').ok_or_else(|| {
+                        format!("delay link '{link}' is not FROM-TO")
+                    })?;
+                    let (from, to) = (parse_node(a)?, parse_node(b)?);
+                    if from == to {
+                        return Err(format!("delay link '{link}' is a self-loop"));
+                    }
+                    let m: u64 = val.parse().map_err(|_| {
+                        format!("bad delay multiplier '{val}'")
+                    })?;
+                    if m < 1 {
+                        return Err("delay multiplier must be >= 1".into());
+                    }
+                    spec.delays.push((from, to, m));
+                }
+                Some((other, _)) => {
+                    return Err(format!("unknown clause '{other}@...'"));
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Validate node indices against the ring size and reject schedules
+    /// no recovery path can survive (every node dropped).
+    pub fn check(&self, nodes: usize) -> Result<(), String> {
+        let bound = |n: usize, what: &str| {
+            if n >= nodes {
+                Err(format!("{what} node {n} >= nodes {nodes}"))
+            } else {
+                Ok(())
+            }
+        };
+        for &(n, _, _) in &self.stalls {
+            bound(n, "stall")?;
+        }
+        for &(n, _) in &self.drops {
+            bound(n, "drop")?;
+            if self.drops.iter().filter(|&&(m, _)| m == n).count() > 1 {
+                return Err(format!("node {n} dropped twice"));
+            }
+        }
+        for &(a, b, _) in &self.delays {
+            bound(a, "delay")?;
+            bound(b, "delay")?;
+        }
+        if (0..nodes).all(|n| self.drops.iter().any(|&(m, _)| m == n)) {
+            return Err("every node is dropped; nothing can adopt work".into());
+        }
+        Ok(())
+    }
+}
+
+fn parse_node(s: &str) -> Result<usize, String> {
+    s.parse().map_err(|_| format!("bad node index '{s}'"))
+}
+
+impl fmt::Display for FaultSpec {
+    /// Canonical clause order: probabilities, windows, drops, delays,
+    /// then tuning — round-trips through [`FaultSpec::parse`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts: Vec<String> = Vec::new();
+        if self.loss > 0.0 {
+            parts.push(format!("loss:{}", self.loss));
+        }
+        if self.ploss > 0.0 {
+            parts.push(format!("ploss:{}", self.ploss));
+        }
+        if self.fetchfail > 0.0 {
+            parts.push(format!("fetchfail:{}", self.fetchfail));
+        }
+        for &(n, s, e) in &self.stalls {
+            parts.push(format!("stall@{n}:{}-{}", fmt_ps(s), fmt_ps(e)));
+        }
+        for &(n, at) in &self.drops {
+            parts.push(format!("drop@{n}:{}", fmt_ps(at)));
+        }
+        for &(a, b, m) in &self.delays {
+            parts.push(format!("delay@{a}-{b}:{m}"));
+        }
+        let d = FaultSpec::default();
+        if self.max_retries != d.max_retries {
+            parts.push(format!("retries:{}", self.max_retries));
+        }
+        if self.lease_ps != d.lease_ps {
+            parts.push(format!("lease:{}", fmt_ps(self.lease_ps)));
+        }
+        if self.regen_ps != d.regen_ps {
+            parts.push(format!("regen:{}", fmt_ps(self.regen_ps)));
+        }
+        if self.fetchwait_ps != d.fetchwait_ps {
+            parts.push(format!("fetchwait:{}", fmt_ps(self.fetchwait_ps)));
+        }
+        write!(f, "{}", parts.join(","))
+    }
+}
+
+/// A fault spec bound to a run: seed for the draw streams, ring size
+/// for dropped-node redirection, and the fabric lookahead so every
+/// recovery delay stays outside the sharded engine's current window.
+#[derive(Clone, Debug)]
+pub struct FaultSchedule {
+    spec: FaultSpec,
+    seed: u64,
+    nodes: usize,
+    lookahead: Ps,
+}
+
+impl FaultSchedule {
+    /// Compile a spec string against a run's seed, ring size and fabric
+    /// lookahead. The caller validates with [`FaultSpec::check`] first
+    /// (the config layer does) — this re-checks and reports both kinds
+    /// of error.
+    pub fn compile(
+        s: &str,
+        seed: u64,
+        nodes: usize,
+        lookahead: Ps,
+    ) -> Result<FaultSchedule, String> {
+        let spec = FaultSpec::parse(s)?;
+        spec.check(nodes)?;
+        Ok(FaultSchedule {
+            spec,
+            seed: mix64(seed ^ 0xFA17_FA17_FA17_FA17),
+            nodes,
+            lookahead: lookahead.max(1),
+        })
+    }
+
+    /// Is `node`'s compute permanently dead at `now`?
+    #[inline]
+    pub fn dropped(&self, node: usize, now: Ps) -> bool {
+        self.spec.drops.iter().any(|&(n, at)| n == node && now >= at)
+    }
+
+    /// The adopter for a dropped `owner` at `now`: the first live node
+    /// clockwise. [`FaultSpec::check`] guarantees one exists.
+    pub fn redirect(&self, owner: usize, now: Ps) -> usize {
+        for i in 1..self.nodes {
+            let n = (owner + i) % self.nodes;
+            if !self.dropped(n, now) {
+                return n;
+            }
+        }
+        owner
+    }
+
+    /// If `node`'s dispatcher is inside a stall window at `now`, the
+    /// time it resumes (the latest end over all covering windows).
+    pub fn stall_until(&self, node: usize, now: Ps) -> Option<Ps> {
+        self.spec
+            .stalls
+            .iter()
+            .filter(|&&(n, s, e)| n == node && s <= now && now < e)
+            .map(|&(_, _, e)| e)
+            .max()
+    }
+
+    /// Does the forward of `t` departing `node` at `now` get lost?
+    /// Tokens that spent their retry budget are never lost again, so a
+    /// faulted run always terminates.
+    pub fn token_lost(&self, node: usize, now: Ps, t: &TaskToken) -> bool {
+        if self.spec.loss <= 0.0 || t.retries >= self.spec.max_retries {
+            return false;
+        }
+        let mut h = absorb(self.seed, TAG_TOKEN);
+        for x in [
+            node as u64,
+            now,
+            t.task_id as u64,
+            t.task.start as u64,
+            t.task.end as u64,
+            t.param.to_bits() as u64,
+            t.from_node as u64,
+            t.hops as u64,
+            t.retries as u64,
+        ] {
+            h = absorb(h, x);
+        }
+        hit(h, self.spec.loss)
+    }
+
+    /// Does the TERMINATE probe hop departing `node` at `now` get lost?
+    pub fn probe_lost(&self, node: usize, now: Ps) -> bool {
+        if self.spec.ploss <= 0.0 {
+            return false;
+        }
+        let h = absorb(absorb(absorb(self.seed, TAG_PROBE), node as u64), now);
+        hit(h, self.spec.ploss)
+    }
+
+    /// How many consecutive DTN attempts fail before `t`'s fetch from
+    /// `node` at `now` succeeds (bounded by the retry budget).
+    pub fn fetch_fail_count(&self, node: usize, now: Ps, t: &TaskToken) -> u32 {
+        if self.spec.fetchfail <= 0.0 {
+            return 0;
+        }
+        let mut base = absorb(self.seed, TAG_FETCH);
+        for x in [
+            node as u64,
+            now,
+            t.task_id as u64,
+            t.task.start as u64,
+            t.task.end as u64,
+            t.remote.start as u64,
+            t.remote.end as u64,
+        ] {
+            base = absorb(base, x);
+        }
+        let mut k = 0u32;
+        while k < self.spec.max_retries as u32
+            && hit(absorb(base, k as u64), self.spec.fetchfail)
+        {
+            k += 1;
+        }
+        k
+    }
+
+    /// When the home node re-injects a token lost at `now`: base lease
+    /// doubling per retry (capped), never inside the lookahead window.
+    pub fn lease_at(&self, now: Ps, retries: u8) -> Ps {
+        let wait = self
+            .spec
+            .lease_ps
+            .saturating_mul(1 << retries.min(6))
+            .max(self.lookahead);
+        now.saturating_add(wait)
+    }
+
+    /// When a regenerated probe lands, given the lost hop would have
+    /// landed at `at`.
+    pub fn regen_at(&self, at: Ps) -> Ps {
+        at.saturating_add(self.spec.regen_ps.max(self.lookahead))
+    }
+
+    /// When the next DTN attempt starts after one that would have
+    /// completed at `ready`.
+    pub fn fetch_retry_at(&self, ready: Ps) -> Ps {
+        ready.saturating_add(self.spec.fetchwait_ps.max(1))
+    }
+
+    /// Apply the directed-link delay multiplier to a transfer departing
+    /// `from` for `to` at `now` that would land at `at`, booking the
+    /// hop when it actually stretched.
+    pub fn stretch(
+        &self,
+        stats: &mut FaultStats,
+        now: Ps,
+        at: Ps,
+        from: usize,
+        to: usize,
+    ) -> Ps {
+        for &(a, b, m) in &self.spec.delays {
+            if a == from && b == to && m > 1 && at > now {
+                let slow = now.saturating_add((at - now).saturating_mul(m));
+                if slow != at {
+                    stats.delayed_hops += 1;
+                }
+                return slow;
+            }
+        }
+        at
+    }
+}
+
+/// What the fault schedule injected and what recovery cost — part of
+/// every [`crate::cluster::RunReport`]; all-zero on fault-free runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Token forwards the schedule swallowed.
+    pub tokens_lost: u64,
+    /// Lost tokens re-injected by their home node's lease.
+    pub tokens_reinjected: u64,
+    /// TERMINATE probe hops the schedule swallowed.
+    pub probes_lost: u64,
+    /// Probes regenerated after a loss.
+    pub probes_regenerated: u64,
+    /// DTN fetch attempts that failed.
+    pub fetches_failed: u64,
+    /// Fetches that needed at least one retry.
+    pub fetches_retried: u64,
+    /// Token forwards re-routed around a dropped home node.
+    pub detours: u64,
+    /// Wait pieces adopted from a dropped owner's partition.
+    pub rehomed: u64,
+    /// Dispatcher pumps deferred by a stall window.
+    pub stalls: u64,
+    /// Transfers stretched by a degraded link.
+    pub delayed_hops: u64,
+    /// Simulated time spent recovering (leases, regen, fetch retries).
+    pub recovery_ps: u64,
+}
+
+impl FaultStats {
+    /// Did any fault fire (and therefore any recovery path run)?
+    pub fn any(&self) -> bool {
+        *self != FaultStats::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::token::Range;
+
+    fn sched(spec: &str) -> FaultSchedule {
+        FaultSchedule::compile(spec, 42, 4, 1000).expect("valid spec")
+    }
+
+    fn token() -> TaskToken {
+        TaskToken::new(3, Range { start: 100, end: 200 }, 1.5)
+    }
+
+    #[test]
+    fn empty_spec_is_fault_free() {
+        let f = sched("");
+        let t = token();
+        assert!(!f.token_lost(0, 5_000, &t));
+        assert!(!f.probe_lost(1, 5_000));
+        assert_eq!(f.fetch_fail_count(2, 5_000, &t), 0);
+        assert!(!f.dropped(0, u64::MAX));
+        assert_eq!(f.stall_until(0, 0), None);
+    }
+
+    #[test]
+    fn grammar_round_trips_through_display() {
+        for spec in [
+            "loss:0.1",
+            "loss:0.1,ploss:0.05,fetchfail:0.2",
+            "stall@1:2us-6us,drop@2:1ms,delay@0-1:4",
+            "retries:3,lease:5us,regen:2us,fetchwait:500ns",
+            "loss:0.02,stall@0:1ns-1us,drop@3:0ps,delay@3-0:2,retries:1",
+        ] {
+            let parsed = FaultSpec::parse(spec).expect(spec);
+            let rendered = parsed.to_string();
+            assert_eq!(
+                FaultSpec::parse(&rendered).expect(&rendered),
+                parsed,
+                "{spec} -> {rendered} did not round-trip"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for (spec, needle) in [
+            ("loss:1.5", "outside"),
+            ("loss:x", "probability"),
+            ("bogus:1", "unknown clause"),
+            ("frob@1:2", "unknown clause"),
+            ("loss", "no ':'"),
+            ("stall@1:9us-2us", "empty"),
+            ("stall@1:2us", "START-END"),
+            ("delay@2-2:3", "self-loop"),
+            ("delay@0-1:0", ">= 1"),
+            ("retries:0", ">= 1"),
+            ("drop@a:1us", "node index"),
+            ("lease:12xs", "bad time"),
+        ] {
+            let err = FaultSpec::parse(spec).expect_err(spec);
+            assert!(err.contains(needle), "{spec}: '{err}' lacks '{needle}'");
+        }
+    }
+
+    #[test]
+    fn check_bounds_nodes_and_keeps_one_alive() {
+        let ok = FaultSpec::parse("drop@3:1us,stall@2:1us-2us").unwrap();
+        assert!(ok.check(4).is_ok());
+        assert!(ok.check(3).unwrap_err().contains(">= nodes"));
+        let all = FaultSpec::parse("drop@0:1us,drop@1:2us").unwrap();
+        assert!(all.check(2).unwrap_err().contains("every node"));
+        let twice = FaultSpec::parse("drop@1:1us,drop@1:2us").unwrap();
+        assert!(twice.check(4).unwrap_err().contains("twice"));
+    }
+
+    #[test]
+    fn draws_are_pure_functions_of_their_coordinates() {
+        let f = sched("loss:0.5,ploss:0.5,fetchfail:0.5");
+        let t = token();
+        for node in 0..4usize {
+            for now in [0u64, 1_000, 999_999] {
+                assert_eq!(
+                    f.token_lost(node, now, &t),
+                    f.token_lost(node, now, &t)
+                );
+                assert_eq!(f.probe_lost(node, now), f.probe_lost(node, now));
+                assert_eq!(
+                    f.fetch_fail_count(node, now, &t),
+                    f.fetch_fail_count(node, now, &t)
+                );
+            }
+        }
+        // a p=0.5 stream must show both outcomes across the node/time
+        // lattice (a constant stream means the hash ignores its inputs)
+        let mut lost = 0u32;
+        let mut total = 0u32;
+        for node in 0..4usize {
+            for step in 0..32u64 {
+                total += 1;
+                lost += f.token_lost(node, step * 777, &t) as u32;
+            }
+        }
+        assert!(
+            lost > 0 && lost < total,
+            "loss draws are constant ({lost}/{total})"
+        );
+    }
+
+    #[test]
+    fn retry_budget_caps_token_loss() {
+        let f = sched("loss:0.999,retries:2");
+        let mut t = token();
+        t.retries = 2;
+        for now in 0..64u64 {
+            assert!(
+                !f.token_lost(0, now * 1_000, &t),
+                "budget-spent token lost again"
+            );
+        }
+    }
+
+    #[test]
+    fn lease_backoff_is_monotonic_and_outside_lookahead() {
+        let f = sched("loss:0.1,lease:2us");
+        let mut prev = 0;
+        for r in 0..10u8 {
+            let at = f.lease_at(1_000, r);
+            assert!(at >= 1_000 + 1_000, "lease inside the lookahead");
+            assert!(at >= prev, "backoff not monotonic at retry {r}");
+            prev = at;
+        }
+        assert_eq!(f.lease_at(0, 1), 2 * 2_000_000);
+        // capped doubling: retry 9 pays the same as retry 6
+        assert_eq!(f.lease_at(0, 9), f.lease_at(0, 6));
+    }
+
+    #[test]
+    fn drops_redirect_to_the_first_live_clockwise_node() {
+        let f = sched("drop@1:5us,drop@2:1us");
+        assert!(!f.dropped(1, 4_999_999));
+        assert!(f.dropped(1, 5_000_000));
+        assert!(f.dropped(2, 1_000_000));
+        // node 2's clockwise neighbor (node 3) stays live throughout
+        assert_eq!(f.redirect(2, 2_000_000), 3);
+        assert_eq!(f.redirect(2, 5_000_000), 3);
+        // node 1's neighbor is the dropped node 2 — skip to node 3
+        assert_eq!(f.redirect(1, 5_000_000), 3);
+    }
+
+    #[test]
+    fn stall_windows_cover_half_open_ranges() {
+        let f = sched("stall@2:1us-3us,stall@2:2us-5us");
+        assert_eq!(f.stall_until(2, 999_999), None);
+        assert_eq!(f.stall_until(2, 1_000_000), Some(3_000_000));
+        // overlapping windows resume at the latest covering end
+        assert_eq!(f.stall_until(2, 2_500_000), Some(5_000_000));
+        assert_eq!(f.stall_until(2, 5_000_000), None);
+        assert_eq!(f.stall_until(1, 2_000_000), None);
+    }
+
+    #[test]
+    fn delay_multiplier_stretches_only_its_directed_link() {
+        let f = sched("delay@0-1:3");
+        let mut st = FaultStats::default();
+        assert_eq!(f.stretch(&mut st, 100, 150, 0, 1), 100 + 3 * 50);
+        assert_eq!(st.delayed_hops, 1);
+        // the reverse direction and other links are untouched
+        assert_eq!(f.stretch(&mut st, 100, 150, 1, 0), 150);
+        assert_eq!(f.stretch(&mut st, 100, 150, 2, 3), 150);
+        assert_eq!(st.delayed_hops, 1);
+    }
+
+    #[test]
+    fn fetch_fail_count_is_bounded_by_the_budget() {
+        let f = sched("fetchfail:0.999999,retries:3");
+        let t = token();
+        for now in 0..32u64 {
+            assert!(f.fetch_fail_count(0, now * 500, &t) <= 3);
+        }
+    }
+
+    #[test]
+    fn fault_stats_any_reflects_every_counter() {
+        assert!(!FaultStats::default().any());
+        let s = FaultStats { recovery_ps: 1, ..FaultStats::default() };
+        assert!(s.any());
+    }
+}

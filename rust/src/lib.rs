@@ -42,6 +42,7 @@ pub mod cluster;
 pub mod config;
 pub mod eval;
 pub mod dispatcher;
+pub mod faults;
 pub mod mapper;
 pub mod net;
 pub mod node;

@@ -43,12 +43,12 @@ commands:
   run     --app <name> --model <model> [--nodes N] [--scale small|paper]
           [--seed S] [--layout L] [--policy P] [--theta X]
           [--inject-node N] [--topology T] [--shards N] [--engine]
-          [--trace-out FILE] [--metrics-out FILE]
+          [--faults SPEC] [--trace-out FILE] [--metrics-out FILE]
           [--metrics-interval-ps N] [--config FILE] [--set k=v ...]
   fig     <9|10|11|12|13|all> [--scale small|paper] [--seed S]
   serve   --trace FILE [--policy P] [--theta X] [--ab] [--model M]
           [--nodes N] [--scale small|paper] [--seed S] [--jobs N]
-          [--topology T] [--shards N] [--trace-out FILE]
+          [--topology T] [--shards N] [--faults SPEC] [--trace-out FILE]
           [--metrics-out FILE] [--metrics-interval-ps N]
           [--set k=v ...] [--bench-json FILE]
           replay an open-system job trace (arrival-timed mixed apps)
@@ -56,8 +56,9 @@ commands:
           the trace under every policy on a worker pool
   sweep   [--all | 9 10 11 12 13] [--jobs N] [--scale small|paper]
           [--seed S] [--layout L] [--topology T] [--nodes N]
-          [--shards N] [--trace-out FILE] [--metrics-out FILE]
-          [--metrics-interval-ps N] [--bench-json FILE]
+          [--shards N] [--faults SPEC] [--trace-out FILE]
+          [--metrics-out FILE] [--metrics-interval-ps N]
+          [--bench-json FILE]
           regenerate figures on a worker pool; output is bit-identical
           for every --jobs value. --nodes extends the sweep with a
           large-scale axis (powers of two up to N, max 4096);
@@ -66,6 +67,10 @@ commands:
           skew-sensitivity sweep: every app x model x layout
   sweep   --all-topologies [--jobs N] [--scale small|paper] [--seed S]
           topology-sensitivity sweep: every app x model x interconnect
+  sweep   --all-faults [--jobs N] [--scale small|paper] [--seed S]
+          resilience sweep: every app x interconnect under an
+          escalating fault axis (makespan + movement overhead vs
+          fault-free, plus recovery-event counts)
   sweep   --serve TRACE [--jobs N] [--theta X] [...]
           serve-table extension: the trace under every policy
   apps    list applications and models
@@ -79,6 +84,12 @@ topologies: ring | biring | torus2d | ideal (--set packet_bytes=P for
 engine:     --shards N runs one simulation on N parallel DES shards
             (conservative lookahead; output byte-identical to --shards
             1, like --jobs it only buys wall-clock)
+faults:     --faults SPEC injects a deterministic, seeded fault
+            schedule (comma-separated clauses: loss:P ploss:P
+            fetchfail:P stall@N:S-E drop@N:T delay@A-B:M retries:K
+            lease:T regen:T fetchwait:T; see EXPERIMENTS.md §Fault
+            injection). Recovery keeps every run completing; same
+            seed + any --shards value stays byte-identical
 observe:    --trace-out FILE records the token/task lifecycle as
             Chrome trace-event JSON (simulated time; open in Perfetto
             or chrome://tracing); --metrics-out FILE samples per-node
@@ -101,8 +112,8 @@ fn main() {
         &[
             "app", "model", "nodes", "scale", "seed", "config", "fig",
             "jobs", "layout", "bench-json", "trace", "policy", "theta",
-            "inject-node", "serve", "topology", "shards", "trace-out",
-            "metrics-out", "metrics-interval-ps",
+            "inject-node", "serve", "topology", "shards", "faults",
+            "trace-out", "metrics-out", "metrics-interval-ps",
         ],
     ) {
         Ok(a) => a,
@@ -136,19 +147,21 @@ fn main() {
             &["ab"],
             &[
                 "trace", "policy", "theta", "model", "nodes", "scale",
-                "seed", "jobs", "topology", "shards", "bench-json",
-                "trace-out", "metrics-out", "metrics-interval-ps",
+                "seed", "jobs", "topology", "shards", "faults",
+                "bench-json", "trace-out", "metrics-out",
+                "metrics-interval-ps",
             ],
             true, // --set reaches the replay config (serve::ServeSpec)
             false,
         ),
         Some("sweep") => cli::ensure_known(
             &args,
-            &["all", "all-layouts", "all-topologies"],
+            &["all", "all-layouts", "all-topologies", "all-faults"],
             &[
                 "jobs", "scale", "seed", "layout", "topology", "nodes",
                 "bench-json", "serve", "theta", "model", "shards",
-                "trace-out", "metrics-out", "metrics-interval-ps",
+                "faults", "trace-out", "metrics-out",
+                "metrics-interval-ps",
             ],
             false,
             true, // figure numbers are positional
@@ -224,7 +237,12 @@ fn print_report(r: &RunReport, serial: f64) {
     println!("layout             {}", r.layout);
     println!("policy             {}", r.policy);
     println!("makespan           {:.3} ms", r.makespan_ms());
-    println!("speedup vs serial  {:.2}x", serial / r.makespan_ps as f64);
+    // degenerate runs (empty workload) report n/a, not a division by 0
+    if r.makespan_ps == 0 {
+        println!("speedup vs serial  n/a (zero makespan)");
+    } else {
+        println!("speedup vs serial  {:.2}x", serial / r.makespan_ps as f64);
+    }
     println!("tasks executed     {}", r.tasks_executed);
     println!(
         "work units/node    {:?}  (imbalance cv {:.3})",
@@ -265,6 +283,27 @@ fn print_report(r: &RunReport, serial: f64) {
         println!(
             "cgra               {} launches {:?} (1/2/4 groups), {} reconfigs",
             r.cgra.launches, r.cgra.alloc_histogram, r.cgra.reconfigs
+        );
+    }
+    if r.faults.any() {
+        let f = &r.faults;
+        println!(
+            "faults             {} tokens lost / {} reinjected, {} probes \
+             lost / {} regenerated",
+            f.tokens_lost,
+            f.tokens_reinjected,
+            f.probes_lost,
+            f.probes_regenerated
+        );
+        println!(
+            "recovery           {} fetch fails, {} detours, {} rehomed \
+             claims, {} stalls, {} slow hops, {:.3} ms waiting",
+            f.fetches_failed,
+            f.detours,
+            f.rehomed,
+            f.stalls,
+            f.delayed_hops,
+            f.recovery_ps as f64 / 1e9
         );
     }
     println!("terminate laps     {}", r.terminate_laps);
@@ -447,6 +486,7 @@ fn serve_spec_of(
         shards,
         overrides: args.sets.clone(),
         obs: obs_of(args)?,
+        faults: args.opt_or("faults", "").to_string(),
     })
 }
 
@@ -596,7 +636,7 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                         .into(),
                 );
             }
-            for flag in ["all", "all-layouts", "all-topologies"] {
+            for flag in ["all", "all-layouts", "all-topologies", "all-faults"] {
                 if args.flag(flag) {
                     return Err(format!(
                         "--{flag} does not apply to `sweep --serve TRACE` \
@@ -634,18 +674,22 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                 ));
             }
         }
-        if args.flag("all-layouts") && args.flag("all-topologies") {
+        let axes = ["all-layouts", "all-topologies", "all-faults"];
+        if axes.iter().filter(|&&f| args.flag(f)).count() > 1 {
             return Err(
-                "pick one of --all-layouts / --all-topologies (the sweeps \
-                 are separate tables; run them as two invocations)"
+                "pick one of --all-layouts / --all-topologies / --all-faults \
+                 (the sweeps are separate tables; run them as separate \
+                 invocations)"
                     .into(),
             );
         }
-        if args.flag("all-layouts") || args.flag("all-topologies") {
+        if axes.iter().any(|&f| args.flag(f)) {
             let (what, axis_err) = if args.flag("all-layouts") {
                 ("skew", "--all-layouts")
-            } else {
+            } else if args.flag("all-topologies") {
                 ("topology", "--all-topologies")
+            } else {
+                ("resilience", "--all-faults")
             };
             if max_nodes.is_some() {
                 return Err(format!(
@@ -657,7 +701,7 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             // these sweeps enumerate their own axis at Table-2 defaults
             // for everything else — rejecting the knobs keeps "it ran"
             // from meaning "it measured what you asked for"
-            for opt in ["layout", "topology", "theta", "model"] {
+            for opt in ["layout", "topology", "theta", "model", "faults"] {
                 if args.opt(opt).is_some() {
                     return Err(format!(
                         "--{opt} does not apply to {axis_err} (the sweep \
@@ -669,8 +713,10 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             let obs = obs_of(args)?;
             let out = if args.flag("all-layouts") {
                 sweep::run_skew(scale, seed, jobs, shards, obs)
-            } else {
+            } else if args.flag("all-topologies") {
                 sweep::run_topo(scale, seed, jobs, shards, obs)
+            } else {
+                sweep::run_faults(scale, seed, jobs, shards, obs)
             };
             print!("{}", out.render());
             let wall = t0.elapsed();
@@ -704,6 +750,15 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
             None => Layout::Block,
         };
         let topology = parse_topology(args)?;
+        // grammar-check the schedule before spending sweep time; node
+        // indexed clauses must also fit every cell the sweep runs
+        // (e.g. the figure sweeps include 1-node cells), which each
+        // cell's own config validation enforces
+        let faults = args.opt_or("faults", "").to_string();
+        if !faults.is_empty() {
+            arena::faults::FaultSpec::parse(&faults)
+                .map_err(|e| format!("--faults: {e}"))?;
+        }
         let figs: Vec<sweep::Fig> =
             if args.flag("all") || args.positional.is_empty() {
                 sweep::Fig::ALL.to_vec()
@@ -729,6 +784,7 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                 max_nodes,
                 shards,
                 obs: obs_of(args)?,
+                faults,
             },
         );
         print!("{}", out.render());

@@ -83,6 +83,11 @@ pub struct NodeStats {
     /// Tokens that arrived while the recv queue was full (ring
     /// backpressure events).
     pub recv_stalls: u64,
+    /// Wait pieces this node adopted from a dropped owner's partition
+    /// (`--faults` re-homing; aggregated into the report's FaultStats).
+    pub rehomed_claims: u64,
+    /// Dispatcher pumps deferred by a `--faults` stall window.
+    pub fault_stalls: u64,
 }
 
 /// Tokens parked on in-flight remote fetches, addressed by slot: the
@@ -169,6 +174,11 @@ pub struct Node {
     pub parked_terminate: bool,
     /// Node has left the runtime loop (second clean TERMINATE).
     pub done: bool,
+    /// Tokens lost in flight whose home-node lease has not fired yet
+    /// (`--faults` recovery). Counts against quiescence: the TERMINATE
+    /// protocol must not declare the ring done while a re-injection is
+    /// pending, or the recovered work would land on an exited node.
+    pub pending_leases: u32,
     pub stats: NodeStats,
 }
 
@@ -193,6 +203,7 @@ impl Node {
             terminate_flag: false,
             parked_terminate: false,
             done: false,
+            pending_leases: 0,
             stats: NodeStats::default(),
         }
     }
@@ -223,6 +234,7 @@ impl Node {
             && self.coalescer.is_empty()
             && self.fetching.is_empty()
             && self.running == 0
+            && self.pending_leases == 0
             && self.compute.idle(now)
     }
 
@@ -325,6 +337,18 @@ mod tests {
         assert_eq!(s.take(s1).task.start, 1);
         assert_eq!(s.take(s2).task.start, 2);
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn a_pending_lease_blocks_quiescence() {
+        // a lost token awaiting its lease re-injection is invisible to
+        // every queue, so quiescence must track it explicitly or the
+        // TERMINATE protocol could retire the ring with work in flight
+        let mut n = node(false);
+        n.pending_leases = 1;
+        assert!(!n.quiescent(0));
+        n.pending_leases = 0;
+        assert!(n.quiescent(0));
     }
 
     #[test]

@@ -122,6 +122,15 @@ pub enum TraceEv {
     Complete { spawns: u32 },
     /// TERMINATE probe handled at this node (`exits` = node went quiet).
     Probe { exits: bool },
+    /// A token forward swallowed by the `--faults` schedule; the home
+    /// node's lease re-injects it at `resume`.
+    TokenLost { task: u8, start: u32, end: u32, retries: u8, resume: Ps },
+    /// A TERMINATE probe hop swallowed by the `--faults` schedule (the
+    /// probe is regenerated after the configured delay).
+    ProbeLost,
+    /// One failed DTN fetch attempt under `--faults` (0-based index;
+    /// the fetch retries after the configured backoff).
+    FetchFail { task: u8, attempt: u32 },
 }
 
 impl TraceEv {
@@ -136,6 +145,9 @@ impl TraceEv {
             TraceEv::Fetch { .. } => "fetch",
             TraceEv::Complete { .. } => "complete",
             TraceEv::Probe { .. } => "probe",
+            TraceEv::TokenLost { .. } => "token_lost",
+            TraceEv::ProbeLost => "probe_lost",
+            TraceEv::FetchFail { .. } => "fetch_fail",
         }
     }
 
@@ -191,6 +203,22 @@ impl TraceEv {
             }
             TraceEv::Probe { exits } => {
                 let _ = write!(out, "{{\"exits\":{exits}}}");
+            }
+            TraceEv::TokenLost { task, start, end, retries, resume } => {
+                let _ = write!(
+                    out,
+                    "{{\"task\":{task},\"start\":{start},\"end\":{end},\
+                     \"retries\":{retries},\"resume_ps\":{resume}}}"
+                );
+            }
+            TraceEv::ProbeLost => {
+                out.push_str("{}");
+            }
+            TraceEv::FetchFail { task, attempt } => {
+                let _ = write!(
+                    out,
+                    "{{\"task\":{task},\"attempt\":{attempt}}}"
+                );
             }
         }
     }

@@ -102,6 +102,13 @@ impl<const N: usize> Pieces<N> {
     pub fn iter(&self) -> impl Iterator<Item = &TaskToken> {
         self.buf[..self.len].iter().map(|t| t.as_ref().unwrap())
     }
+
+    /// Mutable walk over the pieces — the fault-recovery layer stamps
+    /// adopted (re-homed) wait pieces after a policy classifies, so no
+    /// policy has to know about fault metadata.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut TaskToken> {
+        self.buf[..self.len].iter_mut().map(|t| t.as_mut().unwrap())
+    }
 }
 
 impl<const N: usize> std::ops::Index<usize> for Pieces<N> {

@@ -119,6 +119,11 @@ pub struct ServeSpec {
     /// dedicated serve flag are rejected so the two paths cannot
     /// disagree.
     pub overrides: Vec<(String, String)>,
+    /// Fault-schedule spec (`arena serve --faults SPEC`; empty =
+    /// fault-free, the default — see [`crate::faults`]). Applied to
+    /// every policy replay, so an `--ab` run compares recovery
+    /// behaviour under the identical injected faults.
+    pub faults: String,
     /// Observability sinks (`--trace-out` / `--metrics-out` /
     /// `--metrics-interval-ps`). Output paths are suffixed with the
     /// policy name, so an `--ab` replay writes one trace/timeline per
@@ -136,8 +141,12 @@ pub struct ServeRun {
 
 impl ServeRun {
     /// Sustained throughput: jobs per simulated second (trace length /
-    /// makespan).
+    /// makespan). `NaN` — rendered as an "n/a" cell — when no simulated
+    /// time elapsed, instead of dividing by zero.
     pub fn jobs_per_s(&self) -> f64 {
+        if self.report.makespan_ps == 0 {
+            return f64::NAN;
+        }
         self.latencies_ps.len() as f64
             / (self.report.makespan_ps as f64 / 1e12)
     }
@@ -146,13 +155,17 @@ impl ServeRun {
 /// Nearest-rank percentile over an ascending-sorted slice:
 /// `sorted[ceil(pct/100 * n) - 1]`. With `n = 3`: p50 is the 2nd
 /// value, p95 and p99 the 3rd — hand-computable on a 3-job trace.
-pub fn percentile_ps(sorted: &[Ps], pct: u32) -> Ps {
-    assert!(!sorted.is_empty(), "percentile of an empty set");
+/// `None` on an empty set (the caller renders "n/a") rather than a
+/// panic.
+pub fn percentile_ps(sorted: &[Ps], pct: u32) -> Option<Ps> {
     assert!((1..=100).contains(&pct), "pct {pct} out of (0, 100]");
     debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "unsorted input");
     let n = sorted.len();
+    if n == 0 {
+        return None;
+    }
     let rank = (pct as usize * n).div_ceil(100);
-    sorted[rank.max(1) - 1]
+    Some(sorted[rank.max(1) - 1])
 }
 
 fn ms(ps: Ps) -> f64 {
@@ -224,6 +237,7 @@ pub fn run_one(
                 | "theta"
                 | "topology"
                 | "shards"
+                | "faults"
                 | "trace_out"
                 | "metrics_out"
                 | "metrics_interval_ps"
@@ -244,6 +258,10 @@ pub fn run_one(
             );
         }
         cfg.set(k, v).map_err(|e| format!("serve --set {k}: {e}"))?;
+    }
+    if !spec.faults.is_empty() {
+        cfg.set("faults", &spec.faults)
+            .map_err(|e| format!("serve --faults: {e}"))?;
     }
     let cfg = spec.obs.apply(cfg, kind.name());
     let mut cl = Cluster::new(cfg, spec.model, apps);
@@ -364,14 +382,16 @@ pub fn run_ab(
     for run in &runs {
         let mut sorted = run.latencies_ps.clone();
         sorted.sort_unstable();
+        // empty sets yield NaN cells, rendered as "n/a" dashes
+        let pct = |p| percentile_ps(&sorted, p).map(ms).unwrap_or(f64::NAN);
         summary.row(
             &run.report.policy,
             vec![
                 run.report.makespan_ms(),
                 run.jobs_per_s(),
-                ms(percentile_ps(&sorted, 50)),
-                ms(percentile_ps(&sorted, 95)),
-                ms(percentile_ps(&sorted, 99)),
+                pct(50),
+                pct(95),
+                pct(99),
             ],
         );
     }
@@ -410,17 +430,31 @@ mod tests {
     #[test]
     fn percentile_is_nearest_rank() {
         let v = [10, 20, 40];
-        assert_eq!(percentile_ps(&v, 50), 20, "ceil(1.5) = 2nd value");
-        assert_eq!(percentile_ps(&v, 95), 40, "ceil(2.85) = 3rd value");
-        assert_eq!(percentile_ps(&v, 99), 40);
-        assert_eq!(percentile_ps(&v, 100), 40);
-        assert_eq!(percentile_ps(&v, 1), 10);
+        assert_eq!(percentile_ps(&v, 50), Some(20), "ceil(1.5) = 2nd value");
+        assert_eq!(percentile_ps(&v, 95), Some(40), "ceil(2.85) = 3rd value");
+        assert_eq!(percentile_ps(&v, 99), Some(40));
+        assert_eq!(percentile_ps(&v, 100), Some(40));
+        assert_eq!(percentile_ps(&v, 1), Some(10));
         let one = [7];
         for pct in [1, 50, 99, 100] {
-            assert_eq!(percentile_ps(&one, pct), 7);
+            assert_eq!(percentile_ps(&one, pct), Some(7));
         }
         // even count: p50 is the lower-middle value under nearest rank
-        assert_eq!(percentile_ps(&[1, 2, 3, 4], 50), 2);
+        assert_eq!(percentile_ps(&[1, 2, 3, 4], 50), Some(2));
+    }
+
+    /// The empty-set / zero-makespan edge cases report "n/a" instead of
+    /// panicking or dividing by zero.
+    #[test]
+    fn degenerate_inputs_yield_na_not_panics() {
+        for pct in [1, 50, 99, 100] {
+            assert_eq!(percentile_ps(&[], pct), None);
+        }
+        let spec = three_job_spec();
+        let mut run = run_one(&spec, PolicyKind::Greedy, 500).unwrap();
+        assert!(run.jobs_per_s().is_finite());
+        run.report.makespan_ps = 0;
+        assert!(run.jobs_per_s().is_nan(), "zero makespan must be n/a");
     }
 
     #[test]
@@ -439,6 +473,7 @@ mod tests {
             shards: 1,
             overrides: Vec::new(),
             obs: Default::default(),
+            faults: String::new(),
         };
         let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
         assert!(e.contains("task-id space"), "{e}");
@@ -456,6 +491,7 @@ mod tests {
             shards: 1,
             overrides: Vec::new(),
             obs: Default::default(),
+            faults: String::new(),
         };
         let e = run_one(&spec, PolicyKind::Greedy, 500).unwrap_err();
         assert!(e.contains("node 5"), "{e}");
@@ -472,6 +508,7 @@ mod tests {
             shards: 1,
             overrides: Vec::new(),
             obs: Default::default(),
+            faults: String::new(),
         }
     }
 
@@ -485,9 +522,9 @@ mod tests {
         assert_eq!(run.latencies_ps.len(), 3);
         let mut sorted = run.latencies_ps.clone();
         sorted.sort_unstable();
-        assert_eq!(percentile_ps(&sorted, 50), sorted[1]);
-        assert_eq!(percentile_ps(&sorted, 95), sorted[2]);
-        assert_eq!(percentile_ps(&sorted, 99), sorted[2]);
+        assert_eq!(percentile_ps(&sorted, 50), Some(sorted[1]));
+        assert_eq!(percentile_ps(&sorted, 95), Some(sorted[2]));
+        assert_eq!(percentile_ps(&sorted, 99), Some(sorted[2]));
 
         let out = run_ab(&spec, &[(PolicyKind::Greedy, 500)], 1).unwrap();
         let summary = out.tables.last().unwrap();
@@ -556,6 +593,7 @@ mod tests {
             shards: 1,
             overrides: Vec::new(),
             obs: Default::default(),
+            faults: String::new(),
         };
         let run = run_one(&spec, PolicyKind::Greedy, 500).unwrap();
         assert_eq!(run.report.app_latency.len(), 2);

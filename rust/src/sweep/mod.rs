@@ -104,12 +104,16 @@ enum Cell {
 /// `obs` carries the sweep's observability knobs: when enabled, each
 /// ARENA cell records to its own [`Job::label`]-suffixed output paths,
 /// so concurrent workers never race on one file. Like `shards`, it is
-/// not part of the key — recording never changes a report.
+/// not part of the key — recording never changes a report. `faults` is
+/// the store-wide `--faults` schedule every ARENA cell runs under
+/// (baselines are fault-free by construction); unlike `shards`/`obs` it
+/// DOES change results, which is why a store holds exactly one value.
 fn compute(
     scale: Scale,
     seed: u64,
     shards: usize,
     obs: &crate::obs::ObsCfg,
+    faults: &str,
     job: Job,
 ) -> Cell {
     match job {
@@ -126,6 +130,7 @@ fn compute(
                 .with_seed(seed)
                 .with_layout(layout)
                 .with_topology(topo)
+                .with_faults(faults)
                 .with_shards(shards.min(nodes));
             if !obs.is_off() {
                 cfg = obs.apply(cfg, &job.label());
@@ -158,6 +163,11 @@ pub struct CellStore {
     /// by default, and never part of a cell key — recording does not
     /// change a result.
     obs: crate::obs::ObsCfg,
+    /// `--faults` schedule every ARENA cell runs under (empty = fault
+    /// free). Faults DO change results, so a store carries exactly one
+    /// schedule and the resilience sweep uses one store per axis point
+    /// instead of widening every cell key.
+    faults: String,
     serial: BTreeMap<&'static str, Ps>,
     bsp: BTreeMap<(&'static str, usize, bool), BspReport>,
     arena: BTreeMap<(&'static str, usize, Model, Layout, Topology), RunReport>,
@@ -191,6 +201,7 @@ impl CellStore {
             topology,
             shards: 1,
             obs: Default::default(),
+            faults: String::new(),
             serial: BTreeMap::new(),
             bsp: BTreeMap::new(),
             arena: BTreeMap::new(),
@@ -216,6 +227,15 @@ impl CellStore {
         self
     }
 
+    /// Same store, with every ARENA cell injected by the `--faults`
+    /// schedule `spec` (empty = fault-free). A schedule changes the
+    /// simulated results, so it is store-wide state, never mixed within
+    /// one store: the resilience sweep builds one store per axis point.
+    pub fn with_faults(mut self, spec: &str) -> Self {
+        self.faults = spec.to_string();
+        self
+    }
+
     pub fn scale(&self) -> Scale {
         self.scale
     }
@@ -234,6 +254,11 @@ impl CellStore {
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// The `--faults` schedule every ARENA cell runs under ("" = none).
+    pub fn faults(&self) -> &str {
+        &self.faults
     }
 
     /// Wall-clock of every job computed through [`Self::prefill`], in
@@ -289,6 +314,7 @@ impl CellStore {
                 self.seed,
                 self.shards,
                 &self.obs,
+                &self.faults,
                 Job::Serial { app },
             );
             self.insert(Job::Serial { app }, v);
@@ -305,6 +331,7 @@ impl CellStore {
                 self.seed,
                 self.shards,
                 &self.obs,
+                &self.faults,
                 Job::Bsp { app, nodes, cgra },
             );
             self.insert(Job::Bsp { app, nodes, cgra }, v);
@@ -350,7 +377,14 @@ impl CellStore {
         let key = (app, nodes, model, layout, topo);
         if !self.arena.contains_key(&key) {
             let job = Job::Arena { app, nodes, model, layout, topo };
-            let v = compute(self.scale, self.seed, self.shards, &self.obs, job);
+            let v = compute(
+                self.scale,
+                self.seed,
+                self.shards,
+                &self.obs,
+                &self.faults,
+                job,
+            );
             self.insert(job, v);
         }
         &self.arena[&key]
@@ -373,8 +407,14 @@ impl CellStore {
         if workers == 1 {
             for &job in &todo {
                 let t0 = Instant::now();
-                let v =
-                    compute(self.scale, self.seed, self.shards, &self.obs, job);
+                let v = compute(
+                    self.scale,
+                    self.seed,
+                    self.shards,
+                    &self.obs,
+                    &self.faults,
+                    job,
+                );
                 self.timings.push((job, t0.elapsed()));
                 self.insert(job, v);
             }
@@ -382,6 +422,7 @@ impl CellStore {
         }
         let (scale, seed, shards) = (self.scale, self.seed, self.shards);
         let obs = self.obs.clone();
+        let faults = self.faults.clone();
         let next = AtomicUsize::new(0);
         let done: Mutex<Vec<(usize, Cell, Duration)>> =
             Mutex::new(Vec::with_capacity(todo.len()));
@@ -393,7 +434,8 @@ impl CellStore {
                         break;
                     }
                     let t0 = Instant::now();
-                    let cell = compute(scale, seed, shards, &obs, todo[i]);
+                    let cell =
+                        compute(scale, seed, shards, &obs, &faults, todo[i]);
                     let dt = t0.elapsed();
                     done.lock()
                         .expect("worker poisoned the store")
@@ -633,6 +675,10 @@ pub struct SweepCfg {
     /// Observability knobs of every ARENA cell (`--trace-out` /
     /// `--metrics-out`, per-cell suffixed paths; off by default).
     pub obs: crate::obs::ObsCfg,
+    /// `--faults` schedule every ARENA cell runs under (empty = fault
+    /// free). Baselines stay fault-free, so the tables show what the
+    /// schedule alone costs ARENA.
+    pub faults: String,
 }
 
 impl Default for SweepCfg {
@@ -643,6 +689,7 @@ impl Default for SweepCfg {
             max_nodes: None,
             shards: 1,
             obs: Default::default(),
+            faults: String::new(),
         }
     }
 }
@@ -668,7 +715,7 @@ pub fn run_scaled(
         scale,
         seed,
         workers,
-        SweepCfg { layout, topo, max_nodes, shards: 1, obs: Default::default() },
+        SweepCfg { layout, topo, max_nodes, ..Default::default() },
     )
 }
 
@@ -683,7 +730,7 @@ pub fn run_cfg(
     workers: usize,
     cfg: SweepCfg,
 ) -> SweepOutput {
-    let SweepCfg { layout, topo, max_nodes, shards, obs } = cfg;
+    let SweepCfg { layout, topo, max_nodes, shards, obs, faults } = cfg;
     let mut figs: Vec<Fig> = figs.to_vec();
     figs.sort();
     figs.dedup();
@@ -724,7 +771,8 @@ pub fn run_cfg(
 
     let mut store = CellStore::configured(scale, seed, layout, topo)
         .with_shards(shards)
-        .with_obs(obs);
+        .with_obs(obs)
+        .with_faults(&faults);
     store.prefill(&jobs, workers);
 
     let mut tables = Vec::new();
@@ -799,6 +847,197 @@ pub fn run_topo(
     let tables = eval::topo_with(&mut store);
     let timings = timing_labels(&store);
     SweepOutput { tables, headline: None, cells: store.len(), workers, timings }
+}
+
+/// The resilience sweep's fault axis (`arena sweep --all-faults`):
+/// `(column label, --faults spec)`, from fault-free through escalating
+/// token loss to a mixed-fault storm with a dropped node, a stall
+/// window and a degraded link. Every spec is valid at the sweep's
+/// [`SKEW_NODES`]-node ring size.
+pub const FAULT_AXIS: [(&str, &str); 5] = [
+    ("none", ""),
+    ("loss2%", "loss:0.02"),
+    ("loss10%", "loss:0.10"),
+    ("mixed", "loss:0.05,ploss:0.05,fetchfail:0.10"),
+    ("storm", "stall@2:5us-20us,drop@1:0ps,delay@0-1:4,loss:0.01"),
+];
+
+/// Cells of the resilience sweep: every app × interconnect topology at
+/// the Fig. 10 cluster size, software model, block layout. The same
+/// job list runs once per [`FAULT_AXIS`] point (a fault schedule is
+/// store-wide state), so the sweep computes `axis × apps × topologies`
+/// cells in total.
+pub fn fault_jobs() -> Vec<Job> {
+    let mut out = Vec::new();
+    for app in ALL {
+        for topo in Topology::ALL {
+            out.push(Job::Arena {
+                app,
+                nodes: SKEW_NODES,
+                model: Model::SoftwareCpu,
+                layout: Layout::Block,
+                topo,
+            });
+        }
+    }
+    out
+}
+
+/// Run the resilience sweep (`arena sweep --all-faults`): the
+/// [`fault_jobs`] cell set once per [`FAULT_AXIS`] schedule, assembled
+/// into per-topology makespan and movement tables (normalized to the
+/// fault-free column, so a cell reads as "this fault schedule costs
+/// this much") plus one recovery-counter table summed over apps. Bit
+/// identical for any `workers` (and `shards`) value. Observability
+/// output paths are suffixed per cell label only — the fault axis
+/// shares labels, so enable tracing here for smoke checks, not
+/// archival.
+pub fn run_faults(
+    scale: Scale,
+    seed: u64,
+    workers: usize,
+    shards: usize,
+    obs: crate::obs::ObsCfg,
+) -> SweepOutput {
+    let jobs = fault_jobs();
+    let mut stores: Vec<CellStore> = FAULT_AXIS
+        .iter()
+        .map(|&(_, spec)| {
+            CellStore::new(scale, seed)
+                .with_shards(shards)
+                .with_obs(obs.clone())
+                .with_faults(spec)
+        })
+        .collect();
+    for store in &mut stores {
+        store.prefill(&jobs, workers);
+    }
+
+    let headers: Vec<&str> = FAULT_AXIS.iter().map(|&(l, _)| l).collect();
+    let mut tables = Vec::new();
+    for &topo in &Topology::ALL {
+        let mut mk = Table::new(
+            &format!(
+                "Faults A — makespan vs fault schedule (norm. to fault-free), \
+                 {}, arena-sw, {} nodes",
+                topo.label(),
+                SKEW_NODES
+            ),
+            &headers,
+        );
+        let mut mv = Table::new(
+            &format!(
+                "Faults B — total movement in byte-hops vs fault schedule \
+                 (norm. to fault-free), {}, arena-sw, {} nodes",
+                topo.label(),
+                SKEW_NODES
+            ),
+            &headers,
+        );
+        for app in ALL {
+            let (base_mk, base_mv) = {
+                let r = stores[0].arena_cell(
+                    app,
+                    SKEW_NODES,
+                    Model::SoftwareCpu,
+                    Layout::Block,
+                    topo,
+                );
+                (
+                    r.makespan_ps.max(1) as f64,
+                    r.total_movement_bytes().max(1) as f64,
+                )
+            };
+            let mut vmk = Vec::new();
+            let mut vmv = Vec::new();
+            for store in &mut stores {
+                let r = store.arena_cell(
+                    app,
+                    SKEW_NODES,
+                    Model::SoftwareCpu,
+                    Layout::Block,
+                    topo,
+                );
+                vmk.push(r.makespan_ps as f64 / base_mk);
+                vmv.push(r.total_movement_bytes() as f64 / base_mv);
+            }
+            mk.row(app, vmk);
+            mv.row(app, vmv);
+        }
+        tables.push(mk);
+        tables.push(mv);
+    }
+
+    // recovery counters summed over apps and topologies, one row per
+    // axis point — the "did the machinery actually fire" table
+    let mut rec = Table::new(
+        &format!(
+            "Faults C — recovery events (summed over apps and topologies), \
+             arena-sw, {SKEW_NODES} nodes"
+        ),
+        &[
+            "lost", "reinj", "plost", "regen", "ffail", "detour", "rehome",
+            "stall", "slowhop", "recov_ms",
+        ],
+    );
+    for (i, &(label, _)) in FAULT_AXIS.iter().enumerate() {
+        let mut sum = crate::faults::FaultStats::default();
+        for app in ALL {
+            for &topo in &Topology::ALL {
+                let f = stores[i]
+                    .arena_cell(
+                        app,
+                        SKEW_NODES,
+                        Model::SoftwareCpu,
+                        Layout::Block,
+                        topo,
+                    )
+                    .faults;
+                sum.tokens_lost += f.tokens_lost;
+                sum.tokens_reinjected += f.tokens_reinjected;
+                sum.probes_lost += f.probes_lost;
+                sum.probes_regenerated += f.probes_regenerated;
+                sum.fetches_failed += f.fetches_failed;
+                sum.detours += f.detours;
+                sum.rehomed += f.rehomed;
+                sum.stalls += f.stalls;
+                sum.delayed_hops += f.delayed_hops;
+                sum.recovery_ps += f.recovery_ps;
+            }
+        }
+        rec.row(
+            label,
+            vec![
+                sum.tokens_lost as f64,
+                sum.tokens_reinjected as f64,
+                sum.probes_lost as f64,
+                sum.probes_regenerated as f64,
+                sum.fetches_failed as f64,
+                sum.detours as f64,
+                sum.rehomed as f64,
+                sum.stalls as f64,
+                sum.delayed_hops as f64,
+                sum.recovery_ps as f64 / 1e9,
+            ],
+        );
+    }
+    tables.push(rec);
+
+    let mut timings = Vec::new();
+    let mut cells = 0;
+    for (i, store) in stores.iter().enumerate() {
+        cells += store.len();
+        let tag = FAULT_AXIS[i].0;
+        timings.extend(
+            store
+                .timings()
+                .iter()
+                .map(|(j, d)| {
+                    (format!("{tag}/{}", j.label()), d.as_secs_f64() * 1e3)
+                }),
+        );
+    }
+    SweepOutput { tables, headline: None, cells, workers, timings }
 }
 
 #[cfg(test)]
@@ -958,6 +1197,61 @@ mod tests {
         let d = store.arena("nbody", 4, Model::SoftwareCpu).topology;
         assert_eq!(d, "ring");
         assert_eq!(store.len(), 2, "default read served from cache");
+    }
+
+    #[test]
+    fn fault_axis_specs_parse_and_check_at_sweep_size() {
+        for (label, spec) in FAULT_AXIS {
+            let s = crate::faults::FaultSpec::parse(spec).expect(label);
+            s.check(SKEW_NODES).unwrap_or_else(|e| panic!("{label}: {e}"));
+        }
+        assert_eq!(FAULT_AXIS[0].1, "", "column 0 is the fault-free base");
+    }
+
+    #[test]
+    fn fault_stores_isolate_schedules() {
+        // same cell key, different schedule, different store — results
+        // must differ (and the fault-free store must report no faults)
+        let mut clean = CellStore::new(Scale::Small, 7);
+        let mut lossy =
+            CellStore::new(Scale::Small, 7).with_faults("loss:0.3");
+        let key = ("gemm", 4, Model::SoftwareCpu, Layout::Block);
+        let a = clean.arena_at(key.0, key.1, key.2, key.3);
+        assert!(!a.faults.any(), "fault-free cell booked fault stats");
+        let a_mk = a.makespan_ps;
+        let b = lossy.arena_at(key.0, key.1, key.2, key.3);
+        assert!(b.faults.tokens_lost > 0, "p=0.3 lost nothing");
+        assert_ne!(a_mk, b.makespan_ps, "schedule must change the run");
+    }
+
+    #[test]
+    fn fault_sweep_is_worker_invariant_and_fires_recovery() {
+        let a = run_faults(Scale::Small, 7, 1, 1, Default::default());
+        let b = run_faults(Scale::Small, 7, 4, 1, Default::default());
+        assert_eq!(a.render(), b.render(), "resilience tables must not \
+                   depend on the worker count");
+        // per-topology makespan+movement pairs, then the recovery table
+        assert_eq!(a.tables.len(), Topology::ALL.len() * 2 + 1);
+        assert_eq!(a.cells, FAULT_AXIS.len() * fault_jobs().len());
+        let rec = a.tables.last().unwrap();
+        // the fault-free row is all zero; the 10% loss row is not
+        assert!(rec.get("none", 0) == Some(0.0));
+        assert!(rec.get("loss10%", 0).unwrap() > 0.0, "no tokens lost");
+        assert!(
+            rec.get("loss10%", 1) == rec.get("loss10%", 0),
+            "every lost token must be re-injected"
+        );
+        assert!(rec.get("storm", 6).unwrap() > 0.0, "no work re-homed");
+        // normalized makespans: fault-free column is exactly 1.0
+        for t in &a.tables[..a.tables.len() - 1] {
+            for (app, v) in &t.rows {
+                assert_eq!(v[0], 1.0, "{app} fault-free column");
+                assert!(
+                    v.iter().all(|x| x.is_finite() && *x > 0.0),
+                    "{app} has a degenerate resilience cell"
+                );
+            }
+        }
     }
 
     #[test]

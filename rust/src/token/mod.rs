@@ -88,6 +88,17 @@ pub struct TaskToken {
     /// each lap visits every node exactly once — asserted in debug
     /// builds by the cluster's termination layer.)
     pub hops: u16,
+    /// Times this token's forward was lost and re-injected by its
+    /// home-node lease — fault-recovery metadata (simulator-side, not
+    /// a wire field; always 0 without `--faults`). A draw coordinate of
+    /// the fault schedule, so a re-forwarded token sees a fresh loss
+    /// draw and the configured budget bounds its losses.
+    pub retries: u8,
+    /// Wait piece adopted from a dropped node's partition — the
+    /// executing node must fetch the data over the wire even though the
+    /// directory calls it "local" to the (dead) owner. Fault-recovery
+    /// metadata; always false without `--faults`.
+    pub rehomed: bool,
 }
 
 /// Wire size: TASKid+FROMnode share 1 byte; TASKstart/end, PARAM,
@@ -103,6 +114,8 @@ impl TaskToken {
             remote: Range::empty(),
             from_node: 0,
             hops: 0,
+            retries: 0,
+            rehomed: false,
         }
     }
 
@@ -141,6 +154,8 @@ impl TaskToken {
         self.task_id == other.task_id
             && self.param == other.param
             && self.remote == other.remote
+            && self.retries == other.retries
+            && self.rehomed == other.rehomed
             && (self.task.end == other.task.start
                 || other.task.end == self.task.start)
     }
@@ -285,6 +300,18 @@ mod tests {
         b.record_hop();
         assert!(a.can_coalesce(&b));
         assert_eq!(a.coalesce(&b).task, Range::new(0, 16));
+    }
+
+    #[test]
+    fn fault_metadata_blocks_coalescing_only_when_it_differs() {
+        let a = TaskToken::new(2, Range::new(0, 8), 1.0);
+        let mut b = TaskToken::new(2, Range::new(8, 16), 1.0);
+        assert!(a.can_coalesce(&b));
+        b.retries = 1;
+        assert!(!a.can_coalesce(&b), "retry counts must not merge away");
+        b.retries = 0;
+        b.rehomed = true;
+        assert!(!a.can_coalesce(&b), "a rehomed piece keeps its fetch debt");
     }
 
     #[test]

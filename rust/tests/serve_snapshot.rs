@@ -63,6 +63,7 @@ fn regenerate() -> String {
         shards: 1,
         overrides: Vec::new(),
         obs: Default::default(),
+        faults: String::new(),
     };
     let policies: Vec<(PolicyKind, u32)> =
         PolicyKind::ALL.iter().map(|&k| (k, 500)).collect();

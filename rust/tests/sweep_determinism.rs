@@ -165,6 +165,7 @@ fn serve_spec() -> serve::ServeSpec {
         shards: 1,
         overrides: Vec::new(),
         obs: Default::default(),
+        faults: String::new(),
     }
 }
 
