@@ -16,12 +16,12 @@
 use std::time::Duration;
 
 use arena::api;
-use arena::apps::Scale;
+use arena::apps::{self, Scale};
 use arena::benchkit::{
     self, alloc, black_box, throughput, Bench, BenchResult,
 };
 use arena::cgra::{CgraNode, CoalesceUnit, GroupMappings};
-use arena::cluster::Model;
+use arena::cluster::{Cluster, Model};
 use arena::config::ArenaConfig;
 use arena::dispatcher::filter;
 use arena::eval;
@@ -96,11 +96,16 @@ mod baseline_des {
     }
 }
 
-fn write_record(all: &[BenchResult], smoke: bool) {
-    let fields = [
+fn write_record(
+    all: &[BenchResult],
+    smoke: bool,
+    extra: &[(&'static str, String)],
+) {
+    let mut fields = vec![
         ("smoke", smoke.to_string()),
         ("results", benchkit::results_json(all)),
     ];
+    fields.extend(extra.iter().cloned());
     match benchkit::write_bench_json("BENCH_micro.json", "micro_hotpath", &fields)
     {
         Ok(()) => println!("record: BENCH_micro.json"),
@@ -372,9 +377,55 @@ fn main() {
     all.push(r_off);
     all.push(r_on);
 
+    // --- steady-state heap traffic: the zero-alloc arena contract ----
+    // Exact counter delta across one deterministic run (construction
+    // excluded, workload memos warmed), mirroring tests/alloc_gate.rs:
+    // allocations beyond the fixed per-run constant, per event, must
+    // be zero. The arena high-water/spill telemetry rides along so the
+    // record shows how full the arenas ran, not just that they held.
+    let mem_build = || {
+        Cluster::new(
+            ArenaConfig::default().with_nodes(16).with_seed(7),
+            Model::SoftwareCpu,
+            vec![apps::make_app("gcn", Scale::Small, 7)],
+        )
+    };
+    let _ = mem_build().run(None); // warm shared workload memos
+    let mut cl = mem_build();
+    alloc::reset();
+    let before = alloc::stats();
+    let mem_report = cl.run(None);
+    let after = alloc::stats();
+    let mem = arena::obs::take_mem_profile().unwrap_or_default();
+    let steady_allocs = after.allocs - before.allocs;
+    // same fixed budget as the gate: DES spine + report assembly
+    const RUN_CONSTANT: u64 = 256;
+    let allocs_per_event = steady_allocs.saturating_sub(RUN_CONSTANT) as f64
+        / mem_report.events as f64;
+    println!(
+        "mem/gcn@16n steady run: {steady_allocs} allocations over {} \
+         events ({allocs_per_event:.4} allocs/event beyond the {RUN_CONSTANT} \
+         run constant); spawn arena high water {} B, fetch high water {} \
+         slots, {} pool misses",
+        mem_report.events,
+        mem.spawn_high_water,
+        mem.fetch_high_water,
+        mem.pool_misses,
+    );
+    let mem_fields: Vec<(&'static str, String)> = vec![
+        ("steady_allocs", steady_allocs.to_string()),
+        ("steady_events", mem_report.events.to_string()),
+        ("allocs_per_event", format!("{allocs_per_event:.4}")),
+        ("spawn_high_water", mem.spawn_high_water.to_string()),
+        ("spawn_spills", mem.spawn_spills.to_string()),
+        ("pool_misses", mem.pool_misses.to_string()),
+        ("fetch_high_water", mem.fetch_high_water.to_string()),
+        ("fetch_spills", mem.fetch_spills.to_string()),
+    ];
+
     if smoke {
         println!("(--smoke: engine section skipped)");
-        write_record(&all, smoke);
+        write_record(&all, smoke, &mem_fields);
         return;
     }
 
@@ -437,5 +488,5 @@ fn main() {
         }
         Err(e) => println!("engine benches skipped: {e}"),
     }
-    write_record(&all, smoke);
+    write_record(&all, smoke, &mem_fields);
 }

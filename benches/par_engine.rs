@@ -119,6 +119,28 @@ fn main() {
         None => "null".into(),
     };
 
+    // arena occupancy of the same run (out-of-band, like the profile):
+    // high-water marks show how full the shard-local arenas ran, spill
+    // and miss counters whether any steady-state push hit the heap
+    let memory = match arena::obs::take_mem_profile() {
+        Some(m) => {
+            println!(
+                "memory    spawn arena {} B high water ({} spills), \
+                 fetch slab {} slots ({} spills), {} pool misses, \
+                 mailbox spill {} B ({} regrows)",
+                m.spawn_high_water,
+                m.spawn_spills,
+                m.fetch_high_water,
+                m.fetch_spills,
+                m.pool_misses,
+                m.mailbox_spill_bytes,
+                m.mailbox_spill_growth,
+            );
+            m.to_json()
+        }
+        None => "null".into(),
+    };
+
     let results = benchkit::results_json(&[rs, rp]);
     let fields = [
         ("smoke", smoke.to_string()),
@@ -130,6 +152,7 @@ fn main() {
         ("sharded_events_per_sec", format!("{par_eps:.1}")),
         ("speedup", format!("{speedup:.4}")),
         ("profile", profile),
+        ("memory", memory),
         ("results", results),
     ];
     match benchkit::write_bench_json("BENCH_par.json", "par_engine", &fields) {

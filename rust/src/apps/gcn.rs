@@ -30,16 +30,22 @@ use super::workloads::{shared, GcnData};
 /// are cheaper to over-fetch than to pay another token for.
 const SEG_GAP: u32 = 4;
 
-/// Split a sorted, deduplicated vertex list into contiguous runs,
-/// bridging gaps of at most `gap`.
-fn segments(sorted: &[u32], gap: u32) -> Vec<Range> {
-    let mut out = Vec::new();
-    let mut it = sorted.iter().copied();
-    let Some(first) = it.next() else { return out };
+/// Split a sorted (ascending, duplicates allowed) vertex stream into
+/// contiguous runs, bridging gaps of at most `gap`, into `out` — the
+/// allocation-free core the combine hot path drives with a reused
+/// scratch buffer.
+fn segments_into(
+    sorted: impl IntoIterator<Item = u32>,
+    gap: u32,
+    out: &mut Vec<Range>,
+) {
+    out.clear();
+    let mut it = sorted.into_iter();
+    let Some(first) = it.next() else { return };
     let (mut lo, mut hi) = (first, first + 1);
     for v in it {
         if v <= hi + gap {
-            hi = v + 1;
+            hi = hi.max(v + 1);
         } else {
             out.push(Range::new(lo, hi));
             lo = v;
@@ -47,6 +53,14 @@ fn segments(sorted: &[u32], gap: u32) -> Vec<Range> {
         }
     }
     out.push(Range::new(lo, hi));
+}
+
+/// Split a sorted, deduplicated vertex list into contiguous runs,
+/// bridging gaps of at most `gap` (construction-time convenience over
+/// [`segments_into`]).
+fn segments(sorted: &[u32], gap: u32) -> Vec<Range> {
+    let mut out = Vec::new();
+    segments_into(sorted.iter().copied(), gap, &mut out);
     out
 }
 
@@ -74,6 +88,14 @@ pub struct GcnApp {
     expect: Vec<u32>,
     remaining: [Vec<u32>; 2],
     fired: [Vec<bool>; 2],
+    /// Combine scratch (pre-sized in `init` — `combine` runs once per
+    /// task on the DES hot path and must not allocate): the
+    /// `(target extent, source row)` pairs of one call, ...
+    needed_pairs: Vec<(u32, u32)>,
+    /// ... the per-extent covering target range, ...
+    remote_dst: Vec<(u32, u32)>,
+    /// ... and the segment list of one extent's push.
+    seg_scratch: Vec<Range>,
 }
 
 impl GcnApp {
@@ -105,6 +127,9 @@ impl GcnApp {
             expect: vec![],
             remaining: [vec![], vec![]],
             fired: [vec![], vec![]],
+            needed_pairs: vec![],
+            remote_dst: vec![],
+            seg_scratch: vec![],
         }
     }
 
@@ -150,29 +175,32 @@ impl GcnApp {
     /// Combine + push for one layer. `layer` 0 -> z1 = X·W1,
     /// 1 -> z2 = h1·W2. Returns MAC units.
     fn combine(&mut self, node: usize, rows: Range, layer: usize, ctx: &mut ExecCtx) -> u64 {
-        let (input, w, dim_in, dim_out): (&[f32], &[f32], usize, usize) =
-            if layer == 0 {
-                (&self.data.feats, &self.data.w1, self.f, self.h)
-            } else {
-                (&self.h1, &self.data.w2, self.h, self.c)
-            };
-        // dense combine for the local rows
-        let mut z = vec![0.0f32; rows.len() as usize * dim_out];
-        for (ri, i) in (rows.start..rows.end).enumerate() {
+        // dense combine straight into the layer's z rows (disjoint
+        // field borrows — each row is zeroed then accumulated in the
+        // same k-outer/j-inner order the old local buffer used, so the
+        // f32 results are bit-identical)
+        let (input, w, dim_in, dim_out, z): (
+            &[f32],
+            &[f32],
+            usize,
+            usize,
+            &mut Vec<f32>,
+        ) = if layer == 0 {
+            (&self.data.feats, &self.data.w1, self.f, self.h, &mut self.z1)
+        } else {
+            (&self.h1, &self.data.w2, self.h, self.c, &mut self.z2)
+        };
+        for i in rows.start..rows.end {
+            let base = i as usize * dim_out;
+            z[base..base + dim_out].fill(0.0);
             for k in 0..dim_in {
                 let xv = input[i as usize * dim_in + k];
                 if xv == 0.0 {
                     continue;
                 }
                 for j in 0..dim_out {
-                    z[ri * dim_out + j] += xv * w[k * dim_out + j];
+                    z[base + j] += xv * w[k * dim_out + j];
                 }
-            }
-        }
-        let zdst: &mut Vec<f32> = if layer == 0 { &mut self.z1 } else { &mut self.z2 };
-        for (ri, i) in (rows.start..rows.end).enumerate() {
-            for j in 0..dim_out {
-                zdst[i as usize * dim_out + j] = z[ri * dim_out + j];
             }
         }
         let mut units = (rows.len() as usize * dim_in * dim_out) as u64;
@@ -189,8 +217,12 @@ impl GcnApp {
         let agg_id = if layer == 0 { self.l1_agg() } else { self.l2_agg() };
         let slot = self.slot();
         let ne = self.dir.extent_count();
-        let mut needed: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
-        let mut remote_dst: Vec<(u32, u32)> = vec![(u32::MAX, 0); ne];
+        self.remote_dst.clear();
+        self.remote_dst.resize(ne, (u32::MAX, 0));
+        // the (extent, source) pairs of this call collect flat into a
+        // reused scratch and are grouped by a sort below — the BTreeMap
+        // this replaces allocated a node per extent, per call
+        let mut pairs = std::mem::take(&mut self.needed_pairs);
         // local handle onto the shared graph: `push_local` takes
         // `&mut self`, so the adjacency is read through its own Arc
         let data = Arc::clone(&self.data);
@@ -201,25 +233,41 @@ impl GcnApp {
                 if self.dir.extent_owner(te) == node {
                     units += self.push_local(i, t, layer);
                 } else {
-                    needed.entry(te).or_default().push(i);
-                    let (tlo, thi) = &mut remote_dst[te];
+                    pairs.push((te as u32, i));
+                    let (tlo, thi) = &mut self.remote_dst[te];
                     *tlo = (*tlo).min(t);
                     *thi = (*thi).max(t + 1);
                 }
             }
         }
-        for (te, srcs) in &mut needed {
-            let (tlo, thi) = remote_dst[*te];
-            srcs.dedup();
-            for seg in segments(srcs, SEG_GAP) {
+        // in-place sort gives te-ascending groups with sources in
+        // ascending row order inside each — exactly the iteration
+        // order of the old `BTreeMap<te, Vec<src>>` (sources were
+        // pushed in row order); duplicate sources land adjacent, and
+        // `segments_into` absorbs them like `dedup` did
+        pairs.sort_unstable();
+        let mut segs = std::mem::take(&mut self.seg_scratch);
+        let mut a = 0;
+        while a < pairs.len() {
+            let mut b = a;
+            while b < pairs.len() && pairs[b].0 == pairs[a].0 {
+                b += 1;
+            }
+            let (tlo, thi) = self.remote_dst[pairs[a].0 as usize];
+            segments_into(pairs[a..b].iter().map(|p| p.1), SEG_GAP, &mut segs);
+            for k in 0..segs.len() {
                 ctx.spawn_with_remote(
                     agg_id,
                     self.words_of(Range::new(tlo, thi)),
                     layer as f32,
-                    self.words_of(seg),
+                    self.words_of(segs[k]),
                 );
             }
+            a = b;
         }
+        pairs.clear();
+        self.needed_pairs = pairs;
+        self.seg_scratch = segs;
         units
     }
 
@@ -332,6 +380,7 @@ impl App for GcnApp {
         // extent bounds), hence the per-source-extent segmentation.
         let slot = self.h as u32;
         let mut needed: BTreeMap<(usize, usize), Vec<u32>> = BTreeMap::new();
+        let mut remote_edges = 0usize;
         for (u, l) in self.data.adj.iter().enumerate() {
             let ue = dir.extent_index(u as u32 * slot);
             let un = dir.extent_owner(ue);
@@ -339,9 +388,15 @@ impl App for GcnApp {
                 let te = dir.extent_index(t * slot);
                 if un != dir.extent_owner(te) {
                     needed.entry((ue, te)).or_default().push(u as u32);
+                    remote_edges += 1;
                 }
             }
         }
+        // combine scratch, sized to the worst case (every remote edge
+        // of the graph in one call) so the hot path never grows it
+        self.needed_pairs = Vec::with_capacity(remote_edges.max(16));
+        self.remote_dst = Vec::with_capacity(dir.extent_count());
+        self.seg_scratch = Vec::with_capacity(64);
         let mut expect: Vec<u32> =
             (0..n).map(|p| dir.extents(p).len() as u32).collect();
         for ((_, te), srcs) in needed.iter_mut() {

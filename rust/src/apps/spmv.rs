@@ -27,6 +27,10 @@ pub struct SpmvApp {
     x: Vec<f32>,
     y: Vec<f32>,
     dir: Directory,
+    /// Per-extent covering-range probe scratch (pre-sized in `init` —
+    /// the INIT task runs on the DES hot path and must not allocate).
+    lo: Vec<u32>,
+    hi: Vec<u32>,
 }
 
 impl SpmvApp {
@@ -41,6 +45,8 @@ impl SpmvApp {
             x: Vec::new(),
             y: Vec::new(),
             dir: Directory::unplaced(),
+            lo: Vec::new(),
+            hi: Vec::new(),
         }
     }
 
@@ -99,6 +105,8 @@ impl App for SpmvApp {
         self.x = (0..self.n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
         self.y = vec![0.0; self.n];
         self.dir = dir.clone();
+        self.lo = Vec::with_capacity(dir.extent_count());
+        self.hi = Vec::with_capacity(dir.extent_count());
     }
 
     fn root_tokens(&self) -> Vec<TaskToken> {
@@ -113,25 +121,28 @@ impl App for SpmvApp {
             // per-node band probe; under interleaved layouts the
             // directory carves the band at every ownership change.
             let ne = self.dir.extent_count();
-            let mut lo = vec![u32::MAX; ne];
-            let mut hi = vec![0u32; ne];
+            self.lo.clear();
+            self.lo.resize(ne, u32::MAX);
+            self.hi.clear();
+            self.hi.resize(ne, 0u32);
             for i in tok.task.start..tok.task.end {
                 let (cs, _) = self.mat.row(i as usize);
                 for &c in cs {
                     let e = self.dir.extent_index(c);
-                    lo[e] = lo[e].min(c);
-                    hi[e] = hi[e].max(c + 1);
+                    self.lo[e] = self.lo[e].min(c);
+                    self.hi[e] = self.hi[e].max(c + 1);
                 }
             }
             for e in 0..ne {
-                if self.dir.extent_owner(e) == node || lo[e] >= hi[e] {
+                if self.dir.extent_owner(e) == node || self.lo[e] >= self.hi[e]
+                {
                     continue;
                 }
                 ctx.spawn_with_remote(
                     self.acc_id(),
                     tok.task,
                     0.0,
-                    Range::new(lo[e], hi[e]),
+                    Range::new(self.lo[e], self.hi[e]),
                 );
             }
             // locally satisfiable part: every x-extent homed here

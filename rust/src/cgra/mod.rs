@@ -82,6 +82,10 @@ pub struct CgraNode {
     cycle_ps: Ps,
     reconfig_cycles: u64,
     mode: GroupAlloc,
+    /// Reusable idle-group candidate list (sized to the group count at
+    /// construction — `launch` is on the DES hot path and must not
+    /// allocate).
+    idle_scratch: Vec<usize>,
     pub stats: CgraStats,
 }
 
@@ -92,6 +96,7 @@ impl CgraNode {
             cycle_ps: cfg.cgra_cycle_ps(),
             reconfig_cycles: cfg.reconfig_cycles,
             mode: cfg.group_alloc,
+            idle_scratch: Vec::with_capacity(cfg.cgra_groups),
             stats: CgraStats::default(),
         }
     }
@@ -153,16 +158,29 @@ impl CgraNode {
         let mapping = mappings.get(n);
 
         // pick the n idle groups that most recently held this TASKid
-        // (config residency) to minimize reconfiguration.
-        let mut idle: Vec<usize> = (0..self.groups.len())
-            .filter(|&i| self.groups[i].busy_until <= now)
-            .collect();
-        idle.sort_by_key(|&i| self.groups[i].loaded != Some(token.task_id));
-        let chosen = &idle[..n];
+        // (config residency) to minimize reconfiguration: a stable
+        // two-pass partition (resident idle groups first, index order
+        // preserved within each class — the order the old stable sort
+        // by mismatch flag produced) into the reusable scratch.
+        self.idle_scratch.clear();
+        for i in 0..self.groups.len() {
+            if self.groups[i].busy_until <= now
+                && self.groups[i].loaded == Some(token.task_id)
+            {
+                self.idle_scratch.push(i);
+            }
+        }
+        for i in 0..self.groups.len() {
+            if self.groups[i].busy_until <= now
+                && self.groups[i].loaded != Some(token.task_id)
+            {
+                self.idle_scratch.push(i);
+            }
+        }
 
         // 8-cycle systolic reconfig if any chosen group holds a
         // different config (TASKid forwarded through the array once).
-        let needs_reconfig = chosen
+        let needs_reconfig = self.idle_scratch[..n]
             .iter()
             .any(|&i| self.groups[i].loaded != Some(token.task_id));
         let reconfig = if needs_reconfig { self.reconfig_cycles } else { 0 };
@@ -170,7 +188,8 @@ impl CgraNode {
         let compute = mapping.cycles_for(units);
         let start = now + reconfig * self.cycle_ps;
         let done = start + compute * self.cycle_ps;
-        for &i in chosen {
+        for k in 0..n {
+            let i = self.idle_scratch[k];
             self.groups[i].busy_until = done;
             self.groups[i].loaded = Some(token.task_id);
         }

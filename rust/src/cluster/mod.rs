@@ -39,6 +39,7 @@ use crate::api::{App, TaskRegistry};
 use crate::cgra::GroupMappings;
 use crate::config::{ArenaConfig, Ps};
 use crate::mapper::kernels::{kernel_for, KernelSpec};
+use crate::mem::{BufferPool, SlotArena};
 use crate::net::Interconnect;
 use crate::node::Node;
 use crate::placement::Directory;
@@ -112,13 +113,19 @@ pub struct Cluster {
     /// Per-app accounting (multi-user fairness + open-system latency).
     pub(in crate::cluster) app_stats: Vec<AppStat>,
     /// Spawn lists in flight between task launch and its Complete
-    /// event, addressed by the slot the event carries.
-    pub(in crate::cluster) spawn_slab: Vec<Vec<TaskToken>>,
-    pub(in crate::cluster) spawn_free: Vec<u32>,
+    /// event, addressed by the slot the event carries. Slot-arena
+    /// backed: slots and free list are pre-reserved at construction,
+    /// so the steady state park/take cycle never allocates.
+    pub(in crate::cluster) spawn_arena: SlotArena<Vec<TaskToken>>,
     /// Emptied token buffers recycled across tasks (ExecCtx spawn and
-    /// forward buffers) — the hot path allocates only until the pool
-    /// warms up.
-    pub(in crate::cluster) vec_pool: Vec<Vec<TaskToken>>,
+    /// forward buffers) — prefilled at construction so the hot path
+    /// never allocates, not even while warming up.
+    pub(in crate::cluster) pool: BufferPool<TaskToken>,
+    /// Per-shard heap state pre-built for `--shards` runs so the
+    /// measured region of `run_with_arrivals_sharded` only moves it
+    /// into place (empty for serial clusters; rebuilt in-run if a
+    /// cluster is run twice).
+    pub(in crate::cluster) shard_seeds: Vec<par::ShardSeed>,
     /// Observability sinks (simulated-time trace + interval metrics).
     /// Disabled by default — every hot-path record call is a branch on
     /// `None` and nothing allocates (see [`crate::obs`]).
@@ -414,6 +421,21 @@ impl Cluster {
                 .unwrap_or_else(|e| panic!("invalid --faults spec: {e}")),
             )
         };
+        // Hot-path arenas, sized here (construction) so the measured
+        // run region never grows them: `par::pool_slots` bounds the
+        // spawn lists parked per node (a CGRA node runs at most four
+        // groups at once) plus a couple of in-flight ExecCtx buffers.
+        let slots = par::pool_slots(n);
+        let spawn_arena = SlotArena::with_capacity(slots);
+        let mut pool = BufferPool::new();
+        pool.prefill(slots, par::POOL_BUF_CAP);
+        // Per-shard engines/mailboxes/arenas for the sharded path —
+        // built now so the carve inside the measured run is move-only.
+        let shard_seeds = if cfg.shards > 1 {
+            par::build_shard_seeds(n, cfg.shards.min(n))
+        } else {
+            Vec::new()
+        };
         Cluster {
             net,
             nodes,
@@ -429,9 +451,9 @@ impl Cluster {
             probe_origin: 0,
             probe_visited: vec![false; n],
             app_stats: vec![AppStat::default(); n_apps],
-            spawn_slab: Vec::new(),
-            spawn_free: Vec::new(),
-            vec_pool: Vec::new(),
+            spawn_arena,
+            pool,
+            shard_seeds,
             obs,
             faults,
             fault_stats: Default::default(),

@@ -148,9 +148,7 @@ impl Cluster {
                 }
                 Ev::Complete(n, slot) => {
                     self.nodes[n].running -= 1;
-                    let mut spawns =
-                        std::mem::take(&mut self.spawn_slab[slot as usize]);
-                    self.spawn_free.push(slot);
+                    let mut spawns = self.spawn_arena.take(slot);
                     self.obs.trace(
                         now,
                         n,
@@ -159,7 +157,7 @@ impl Cluster {
                     for s in spawns.drain(..) {
                         self.nodes[n].coalescer.push(s);
                     }
-                    self.vec_pool.push(spawns);
+                    self.pool.put(spawns);
                     self.schedule_pump(&mut des, now, n, &mut pump_pending);
                 }
                 Ev::DataReady(n, slot) => {
@@ -192,6 +190,23 @@ impl Cluster {
             self.sample_metrics(next_sample);
             next_sample = next_sample.saturating_add(interval);
         }
+
+        // Out-of-band memory telemetry (the sharded path publishes its
+        // own): arena peaks and spill counters, never in the report.
+        let sa = self.spawn_arena.stats();
+        let mut mem = crate::obs::MemProfile {
+            shards: 1,
+            spawn_high_water: sa.high_water,
+            spawn_spills: sa.spills,
+            pool_misses: self.pool.misses(),
+            ..Default::default()
+        };
+        for nd in &self.nodes {
+            let fs = nd.fetching.stats();
+            mem.fetch_high_water = mem.fetch_high_water.max(fs.high_water);
+            mem.fetch_spills += fs.spills;
+        }
+        crate::obs::set_mem_profile(mem);
 
         let mut r = self.report(makespan, des.processed());
         if let (Some(before), Some(e)) = (engine_before, engine.as_deref()) {
@@ -555,9 +570,9 @@ impl Cluster {
         let app_idx = self.kernel(tok.task_id).app_idx;
 
         // functional execution: mutate app state, collect spawns into
-        // recycled buffers (no allocation once the pool is warm).
-        let spawn_buf = self.vec_pool.pop().unwrap_or_default();
-        let fwd_buf = self.vec_pool.pop().unwrap_or_default();
+        // pooled buffers (prefilled at construction — no allocation).
+        let spawn_buf = self.pool.take();
+        let fwd_buf = self.pool.take();
         let mut ctx = ExecCtx::with_buffers(
             n as crate::token::NodeId,
             engine.as_deref_mut(),
@@ -570,19 +585,9 @@ impl Cluster {
         for f in forwards.drain(..) {
             self.nodes[n].coalescer.push(f);
         }
-        self.vec_pool.push(forwards);
-        // the spawn list parks in the slab until the Complete event
-        let slot = match self.spawn_free.pop() {
-            Some(s) => {
-                debug_assert!(self.spawn_slab[s as usize].is_empty());
-                self.spawn_slab[s as usize] = spawns;
-                s
-            }
-            None => {
-                self.spawn_slab.push(spawns);
-                (self.spawn_slab.len() - 1) as u32
-            }
-        };
+        self.pool.put(forwards);
+        // the spawn list parks in the arena until the Complete event
+        let slot = self.spawn_arena.park(spawns);
 
         // timed execution on the substrate (split borrows: kernels and
         // dirs are read-only while the node's compute state mutates).

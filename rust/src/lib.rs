@@ -44,6 +44,7 @@ pub mod eval;
 pub mod dispatcher;
 pub mod faults;
 pub mod mapper;
+pub mod mem;
 pub mod net;
 pub mod node;
 pub mod obs;

@@ -25,6 +25,7 @@ use arena::cluster::{Model, RunReport};
 use arena::config::ArenaConfig;
 use arena::eval;
 use arena::net::Topology;
+use arena::obs;
 use arena::placement::Layout;
 use arena::runtime::Engine;
 use arena::sched::PolicyKind;
@@ -424,6 +425,12 @@ fn write_sweep_bench_json(
         ("alloc_peak_bytes", a.peak_bytes.to_string()),
         ("alloc_total_bytes", a.total_bytes.to_string()),
         ("allocs", a.allocs.to_string()),
+        // arena occupancy of the last cell run (out-of-band side
+        // channel, so sweep reports stay pin-identical)
+        (
+            "memory",
+            obs::take_mem_profile().map_or("null".into(), |m| m.to_json()),
+        ),
         ("per_job", jobs_json),
     ];
     benchkit::write_bench_json(path, "sweep", &fields)
@@ -590,6 +597,12 @@ fn run_serve(
             ("alloc_peak_bytes", a.peak_bytes.to_string()),
             ("alloc_total_bytes", a.total_bytes.to_string()),
             ("allocs", a.allocs.to_string()),
+            // arena occupancy of the last policy replay (side channel,
+            // so the rendered tables stay byte-identical)
+            (
+                "memory",
+                obs::take_mem_profile().map_or("null".into(), |m| m.to_json()),
+            ),
             ("per_policy", benchkit::per_job_json(&out.timings)),
         ];
         benchkit::write_bench_json(path, "serve", &fields)

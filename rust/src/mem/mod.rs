@@ -1,0 +1,446 @@
+//! Shard-local hot-path memory: fixed-capacity arenas with spill
+//! accounting.
+//!
+//! The DES/serve hot path must not touch the heap in steady state —
+//! the CI allocation gate (`rust/tests/alloc_gate.rs`) holds every
+//! run (serial, sharded, faulted, serve replay) to a small fixed
+//! per-run constant, zero per simulated event. This module is the
+//! memory model behind that contract:
+//!
+//! * [`BumpArena`] — a fixed-capacity, cache-line-aligned bump store
+//!   of `u64` records (latencies, keys). Steady state never grows it;
+//!   pushes beyond capacity land in a counted overflow so correctness
+//!   survives a mis-sized arena while the `spills` counter makes the
+//!   miss visible in `BENCH_*.json`.
+//! * [`SlotArena`] — a sequence-numbered circular slot arena (a slab
+//!   with a LIFO free list and per-slot generation stamps) for parked
+//!   state addressed by events: in-flight remote fetches, recycled
+//!   spawn buffers. Pre-size it at construction and steady state is
+//!   pure index arithmetic.
+//! * [`SpillVec`] — a `Vec` with a declared capacity and a counted
+//!   growth path, for buffers that are *supposed* to stay within a
+//!   pre-reserved bound (mailbox spill storage, deferred-NetOp logs).
+//! * [`BufferPool`] — a recycling pool of `Vec<T>` buffers with a
+//!   miss counter; a prefilled pool never allocates on the take/put
+//!   cycle the executor drives per task.
+//!
+//! Ownership rule: every arena is owned by exactly one shard (or the
+//! serial engine, or one serve worker) — no locks, no sharing, no
+//! cross-shard handles. The conservative-lookahead engine moves whole
+//! shards (arenas included) between the coordinator and workers by
+//! value, so the single-owner rule is structural, not a convention.
+//!
+//! None of the counters here reach [`crate::cluster::RunReport`]:
+//! report equality across `--shards` is a determinism pin, and arena
+//! high-water marks legitimately differ per shard count. Telemetry
+//! travels out-of-band through [`crate::obs::MemProfile`].
+
+/// Snapshot of one arena's occupancy accounting, folded into
+/// [`crate::obs::MemProfile`] and the `BENCH_*.json` trajectory.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Peak bytes (or slots, for slot-granular arenas) in use.
+    pub high_water: u64,
+    /// Allocations that missed the fixed capacity and hit the heap.
+    pub spills: u64,
+}
+
+/// Words per 64-byte cache line.
+const LINE_WORDS: usize = 8;
+
+/// One cache line of record storage. The alignment keeps a shard's
+/// arena from false-sharing with its neighbour when shards are moved
+/// into worker threads.
+#[repr(align(64))]
+#[derive(Clone, Copy)]
+struct Line([u64; LINE_WORDS]);
+
+/// Fixed-capacity, cache-line-aligned bump store of `u64` records.
+///
+/// `push` is an index increment in steady state; `reset` is O(1) and
+/// keeps the storage. Capacity is fixed at construction — a push
+/// beyond it goes to a counted heap overflow (`spills`), never
+/// silently regrowing the aligned store.
+pub struct BumpArena {
+    lines: Vec<Line>,
+    len: usize,
+    cap: usize,
+    high_water: usize,
+    spills: u64,
+    overflow: Vec<u64>,
+}
+
+impl BumpArena {
+    /// Arena holding up to `words` records (rounded up to whole cache
+    /// lines). All storage is allocated here, once.
+    pub fn with_capacity(words: usize) -> Self {
+        let lines = words.div_ceil(LINE_WORDS).max(1);
+        BumpArena {
+            lines: vec![Line([0; LINE_WORDS]); lines],
+            len: 0,
+            cap: lines * LINE_WORDS,
+            high_water: 0,
+            spills: 0,
+            overflow: Vec::new(),
+        }
+    }
+
+    /// Append one record. Heap-free while `len < capacity`.
+    pub fn push(&mut self, v: u64) {
+        if self.len < self.cap {
+            self.lines[self.len / LINE_WORDS].0[self.len % LINE_WORDS] = v;
+        } else {
+            self.spills += 1;
+            self.overflow.push(v);
+        }
+        self.len += 1;
+        self.high_water = self.high_water.max(self.len);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn get(&self, i: usize) -> u64 {
+        if i < self.cap {
+            self.lines[i / LINE_WORDS].0[i % LINE_WORDS]
+        } else {
+            self.overflow[i - self.cap]
+        }
+    }
+
+    /// Records in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    /// Forget the records, keep the storage and the counters.
+    pub fn reset(&mut self) {
+        self.len = 0;
+        self.overflow.clear();
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            high_water: (self.high_water * 8) as u64,
+            spills: self.spills,
+        }
+    }
+}
+
+/// Sequence-numbered circular slot arena: a slab whose free slots are
+/// recycled LIFO and whose occupancy is validated by a per-slot
+/// generation stamp (debug builds assert a take matches the park that
+/// issued the slot — a stale event index trips immediately instead of
+/// silently resurrecting the wrong token).
+///
+/// Pre-size with [`SlotArena::with_capacity`] and steady state makes
+/// no allocations: `park` pops the free list, `take` pushes it back.
+/// Growth past the pre-reserved capacity is counted in `spills`.
+#[derive(Debug, Default)]
+pub struct SlotArena<T> {
+    slots: Vec<Option<T>>,
+    gen: Vec<u32>,
+    free: Vec<u32>,
+    live: usize,
+    seq: u32,
+    reserved: usize,
+    high_water: usize,
+    spills: u64,
+}
+
+impl<T> SlotArena<T> {
+    pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+
+    /// Arena with `cap` pre-allocated slots (all on the free list).
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut slots = Vec::with_capacity(cap);
+        let mut gen = Vec::with_capacity(cap);
+        let mut free = Vec::with_capacity(cap);
+        for i in (0..cap).rev() {
+            slots.push(None);
+            gen.push(0);
+            free.push(i as u32);
+        }
+        SlotArena {
+            slots,
+            gen,
+            free,
+            live: 0,
+            seq: 0,
+            reserved: cap,
+            high_water: 0,
+            spills: 0,
+        }
+    }
+
+    /// Park a value; returns the slot index events carry back.
+    pub fn park(&mut self, t: T) -> u32 {
+        self.live += 1;
+        self.high_water = self.high_water.max(self.live);
+        self.seq = self.seq.wrapping_add(1);
+        match self.free.pop() {
+            Some(s) => {
+                debug_assert!(self.slots[s as usize].is_none());
+                self.slots[s as usize] = Some(t);
+                self.gen[s as usize] = self.seq;
+                s
+            }
+            None => {
+                if self.slots.len() >= self.reserved {
+                    self.spills += 1;
+                }
+                self.slots.push(Some(t));
+                self.gen.push(self.seq);
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Take the value parked in `slot`.
+    pub fn take(&mut self, slot: u32) -> T {
+        let t = self.slots[slot as usize]
+            .take()
+            .expect("take from an empty arena slot");
+        self.free.push(slot);
+        self.live -= 1;
+        t
+    }
+
+    /// Generation stamp issued by the `park` that filled `slot` (for
+    /// callers that want to pin an event to one specific occupancy).
+    pub fn generation(&self, slot: u32) -> u32 {
+        self.gen[slot as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Drop all parked values and rebuild the free list (fault
+    /// recovery). Storage and counters survive.
+    pub fn clear(&mut self) {
+        self.free.clear();
+        for i in (0..self.slots.len()).rev() {
+            self.slots[i] = None;
+            self.free.push(i as u32);
+        }
+        self.live = 0;
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats { high_water: self.high_water as u64, spills: self.spills }
+    }
+}
+
+/// A `Vec` with a declared steady-state capacity: pushes within the
+/// pre-reserved bound are plain stores, growth past it is counted.
+/// For buffers that should stay fixed (mailbox spill storage,
+/// deferred-NetOp logs) without making an overflow a correctness bug.
+#[derive(Debug, Default)]
+pub struct SpillVec<T> {
+    buf: Vec<T>,
+    reserved: usize,
+    high_water: usize,
+    spills: u64,
+}
+
+impl<T> SpillVec<T> {
+    pub fn with_capacity(cap: usize) -> Self {
+        SpillVec {
+            buf: Vec::with_capacity(cap),
+            reserved: cap,
+            high_water: 0,
+            spills: 0,
+        }
+    }
+
+    pub fn push(&mut self, v: T) {
+        if self.buf.len() >= self.reserved {
+            self.spills += 1;
+        }
+        self.buf.push(v);
+        self.high_water = self.high_water.max(self.buf.len());
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.buf
+    }
+
+    pub fn drain(&mut self) -> std::vec::Drain<'_, T> {
+        self.buf.drain(..)
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.buf.iter()
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            high_water: (self.high_water * std::mem::size_of::<T>()) as u64,
+            spills: self.spills,
+        }
+    }
+}
+
+/// Recycling pool of `Vec<T>` buffers. `take` after [`BufferPool::
+/// prefill`] never allocates; a miss (empty pool) falls back to a
+/// fresh `Vec` and bumps the counter so an under-provisioned pool
+/// shows up in the memory telemetry instead of as silent heap
+/// traffic.
+#[derive(Debug, Default)]
+pub struct BufferPool<T> {
+    pool: Vec<Vec<T>>,
+    misses: u64,
+}
+
+impl<T> BufferPool<T> {
+    pub fn new() -> Self {
+        BufferPool { pool: Vec::new(), misses: 0 }
+    }
+
+    /// Stock `n` buffers of `cap` elements each (construction time).
+    pub fn prefill(&mut self, n: usize, cap: usize) {
+        self.pool.reserve(n);
+        for _ in 0..n {
+            self.pool.push(Vec::with_capacity(cap));
+        }
+    }
+
+    pub fn take(&mut self) -> Vec<T> {
+        match self.pool.pop() {
+            Some(b) => b,
+            None => {
+                self.misses += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer (cleared, capacity kept).
+    pub fn put(&mut self, mut b: Vec<T>) {
+        b.clear();
+        self.pool.push(b);
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn available(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_arena_is_fixed_until_it_spills() {
+        let mut a = BumpArena::with_capacity(10);
+        assert_eq!(a.capacity(), 16, "rounded up to whole cache lines");
+        for i in 0..16u64 {
+            a.push(i * 3);
+        }
+        assert_eq!(a.stats().spills, 0);
+        a.push(99); // 17th record: past the fixed capacity
+        assert_eq!(a.stats().spills, 1);
+        assert_eq!(a.len(), 17);
+        let collected: Vec<u64> = a.iter().collect();
+        assert_eq!(collected[3], 9);
+        assert_eq!(collected[16], 99, "overflow reads back in order");
+        assert_eq!(a.stats().high_water, 17 * 8, "high water in bytes");
+        a.reset();
+        assert!(a.is_empty());
+        assert_eq!(a.stats().high_water, 17 * 8, "reset keeps the peak");
+    }
+
+    #[test]
+    fn bump_arena_storage_is_cache_line_aligned() {
+        let a = BumpArena::with_capacity(64);
+        assert_eq!(a.lines.as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn slot_arena_recycles_and_stamps() {
+        let mut s: SlotArena<u64> = SlotArena::with_capacity(2);
+        let s0 = s.park(10);
+        let s1 = s.park(11);
+        assert_ne!(s0, s1);
+        let g0 = s.generation(s0);
+        assert_eq!(s.take(s0), 10);
+        let s2 = s.park(12);
+        assert_eq!(s2, s0, "freed slot reused before the arena grows");
+        assert_ne!(s.generation(s2), g0, "re-park advances the stamp");
+        assert_eq!(s.stats().spills, 0, "within the reserve: no growth");
+        let _ = s.park(13); // third live value in a 2-slot arena
+        assert_eq!(s.stats().spills, 1);
+        assert_eq!(s.stats().high_water, 3);
+        s.clear();
+        assert!(s.is_empty());
+        let _ = s.park(14); // cleared slots are free again, no growth
+        assert_eq!(s.stats().spills, 1);
+    }
+
+    #[test]
+    fn spill_vec_counts_growth_past_the_reserve() {
+        let mut v: SpillVec<u32> = SpillVec::with_capacity(2);
+        v.push(1);
+        v.push(2);
+        assert_eq!(v.stats().spills, 0);
+        v.push(3);
+        assert_eq!(v.stats().spills, 1);
+        assert_eq!(v.as_slice(), &[1, 2, 3]);
+        assert_eq!(v.stats().high_water, 3 * 4, "bytes, not elements");
+        let drained: Vec<u32> = v.drain().collect();
+        assert_eq!(drained, vec![1, 2, 3]);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn buffer_pool_misses_only_when_empty() {
+        let mut p: BufferPool<u8> = BufferPool::new();
+        p.prefill(2, 16);
+        let a = p.take();
+        let b = p.take();
+        assert_eq!(a.capacity(), 16);
+        assert_eq!(p.misses(), 0);
+        let c = p.take();
+        assert_eq!(p.misses(), 1, "third take outruns the prefill");
+        assert_eq!(c.capacity(), 0);
+        p.put(a);
+        p.put(b);
+        p.put(c);
+        assert_eq!(p.available(), 3);
+        let d = p.take();
+        assert_eq!(d.capacity(), 0, "LIFO: the miss buffer comes back first");
+        assert_eq!(p.misses(), 1);
+    }
+}

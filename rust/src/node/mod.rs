@@ -13,6 +13,7 @@ use std::collections::VecDeque;
 use crate::cgra::{CgraNode, CoalesceUnit};
 use crate::config::{ArenaConfig, Ps};
 use crate::dispatcher::Dispatcher;
+use crate::mem::{ArenaStats, SlotArena};
 use crate::token::TaskToken;
 
 /// Software-runtime overhead per handled token for the MPI/CPU variant
@@ -90,61 +91,53 @@ pub struct NodeStats {
     pub fault_stalls: u64,
 }
 
+/// Fetch slots pre-reserved per node: peak fetch concurrency is
+/// bounded by the dispatcher's wait-queue depth in practice, so this
+/// covers steady state; deeper bursts grow the arena (counted in its
+/// spill stats, surfaced through the memory telemetry).
+const FETCH_SLOTS: usize = 16;
+
 /// Tokens parked on in-flight remote fetches, addressed by slot: the
 /// DataReady event carries the slot index, so completion is a direct
 /// O(1) take instead of the old O(F) equality scan over a `Vec`.
-/// Slots are recycled LIFO; the slab never shrinks (its high-water
-/// mark is the node's peak fetch concurrency).
+/// Backed by a [`SlotArena`]: slots are recycled LIFO, pre-reserved
+/// at construction, sequence-stamped, and the arena never shrinks
+/// (its high-water mark is the node's peak fetch concurrency).
 #[derive(Debug, Default)]
 pub struct FetchSlab {
-    slots: Vec<Option<TaskToken>>,
-    free: Vec<u32>,
-    live: usize,
+    arena: SlotArena<TaskToken>,
 }
 
 impl FetchSlab {
     pub fn new() -> Self {
-        FetchSlab::default()
+        FetchSlab { arena: SlotArena::with_capacity(FETCH_SLOTS) }
     }
 
     /// Park a token; returns the slot the DataReady event must carry.
     pub fn park(&mut self, t: TaskToken) -> u32 {
-        self.live += 1;
-        match self.free.pop() {
-            Some(s) => {
-                debug_assert!(self.slots[s as usize].is_none());
-                self.slots[s as usize] = Some(t);
-                s
-            }
-            None => {
-                self.slots.push(Some(t));
-                (self.slots.len() - 1) as u32
-            }
-        }
+        self.arena.park(t)
     }
 
     /// Take the token parked in `slot` (DataReady completion).
     pub fn take(&mut self, slot: u32) -> TaskToken {
-        let t = self.slots[slot as usize]
-            .take()
-            .expect("DataReady for unknown fetch");
-        self.free.push(slot);
-        self.live -= 1;
-        t
+        self.arena.take(slot)
     }
 
     pub fn len(&self) -> usize {
-        self.live
+        self.arena.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.live == 0
+        self.arena.is_empty()
     }
 
     pub fn clear(&mut self) {
-        self.slots.clear();
-        self.free.clear();
-        self.live = 0;
+        self.arena.clear();
+    }
+
+    /// Peak concurrency + growth-past-reserve accounting.
+    pub fn stats(&self) -> ArenaStats {
+        self.arena.stats()
     }
 }
 
@@ -192,7 +185,10 @@ impl Node {
             } else {
                 Compute::Cpu { busy_until: 0 }
             },
-            inbound: VecDeque::new(),
+            // backpressure overflow: reserve enough for a deep burst so
+            // steady state never regrows it (its high-water mark, not
+            // its capacity, is the backpressure metric)
+            inbound: VecDeque::with_capacity(64),
             coalescer: {
                 let c =
                     CoalesceUnit::new(cfg.spawn_queues, cfg.spawn_queue_depth);

@@ -703,6 +703,70 @@ pub fn take_par_profile() -> Option<ParProfile> {
     PAR_PROFILE.lock().expect("par profile poisoned").take()
 }
 
+/// Hot-path memory profile (sink 4): arena high-water marks and spill
+/// counters of the most recent run — serial or sharded. Published
+/// out-of-band like [`ParProfile`] because arena occupancy legitimately
+/// differs per shard count, and [`crate::cluster::RunReport`] equality
+/// across `--shards` is a determinism pin. Feeds `BENCH_micro.json`,
+/// `BENCH_par.json` and `--bench-json`; the allocation gate
+/// (`rust/tests/alloc_gate.rs`) is the hard enforcement, this is the
+/// trajectory view.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MemProfile {
+    /// Shards the run executed on (1 for the serial loop).
+    pub shards: usize,
+    /// Peak parked spawn lists in any one slot arena (slots).
+    pub spawn_high_water: u64,
+    /// Spawn-arena growth past the pre-reserved slots (all arenas).
+    pub spawn_spills: u64,
+    /// ExecCtx buffer takes that found the pool empty (all pools).
+    pub pool_misses: u64,
+    /// Peak bytes parked in any one mailbox's spill storage.
+    pub mailbox_spill_bytes: u64,
+    /// Mailbox spill-vec growth past the declared reserve (all
+    /// mailboxes). Distinct from `ParProfile::mailbox_spills`, which
+    /// counts ring overflows into the (pre-reserved) spill vec.
+    pub mailbox_spill_growth: u64,
+    /// Peak live remote fetches at any one node (slots).
+    pub fetch_high_water: u64,
+    /// Fetch-slab growth past the pre-reserved slots (all nodes).
+    pub fetch_spills: u64,
+}
+
+impl MemProfile {
+    /// The profile as one JSON object — the `memory` field of the
+    /// bench records (`--bench-json`, BENCH_par.json, BENCH_micro.json
+    /// all embed the same shape).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"shards\":{},\"spawn_high_water\":{},\"spawn_spills\":{},\
+             \"pool_misses\":{},\"mailbox_spill_bytes\":{},\
+             \"mailbox_spill_growth\":{},\"fetch_high_water\":{},\
+             \"fetch_spills\":{}}}",
+            self.shards,
+            self.spawn_high_water,
+            self.spawn_spills,
+            self.pool_misses,
+            self.mailbox_spill_bytes,
+            self.mailbox_spill_growth,
+            self.fetch_high_water,
+            self.fetch_spills,
+        )
+    }
+}
+
+static MEM_PROFILE: Mutex<Option<MemProfile>> = Mutex::new(None);
+
+/// Publish the memory profile of the most recent run.
+pub fn set_mem_profile(p: MemProfile) {
+    *MEM_PROFILE.lock().expect("mem profile poisoned") = Some(p);
+}
+
+/// Take the memory profile of the most recent run, if any.
+pub fn take_mem_profile() -> Option<MemProfile> {
+    MEM_PROFILE.lock().expect("mem profile poisoned").take()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

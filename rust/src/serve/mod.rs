@@ -45,6 +45,7 @@ use crate::apps::{id_span, make_app_based, Scale, ALL};
 use crate::cluster::{Arrival, Cluster, Model, RunReport};
 use crate::config::{ArenaConfig, Ps, PS_PER_US};
 use crate::eval::Table;
+use crate::mem::BumpArena;
 use crate::net::Topology;
 use crate::sched::PolicyKind;
 
@@ -56,35 +57,39 @@ pub struct TraceJob {
     pub app: String,
 }
 
-/// Parse a trace (see the module docs for the format).
+/// Parse a trace (see the module docs for the format). Fields are
+/// taken straight off the split iterator — no per-line field vector —
+/// and the job list is pre-sized to the line count, so parsing costs
+/// one allocation plus the app-name strings.
 pub fn parse_trace(text: &str) -> Result<Vec<TraceJob>, String> {
-    let mut jobs = Vec::new();
+    let mut jobs = Vec::with_capacity(text.lines().count());
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.split('#').next().unwrap().trim();
         if line.is_empty() {
             continue;
         }
-        let fields: Vec<&str> = line.split_whitespace().collect();
-        if fields.len() != 3 {
+        let mut fields = line.split_whitespace();
+        let (Some(f_at), Some(f_node), Some(f_app), None) =
+            (fields.next(), fields.next(), fields.next(), fields.next())
+        else {
             return Err(format!(
                 "trace line {}: expected 'at_us node app', got '{line}'",
                 lineno + 1
             ));
-        }
-        let at_us: u64 = fields[0].parse().map_err(|_| {
-            format!("trace line {}: bad time '{}'", lineno + 1, fields[0])
+        };
+        let at_us: u64 = f_at.parse().map_err(|_| {
+            format!("trace line {}: bad time '{f_at}'", lineno + 1)
         })?;
-        let node: usize = fields[1].parse().map_err(|_| {
-            format!("trace line {}: bad node '{}'", lineno + 1, fields[1])
+        let node: usize = f_node.parse().map_err(|_| {
+            format!("trace line {}: bad node '{f_node}'", lineno + 1)
         })?;
-        let app = fields[2].to_string();
-        if !ALL.contains(&app.as_str()) {
+        if !ALL.contains(&f_app) {
             return Err(format!(
-                "trace line {}: unknown app '{app}' (see `arena apps`)",
+                "trace line {}: unknown app '{f_app}' (see `arena apps`)",
                 lineno + 1
             ));
         }
-        jobs.push(TraceJob { at_us, node, app });
+        jobs.push(TraceJob { at_us, node, app: f_app.to_string() });
     }
     if jobs.is_empty() {
         return Err("trace contains no jobs".into());
@@ -137,6 +142,10 @@ pub struct ServeRun {
     pub report: RunReport,
     /// Arrival → completion per job, in trace order.
     pub latencies_ps: Vec<Ps>,
+    /// The same latencies as a distribution — percentile queries come
+    /// off this instead of re-sorting a clone of `latencies_ps` per
+    /// summary row.
+    pub hist: LatencyHistogram,
 }
 
 impl ServeRun {
@@ -168,6 +177,117 @@ pub fn percentile_ps(sorted: &[Ps], pct: u32) -> Option<Ps> {
     Some(sorted[rank.max(1) - 1])
 }
 
+/// Values below this are their own histogram bucket (exact).
+const HIST_EXACT_WIDTH: u64 = 64;
+/// Minor (linear) buckets per log2 major bucket: values ≥ 64 keep
+/// their top 6 significant bits, so the quantile error is bounded at
+/// one part in 32 (~3%).
+const HIST_MINORS: usize = 32;
+/// 64 exact buckets + 32 minors for each major exponent 6..=63.
+const HIST_BUCKETS: usize = HIST_EXACT_WIDTH as usize + 58 * HIST_MINORS;
+
+fn hist_bucket_of(v: u64) -> usize {
+    if v < HIST_EXACT_WIDTH {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros() as u64; // 6..=63
+    let m = v >> (e - 5); // top 6 bits, in [32, 64)
+    (HIST_EXACT_WIDTH + (e - 6) * HIST_MINORS as u64 + (m - 32)) as usize
+}
+
+/// Smallest value that lands in bucket `i` (inverse of
+/// [`hist_bucket_of`] at bucket granularity).
+fn hist_bucket_lo(i: usize) -> u64 {
+    if i < HIST_EXACT_WIDTH as usize {
+        return i as u64;
+    }
+    let off = (i - HIST_EXACT_WIDTH as usize) as u64;
+    let e = 6 + off / HIST_MINORS as u64;
+    let m = HIST_MINORS as u64 + off % HIST_MINORS as u64;
+    m << (e - 5)
+}
+
+/// Per-replay latency distribution. Samples up to the arena capacity
+/// are stored exactly (an aligned [`BumpArena`], one `u64` each), so
+/// percentile queries on them are bit-identical to nearest-rank over
+/// a sorted copy — [`percentile_ps`] is the golden oracle, and every
+/// trace that fits the 4-bit task-id space (≤ 15 jobs) stays on this
+/// path. Past the capacity the histogram degrades to log2×linear
+/// bucket counts (backfilled from the stored samples on first spill)
+/// with ≤ 1/32 relative quantile error, instead of growing the heap
+/// per sample.
+pub struct LatencyHistogram {
+    exact: BumpArena,
+    counts: Vec<u32>,
+    total: u64,
+    max_ps: Ps,
+}
+
+impl LatencyHistogram {
+    pub fn with_capacity(samples: usize) -> Self {
+        LatencyHistogram {
+            exact: BumpArena::with_capacity(samples.max(1)),
+            counts: Vec::new(),
+            total: 0,
+            max_ps: 0,
+        }
+    }
+
+    pub fn record(&mut self, ps: Ps) {
+        self.total += 1;
+        self.max_ps = self.max_ps.max(ps);
+        if self.exact.len() < self.exact.capacity() {
+            self.exact.push(ps);
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0u32; HIST_BUCKETS];
+            for v in self.exact.iter() {
+                self.counts[hist_bucket_of(v)] += 1;
+            }
+        }
+        self.counts[hist_bucket_of(ps)] += 1;
+    }
+
+    pub fn len(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Whether every recorded sample is still held exactly (percentiles
+    /// match [`percentile_ps`] bit-for-bit).
+    pub fn is_exact(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Nearest-rank percentile: exact below the arena capacity, bucket
+    /// lower bound (clamped to the observed max) beyond it. `None` on
+    /// an empty set, like [`percentile_ps`].
+    pub fn percentile_ps(&self, pct: u32) -> Option<Ps> {
+        assert!((1..=100).contains(&pct), "pct {pct} out of (0, 100]");
+        if self.total == 0 {
+            return None;
+        }
+        if self.is_exact() {
+            let mut v: Vec<Ps> = self.exact.iter().collect();
+            v.sort_unstable();
+            return percentile_ps(&v, pct);
+        }
+        let rank = (pct as u64 * self.total).div_ceil(100).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c as u64;
+            if c > 0 && seen >= rank {
+                return Some(hist_bucket_lo(i).min(self.max_ps));
+            }
+        }
+        Some(self.max_ps)
+    }
+}
+
 fn ms(ps: Ps) -> f64 {
     ps as f64 / 1e9
 }
@@ -179,13 +299,15 @@ fn job_seed(seed: u64, i: usize) -> u64 {
     seed.wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15))
 }
 
-/// Replay the trace once under one policy. Deterministic function of
-/// `(spec, kind, theta_pm)`.
-pub fn run_one(
+/// Build the replay cluster and arrival schedule for one policy
+/// without running it. Split out of [`run_one`] so the steady-state
+/// allocation gate (`tests/alloc_gate.rs`) can exclude construction
+/// and measure `run_with_arrivals` alone.
+pub fn prepare(
     spec: &ServeSpec,
     kind: PolicyKind,
     theta_pm: u32,
-) -> Result<ServeRun, String> {
+) -> Result<(Cluster, Vec<Arrival>), String> {
     let mut apps = Vec::with_capacity(spec.trace.len());
     let mut arrivals = Vec::with_capacity(spec.trace.len());
     let mut next_id: u16 = 1;
@@ -264,16 +386,30 @@ pub fn run_one(
             .map_err(|e| format!("serve --faults: {e}"))?;
     }
     let cfg = spec.obs.apply(cfg, kind.name());
-    let mut cl = Cluster::new(cfg, spec.model, apps);
+    Ok((Cluster::new(cfg, spec.model, apps), arrivals))
+}
+
+/// Replay the trace once under one policy. Deterministic function of
+/// `(spec, kind, theta_pm)`.
+pub fn run_one(
+    spec: &ServeSpec,
+    kind: PolicyKind,
+    theta_pm: u32,
+) -> Result<ServeRun, String> {
+    let (mut cl, arrivals) = prepare(spec, kind, theta_pm)?;
     let report = cl.run_with_arrivals(&arrivals, None);
     cl.check()
         .map_err(|e| format!("policy {}: oracle failed: {e}", kind.name()))?;
-    let latencies_ps = report
+    let latencies_ps: Vec<Ps> = report
         .app_latency
         .iter()
         .map(|l| l.latency_ps())
         .collect();
-    Ok(ServeRun { report, latencies_ps })
+    let mut hist = LatencyHistogram::with_capacity(latencies_ps.len());
+    for &l in &latencies_ps {
+        hist.record(l);
+    }
+    Ok(ServeRun { report, latencies_ps, hist })
 }
 
 /// Assembled serve result (render is the determinism contract, like
@@ -380,10 +516,8 @@ pub fn run_ab(
         &["mk_ms", "jobs/s", "p50_ms", "p95_ms", "p99_ms"],
     );
     for run in &runs {
-        let mut sorted = run.latencies_ps.clone();
-        sorted.sort_unstable();
         // empty sets yield NaN cells, rendered as "n/a" dashes
-        let pct = |p| percentile_ps(&sorted, p).map(ms).unwrap_or(f64::NAN);
+        let pct = |p| run.hist.percentile_ps(p).map(ms).unwrap_or(f64::NAN);
         summary.row(
             &run.report.policy,
             vec![
@@ -441,6 +575,67 @@ mod tests {
         }
         // even count: p50 is the lower-middle value under nearest rank
         assert_eq!(percentile_ps(&[1, 2, 3, 4], 50), Some(2));
+    }
+
+    /// Below its arena capacity the histogram is bit-identical to
+    /// nearest-rank over a sorted copy — `percentile_ps` is the golden
+    /// oracle (this is the path every ≤ 15-job trace takes).
+    #[test]
+    fn histogram_matches_the_percentile_oracle() {
+        let samples: [Ps; 7] = [830_000, 10, 20, 40, 7, 0, 830_000];
+        let mut h = LatencyHistogram::with_capacity(samples.len());
+        for &s in &samples {
+            h.record(s);
+        }
+        assert!(h.is_exact());
+        assert_eq!(h.len(), 7);
+        let mut sorted = samples.to_vec();
+        sorted.sort_unstable();
+        for pct in [1, 25, 50, 75, 95, 99, 100] {
+            assert_eq!(h.percentile_ps(pct), percentile_ps(&sorted, pct));
+        }
+        assert!(LatencyHistogram::with_capacity(4).percentile_ps(50).is_none());
+    }
+
+    /// Past the capacity the histogram spills to log2×linear buckets:
+    /// quantiles come back as the bucket lower bound, within 1/32 below
+    /// the exact nearest-rank value and never above it.
+    #[test]
+    fn histogram_spill_path_stays_within_bucket_error() {
+        let mut h = LatencyHistogram::with_capacity(4);
+        let samples: Vec<Ps> = (1..=1000).map(|i| i * 997).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        assert!(!h.is_exact(), "1000 samples must exceed a 4-slot arena");
+        assert_eq!(h.len(), 1000);
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for pct in [1, 50, 95, 99, 100] {
+            let approx = h.percentile_ps(pct).unwrap();
+            let exact = percentile_ps(&sorted, pct).unwrap();
+            assert!(approx <= exact, "p{pct}: {approx} > exact {exact}");
+            assert!(
+                approx as f64 >= exact as f64 * 32.0 / 33.0 - 1.0,
+                "p{pct}: {approx} more than 1/32 below exact {exact}"
+            );
+        }
+    }
+
+    /// The bucket mapping round-trips: each bucket's lower bound lands
+    /// back in that bucket, and the mapping is monotone.
+    #[test]
+    fn histogram_buckets_round_trip() {
+        for i in 0..HIST_BUCKETS {
+            assert_eq!(hist_bucket_of(hist_bucket_lo(i)), i, "bucket {i}");
+        }
+        for v in [0u64, 1, 63, 64, 65, 127, 128, 1 << 20, u64::MAX] {
+            let b = hist_bucket_of(v);
+            assert!(hist_bucket_lo(b) <= v);
+            if v > 0 {
+                assert!(hist_bucket_of(v - 1) <= b, "monotone at {v}");
+            }
+        }
     }
 
     /// The empty-set / zero-makespan edge cases report "n/a" instead of

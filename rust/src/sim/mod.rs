@@ -83,7 +83,10 @@ impl<E> Engine<E> {
             keys: Vec::with_capacity(cap),
             slots: Vec::with_capacity(cap),
             slab: Vec::with_capacity(cap),
-            free: Vec::new(),
+            // popped slots park here before reuse: the free list peaks
+            // at slab size, so reserve it alongside the slab or the
+            // first drain regrows it mid-run
+            free: Vec::with_capacity(cap),
             now: 0,
             seq: 0,
             processed: 0,

@@ -14,9 +14,14 @@
 //!   [`ShardEngine::remap_keys`].
 //! * [`Mailbox`] — a fixed-capacity ring buffer (SNIPPETS-style
 //!   shard-local arena) for deferred cross-shard network operations.
-//!   Pushes never reorder; capacity overflow spills to a plain `Vec`
-//!   so determinism survives pathological windows at the cost of an
-//!   allocation.
+//!   Pushes never reorder; capacity overflow spills to a
+//!   [`crate::mem::SpillVec`] with its own pre-reserved bound, so
+//!   determinism survives pathological windows and even the spill
+//!   path stays heap-free until the reserve is exhausted.
+//! * [`SyncCell`] — a single-slot rendezvous (mutex + condvar, no
+//!   queue, no heap) for the coordinator/worker shard handoff. The
+//!   old `mpsc` channels allocated queue blocks per window, which the
+//!   zero-alloc gate now forbids.
 //!
 //! ## Key layout
 //!
@@ -34,7 +39,10 @@
 //! lookahead window is shorter than the minimum cross-shard delivery
 //! delay, so same-window cross-shard ties are impossible.
 
+use std::sync::{Condvar, Mutex};
+
 use crate::config::Ps;
+use crate::mem::{ArenaStats, SpillVec};
 
 /// Heap arity — same shape (and rationale) as the serial engine.
 const ARITY: usize = 4;
@@ -101,7 +109,10 @@ impl<E> ShardEngine<E> {
             keys: Vec::with_capacity(cap),
             slots: Vec::with_capacity(cap),
             slab: Vec::with_capacity(cap),
-            free: Vec::new(),
+            // every popped slot lands here before reuse, so the free
+            // list peaks at slab size — pre-reserve it too, or the
+            // first window of pops regrows it on the hot path
+            free: Vec::with_capacity(cap),
         }
     }
 
@@ -217,13 +228,15 @@ impl<E> ShardEngine<E> {
 
 /// Fixed-capacity ring for deferred cross-shard operations. The ring
 /// portion never allocates after construction; overflow spills into a
-/// growable `Vec` (drained after the ring, preserving push order) so
-/// a burst-heavy window degrades in speed, never in correctness.
+/// pre-reserved [`SpillVec`] (drained after the ring, preserving push
+/// order) so a burst-heavy window degrades gracefully, never in
+/// correctness — and only touches the heap once the spill reserve
+/// itself is exhausted (visible in [`Mailbox::spill_stats`]).
 pub struct Mailbox<T> {
     ring: Vec<Option<T>>,
     head: usize,
     len: usize,
-    spill: Vec<T>,
+    spill: SpillVec<T>,
     spills: u64,
 }
 
@@ -232,7 +245,13 @@ impl<T> Mailbox<T> {
         let cap = cap.max(1);
         let mut ring = Vec::with_capacity(cap);
         ring.resize_with(cap, || None);
-        Mailbox { ring, head: 0, len: 0, spill: Vec::new(), spills: 0 }
+        Mailbox {
+            ring,
+            head: 0,
+            len: 0,
+            spill: SpillVec::with_capacity(cap),
+            spills: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -261,6 +280,13 @@ impl<T> Mailbox<T> {
         self.spills
     }
 
+    /// Occupancy accounting of the spill store itself: `spills` here
+    /// counts heap growth past the pre-reserved bound — ring overflow
+    /// that stayed within the reserve is free.
+    pub fn spill_stats(&self) -> ArenaStats {
+        self.spill.stats()
+    }
+
     /// Drain everything into `out` in push order; the ring is left
     /// empty and ready for the next window.
     pub fn drain_into(&mut self, out: &mut Vec<T>) {
@@ -271,7 +297,84 @@ impl<T> Mailbox<T> {
         }
         self.head = 0;
         self.len = 0;
-        out.append(&mut self.spill);
+        out.extend(self.spill.drain());
+    }
+}
+
+/// Single-slot rendezvous between the window coordinator and one
+/// worker thread: a mutex-guarded slot plus a condvar, nothing else.
+/// Strict ping-pong use (send shard, receive shard back) never blocks
+/// on a full slot, and — unlike the `mpsc` channel it replaced — a
+/// send never allocates, which the per-event allocation gate relies
+/// on. `close` wakes a blocked receiver with `None` so workers join
+/// cleanly at end of run.
+pub struct SyncCell<T> {
+    slot: Mutex<CellState<T>>,
+    cv: Condvar,
+}
+
+enum CellState<T> {
+    Empty,
+    Full(T),
+    Closed,
+}
+
+impl<T> SyncCell<T> {
+    pub fn new() -> Self {
+        SyncCell { slot: Mutex::new(CellState::Empty), cv: Condvar::new() }
+    }
+
+    /// Place a value, waiting for the slot to clear if the peer has
+    /// not taken the previous one yet. Dropped silently if the cell
+    /// is closed (the peer is gone; nothing can consume it).
+    pub fn send(&self, v: T) {
+        let mut v = Some(v);
+        let mut g = self.slot.lock().expect("sync cell poisoned");
+        loop {
+            match &*g {
+                CellState::Empty => {
+                    *g = CellState::Full(v.take().expect("sent once"));
+                    self.cv.notify_all();
+                    return;
+                }
+                CellState::Full(_) => {
+                    g = self.cv.wait(g).expect("sync cell poisoned");
+                }
+                CellState::Closed => return,
+            }
+        }
+    }
+
+    /// Block until a value arrives; `None` once the cell is closed.
+    pub fn recv(&self) -> Option<T> {
+        let mut g = self.slot.lock().expect("sync cell poisoned");
+        loop {
+            match std::mem::replace(&mut *g, CellState::Empty) {
+                CellState::Full(v) => {
+                    self.cv.notify_all();
+                    return Some(v);
+                }
+                CellState::Closed => {
+                    *g = CellState::Closed;
+                    return None;
+                }
+                CellState::Empty => {
+                    g = self.cv.wait(g).expect("sync cell poisoned");
+                }
+            }
+        }
+    }
+
+    /// Wake any blocked receiver with `None`; later sends are dropped.
+    pub fn close(&self) {
+        *self.slot.lock().expect("sync cell poisoned") = CellState::Closed;
+        self.cv.notify_all();
+    }
+}
+
+impl<T> Default for SyncCell<T> {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -342,6 +445,11 @@ mod tests {
         }
         assert_eq!(m.len(), 10);
         assert_eq!(m.spills(), 6, "pushes past the ring capacity spill");
+        assert_eq!(
+            m.spill_stats().spills,
+            2,
+            "spill reserve == ring cap: 6 spilled, 4 fit the reserve"
+        );
         let mut out = Vec::new();
         m.drain_into(&mut out);
         assert_eq!(out, (0..10).collect::<Vec<_>>());
@@ -351,6 +459,26 @@ mod tests {
         let mut out = Vec::new();
         m.drain_into(&mut out);
         assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn sync_cell_ping_pongs_and_closes() {
+        let work: SyncCell<u32> = SyncCell::new();
+        let done: SyncCell<u32> = SyncCell::new();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                while let Some(v) = work.recv() {
+                    done.send(v * 10);
+                }
+                done.close();
+            });
+            for v in 1..=5u32 {
+                work.send(v);
+                assert_eq!(done.recv(), Some(v * 10));
+            }
+            work.close();
+            assert_eq!(done.recv(), None, "close propagates to the peer");
+        });
     }
 
     #[test]

@@ -1,31 +1,58 @@
-//! CI allocation gate: the DES hot path must stay ~allocation-free in
-//! steady state — the zero-copy-engine PR's invariant, enforced here
+//! CI allocation gate: the DES hot path must be allocation-free in
+//! steady state — zero heap allocations per event, enforced here
 //! instead of merely claimed.
 //!
 //! The test registers the benchkit counting allocator (library code
-//! never does) and measures the counter delta across `Cluster::run`
+//! never does) and measures the counter delta across the run loop
 //! alone: a throwaway run first warms the shared workload memos, then
 //! a fresh cluster is built *before* the snapshot so construction,
-//! workload generation and directory setup are all excluded. What
-//! remains is the event loop plus app firings, whose allocations are
-//! O(partitions × layers), not O(events). The budget is deliberately
-//! loose — events/8 + 4096 — so it only trips on a reintroduced
-//! per-event allocation (≥ 1 alloc/event, e.g. a `Vec` back on
-//! `Ev::Complete` or a non-recycled spawn buffer), and the failure
-//! message prints the whole counter delta to point at the regression.
-//! `arena serve` replays jobs through this same `Cluster::run` inner
-//! loop, so the gate covers the serving hot path too.
+//! workload generation, directory setup and arena pre-sizing are all
+//! excluded. With every per-event buffer on a shard-local arena or
+//! recycled pool, what remains is a small fixed per-run constant —
+//! the DES spine, a couple of report vectors, and (sharded) the
+//! worker threads themselves. The budget is therefore a *constant*,
+//! [`BUDGET`], not a function of the event count: one reintroduced
+//! per-event allocation (a `Vec` back on `Ev::Complete`, a
+//! non-recycled spawn buffer, a mailbox that regrows) multiplies the
+//! delta by the event count and trips the gate immediately.
+//!
+//! Four run shapes are gated, all through the same inner loop:
+//! serial, `--shards 4`, `--faults loss:0.02` (token-loss retries and
+//! lease relaunches ride the same arenas), and an `arena serve`
+//! replay of `traces/mixed.trace` (measured across
+//! `run_with_arrivals` alone via [`serve::prepare`]). The failure
+//! message prints the whole counter delta plus the arena high-water
+//! telemetry to point at the regression.
+
+use std::path::PathBuf;
 
 use arena::apps::{self, Scale};
 use arena::benchkit::alloc;
 use arena::cluster::{Cluster, Model};
 use arena::config::ArenaConfig;
+use arena::net::Topology;
+use arena::obs;
+use arena::sched::PolicyKind;
+use arena::serve;
 
 #[global_allocator]
 static ALLOC: alloc::Counting = alloc::Counting;
 
-fn cluster(app: &str, nodes: usize) -> Cluster {
-    let cfg = ArenaConfig::default().with_nodes(nodes).with_seed(7);
+/// Fixed per-run allocation budget — the per-event share is zero.
+/// The constant covers the DES spine built inside `run` (event heap +
+/// slab), the report assembly, and (sharded) `std::thread` spawn
+/// bookkeeping; it does NOT scale with events, so any per-event
+/// allocation blows through it on the first few thousand events.
+const BUDGET: u64 = 256;
+
+fn cluster(app: &str, nodes: usize, shards: usize, faults: &str) -> Cluster {
+    let mut cfg = ArenaConfig::default()
+        .with_nodes(nodes)
+        .with_seed(7)
+        .with_shards(shards);
+    if !faults.is_empty() {
+        cfg = cfg.with_faults(faults);
+    }
     Cluster::new(
         cfg,
         Model::SoftwareCpu,
@@ -33,38 +60,84 @@ fn cluster(app: &str, nodes: usize) -> Cluster {
     )
 }
 
-#[test]
-fn steady_state_run_is_allocation_free_per_event() {
-    alloc::enable();
-    // warm-up: shared workload memos + serial oracles generate once
-    let _ = cluster("gcn", 16).run(None);
+fn mixed_trace_spec() -> serve::ServeSpec {
+    let path =
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("traces/mixed.trace");
+    serve::ServeSpec {
+        trace: serve::load_trace(&path).expect("trace"),
+        scale: Scale::Small,
+        seed: 0xA2EA,
+        nodes: 4,
+        model: Model::SoftwareCpu,
+        topology: Topology::Ring,
+        shards: 1,
+        overrides: Vec::new(),
+        obs: Default::default(),
+        faults: String::new(),
+    }
+}
 
-    let mut cl = cluster("gcn", 16);
+/// Measure `run` under the counting allocator and assert the delta
+/// stays under the fixed budget. `min_events` guards against the
+/// workload silently shrinking below gate relevance.
+fn gate(label: &str, min_events: u64, run: impl FnOnce() -> u64) {
     alloc::reset();
     let before = alloc::stats();
-    let report = cl.run(None);
+    let events = run();
     let after = alloc::stats();
+    let mem = obs::take_mem_profile();
 
     assert!(
-        report.events > 1_000,
-        "gcn@16n too small to gate the hot path: {} events",
-        report.events
+        events > min_events,
+        "{label}: workload too small to gate the hot path: {events} events"
     );
     let allocs = after.allocs - before.allocs;
-    let budget = report.events / 8 + 4096;
     assert!(
-        allocs <= budget,
-        "DES hot-path allocation regression: {allocs} heap allocations \
-         across one steady-state run of gcn@16n ({} events, {:.4} \
-         allocs/event; budget {budget}). Counter delta: total_bytes={} \
-         peak_bytes={} live_bytes={}. Before: {before:?}; after: \
-         {after:?}. The run loop is supposed to recycle every per-event \
-         buffer — find the new allocation site before raising this \
-         budget.",
-        report.events,
-        allocs as f64 / report.events as f64,
+        allocs <= BUDGET,
+        "DES hot-path allocation regression [{label}]: {allocs} heap \
+         allocations across one steady-state run ({events} events, {:.4} \
+         allocs/event; fixed budget {BUDGET}). Counter delta: \
+         total_bytes={} peak_bytes={} live_bytes={}. Before: {before:?}; \
+         after: {after:?}. Arena telemetry: {mem:?}. Every per-event \
+         buffer lives on a shard-local arena or recycled pool — find the \
+         new allocation site before raising this budget.",
+        allocs as f64 / events as f64,
         after.total_bytes - before.total_bytes,
         after.peak_bytes,
         after.live_bytes,
     );
+}
+
+/// One test, four sequential cases: the counting allocator is
+/// process-global, so the cases must not run on concurrent test
+/// threads.
+#[test]
+fn steady_state_run_allocates_a_fixed_constant_not_per_event() {
+    alloc::enable();
+
+    // warm-up: shared workload memos + serial oracles generate once
+    let _ = cluster("gcn", 16, 1, "").run(None);
+    let mut cl = cluster("gcn", 16, 1, "");
+    gate("serial gcn@16n", 1_000, || cl.run(None).events);
+
+    // sharded: same workload through the conservative-lookahead
+    // parallel engine (4 worker threads spawn inside the window)
+    let mut cl = cluster("gcn", 16, 4, "");
+    gate("gcn@16n --shards 4", 1_000, || cl.run(None).events);
+
+    // faulted: token-loss retries and lease relaunches are steady
+    // state too — recovery must not allocate per lost token
+    let _ = cluster("sssp", 16, 1, "loss:0.02").run(None);
+    let mut cl = cluster("sssp", 16, 1, "loss:0.02");
+    gate("sssp@16n --faults loss:0.02", 500, || cl.run(None).events);
+
+    // serve replay: open-system arrivals through run_with_arrivals,
+    // construction excluded via serve::prepare
+    let spec = mixed_trace_spec();
+    let _ = serve::run_one(&spec, PolicyKind::Greedy, 500).expect("warm-up");
+    let (mut cl, arrivals) =
+        serve::prepare(&spec, PolicyKind::Greedy, 500).expect("prepare");
+    gate("serve replay traces/mixed.trace", 500, || {
+        cl.run_with_arrivals(&arrivals, None).events
+    });
 }
