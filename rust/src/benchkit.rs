@@ -181,8 +181,18 @@ pub mod alloc {
         });
     }
 
+    // SAFETY: `Counting` is a stateless forwarder around `System`,
+    // which upholds the full `GlobalAlloc` contract; the only extra
+    // work is relaxed atomic counter updates, which never allocate
+    // (no reentry into the allocator), never unwind, and are safe
+    // from any thread.
     unsafe impl GlobalAlloc for Counting {
+        // SAFETY: caller contract (non-zero-sized, valid `layout`) is
+        // forwarded verbatim to `System.alloc`; the returned pointer
+        // is `System`'s, untouched.
         unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            debug_assert!(layout.size() > 0, "GlobalAlloc: zero-size alloc");
+            debug_assert!(layout.align().is_power_of_two());
             let p = System.alloc(layout);
             if !p.is_null() && ENABLED.load(Ordering::Relaxed) {
                 on_alloc(layout.size() as u64);
@@ -190,19 +200,30 @@ pub mod alloc {
             p
         }
 
+        // SAFETY: caller contract (`ptr` was allocated here with this
+        // exact `layout`) is forwarded verbatim to `System.dealloc`;
+        // counters are only read after the block is returned.
         unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            debug_assert!(!ptr.is_null(), "GlobalAlloc: dealloc(null)");
             System.dealloc(ptr, layout);
             if ENABLED.load(Ordering::Relaxed) {
                 on_free(layout.size() as u64);
             }
         }
 
+        // SAFETY: caller contract (`ptr` from this allocator with
+        // `layout`; `new_size` non-zero and, when rounded up to
+        // `layout.align()`, not overflowing `isize`) is forwarded
+        // verbatim to `System.realloc`; counters see the old block as
+        // freed and the new one as live only on success.
         unsafe fn realloc(
             &self,
             ptr: *mut u8,
             layout: Layout,
             new_size: usize,
         ) -> *mut u8 {
+            debug_assert!(!ptr.is_null(), "GlobalAlloc: realloc(null)");
+            debug_assert!(new_size > 0, "GlobalAlloc: zero-size realloc");
             let p = System.realloc(ptr, layout, new_size);
             if !p.is_null() && ENABLED.load(Ordering::Relaxed) {
                 // signed delta so a growing realloc doesn't transiently

@@ -11,8 +11,6 @@
 
 pub mod coalesce;
 
-use std::collections::HashMap;
-
 use crate::config::{ArenaConfig, GroupAlloc, Ps};
 use crate::mapper::kernels::KernelSpec;
 use crate::mapper::Mapping;
@@ -250,10 +248,14 @@ impl GroupMappings {
 }
 
 /// Per-node table: TASKid -> mappings (the control-memory contents; all
-/// tasks are pre-loaded before the runtime starts, paper §4.3).
+/// tasks are pre-loaded before the runtime starts, paper §4.3). TASKids
+/// ride the 4-bit wire field, so the table is a fixed 16-slot array —
+/// no unordered container (or per-process hash seed) anywhere near the
+/// result path (lint rule `unordered-iter`).
 #[derive(Clone, Debug, Default)]
 pub struct KernelTable {
-    map: HashMap<TaskId, GroupMappings>,
+    slots: [Option<GroupMappings>; 16],
+    live: usize,
 }
 
 impl KernelTable {
@@ -262,19 +264,24 @@ impl KernelTable {
     }
 
     pub fn register(&mut self, id: TaskId, spec: &KernelSpec, cfg: &ArenaConfig) {
-        self.map.insert(id, GroupMappings::build(spec, cfg));
+        let slot = usize::from(id);
+        assert!(slot < 16, "TASKid {id} outside the 4-bit wire range");
+        if self.slots[slot].is_none() {
+            self.live += 1;
+        }
+        self.slots[slot] = Some(GroupMappings::build(spec, cfg));
     }
 
     pub fn get(&self, id: TaskId) -> Option<&GroupMappings> {
-        self.map.get(&id)
+        self.slots.get(usize::from(id)).and_then(Option::as_ref)
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.live == 0
     }
 }
 

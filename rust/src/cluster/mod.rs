@@ -27,7 +27,9 @@
 //! two-pass protocol), `report` (stats assembly / [`RunReport`]).
 
 mod events;
-mod par;
+/// Public for the shard-ownership race checker ([`par::owncheck`]);
+/// the run entry points stay `pub(super)`.
+pub mod par;
 mod report;
 mod runloop;
 mod terminate;

@@ -68,6 +68,74 @@ use crate::token::{TaskId, TaskToken};
 
 use super::events::{Arrival, Ev};
 use super::report::{AppStat, RunReport};
+
+/// Debug-build dynamic race checker for the conservative-lookahead
+/// protocol: shard-local structures carry an [`owncheck::Owner`]
+/// stamp, worker threads mark which shard's window they are running
+/// via [`owncheck::enter`], and any touch of shard state from another
+/// shard's window panics. Release builds compile the check away.
+/// Coordinator code (the barrier merge/replay phases and the
+/// single-active-shard inline fast path) runs unmarked and may touch
+/// every shard — that is the protocol's synchronized region.
+pub mod owncheck {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Marker for "not inside any shard window" (coordinator phases).
+    pub const NO_SHARD: usize = usize::MAX;
+
+    thread_local! {
+        static CURRENT: Cell<usize> = Cell::new(NO_SHARD);
+    }
+
+    /// RAII guard marking the current thread as executing `shard`'s
+    /// window until dropped (restores the previous marker, so probes
+    /// nest).
+    pub struct WindowGuard {
+        prev: usize,
+    }
+
+    pub fn enter(shard: usize) -> WindowGuard {
+        let prev = CURRENT.with(|c| {
+            let p = c.get();
+            c.set(shard);
+            p
+        });
+        WindowGuard { prev }
+    }
+
+    impl Drop for WindowGuard {
+        fn drop(&mut self) {
+            CURRENT.with(|c| c.set(self.prev));
+        }
+    }
+
+    /// Ownership stamp embedded in shard-local state.
+    #[derive(Debug)]
+    pub struct Owner(AtomicUsize);
+
+    impl Owner {
+        pub fn new(shard: usize) -> Self {
+            Owner(AtomicUsize::new(shard))
+        }
+
+        /// Assert the calling thread may touch the stamped state:
+        /// either coordinator code (no window marked) or the owning
+        /// shard's window. Compiled to nothing in release builds.
+        #[inline]
+        pub fn check(&self, what: &str) {
+            if cfg!(debug_assertions) {
+                let cur = CURRENT.with(|c| c.get());
+                let own = self.0.load(Ordering::Relaxed);
+                assert!(
+                    cur == NO_SHARD || cur == own,
+                    "shard-ownership violation: {what} owned by shard {own} \
+                     touched from shard {cur}'s window"
+                );
+            }
+        }
+    }
+}
 use super::terminate::note_probe_visit;
 use super::{Cluster, KernelInfo, Model};
 
@@ -178,6 +246,8 @@ struct Shard {
     /// Metrics cursor (mirrors the serial loop's; `Ps::MAX` when off).
     minterval: Ps,
     next_sample: Ps,
+    /// Race-checker stamp: which shard index owns this state.
+    owner: owncheck::Owner,
 }
 
 /// Parked spawn lists peak at one per concurrently running task: a
@@ -247,9 +317,12 @@ impl<T> Drop for CloseOnDrop<'_, T> {
     }
 }
 
+// lint: hot-path (per-event shard window: sched/defer/launch/finish
+// run once per event and must stay allocation-free)
 impl Shard {
     /// Process every owned event strictly before `horizon`.
     fn run_window(&mut self, cx: &SharedCtx<'_>, horizon: Ps) {
+        self.owner.check("shard window state");
         while let Some((pkey, ev)) = self.eng.pop_if_before(horizon) {
             let now = key_at(pkey);
             if self.pops >= cx.max_events {
@@ -308,6 +381,7 @@ impl Shard {
 
     /// Schedule a shard-local event; consumes one `k` (a serial seq).
     fn sched(&mut self, at: Ps, ev: Ev) {
+        self.owner.check("shard event queue");
         let kk = key(at, CLASS_LOCAL, self.cur_x, self.k);
         self.k += 1;
         self.eng.insert(kk, ev);
@@ -316,6 +390,7 @@ impl Shard {
     /// Defer a network call to the barrier; consumes one `k` exactly
     /// where the serial loop would have scheduled the delivery.
     fn defer(&mut self, at: Ps, node: usize, ts: u32, kind: OpKind) {
+        self.owner.check("shard outbox");
         self.outbox.push(NetOp {
             at,
             node,
@@ -763,6 +838,8 @@ impl Shard {
     }
 }
 
+// lint: hot-path-end
+
 impl Cluster {
     /// The sharded equivalent of the serial `run_with_arrivals` body
     /// (arrivals already validated by the caller). Byte-identical
@@ -838,6 +915,7 @@ impl Cluster {
                 mrows: Vec::new(),
                 minterval,
                 next_sample: minterval,
+                owner: owncheck::Owner::new(s),
             });
         }
         carved.reverse();
@@ -916,10 +994,14 @@ impl Cluster {
             // one persistent worker per shard; Shard ownership
             // round-trips through the cells, so no locking on any
             // node state
-            for (work, done_cell) in &cells {
+            for (i, (work, done_cell)) in cells.iter().enumerate() {
                 let cxr = &cx;
                 scope.spawn(move || {
                     let _close = CloseOnDrop(done_cell);
+                    // worker i only ever runs shard i's windows; the
+                    // window marker turns any cross-shard touch into a
+                    // debug-build panic (see owncheck)
+                    let _win = owncheck::enter(i);
                     while let Some((mut sh, horizon)) = work.recv() {
                         sh.run_window(cxr, horizon);
                         done_cell.send(sh);
@@ -944,6 +1026,7 @@ impl Cluster {
                 let Some(w) = w else { break };
                 let horizon = w.saturating_add(lookahead);
                 windows += 1;
+                // lint: allow(wall-clock, measurement-only: engine profiling)
                 let t_win = std::time::Instant::now();
                 active.clear();
                 for (i, s) in shards.iter().enumerate() {
@@ -973,6 +1056,7 @@ impl Cluster {
                     }
                 }
                 window_ns += t_win.elapsed().as_nanos() as u64;
+                // lint: allow(wall-clock, measurement-only: engine profiling)
                 let t_merge = std::time::Instant::now();
 
                 // --- barrier 1: k-way merge of the pop logs into the
@@ -1046,6 +1130,7 @@ impl Cluster {
                     sh.log.clear();
                 }
                 merge_ns += t_merge.elapsed().as_nanos() as u64;
+                // lint: allow(wall-clock, measurement-only: engine profiling)
                 let t_replay = std::time::Instant::now();
 
                 // --- barrier 4: replay deferred network calls against

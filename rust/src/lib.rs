@@ -43,6 +43,7 @@ pub mod config;
 pub mod eval;
 pub mod dispatcher;
 pub mod faults;
+pub mod lint;
 pub mod mapper;
 pub mod mem;
 pub mod net;

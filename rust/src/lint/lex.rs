@@ -1,0 +1,321 @@
+//! Minimal Rust lexer for the determinism lint.
+//!
+//! Produces just enough structure for token-sequence rules: a stream of
+//! identifier/punctuation tokens tagged with line numbers, plus the
+//! comment list (for `// SAFETY:` proximity and the annotation
+//! grammar). String, char and byte literals are consumed and dropped —
+//! their contents can never trigger a rule — and lifetimes are
+//! distinguished from char literals so `'a` never eats the rest of the
+//! file. Nested block comments, raw strings (`r#"…"#`) and raw idents
+//! (`r#match`) are handled; everything else unknown degrades to a
+//! single punctuation token, which no rule matches.
+
+/// One lexical item the rule engine consumes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (`Instant`, `unsafe`, `vec`, …).
+    Ident(String),
+    /// Single punctuation character; `::` arrives as two adjacent `:`.
+    Punct(char),
+}
+
+/// A token with the 1-based source line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// A comment: body text (after `//` for line comments, between the
+/// delimiters for block comments), the line it starts on, and whether
+/// it had the line to itself (no code before it).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+    pub own_line: bool,
+}
+
+/// Lexer output: code tokens and comments, both in source order.
+#[derive(Debug, Default)]
+pub struct Scanned {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+pub fn scan(src: &str) -> Scanned {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Scanned::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    // true once the current line holds any code token (used to decide
+    // whether a comment "owns" its line — an owning `allow` also
+    // covers the line below it)
+    let mut line_has_code = false;
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // line comment
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && cs[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment {
+                text: cs[start..j].iter().collect(),
+                line,
+                own_line: !line_has_code,
+            });
+            i = j;
+            continue;
+        }
+
+        // block comment (nested)
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let own = !line_has_code;
+            let start_line = line;
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            let mut body = String::new();
+            while j < n && depth > 0 {
+                if cs[j] == '/' && j + 1 < n && cs[j + 1] == '*' {
+                    depth += 1;
+                    body.push_str("/*");
+                    j += 2;
+                } else if cs[j] == '*' && j + 1 < n && cs[j + 1] == '/' {
+                    depth -= 1;
+                    if depth > 0 {
+                        body.push_str("*/");
+                    }
+                    j += 2;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    body.push(cs[j]);
+                    j += 1;
+                }
+            }
+            out.comments.push(Comment { text: body, line: start_line, own_line: own });
+            i = j;
+            continue;
+        }
+
+        // plain string literal
+        if c == '"' {
+            i = skip_string(&cs, i, &mut line);
+            line_has_code = true;
+            continue;
+        }
+
+        // raw string r"…" / r#"…"# — or a raw ident r#match, or a
+        // plain ident starting with r
+        if c == 'r' && i + 1 < n && (cs[i + 1] == '"' || cs[i + 1] == '#') {
+            if let Some(j) = try_raw_string(&cs, i + 1, &mut line) {
+                i = j;
+                line_has_code = true;
+                continue;
+            }
+            if cs[i + 1] == '#' && i + 2 < n && ident_start(cs[i + 2]) {
+                // raw ident: token is the name without the r# prefix
+                let mut j = i + 3;
+                while j < n && ident_continue(cs[j]) {
+                    j += 1;
+                }
+                let name: String = cs[i + 2..j].iter().collect();
+                out.tokens.push(Token { tok: Tok::Ident(name), line });
+                line_has_code = true;
+                i = j;
+                continue;
+            }
+        }
+
+        // byte string / raw byte string / byte char
+        if c == 'b' && i + 1 < n {
+            if cs[i + 1] == '"' {
+                i = skip_string(&cs, i + 1, &mut line);
+                line_has_code = true;
+                continue;
+            }
+            if cs[i + 1] == 'r'
+                && i + 2 < n
+                && (cs[i + 2] == '"' || cs[i + 2] == '#')
+            {
+                if let Some(j) = try_raw_string(&cs, i + 2, &mut line) {
+                    i = j;
+                    line_has_code = true;
+                    continue;
+                }
+            }
+            if cs[i + 1] == '\'' {
+                i = skip_char_body(&cs, i + 1, &mut line);
+                line_has_code = true;
+                continue;
+            }
+        }
+
+        // lifetime or char literal
+        if c == '\'' {
+            if i + 1 < n && ident_start(cs[i + 1]) {
+                let mut j = i + 2;
+                while j < n && ident_continue(cs[j]) {
+                    j += 1;
+                }
+                if j < n && cs[j] == '\'' {
+                    // single-ident char literal: 'a'
+                    i = j + 1;
+                } else {
+                    // lifetime / loop label: 'a, 'static, 'outer:
+                    i = j;
+                }
+                line_has_code = true;
+                continue;
+            }
+            i = skip_char_body(&cs, i, &mut line);
+            line_has_code = true;
+            continue;
+        }
+
+        // identifier / keyword
+        if ident_start(c) {
+            let mut j = i + 1;
+            while j < n && ident_continue(cs[j]) {
+                j += 1;
+            }
+            let name: String = cs[i..j].iter().collect();
+            out.tokens.push(Token { tok: Tok::Ident(name), line });
+            line_has_code = true;
+            i = j;
+            continue;
+        }
+
+        // number literal: consumed, no token (rules never match them);
+        // '.' is left alone so `0..n` and tuple access lex sanely
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && ident_continue(cs[j]) {
+                j += 1;
+            }
+            line_has_code = true;
+            i = j;
+            continue;
+        }
+
+        out.tokens.push(Token { tok: Tok::Punct(c), line });
+        line_has_code = true;
+        i += 1;
+    }
+
+    out
+}
+
+/// Consume a `"…"` literal starting at the opening quote; returns the
+/// index just past the closing quote. Escapes (`\x`, and `\<newline>`
+/// continuations) are honored; newlines inside update `line`.
+fn skip_string(cs: &[char], open: usize, line: &mut u32) -> usize {
+    let n = cs.len();
+    let mut j = open + 1;
+    while j < n {
+        match cs[j] {
+            '\\' => {
+                if j + 1 < n && cs[j + 1] == '\n' {
+                    *line += 1;
+                }
+                j += 2;
+            }
+            '"' => return j + 1,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Try to consume a raw string whose `#…"` sequence starts at `at`
+/// (just past the `r`). Returns the index past the closing delimiter,
+/// or None when this isn't a raw string (e.g. a raw ident `r#match`).
+fn try_raw_string(cs: &[char], at: usize, line: &mut u32) -> Option<usize> {
+    let n = cs.len();
+    let mut hashes = 0usize;
+    let mut j = at;
+    while j < n && cs[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || cs[j] != '"' {
+        return None;
+    }
+    j += 1;
+    while j < n {
+        if cs[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if cs[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && j + 1 + k < n && cs[j + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// Consume a char / byte-char literal body starting at the opening
+/// quote; returns the index past the closing quote. Lenient about
+/// malformed input (stops at the first closing quote or newline run).
+fn skip_char_body(cs: &[char], open: usize, line: &mut u32) -> usize {
+    let n = cs.len();
+    let mut j = open + 1;
+    while j < n {
+        match cs[j] {
+            '\\' => {
+                // \u{…} spans several chars; other escapes are 1 char
+                if j + 1 < n && cs[j + 1] == 'u' {
+                    while j < n && cs[j] != '}' {
+                        j += 1;
+                    }
+                    j += 1;
+                } else {
+                    j += 2;
+                }
+            }
+            '\'' => return j + 1,
+            '\n' => {
+                *line += 1;
+                return j + 1;
+            }
+            _ => j += 1,
+        }
+    }
+    n
+}

@@ -1,0 +1,903 @@
+//! `arena lint` — the determinism/concurrency static-analysis pass.
+//!
+//! Every result this repo reports rests on one invariant: a run is
+//! byte-identical across `--shards`, `--jobs`, topologies and fault
+//! schedules. The dynamic tests pin that equality after the fact; this
+//! pass rejects the hazard classes at the source level, before a test
+//! has to catch them:
+//!
+//! * **D1 `wall-clock`** — `Instant::now` / `SystemTime` outside the
+//!   measurement layer. Wall-clock reads in simulated-time code are
+//!   how nondeterminism leaks into results.
+//! * **D2 `unordered-iter`** — `HashMap` / `HashSet` in
+//!   result-affecting modules: iteration order is seeded per-process.
+//! * **D3 `hot-path-alloc`** — allocating constructs (`Vec::new`,
+//!   `vec!`, `Box::new`, `format!`, `.to_string`, `.collect`,
+//!   `.clone`, …) inside regions bracketed by `hot-path` /
+//!   `hot-path-end` lint markers — the statically-checked shadow of
+//!   the alloc-gate's fixed 256-allocation run constant.
+//! * **D4 `safety-comment`** — every `unsafe` needs an adjacent
+//!   `// SAFETY:` comment stating the invariant that makes it sound.
+//! * **D5 `ambient`** — ambient nondeterminism (`std::env`,
+//!   `thread::current`, `RandomState`) in result paths.
+//!
+//! Escape hatches are deliberately narrow. A single line opts out of a
+//! single rule with a mandatory reason — `allow(RULE, reason)` after a
+//! `lint:` comment prefix — applying to its own line, or to the next
+//! line when the comment stands alone. A tiny [`MODULE_POLICY`] table
+//! exempts whole modules only where the rule is structurally
+//! inapplicable (benchkit *is* the wall-clock layer). Everything else
+//! is deny-by-default, and `#[cfg(test)] mod` bodies are skipped.
+//!
+//! Zero dependencies: [`lex`] is a hand-rolled lexer producing
+//! ident/punct tokens plus comments, and the rules here are token-
+//! sequence matches over it. The tier-1 test `lint_clean` runs the
+//! pass over `rust/src` and asserts zero diagnostics, so CI rejects a
+//! new hazard the same way it rejects a failed equality pin.
+
+pub mod lex;
+
+use std::path::{Path, PathBuf};
+
+use lex::{scan, Comment, Scanned, Tok, Token};
+
+/// The hazard classes, plus `Annotation` for malformed lint directives
+/// (unknown rule names, missing reasons, unbalanced hot-path markers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    WallClock,
+    UnorderedIter,
+    HotPathAlloc,
+    SafetyComment,
+    Ambient,
+    Annotation,
+}
+
+impl Rule {
+    /// The five checkable rules (D1–D5), in severity/report order.
+    pub const ALL: [Rule; 5] = [
+        Rule::WallClock,
+        Rule::UnorderedIter,
+        Rule::HotPathAlloc,
+        Rule::SafetyComment,
+        Rule::Ambient,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::WallClock => "wall-clock",
+            Rule::UnorderedIter => "unordered-iter",
+            Rule::HotPathAlloc => "hot-path-alloc",
+            Rule::SafetyComment => "safety-comment",
+            Rule::Ambient => "ambient",
+            Rule::Annotation => "annotation",
+        }
+    }
+
+    /// Parse an allowable rule name (`Annotation` is not allowable).
+    pub fn parse(s: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.name() == s)
+    }
+
+    fn order(self) -> u8 {
+        match self {
+            Rule::Annotation => 0,
+            Rule::WallClock => 1,
+            Rule::UnorderedIter => 2,
+            Rule::HotPathAlloc => 3,
+            Rule::SafetyComment => 4,
+            Rule::Ambient => 5,
+        }
+    }
+
+    fn hint(self) -> &'static str {
+        match self {
+            Rule::WallClock => {
+                "time with simulated Ps, or move the timing into benchkit; a \
+                 measurement-only site may carry an own-line comment \
+                 `lint: allow(wall-clock, reason)` directly above it"
+            }
+            Rule::UnorderedIter => {
+                "use BTreeMap/BTreeSet, a fixed array over the 4-bit id \
+                 space, or a sorted Vec — per-process hash seeds make \
+                 iteration order nondeterministic"
+            }
+            Rule::HotPathAlloc => {
+                "hoist the allocation to construction time or use the mem:: \
+                 arenas/pools; a counted fallback may carry \
+                 `lint: allow(hot-path-alloc, reason)`"
+            }
+            Rule::SafetyComment => {
+                "add a `// SAFETY:` comment on the preceding line stating \
+                 the invariant that makes this sound"
+            }
+            Rule::Ambient => {
+                "thread configuration through ArenaConfig/CLI flags; a \
+                 boot-time config read may carry \
+                 `lint: allow(ambient, reason)`"
+            }
+            Rule::Annotation => {
+                "directives are `lint: allow(RULE, reason)`, \
+                 `lint: hot-path` and `lint: hot-path-end`"
+            }
+        }
+    }
+}
+
+/// Module policy: module name (top-level file stem, or the directory
+/// under `src/`) → rules that do NOT apply there, with the structural
+/// reason. Kept deliberately tiny — the per-line allow annotation is
+/// the primary escape hatch; a module-wide exemption requires the rule
+/// to be inapplicable by construction, not merely inconvenient.
+pub const MODULE_POLICY: &[(&str, &[Rule], &str)] = &[
+    (
+        "benchkit",
+        &[Rule::WallClock],
+        "benchkit IS the wall-clock measurement layer",
+    ),
+    (
+        "main",
+        &[Rule::Ambient],
+        "the CLI entrypoint reads argv/env by definition",
+    ),
+    (
+        "proptest_lite",
+        &[Rule::UnorderedIter],
+        "shrink-dedup set in test infra; order never reaches results",
+    ),
+];
+
+/// One finding. `line` is 1-based in `path`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub path: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub msg: String,
+    pub hint: &'static str,
+}
+
+/// Render diagnostics in `path:line: [rule] message` form;
+/// `fix_hints` appends the per-rule remediation line.
+pub fn render(diags: &[Diagnostic], fix_hints: bool) -> String {
+    let mut out = String::new();
+    for d in diags {
+        out.push_str(&format!(
+            "{}:{}: [{}] {}\n",
+            d.path,
+            d.line,
+            d.rule.name(),
+            d.msg
+        ));
+        if fix_hints {
+            out.push_str(&format!("    hint: {}\n", d.hint));
+        }
+    }
+    out
+}
+
+/// Lint every `.rs` file under `paths` (files or directories, walked
+/// in sorted order for deterministic output).
+pub fn lint_paths(paths: &[PathBuf]) -> Result<Vec<Diagnostic>, String> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut diags = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| format!("{}: {e}", f.display()))?;
+        diags.extend(lint_source(&f.display().to_string(), &module_of(f), &src));
+    }
+    Ok(diags)
+}
+
+fn collect_rs(p: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    if p.is_file() {
+        if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p.to_path_buf());
+        }
+        return Ok(());
+    }
+    if p.is_dir() {
+        let rd = std::fs::read_dir(p).map_err(|e| format!("{}: {e}", p.display()))?;
+        let mut entries: Vec<PathBuf> = Vec::new();
+        for ent in rd {
+            entries.push(ent.map_err(|e| format!("{}: {e}", p.display()))?.path());
+        }
+        entries.sort();
+        for ent in entries {
+            collect_rs(&ent, out)?;
+        }
+        return Ok(());
+    }
+    Err(format!("{}: no such file or directory", p.display()))
+}
+
+/// Module name used for the policy table: the path component after the
+/// last `src`, directory name or file stem (`rust/src/cluster/par.rs`
+/// → `cluster`, `rust/src/main.rs` → `main`); the bare file stem when
+/// no `src` component exists.
+pub fn module_of(path: &Path) -> String {
+    let comps: Vec<String> = path
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    let after_src = comps
+        .iter()
+        .rposition(|c| c == "src")
+        .and_then(|i| comps.get(i + 1));
+    let name = match after_src {
+        Some(n) => n.clone(),
+        None => comps.last().cloned().unwrap_or_default(),
+    };
+    match name.strip_suffix(".rs") {
+        Some(stem) => stem.to_string(),
+        None => name,
+    }
+}
+
+// ---------------------------------------------------------------------
+// annotation grammar
+// ---------------------------------------------------------------------
+
+enum Directive {
+    Allow(Rule),
+    HotPathOpen,
+    HotPathClose,
+    Bad(String),
+}
+
+/// Extract the directive body from a comment: strip doc-comment resi-
+/// due (`/`, `!`) and whitespace, then require the `lint:` prefix.
+/// Comments not starting with `lint:` carry no directive.
+fn directive_body(text: &str) -> Option<&str> {
+    let mut t = text.trim_start();
+    loop {
+        if let Some(r) = t.strip_prefix('/') {
+            t = r.trim_start();
+        } else if let Some(r) = t.strip_prefix('!') {
+            t = r.trim_start();
+        } else {
+            break;
+        }
+    }
+    t.strip_prefix("lint:").map(str::trim)
+}
+
+fn parse_directive(body: &str) -> Directive {
+    if let Some(inner) = body.strip_prefix("allow(") {
+        let Some(inner) = inner.strip_suffix(')') else {
+            return Directive::Bad(format!("unterminated allow: `{body}`"));
+        };
+        let Some((rule, reason)) = inner.split_once(',') else {
+            return Directive::Bad(format!(
+                "allow needs a reason: `allow({inner}, why)`"
+            ));
+        };
+        let rule = rule.trim();
+        if reason.trim().is_empty() {
+            return Directive::Bad(format!(
+                "allow needs a non-empty reason: `allow({rule}, why)`"
+            ));
+        }
+        match Rule::parse(rule) {
+            Some(r) => Directive::Allow(r),
+            None => Directive::Bad(format!(
+                "unknown rule `{rule}` (rules: wall-clock, unordered-iter, \
+                 hot-path-alloc, safety-comment, ambient)"
+            )),
+        }
+    } else {
+        // markers may carry trailing free text after the first word
+        let word = body.split_whitespace().next().unwrap_or("");
+        match word {
+            "hot-path" => Directive::HotPathOpen,
+            "hot-path-end" => Directive::HotPathClose,
+            _ => Directive::Bad(format!("unknown lint directive `{body}`")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// engine
+// ---------------------------------------------------------------------
+
+struct FileCtx<'a> {
+    path: &'a str,
+    toks: &'a [Token],
+    skip: Vec<bool>,
+    comments: &'a [Comment],
+    /// (line, rule) pairs covered by an allow annotation.
+    allows: Vec<(u32, Rule)>,
+    /// Closed hot-path regions as (open_line, close_line).
+    regions: Vec<(u32, u32)>,
+    exempt: &'static [Rule],
+    diags: Vec<Diagnostic>,
+}
+
+impl<'a> FileCtx<'a> {
+    fn allowed(&self, line: u32, rule: Rule) -> bool {
+        self.exempt.contains(&rule)
+            || self.allows.iter().any(|&(l, r)| l == line && r == rule)
+    }
+
+    fn in_hot(&self, line: u32) -> bool {
+        self.regions.iter().any(|&(a, b)| line > a && line < b)
+    }
+
+    fn fire(&mut self, line: u32, rule: Rule, msg: String) {
+        if !self.allowed(line, rule) {
+            self.diags.push(Diagnostic {
+                path: self.path.to_string(),
+                line,
+                rule,
+                msg,
+                hint: rule.hint(),
+            });
+        }
+    }
+}
+
+/// Lint one source file. `module` selects the [`MODULE_POLICY`] row;
+/// `path` is only used to label diagnostics.
+pub fn lint_source(path: &str, module: &str, src: &str) -> Vec<Diagnostic> {
+    let scanned = scan(src);
+    let Scanned { tokens, comments } = &scanned;
+
+    let exempt: &'static [Rule] = MODULE_POLICY
+        .iter()
+        .find(|(m, _, _)| *m == module)
+        .map(|(_, rules, _)| *rules)
+        .unwrap_or(&[]);
+
+    let mut cx = FileCtx {
+        path,
+        toks: tokens,
+        skip: suppressed_mask(tokens),
+        comments,
+        allows: Vec::new(),
+        regions: Vec::new(),
+        exempt,
+        diags: Vec::new(),
+    };
+
+    collect_directives(&mut cx);
+    match_rules(&mut cx);
+
+    let mut diags = cx.diags;
+    diags.sort_by_key(|d| (d.line, d.rule.order()));
+    diags.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+    diags
+}
+
+/// Parse every comment for directives: build the allow table and the
+/// hot-path region list, reporting malformed/unbalanced directives.
+fn collect_directives(cx: &mut FileCtx) {
+    let mut open: Option<u32> = None;
+    for c in cx.comments {
+        let Some(body) = directive_body(&c.text) else { continue };
+        match parse_directive(body) {
+            Directive::Allow(rule) => {
+                cx.allows.push((c.line, rule));
+                if c.own_line {
+                    cx.allows.push((c.line + 1, rule));
+                }
+            }
+            Directive::HotPathOpen => {
+                if let Some(at) = open {
+                    cx.fire(
+                        c.line,
+                        Rule::Annotation,
+                        format!("nested hot-path marker (region open since line {at})"),
+                    );
+                } else {
+                    open = Some(c.line);
+                }
+            }
+            Directive::HotPathClose => match open.take() {
+                Some(at) => cx.regions.push((at, c.line)),
+                None => cx.fire(
+                    c.line,
+                    Rule::Annotation,
+                    "hot-path-end without an open region".to_string(),
+                ),
+            },
+            Directive::Bad(msg) => cx.fire(c.line, Rule::Annotation, msg),
+        }
+    }
+    if let Some(at) = open {
+        cx.fire(
+            at,
+            Rule::Annotation,
+            format!("hot-path region opened at line {at} is never closed"),
+        );
+    }
+}
+
+fn id_at<'a>(toks: &'a [Token], i: usize) -> Option<&'a str> {
+    match toks.get(i) {
+        Some(Token { tok: Tok::Ident(s), .. }) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn p_at(toks: &[Token], i: usize, c: char) -> bool {
+    matches!(toks.get(i), Some(Token { tok: Tok::Punct(p), .. }) if *p == c)
+}
+
+/// Does `toks[i] :: name` hold (i.e. a 2-segment path starting here)?
+fn path_to(toks: &[Token], i: usize, name: &str) -> bool {
+    p_at(toks, i + 1, ':') && p_at(toks, i + 2, ':') && id_at(toks, i + 3) == Some(name)
+}
+
+fn path_to_any(toks: &[Token], i: usize, names: &[&str]) -> bool {
+    p_at(toks, i + 1, ':')
+        && p_at(toks, i + 2, ':')
+        && id_at(toks, i + 3).is_some_and(|n| names.contains(&n))
+}
+
+/// `std::env` accessor tails that constitute ambient reads.
+const ENV_FNS: &[&str] = &[
+    "var", "vars", "var_os", "vars_os", "args", "args_os", "current_dir",
+    "set_current_dir", "temp_dir", "home_dir", "set_var", "remove_var",
+];
+
+/// Method calls that allocate (D3), matched as `. name`.
+const ALLOC_METHODS: &[&str] =
+    &["to_string", "to_vec", "to_owned", "collect", "clone"];
+
+fn match_rules(cx: &mut FileCtx) {
+    let toks = cx.toks;
+    for i in 0..toks.len() {
+        if cx.skip[i] {
+            continue;
+        }
+        let line = toks[i].line;
+        if let Tok::Ident(s) = &toks[i].tok {
+            match s.as_str() {
+                "Instant" if path_to(toks, i, "now") => cx.fire(
+                    line,
+                    Rule::WallClock,
+                    "wall-clock read (Instant::now) in simulated-time code"
+                        .to_string(),
+                ),
+                "SystemTime" => cx.fire(
+                    line,
+                    Rule::WallClock,
+                    "wall-clock source (SystemTime) in simulated-time code"
+                        .to_string(),
+                ),
+                "HashMap" | "HashSet" => cx.fire(
+                    line,
+                    Rule::UnorderedIter,
+                    format!("unordered container ({s}) in a result-affecting module"),
+                ),
+                "RandomState" => cx.fire(
+                    line,
+                    Rule::Ambient,
+                    "per-process hash seed (RandomState)".to_string(),
+                ),
+                "std" if path_to(toks, i, "env") => cx.fire(
+                    line,
+                    Rule::Ambient,
+                    "ambient environment access (std::env)".to_string(),
+                ),
+                "env" if path_to_any(toks, i, ENV_FNS) => cx.fire(
+                    line,
+                    Rule::Ambient,
+                    "ambient environment access (env::…)".to_string(),
+                ),
+                "thread" if path_to(toks, i, "current") => cx.fire(
+                    line,
+                    Rule::Ambient,
+                    "ambient thread identity (thread::current)".to_string(),
+                ),
+                "unsafe" => {
+                    if !has_safety_comment(cx.comments, line) {
+                        cx.fire(
+                            line,
+                            Rule::SafetyComment,
+                            "unsafe without an adjacent SAFETY: comment"
+                                .to_string(),
+                        );
+                    }
+                }
+                _ => {}
+            }
+            if cx.in_hot(line) {
+                let alloc = match s.as_str() {
+                    "Vec" if path_to(toks, i, "new") => Some("Vec::new"),
+                    "Box" if path_to(toks, i, "new") => Some("Box::new"),
+                    "String" if path_to_any(toks, i, &["new", "from"]) => {
+                        Some("String::new/from")
+                    }
+                    "vec" if p_at(toks, i + 1, '!') => Some("vec!"),
+                    "format" if p_at(toks, i + 1, '!') => Some("format!"),
+                    _ => None,
+                };
+                if let Some(what) = alloc {
+                    cx.fire(
+                        line,
+                        Rule::HotPathAlloc,
+                        format!("allocating construct ({what}) inside a hot-path region"),
+                    );
+                }
+            }
+        } else if p_at(toks, i, '.') {
+            if let Some(name) = id_at(toks, i + 1) {
+                // report at the method name's line so a chained call
+                // split across lines can be annotated where it sits
+                let mline = toks[i + 1].line;
+                if ALLOC_METHODS.contains(&name) && cx.in_hot(mline) {
+                    cx.fire(
+                        mline,
+                        Rule::HotPathAlloc,
+                        format!("allocating call (.{name}) inside a hot-path region"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Is there a `SAFETY:` comment attached to the construct at `line` —
+/// trailing on the same line, or anywhere in the contiguous run of
+/// own-line comments directly above it (multi-line SAFETY blocks open
+/// with the marker and continue in plain prose)?
+fn has_safety_comment(comments: &[Comment], line: u32) -> bool {
+    if comments
+        .iter()
+        .any(|c| c.line == line && c.text.contains("SAFETY:"))
+    {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        match comments.iter().find(|c| c.line == l && c.own_line) {
+            Some(c) if c.text.contains("SAFETY:") => return true,
+            Some(_) => continue,
+            None => return false,
+        }
+    }
+    false
+}
+
+/// Token mask suppressing `#[cfg(test)] mod … { … }` bodies: unit
+/// tests may freely use wall clocks, hash maps and ambient state.
+fn suppressed_mask(toks: &[Token]) -> Vec<bool> {
+    let mut skip = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_attr(toks, i) {
+            let mut j = i + 7; // past `# [ cfg ( test ) ]`
+            // skip any further attributes before the item
+            while p_at(toks, j, '#') {
+                j = skip_attr(toks, j);
+            }
+            if id_at(toks, j) == Some("pub") {
+                j += 1;
+            }
+            if id_at(toks, j) == Some("mod") {
+                // advance to `{` (inline body) or `;` (file module)
+                let mut k = j;
+                while k < toks.len() && !p_at(toks, k, '{') && !p_at(toks, k, ';') {
+                    k += 1;
+                }
+                if p_at(toks, k, '{') {
+                    let mut depth = 0i64;
+                    while k < toks.len() {
+                        if p_at(toks, k, '{') {
+                            depth += 1;
+                        } else if p_at(toks, k, '}') {
+                            depth -= 1;
+                            if depth == 0 {
+                                k += 1;
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                }
+                for s in skip.iter_mut().take(k.min(toks.len())).skip(i) {
+                    *s = true;
+                }
+                i = k;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    skip
+}
+
+/// Matches exactly `# [ cfg ( test ) ]` at `i`.
+fn is_cfg_test_attr(toks: &[Token], i: usize) -> bool {
+    p_at(toks, i, '#')
+        && p_at(toks, i + 1, '[')
+        && id_at(toks, i + 2) == Some("cfg")
+        && p_at(toks, i + 3, '(')
+        && id_at(toks, i + 4) == Some("test")
+        && p_at(toks, i + 5, ')')
+        && p_at(toks, i + 6, ']')
+}
+
+/// Skip a `#[…]` / `#![…]` attribute starting at the `#`; returns the
+/// index just past the closing `]`.
+fn skip_attr(toks: &[Token], at: usize) -> usize {
+    let mut j = at + 1;
+    if p_at(toks, j, '!') {
+        j += 1;
+    }
+    if !p_at(toks, j, '[') {
+        return at + 1;
+    }
+    let mut depth = 0i64;
+    while j < toks.len() {
+        if p_at(toks, j, '[') {
+            depth += 1;
+        } else if p_at(toks, j, ']') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(src: &str) -> Vec<Diagnostic> {
+        lint_source("fixture.rs", "fixture", src)
+    }
+
+    fn rules_of(diags: &[Diagnostic]) -> Vec<Rule> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    // -- D1 ----------------------------------------------------------
+
+    #[test]
+    fn d1_wall_clock_instant_now_fires() {
+        let src = "fn f() {\n    let t0 = std::time::Instant::now();\n}\n";
+        let d = lint(src);
+        assert_eq!(rules_of(&d), vec![Rule::WallClock]);
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn d1_system_time_fires() {
+        let d = lint("fn f() { let _ = std::time::SystemTime::now(); }\n");
+        assert_eq!(rules_of(&d), vec![Rule::WallClock]);
+    }
+
+    #[test]
+    fn d1_instant_elapsed_alone_is_fine() {
+        // only the clock *read* is banned; Instant values passed in
+        // (e.g. from benchkit) may be compared freely
+        let d = lint("fn f(t: std::time::Instant) -> u64 { t.elapsed().as_nanos() as u64 }\n");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    // -- D2 ----------------------------------------------------------
+
+    #[test]
+    fn d2_unordered_containers_fire() {
+        let src = "use std::collections::HashMap;\nfn f() { let _s: std::collections::HashSet<u32> = Default::default(); }\n";
+        let d = lint(src);
+        assert_eq!(rules_of(&d), vec![Rule::UnorderedIter, Rule::UnorderedIter]);
+        assert_eq!((d[0].line, d[1].line), (1, 2));
+    }
+
+    #[test]
+    fn d2_btreemap_is_fine() {
+        let d = lint("use std::collections::BTreeMap;\n");
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    // -- D3 ----------------------------------------------------------
+
+    #[test]
+    fn d3_alloc_flagged_only_inside_hot_region() {
+        let src = r#"
+fn setup() -> Vec<u32> { Vec::new() }
+// lint: hot-path (fixture region)
+fn step(xs: &[u32]) -> u64 {
+    let mut v = Vec::new();
+    v.push(format!("{}", xs.len()));
+    xs.to_vec().len() as u64
+}
+// lint: hot-path-end
+fn teardown(s: &str) -> String { s.to_string() }
+"#;
+        let d = lint(src);
+        assert_eq!(
+            rules_of(&d),
+            vec![Rule::HotPathAlloc, Rule::HotPathAlloc, Rule::HotPathAlloc]
+        );
+        // Vec::new at 5, format! at 6, .to_vec at 7 — setup/teardown
+        // outside the region are untouched
+        assert_eq!(d.iter().map(|x| x.line).collect::<Vec<_>>(), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn d3_counted_fallback_can_be_allowed() {
+        let src = r#"
+// lint: hot-path
+fn take(pool: &mut Vec<Vec<u8>>) -> Vec<u8> {
+    // lint: allow(hot-path-alloc, counted miss fallback)
+    pool.pop().unwrap_or_else(Vec::new)
+}
+// lint: hot-path-end
+"#;
+        assert!(lint(src).is_empty());
+    }
+
+    // -- D4 ----------------------------------------------------------
+
+    #[test]
+    fn d4_unsafe_without_safety_comment_fires() {
+        let d = lint("fn f(p: *const u8) -> u8 { unsafe { *p } }\n");
+        assert_eq!(rules_of(&d), vec![Rule::SafetyComment]);
+    }
+
+    #[test]
+    fn d4_adjacent_safety_comment_passes() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid\n    unsafe { *p }\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn d4_distant_safety_comment_does_not_count() {
+        let src = "// SAFETY: way up here\n\n\n\n\nfn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        assert_eq!(rules_of(&lint(src)), vec![Rule::SafetyComment]);
+    }
+
+    // -- D5 ----------------------------------------------------------
+
+    #[test]
+    fn d5_ambient_sources_fire_once_per_site() {
+        let src = "fn f() -> String {\n    std::env::var(\"HOME\").unwrap_or_default()\n}\nfn g() { let _ = std::thread::current(); }\n";
+        let d = lint(src);
+        // std::env + env::var on line 2 dedup to one diagnostic
+        assert_eq!(rules_of(&d), vec![Rule::Ambient, Rule::Ambient]);
+        assert_eq!((d[0].line, d[1].line), (2, 4));
+    }
+
+    #[test]
+    fn d5_random_state_fires() {
+        let d = lint("use std::collections::hash_map::RandomState;\n");
+        assert!(rules_of(&d).contains(&Rule::Ambient), "{d:?}");
+    }
+
+    // -- annotations -------------------------------------------------
+
+    #[test]
+    fn allow_on_same_line_suppresses() {
+        let src = "fn f() { let _ = std::time::Instant::now(); } // lint: allow(wall-clock, measurement-only)\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn allow_own_line_covers_next_line_only() {
+        let src = "// lint: allow(wall-clock, measurement-only)\nfn f() { let _ = std::time::Instant::now(); }\nfn g() { let _ = std::time::Instant::now(); }\n";
+        let d = lint(src);
+        assert_eq!(rules_of(&d), vec![Rule::WallClock]);
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn allow_is_per_rule() {
+        let src = "// lint: allow(ambient, boot-time read)\nfn f() { let _ = std::time::Instant::now(); }\n";
+        assert_eq!(rules_of(&lint(src)), vec![Rule::WallClock]);
+    }
+
+    #[test]
+    fn allow_without_reason_is_rejected() {
+        let d = lint("// lint: allow(wall-clock)\n");
+        assert_eq!(rules_of(&d), vec![Rule::Annotation]);
+    }
+
+    #[test]
+    fn allow_unknown_rule_is_rejected() {
+        let d = lint("// lint: allow(no-such-rule, because)\n");
+        assert_eq!(rules_of(&d), vec![Rule::Annotation]);
+        assert!(d[0].msg.contains("no-such-rule"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn unbalanced_hot_path_markers_are_rejected() {
+        assert_eq!(rules_of(&lint("// lint: hot-path\n")), vec![Rule::Annotation]);
+        assert_eq!(
+            rules_of(&lint("// lint: hot-path-end\n")),
+            vec![Rule::Annotation]
+        );
+        let nested = "// lint: hot-path\n// lint: hot-path\n// lint: hot-path-end\n";
+        assert_eq!(rules_of(&lint(nested)), vec![Rule::Annotation]);
+    }
+
+    // -- policy / scoping --------------------------------------------
+
+    #[test]
+    fn cfg_test_mod_body_is_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn t() { let _ = std::time::Instant::now(); }\n}\nfn prod() { let _m: std::collections::HashMap<u8, u8> = Default::default(); }\n";
+        let d = lint(src);
+        assert_eq!(rules_of(&d), vec![Rule::UnorderedIter]);
+        assert_eq!(d[0].line, 6);
+    }
+
+    #[test]
+    fn module_policy_exempts_structurally() {
+        let src = "fn now() -> std::time::Instant { std::time::Instant::now() }\n";
+        assert!(lint_source("benchkit.rs", "benchkit", src).is_empty());
+        assert_eq!(
+            rules_of(&lint_source("sim.rs", "sim", src)),
+            vec![Rule::WallClock]
+        );
+    }
+
+    #[test]
+    fn module_of_maps_paths() {
+        assert_eq!(module_of(Path::new("rust/src/cluster/par.rs")), "cluster");
+        assert_eq!(module_of(Path::new("rust/src/main.rs")), "main");
+        assert_eq!(module_of(Path::new("rust/src/lint/lex.rs")), "lint");
+        assert_eq!(module_of(Path::new("benchkit.rs")), "benchkit");
+    }
+
+    // -- lexer robustness --------------------------------------------
+
+    #[test]
+    fn strings_and_comments_are_inert() {
+        let src = "fn f() -> &'static str {\n    // HashMap in prose, Instant::now in prose\n    \"HashMap<Instant> SystemTime std::env::var\"\n}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn lifetimes_chars_and_raw_strings_lex_cleanly() {
+        let src = "fn f<'a>(x: &'a [u8]) -> char {\n    let c = 'x';\n    let _nl = '\\n';\n    let _raw = r#\"HashMap \"quoted\" Instant::now\"#;\n    let _m: std::collections::HashMap<u8, u8> = Default::default();\n    c\n}\n";
+        let d = lint(src);
+        // only the real HashMap on line 5 — the literals are inert and
+        // the lifetime did not derail the lexer
+        assert_eq!(rules_of(&d), vec![Rule::UnorderedIter]);
+        assert_eq!(d[0].line, 5);
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_idents() {
+        let src = "/* outer /* HashMap */ still comment */\nfn r#match() {}\n";
+        assert!(lint(src).is_empty());
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_numbers() {
+        let src = "fn f() -> &'static str {\n    \"line one\n     line two\"\n}\nuse std::collections::HashSet;\n";
+        let d = lint(src);
+        assert_eq!(rules_of(&d), vec![Rule::UnorderedIter]);
+        assert_eq!(d[0].line, 5);
+    }
+
+    #[test]
+    fn render_includes_hints_on_request() {
+        let d = lint("use std::collections::HashMap;\n");
+        let plain = render(&d, false);
+        let hinted = render(&d, true);
+        assert!(plain.contains("[unordered-iter]"));
+        assert!(!plain.contains("hint:"));
+        assert!(hinted.contains("hint:"));
+    }
+
+    #[test]
+    fn rule_names_round_trip() {
+        for r in Rule::ALL {
+            assert_eq!(Rule::parse(r.name()), Some(r));
+        }
+        assert_eq!(Rule::parse("annotation"), None);
+    }
+}

@@ -74,6 +74,11 @@ commands:
           fault-free, plus recovery-event counts)
   sweep   --serve TRACE [--jobs N] [--theta X] [...]
           serve-table extension: the trace under every policy
+  lint    [--fix-hints] [PATHS...]
+          determinism/concurrency static analysis over the Rust tree
+          (default rust/src): wall-clock reads, unordered containers,
+          hot-path allocations, unsafe-without-SAFETY, ambient state.
+          Exit 1 on any diagnostic; --fix-hints prints remediations
   apps    list applications and models
   config  [--config FILE] [--set k=v ...]   print effective config
 
@@ -167,6 +172,13 @@ fn main() {
             false,
             true, // figure numbers are positional
         ),
+        Some("lint") => cli::ensure_known(
+            &args,
+            &["fix-hints"],
+            &[],
+            false,
+            true, // lint roots are positional
+        ),
         Some("apps") => cli::ensure_known(&args, &[], &[], false, false),
         Some("config") => cli::ensure_known(
             &args,
@@ -186,6 +198,7 @@ fn main() {
         Some("fig") => cmd_fig(&args),
         Some("serve") => cmd_serve(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("lint") => cmd_lint(&args),
         Some("apps") => {
             println!("applications: {}", ALL.join(" "));
             println!("models: arena-cgra arena-sw bsp-cpu bsp-cgra serial");
@@ -222,6 +235,36 @@ fn cmd_config(args: &cli::Args) -> i32 {
         Ok(cfg) => {
             print!("{}", cfg.dump());
             0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+/// `arena lint [--fix-hints] [PATHS...]` — run the determinism static
+/// analysis (see `arena::lint`) and exit non-zero on any diagnostic,
+/// mirroring what CI and `tests/lint_clean.rs` enforce.
+fn cmd_lint(args: &cli::Args) -> i32 {
+    let paths: Vec<std::path::PathBuf> = if args.positional.is_empty() {
+        vec!["rust/src".into()]
+    } else {
+        args.positional.iter().map(Into::into).collect()
+    };
+    match arena::lint::lint_paths(&paths) {
+        Ok(diags) if diags.is_empty() => {
+            eprintln!(
+                "lint: clean ({} rules over {} path(s))",
+                arena::lint::Rule::ALL.len(),
+                paths.len()
+            );
+            0
+        }
+        Ok(diags) => {
+            print!("{}", arena::lint::render(&diags, args.flag("fix-hints")));
+            eprintln!("lint: {} diagnostic(s)", diags.len());
+            1
         }
         Err(e) => {
             eprintln!("error: {e}");
@@ -572,6 +615,7 @@ fn run_serve(
         Some(n) => n,
         None => sweep::default_jobs(),
     };
+    // lint: allow(wall-clock, measurement-only: serve A/B wall time)
     let t0 = std::time::Instant::now();
     let out = serve::run_ab(&spec, &policies, jobs)?;
     print!("{}", out.render());
@@ -722,6 +766,7 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                     ));
                 }
             }
+            // lint: allow(wall-clock, measurement-only: sweep wall time)
             let t0 = std::time::Instant::now();
             let obs = obs_of(args)?;
             let out = if args.flag("all-layouts") {
@@ -785,6 +830,7 @@ fn cmd_sweep(args: &cli::Args) -> i32 {
                     })
                     .collect::<Result<_, _>>()?
             };
+        // lint: allow(wall-clock, measurement-only: figure-sweep wall time)
         let t0 = std::time::Instant::now();
         let out = sweep::run_cfg(
             &figs,

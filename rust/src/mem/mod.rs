@@ -85,6 +85,8 @@ impl BumpArena {
         }
     }
 
+    // lint: hot-path (BumpArena steady state — alloc-gate measured)
+
     /// Append one record. Heap-free while `len < capacity`.
     pub fn push(&mut self, v: u64) {
         if self.len < self.cap {
@@ -136,6 +138,8 @@ impl BumpArena {
     }
 }
 
+// lint: hot-path-end
+
 /// Sequence-numbered circular slot arena: a slab whose free slots are
 /// recycled LIFO and whose occupancy is validated by a per-slot
 /// generation stamp (debug builds assert a take matches the park that
@@ -183,6 +187,8 @@ impl<T> SlotArena<T> {
             spills: 0,
         }
     }
+
+    // lint: hot-path (SlotArena steady state — park/take per event)
 
     /// Park a value; returns the slot index events carry back.
     pub fn park(&mut self, t: T) -> u32 {
@@ -247,6 +253,8 @@ impl<T> SlotArena<T> {
     }
 }
 
+// lint: hot-path-end
+
 /// A `Vec` with a declared steady-state capacity: pushes within the
 /// pre-reserved bound are plain stores, growth past it is counted.
 /// For buffers that should stay fixed (mailbox spill storage,
@@ -268,6 +276,8 @@ impl<T> SpillVec<T> {
             spills: 0,
         }
     }
+
+    // lint: hot-path (SpillVec steady state — counted growth only)
 
     pub fn push(&mut self, v: T) {
         if self.buf.len() >= self.reserved {
@@ -309,6 +319,8 @@ impl<T> SpillVec<T> {
     }
 }
 
+// lint: hot-path-end
+
 /// Recycling pool of `Vec<T>` buffers. `take` after [`BufferPool::
 /// prefill`] never allocates; a miss (empty pool) falls back to a
 /// fresh `Vec` and bumps the counter so an under-provisioned pool
@@ -333,11 +345,14 @@ impl<T> BufferPool<T> {
         }
     }
 
+    // lint: hot-path (BufferPool steady state — take/put per fetch)
+
     pub fn take(&mut self) -> Vec<T> {
         match self.pool.pop() {
             Some(b) => b,
             None => {
                 self.misses += 1;
+                // lint: allow(hot-path-alloc, counted miss fallback — pool telemetry)
                 Vec::new()
             }
         }
@@ -357,6 +372,8 @@ impl<T> BufferPool<T> {
         self.pool.len()
     }
 }
+
+// lint: hot-path-end
 
 #[cfg(test)]
 mod tests {

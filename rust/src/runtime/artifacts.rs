@@ -297,9 +297,11 @@ impl Manifest {
 /// Default artifacts directory: `$ARENA_ARTIFACTS` or `./artifacts`
 /// relative to the workspace root (searched upward from cwd).
 pub fn default_dir() -> PathBuf {
+    // lint: allow(ambient, boot-time artifact-dir override, pre-config)
     if let Ok(p) = std::env::var("ARENA_ARTIFACTS") {
         return PathBuf::from(p);
     }
+    // lint: allow(ambient, boot-time workspace-root search, pre-config)
     let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
     loop {
         let cand = cur.join("artifacts");

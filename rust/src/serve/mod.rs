@@ -459,6 +459,7 @@ pub fn run_ab(
                     break;
                 }
                 let (kind, theta_pm) = policies[i];
+                // lint: allow(wall-clock, measurement-only: A/B run timing)
                 let t0 = Instant::now();
                 let run = run_one(spec, kind, theta_pm);
                 let dt = t0.elapsed().as_secs_f64() * 1e3;

@@ -103,6 +103,8 @@ pub struct ShardEngine<E> {
     free: Vec<u32>,
 }
 
+// lint: hot-path (shard event loop: engine, mailbox and rendezvous
+// cells run once per event — the alloc-gate's measured region)
 impl<E> ShardEngine<E> {
     pub fn with_capacity(cap: usize) -> Self {
         ShardEngine {
@@ -377,6 +379,8 @@ impl<T> Default for SyncCell<T> {
         Self::new()
     }
 }
+
+// lint: hot-path-end
 
 #[cfg(test)]
 mod tests {

@@ -406,6 +406,7 @@ impl CellStore {
         let workers = workers.max(1).min(todo.len());
         if workers == 1 {
             for &job in &todo {
+                // lint: allow(wall-clock, measurement-only: per-job timing)
                 let t0 = Instant::now();
                 let v = compute(
                     self.scale,
@@ -433,6 +434,7 @@ impl CellStore {
                     if i >= todo.len() {
                         break;
                     }
+                    // lint: allow(wall-clock, measurement-only: per-job timing)
                     let t0 = Instant::now();
                     let cell =
                         compute(scale, seed, shards, &obs, &faults, todo[i]);
